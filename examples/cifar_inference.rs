@@ -1,0 +1,56 @@
+//! CIFAR-scale inference under hardware non-idealities (paper Fig 17):
+//! train a small ResNet digitally, convert to hardware layers
+//! (`load_state_dict` + `update_weight()` flow), and sweep slice bits and
+//! conductance variation.
+//!
+//! ```bash
+//! cargo run --release --example cifar_inference
+//! ```
+
+use memintelli::data::cifar_like;
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::nn::models::resnet18_cifar;
+use memintelli::nn::train::{evaluate, train, TrainConfig};
+use memintelli::nn::HwSpec;
+
+fn main() {
+    let width = 4; // CIFAR-scale width multiplier (64 = full ResNet-18)
+    let data = cifar_like::load(640, 7);
+    let (train_set, test_set) = data.split(512);
+
+    // 1. Train digitally (fast full-precision path).
+    let mut digital = resnet18_cifar(width, None, 7);
+    let cfg = TrainConfig { steps: 60, batch_size: 16, lr: 0.02, log_every: 20, seed: 7, ..Default::default() };
+    println!("training ResNet-18(w={width}) digitally on synthetic CIFAR…");
+    let logs = train(&mut digital, &train_set, &cfg);
+    println!("  final train loss {:.3}", logs.last().unwrap().loss);
+    let acc_digital = evaluate(&mut digital, &test_set, 16, 96);
+    println!("  digital test accuracy: {acc_digital:.3}\n");
+
+    // 2. Transfer the trained state into hardware models and sweep
+    //    configurations (`load_state_dict` + `update_weight()` flow).
+    let mut to_hw = |hw: HwSpec| {
+        let mut m = resnet18_cifar(width, Some(hw), 7);
+        m.load_state_from(&mut digital);
+        m.update_weight(); // re-quantize + program the arrays
+        m
+    };
+
+    println!("accuracy vs number of 1-bit slices (Fig 17a):");
+    for bits in [3usize, 4, 5, 6, 8] {
+        let mut dpe = DpeConfig::default();
+        dpe.device.cv = 0.01;
+        let hw = HwSpec::uniform(DotProductEngine::new(dpe, 7), SliceMethod::int(SliceSpec::ones(bits)));
+        let mut m = to_hw(hw);
+        println!("  {bits} bits: {:.3}", evaluate(&mut m, &test_set, 16, 96));
+    }
+
+    println!("\naccuracy vs conductance variation at INT8 (Fig 17b):");
+    for cv in [0.0, 0.02, 0.05, 0.1] {
+        let mut dpe = DpeConfig::default();
+        dpe.device.cv = cv;
+        let hw = HwSpec::uniform(DotProductEngine::new(dpe, 7), SliceMethod::int(SliceSpec::int8()));
+        let mut m = to_hw(hw);
+        println!("  cv={cv:<5}: {:.3}", evaluate(&mut m, &test_set, 16, 96));
+    }
+}

@@ -1,0 +1,67 @@
+//! Crossbar circuit exploration (paper Fig 10): IR-drop along word lines,
+//! attenuation of output currents, solver convergence, and the Elmore
+//! settling estimate from parasitic capacitance.
+//!
+//! ```bash
+//! cargo run --release --example circuit_explorer [--size N] [--rwire OHM]
+//! ```
+
+use memintelli::circuit::CrossbarCircuit;
+use memintelli::tensor::Matrix;
+use memintelli::util::rng::Pcg64;
+
+fn flag(name: &str, default: f64) -> f64 {
+    std::env::args()
+        .skip_while(|a| a != name)
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = flag("--size", 64.0) as usize;
+    let r_wire = flag("--rwire", 2.93);
+    let mut rng = Pcg64::seeded(11);
+    let g = Matrix::random_uniform(n, n, 1e-7, 1e-5, &mut rng);
+    let xb = CrossbarCircuit::new(g, r_wire);
+
+    // Sinusoidal drive on the word lines (Fig 10(a)).
+    let v_in: Vec<f64> = (0..n).map(|i| 0.1 + 0.1 * (i as f64 / 6.0).sin().abs()).collect();
+
+    let t0 = std::time::Instant::now();
+    let (sol, stats) = xb.solve_cross_iteration(&v_in, 1e-3 * 0.2, 20);
+    let dt = t0.elapsed();
+    println!("{n}x{n} array, Rw = {r_wire} Ω");
+    println!("cross-iteration: {} sweeps, final Δ {:.2e}, {:?}", stats.iterations,
+        stats.deltas.last().unwrap(), dt);
+
+    // Voltage attenuation along the first word line (Fig 10(b)).
+    println!("\nword-line voltage profile (row 0, drive {:.3} V):", v_in[0]);
+    for j in (0..n).step_by((n / 8).max(1)) {
+        let v = sol.v_word.at(0, j);
+        let bar = "#".repeat((v / v_in[0] * 50.0) as usize);
+        println!("  col {j:>4}: {v:.4} V  {bar}");
+    }
+
+    // Current attenuation vs ideal (Fig 10(c)).
+    let ideal = xb.ideal_currents(&v_in);
+    let att: Vec<f64> = sol.i_out.iter().zip(&ideal).map(|(s, i)| s / i).collect();
+    let mean_att = att.iter().sum::<f64>() / att.len() as f64;
+    println!("\nmean I_out/I_ideal = {mean_att:.4} (IR-drop loss {:.1}%)", (1.0 - mean_att) * 100.0);
+
+    // Direct solve cross-check for small arrays.
+    if n <= 128 {
+        let direct = xb.solve_direct(&v_in).unwrap();
+        let re: f64 = sol
+            .i_out
+            .iter()
+            .zip(&direct.i_out)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+            / direct.i_out.iter().map(|v| v * v).sum::<f64>().sqrt();
+        println!("vs banded-LU direct solve: RE {re:.2e}");
+    }
+
+    println!("Elmore settling estimate: {:.2e} s", xb.elmore_delay());
+}

@@ -1,0 +1,47 @@
+//! Quickstart: variable-precision DPE matmuls in a few lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::tensor::Matrix;
+use memintelli::util::rng::Pcg64;
+
+fn main() {
+    // 1. Make some FP64 operands.
+    let mut rng = Pcg64::seeded(42);
+    let a = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+    let ideal = a.matmul(&b);
+
+    // 2. A hardware engine with Table-2 defaults: 64×64 arrays, 16
+    //    conductance levels, 5% variation, 8-bit DAC / 10-bit ADC.
+    let engine = DotProductEngine::new(DpeConfig::default(), 42);
+
+    // 3. Multiply at different precisions (paper Fig 11).
+    for (name, method) in [
+        ("INT4  (1,1,2)       quantize", SliceMethod::int(SliceSpec::int4())),
+        ("INT8  (1,1,2,4)     quantize", SliceMethod::int(SliceSpec::int8())),
+        ("BF16  (1,1,2,4)     prealign", SliceMethod::fp(SliceSpec::bf16())),
+        ("FP16  (1,1,2,4,4)   prealign", SliceMethod::fp(SliceSpec::fp16())),
+        ("FP32  (1,1,2,4,4,…) prealign", SliceMethod::fp(SliceSpec::fp32())),
+    ] {
+        let c = engine.matmul(&a, &b, &method, &method);
+        println!("{name}:  relative error = {:.3e}", c.relative_error(&ideal));
+    }
+
+    // 4. Weight reuse (the NN hot path): program once, run many inputs.
+    let method = SliceMethod::int(SliceSpec::int8());
+    let w = engine.prepare_weights(&b, &method, 0);
+    println!(
+        "\nprepared weights: {} physical 64x64 arrays for a 128x128 INT8 matrix",
+        w.arrays_used()
+    );
+    for i in 0..3 {
+        let x = Matrix::random_normal(4, 128, 0.0, 1.0, &mut rng);
+        let y = engine.matmul_prepared(&x, &w, &method, 0);
+        println!("batch {i}: out norm {:.3} (RE vs ideal {:.3e})",
+            y.frobenius(), y.relative_error(&x.matmul(&b)));
+    }
+}

@@ -1,0 +1,161 @@
+"""AOT compilation: lower the L2 graphs to HLO **text** artifacts.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the text
+with `HloModuleProto::from_text_file` and compiles it on the PJRT CPU
+client. Text — not `.serialize()` — because jax ≥ 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md and gen_hlo.py).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME_PREFIX]
+
+Every artifact function is lowered with `return_tuple=True`; the Rust side
+unwraps with `decompose_tuple()`.
+
+Artifact inventory (shape-specialized; the Rust engine falls back to the
+native path for any other shape):
+  _smoke                         tiny sanity matmul (runtime unit test)
+  dpe_mm_<M>x<K>x<N>_<fmt>       DPE matmul, noisy
+  dpe_mm_<M>x<K>x<N>_<fmt>_ideal DPE matmul, noise-free (backend cross-val)
+  lenet_fwd_b<B>_<fmt>           full LeNet-5 forward on DPE layers
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import DpeCfg
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _key_spec():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _wrap_key(raw):
+    return jax.random.wrap_key_data(raw, impl="threefry2x32")
+
+
+def smoke():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    return jax.jit(fn, keep_unused=True).lower(spec, spec)
+
+
+def dpe_mm(m: int, k: int, n: int, fmt: str, ideal: bool):
+    cfg = model.cfg_for(fmt, noise_free=ideal)
+
+    def fn(a, b, raw_key):
+        return model.dpe_matmul_graph(a, b, _wrap_key(raw_key), cfg)
+
+    return jax.jit(fn, keep_unused=True).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        _key_spec(),
+    )
+
+
+def lenet(batch: int, fmt: str, ideal: bool):
+    cfg = model.cfg_for(fmt, noise_free=ideal)
+    param_specs = [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in model.lenet_param_shapes()
+    ]
+
+    def fn(x, raw_key, *params):
+        return (model.lenet_fwd(x, params, _wrap_key(raw_key), cfg),)
+
+    return jax.jit(fn, keep_unused=True).lower(
+        jax.ShapeDtypeStruct((batch, 1, 28, 28), jnp.float32),
+        _key_spec(),
+        *param_specs,
+    )
+
+
+#: name → thunk producing a lowered computation.
+ARTIFACTS = {
+    "_smoke": smoke,
+    "dpe_mm_128x128x128_int8": lambda: dpe_mm(128, 128, 128, "int8", False),
+    "dpe_mm_128x128x128_int8_ideal": lambda: dpe_mm(128, 128, 128, "int8", True),
+    "dpe_mm_128x128x128_fp16": lambda: dpe_mm(128, 128, 128, "fp16", False),
+    "dpe_mm_256x256x256_int8": lambda: dpe_mm(256, 256, 256, "int8", False),
+    "lenet_fwd_b32_int8": lambda: lenet(32, "int8", False),
+    "lenet_fwd_b32_int8_ideal": lambda: lenet(32, "int8", True),
+    "lenet_fwd_b128_fp16": lambda: lenet(128, "fp16", False),
+}
+
+
+def sources_fingerprint() -> str:
+    """Hash of the compile-path sources; artifacts rebuild when it changes."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="only artifacts starting with this prefix")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    stamp_path = os.path.join(args.out_dir, "MANIFEST.json")
+    fingerprint = sources_fingerprint()
+    manifest = {}
+    if os.path.exists(stamp_path) and not args.force:
+        with open(stamp_path) as fh:
+            manifest = json.load(fh)
+
+    built = 0
+    for name, thunk in ARTIFACTS.items():
+        if args.only and not name.startswith(args.only):
+            continue
+        out_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        if (
+            not args.force
+            and os.path.exists(out_path)
+            and manifest.get(name) == fingerprint
+        ):
+            print(f"[aot] {name}: up to date")
+            continue
+        t0 = time.time()
+        text = to_hlo_text(thunk())
+        with open(out_path, "w") as fh:
+            fh.write(text)
+        manifest[name] = fingerprint
+        built += 1
+        print(f"[aot] {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    with open(stamp_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"[aot] done ({built} rebuilt, {len(ARTIFACTS) - built} cached)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

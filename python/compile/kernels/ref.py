@@ -1,0 +1,202 @@
+"""Pure-jnp oracle for the bit-sliced DPE matmul.
+
+This is the correctness reference for the Pallas kernel
+(:mod:`compile.kernels.sliced_mm`): identical preprocessing and math, but the
+inner slice-pair loop is plain ``jnp`` einsum instead of a Pallas grid. It
+also mirrors the Rust native engine (``rust/src/dpe/engine.rs``) so the two
+backends can be cross-validated through the noise-free path.
+
+All functions are trace-friendly (shapes static, no Python branches on traced
+values) so both the oracle and the kernel lower to HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DpeCfg:
+    """Static DPE configuration (mirrors rust `DpeConfig` + slice methods)."""
+
+    widths_a: Tuple[int, ...] = (1, 1, 2, 4)
+    widths_w: Tuple[int, ...] = (1, 1, 2, 4)
+    #: "quantize" (full-precision per-block scale) or "prealign" (2^e scale).
+    mode_a: str = "quantize"
+    mode_w: str = "quantize"
+    #: array (block) size: contraction rows x output cols.
+    kblk: int = 64
+    nblk: int = 64
+    radc: int = 1024
+    #: conductance coefficient of variation (0 disables device noise).
+    cv: float = 0.05
+    #: LGS / conductance step — offset term of the conductance mapping
+    #: (Table 2 values: 1e-7 / ((1e-5 - 1e-7)/15) ≈ 0.1515...).
+    lgs_over_step: float = 1e-7 / ((1e-5 - 1e-7) / 15.0)
+    #: disable noise *and* ADC quantization (ideal sliced arithmetic).
+    noise_free: bool = False
+
+    @property
+    def total_bits_a(self) -> int:
+        return sum(self.widths_a)
+
+    @property
+    def total_bits_w(self) -> int:
+        return sum(self.widths_w)
+
+
+def slice_weights(widths: Sequence[int]) -> Tuple[Tuple[float, ...], Tuple[int, ...]]:
+    """Signed shift-and-add weights and LSB shifts, MSB-first (sign slice
+    first, weight −2^shift; see rust `SliceSpec::weight`)."""
+    total = sum(widths)
+    shifts, used = [], 0
+    for w in widths:
+        used += w
+        shifts.append(total - used)
+    weights = [float(2**s) for s in shifts]
+    weights[0] = -weights[0]
+    return tuple(weights), tuple(shifts)
+
+
+def quantize_blocks(x: jnp.ndarray, bits: int, mode: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block quantization along the leading (block) axis.
+
+    ``x``: (B, ...) where B indexes blocks. Returns (q, scale) with
+    ``q`` integer-valued (float32) in [-2^(bits-1), 2^(bits-1)-1] and
+    ``scale`` of shape (B,) such that ``x ≈ q * scale``.
+    """
+    max_int = float(2 ** (bits - 1) - 1)
+    flat = x.reshape(x.shape[0], -1)
+    max_abs = jnp.max(jnp.abs(flat), axis=1)
+    if mode == "quantize":
+        scale = max_abs / max_int
+    elif mode == "prealign":
+        e = jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-300)))
+        scale = jnp.exp2(e) / (max_int + 1.0)
+    else:
+        raise ValueError(f"unknown mode {mode}")
+    safe = jnp.where(scale > 0, scale, 1.0)
+    bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+    q = jnp.round(x / safe.reshape(bshape))
+    q = jnp.clip(q, -(max_int + 1.0), max_int)
+    q = jnp.where(scale.reshape(bshape) > 0, q, 0.0)
+    return q.astype(jnp.float32), scale.astype(jnp.float32)
+
+
+def slice_digits(q: jnp.ndarray, widths: Sequence[int]) -> jnp.ndarray:
+    """Two's-complement digit planes, MSB-first. Returns (S, *q.shape)."""
+    total = sum(widths)
+    u = jnp.where(q < 0, q + float(2**total), q).astype(jnp.uint32)
+    planes = []
+    shift = total
+    for w in widths:
+        shift -= w
+        planes.append(((u >> shift) & (2**w - 1)).astype(jnp.float32))
+    return jnp.stack(planes)
+
+
+def device_noise(planes: jnp.ndarray, cfg: DpeCfg, key: jax.Array) -> jnp.ndarray:
+    """Conductance-domain lognormal programming noise on digit planes.
+
+    Matches rust ``DotProductEngine::program_plane``: digit → conductance
+    ``G = lgs + digit·step`` → lognormal(G, cv) → back to digit units
+    ``(G′ − lgs)/step = digit·η + (lgs/step)·(η − 1)`` with η mean-1
+    lognormal.
+    """
+    if cfg.noise_free or cfg.cv <= 0.0:
+        return planes
+    import math
+
+    sigma = math.sqrt(math.log(cfg.cv**2 + 1.0))
+    mu = -(sigma**2) / 2.0
+    z = jax.random.normal(key, planes.shape, dtype=jnp.float32)
+    eta = jnp.exp(mu + sigma * z)
+    return planes * eta + cfg.lgs_over_step * (eta - 1.0)
+
+
+def adc_quantize(partial: jnp.ndarray, full_scale: float, radc: int) -> jnp.ndarray:
+    """Uniform mid-tread ADC over [0, full_scale] with ``radc`` codes."""
+    step = full_scale / (radc - 1.0)
+    return jnp.clip(jnp.round(partial / step), 0.0, radc - 1.0) * step
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+def preprocess(a: jnp.ndarray, b: jnp.ndarray, cfg: DpeCfg, key: jax.Array):
+    """Shared front half of the DPE: block, quantize, slice, add noise.
+
+    Returns
+    -------
+    a_digits : (Sa, KB, M, kblk)   input digit planes per k-block
+    a_scale  : (KB,)
+    w_digits : (Sw, KB, NB, kblk, nblk)  noisy weight digit planes per block
+    w_scale  : (KB, NB)
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul dim mismatch {a.shape} @ {b.shape}"
+    kb = -(-k // cfg.kblk)
+    nb = -(-n // cfg.nblk)
+    a_p = _pad_to(a, m, kb * cfg.kblk)
+    b_p = _pad_to(b, kb * cfg.kblk, nb * cfg.nblk)
+
+    # Input: blocks along k only → (KB, M, kblk).
+    a_blocks = a_p.reshape(m, kb, cfg.kblk).transpose(1, 0, 2)
+    a_q, a_scale = quantize_blocks(a_blocks, cfg.total_bits_a, cfg.mode_a)
+    a_digits = slice_digits(a_q, cfg.widths_a)  # (Sa, KB, M, kblk)
+
+    # Weights: blocks over (k, n) → (KB*NB, kblk, nblk).
+    w_blocks = (
+        b_p.reshape(kb, cfg.kblk, nb, cfg.nblk)
+        .transpose(0, 2, 1, 3)
+        .reshape(kb * nb, cfg.kblk, cfg.nblk)
+    )
+    w_q, w_scale = quantize_blocks(w_blocks, cfg.total_bits_w, cfg.mode_w)
+    w_digits = slice_digits(w_q, cfg.widths_w)  # (Sw, KB*NB, kblk, nblk)
+    w_digits = device_noise(w_digits, cfg, key)
+    w_digits = w_digits.reshape(len(cfg.widths_w), kb, nb, cfg.kblk, cfg.nblk)
+    w_scale = w_scale.reshape(kb, nb)
+    return a_digits, a_scale, w_digits, w_scale
+
+
+def combine(partials_fn, a_digits, a_scale, w_digits, w_scale, cfg: DpeCfg, m: int, n: int):
+    """Shared back half: iterate slice pairs / blocks, ADC, shift-add.
+
+    ``partials_fn(a_plane, w_plane) -> (M, nblk)`` computes one analog MVM;
+    the oracle passes a jnp matmul.
+    """
+    wa, _ = slice_weights(cfg.widths_a)
+    ww, _ = slice_weights(cfg.widths_w)
+    ma = [float(2**w - 1) for w in cfg.widths_a]
+    mw = [float(2**w - 1) for w in cfg.widths_w]
+    sa, kb = a_digits.shape[0], a_digits.shape[1]
+    sw, nb = w_digits.shape[0], w_digits.shape[2]
+    cols = []
+    for j in range(nb):
+        acc_j = jnp.zeros((m, cfg.nblk), dtype=jnp.float32)
+        for i in range(kb):
+            blk = jnp.zeros((m, cfg.nblk), dtype=jnp.float32)
+            for p in range(sa):
+                for q in range(sw):
+                    part = partials_fn(a_digits[p, i], w_digits[q, i, j])
+                    if not cfg.noise_free:
+                        fs = cfg.kblk * ma[p] * mw[q]
+                        part = adc_quantize(part, fs, cfg.radc)
+                    blk = blk + (wa[p] * ww[q]) * part
+            acc_j = acc_j + blk * (a_scale[i] * w_scale[i, j])
+        cols.append(acc_j)
+    out = jnp.concatenate(cols, axis=1)
+    return out[:, :n]
+
+
+def dpe_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, cfg: DpeCfg, key: jax.Array) -> jnp.ndarray:
+    """The oracle: full DPE matmul with jnp inner products."""
+    m, n = a.shape[0], b.shape[1]
+    a_digits, a_scale, w_digits, w_scale = preprocess(a, b, cfg, key)
+    return combine(lambda ap, wp: ap @ wp, a_digits, a_scale, w_digits, w_scale, cfg, m, n)

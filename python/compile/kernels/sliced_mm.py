@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: bit-sliced crossbar block matmul.
+
+The grid mirrors the paper's hardware decomposition (Figs 6–7): one grid
+step = one activated crossbar array = one (weight-slice, input-slice,
+k-block, n-block) combination. Each step loads an array-sized digit tile
+into VMEM, performs the analog MVM (an MXU matmul on real TPUs), applies
+the ADC quantizer, and accumulates into the output tile with the signed
+shift-and-add significance weights and block scales.
+
+Grid order: ``(nb, sa, sw, kb)`` — the output tile for column-block ``nb``
+stays resident while all slice pairs and k-blocks accumulate into it.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO so the
+Rust runtime can run it (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DpeCfg, preprocess, slice_weights
+
+
+def _kernel(
+    a_ref,      # (1, 1, M, kblk)   input digit tile
+    w_ref,      # (1, 1, 1, kblk, nblk) weight digit tile
+    a_scale_ref,  # (1,)
+    w_scale_ref,  # (1, 1)
+    wa_ref,     # (1,)  signed significance of the input slice
+    ww_ref,     # (1,)  signed significance of the weight slice
+    ma_ref,     # (1,)  max digit of the input slice (ADC full scale)
+    mw_ref,     # (1,)
+    o_ref,      # (M, nblk) output tile
+    *,
+    kblk: int,
+    radc: int,
+    noise_free: bool,
+):
+    sa = pl.program_id(1)
+    sw = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when((sa == 0) & (sw == 0) & (kb == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_tile = a_ref[0, 0]          # (M, kblk)
+    w_tile = w_ref[0, 0, 0]       # (kblk, nblk)
+    partial = jnp.dot(a_tile, w_tile, preferred_element_type=jnp.float32)
+    if not noise_free:
+        fs = kblk * ma_ref[0] * mw_ref[0]
+        step = fs / (radc - 1.0)
+        partial = jnp.clip(jnp.round(partial / step), 0.0, radc - 1.0) * step
+    scale = wa_ref[0] * ww_ref[0] * a_scale_ref[0] * w_scale_ref[0, 0]
+    o_ref[...] += scale * partial
+
+
+def sliced_mm(a_digits, a_scale, w_digits, w_scale, cfg: DpeCfg) -> jnp.ndarray:
+    """Run the Pallas bit-sliced matmul on preprocessed digit planes.
+
+    Shapes (see :func:`compile.kernels.ref.preprocess`):
+      a_digits (Sa, KB, M, kblk), a_scale (KB,),
+      w_digits (Sw, KB, NB, kblk, nblk), w_scale (KB, NB).
+    Returns the padded product (M, NB·nblk).
+    """
+    sa, kb, m, kblk = a_digits.shape
+    sw, _, nb, _, nblk = w_digits.shape
+    assert kblk == cfg.kblk and nblk == cfg.nblk
+
+    wa, _ = slice_weights(cfg.widths_a)
+    ww, _ = slice_weights(cfg.widths_w)
+    ma = jnp.array([float(2**w - 1) for w in cfg.widths_a], dtype=jnp.float32)
+    mw = jnp.array([float(2**w - 1) for w in cfg.widths_w], dtype=jnp.float32)
+    wa = jnp.array(wa, dtype=jnp.float32)
+    ww = jnp.array(ww, dtype=jnp.float32)
+
+    grid = (nb, sa, sw, kb)
+    kernel = functools.partial(
+        _kernel, kblk=cfg.kblk, radc=cfg.radc, noise_free=cfg.noise_free
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, m, kblk), lambda j, p, q, i: (p, i, 0, 0)),
+            pl.BlockSpec((1, 1, 1, kblk, nblk), lambda j, p, q, i: (q, i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda j, p, q, i: (i,)),
+            pl.BlockSpec((1, 1), lambda j, p, q, i: (i, j)),
+            pl.BlockSpec((1,), lambda j, p, q, i: (p,)),
+            pl.BlockSpec((1,), lambda j, p, q, i: (q,)),
+            pl.BlockSpec((1,), lambda j, p, q, i: (p,)),
+            pl.BlockSpec((1,), lambda j, p, q, i: (q,)),
+        ],
+        out_specs=pl.BlockSpec((m, nblk), lambda j, p, q, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nb * nblk), jnp.float32),
+        interpret=True,
+    )(a_digits, w_digits, a_scale, w_scale, wa, ww, ma, mw)
+
+
+def dpe_matmul(a: jnp.ndarray, b: jnp.ndarray, cfg: DpeCfg, key: jax.Array) -> jnp.ndarray:
+    """Full DPE matmul through the Pallas kernel (L2 entry point)."""
+    m, n = a.shape[0], b.shape[1]
+    a_digits, a_scale, w_digits, w_scale = preprocess(a, b, cfg, key)
+    out = sliced_mm(a_digits, a_scale, w_digits, w_scale, cfg)
+    return out[:, :n]

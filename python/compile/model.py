@@ -1,0 +1,126 @@
+"""L2: JAX compute graphs built on the DPE kernel.
+
+Everything here is build-time only: `aot.py` lowers these functions once to
+HLO text; the Rust coordinator executes the artifacts via PJRT. Weights are
+graph *inputs*, so the Rust side can run inference with any trained weights
+without re-lowering.
+
+Contents:
+- :func:`dpe_matmul_graph` — the DPE matmul as an exportable function;
+- :func:`linear_fwd` / :func:`conv2d_fwd` — hardware layers (conv is
+  lowered to a dot product by im2col, paper Fig 8(c));
+- :func:`lenet_fwd` — the full LeNet-5 forward pass on DPE layers
+  (Fig 16 / Table 3);
+- :func:`mlp_fwd` — a 2-layer MLP head used by the quickstart.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import DpeCfg
+from .kernels.sliced_mm import dpe_matmul
+
+# Named slice methods (paper §5).
+METHODS: Dict[str, dict] = {
+    "int4": dict(widths=(1, 1, 2), mode="quantize"),
+    "int8": dict(widths=(1, 1, 2, 4), mode="quantize"),
+    "fp16": dict(widths=(1, 1, 2, 4, 4), mode="prealign"),
+    "bf16": dict(widths=(1, 1, 2, 4), mode="prealign"),
+    "fp32": dict(widths=(1, 1, 2, 4, 4, 4, 4, 4), mode="prealign"),
+    "flex16": dict(widths=(1, 1, 2, 4, 4, 4), mode="prealign"),
+}
+
+
+def cfg_for(method: str, *, noise_free: bool = False, cv: float = 0.05,
+            kblk: int = 64, nblk: int = 64, radc: int = 1024) -> DpeCfg:
+    spec = METHODS[method]
+    return DpeCfg(
+        widths_a=spec["widths"],
+        widths_w=spec["widths"],
+        mode_a=spec["mode"],
+        mode_w=spec["mode"],
+        kblk=kblk,
+        nblk=nblk,
+        radc=radc,
+        cv=0.0 if noise_free else cv,
+        noise_free=noise_free,
+    )
+
+
+def dpe_matmul_graph(a, b, key, cfg: DpeCfg):
+    """Exported signature: (a f32[M,K], b f32[K,N], key u32[2]) → (c,)."""
+    return (dpe_matmul(a, b, cfg, key),)
+
+
+def linear_fwd(x, w, bias, key, cfg: DpeCfg):
+    """Hardware linear layer: x (B, in) · w (in, out) + bias."""
+    return dpe_matmul(x, w, cfg, key) + bias
+
+
+def conv2d_fwd(x, w, bias, key, cfg: DpeCfg, *, stride: int = 1, pad: int = 0):
+    """Hardware conv layer via im2col (paper Fig 8(c)).
+
+    x (B, C, H, W); w (out_c, C·kh·kw); bias (out_c,). Returns
+    (B, out_c, OH, OW).
+    """
+    bsz, c, h, wdt = x.shape
+    out_c, patch = w.shape
+    kh = kw = int(round((patch // c) ** 0.5))
+    assert c * kh * kw == patch, "kernel must be square"
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+    )  # (B, C*kh*kw, OH, OW)
+    oh, ow = patches.shape[2], patches.shape[3]
+    cols = patches.transpose(0, 2, 3, 1).reshape(bsz * oh * ow, patch)
+    y = dpe_matmul(cols, w.T, cfg, key) + bias  # (B·OH·OW, out_c)
+    return y.reshape(bsz, oh, ow, out_c).transpose(0, 3, 1, 2)
+
+
+def avg_pool2(x):
+    """2×2 average pooling (LeNet's subsampling)."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+def lenet_fwd(x, params, key, cfg: DpeCfg):
+    """LeNet-5 forward on DPE layers.
+
+    x (B, 1, 28, 28). params (in order):
+      conv1_w (6, 25), conv1_b (6,), conv2_w (16, 150), conv2_b (16,),
+      fc1_w (256, 120), fc1_b (120,), fc2_w (120, 84), fc2_b (84,),
+      fc3_w (84, 10), fc3_b (10,).
+    Returns logits (B, 10).
+    """
+    (c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b, f3w, f3b) = params
+    keys = jax.random.split(key, 5)
+    h = conv2d_fwd(x, c1w, c1b, keys[0], cfg)          # (B, 6, 24, 24)
+    h = avg_pool2(jnp.maximum(h, 0.0))                  # (B, 6, 12, 12)
+    h = conv2d_fwd(h, c2w, c2b, keys[1], cfg)           # (B, 16, 8, 8)
+    h = avg_pool2(jnp.maximum(h, 0.0))                  # (B, 16, 4, 4)
+    h = h.reshape(h.shape[0], -1)                       # (B, 256)
+    h = jnp.maximum(linear_fwd(h, f1w, f1b, keys[2], cfg), 0.0)
+    h = jnp.maximum(linear_fwd(h, f2w, f2b, keys[3], cfg), 0.0)
+    return linear_fwd(h, f3w, f3b, keys[4], cfg)
+
+
+def lenet_param_shapes():
+    """Parameter shapes in `lenet_fwd` order."""
+    return [
+        (6, 25), (6,), (16, 150), (16,),
+        (256, 120), (120,), (120, 84), (84,),
+        (84, 10), (10,),
+    ]
+
+
+def mlp_fwd(x, w1, b1, w2, b2, key, cfg: DpeCfg):
+    """2-layer MLP: x (B, d) → logits."""
+    k1, k2 = jax.random.split(key)
+    h = jnp.maximum(linear_fwd(x, w1, b1, k1, cfg), 0.0)
+    return linear_fwd(h, w2, b2, k2, cfg)

@@ -1,0 +1,187 @@
+"""Kernel vs oracle correctness — the core L1 signal.
+
+The Pallas kernel (`sliced_mm`) must reproduce the pure-jnp oracle
+(`dpe_matmul_ref`) bit-for-bit (same preprocessing, same noise sample,
+same ADC): hypothesis sweeps shapes, slice configs, modes, and noise
+settings.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    DpeCfg,
+    adc_quantize,
+    dpe_matmul_ref,
+    quantize_blocks,
+    slice_digits,
+    slice_weights,
+)
+from compile.kernels.sliced_mm import dpe_matmul
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, shape), dtype=jnp.float32)
+
+
+def _key(seed=0):
+    return jax.random.PRNGKey(seed)
+
+
+# ---------------------------------------------------------------- slicing
+
+
+def test_slice_weights_int8():
+    w, s = slice_weights((1, 1, 2, 4))
+    assert w == (-128.0, 64.0, 16.0, 1.0)
+    assert s == (7, 6, 4, 0)
+
+
+@given(
+    widths=st.lists(st.integers(1, 4), min_size=1, max_size=4).map(
+        lambda ws: tuple([1] + ws)
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_slice_digits_reconstruct(widths):
+    total = sum(widths)
+    lo, hi = -(2 ** (total - 1)), 2 ** (total - 1) - 1
+    vals = jnp.arange(lo, hi + 1, dtype=jnp.float32)
+    planes = slice_digits(vals, widths)
+    w, _ = slice_weights(widths)
+    recon = sum(float(wk) * planes[k] for k, wk in enumerate(w))
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(vals))
+
+
+def test_quantize_blocks_error_bound():
+    x = _rand((4, 16, 16), seed=1)
+    for mode in ("quantize", "prealign"):
+        q, scale = quantize_blocks(x, 8, mode)
+        recon = q * scale[:, None, None]
+        err = jnp.max(jnp.abs(recon - x))
+        assert float(err) <= float(jnp.max(scale)) / 2 + 1e-6
+
+
+def test_quantize_blocks_zero_block():
+    x = jnp.zeros((2, 4, 4))
+    q, scale = quantize_blocks(x, 8, "quantize")
+    assert float(jnp.max(jnp.abs(q))) == 0.0
+    assert float(jnp.max(scale)) == 0.0
+
+
+def test_prealign_scale_power_of_two():
+    x = _rand((3, 8, 8), seed=2)
+    _, scale = quantize_blocks(x, 8, "prealign")
+    v = np.asarray(scale) * 128.0
+    log = np.log2(v)
+    np.testing.assert_allclose(log, np.round(log), atol=1e-6)
+
+
+def test_adc_quantize_bounds():
+    x = jnp.linspace(-5.0, 70.0, 100)
+    y = adc_quantize(x, 64.0, 1024)
+    assert float(jnp.min(y)) >= 0.0
+    assert float(jnp.max(y)) <= 64.0
+    mid = adc_quantize(jnp.asarray([13.37]), 64.0, 1024)
+    assert abs(float(mid[0]) - 13.37) <= 64.0 / 1023 / 2 + 1e-6
+
+
+# ------------------------------------------------- kernel vs oracle
+
+
+CFG_IDEAL = DpeCfg(noise_free=True, cv=0.0)
+
+
+@pytest.mark.parametrize("fmt_widths,mode", [
+    ((1, 1, 2, 4), "quantize"),
+    ((1, 1, 2), "quantize"),
+    ((1, 1, 2, 4, 4), "prealign"),
+    ((1, 1, 2, 4), "prealign"),
+])
+@pytest.mark.parametrize("shape", [(8, 64, 64), (16, 128, 96), (4, 100, 130)])
+def test_kernel_matches_ref(fmt_widths, mode, shape):
+    m, k, n = shape
+    cfg = DpeCfg(
+        widths_a=fmt_widths, widths_w=fmt_widths, mode_a=mode, mode_w=mode,
+        cv=0.05, noise_free=False,
+    )
+    a, b = _rand((m, k), seed=10), _rand((k, n), seed=11)
+    key = _key(3)
+    ref = dpe_matmul_ref(a, b, cfg, key)
+    ker = dpe_matmul(a, b, cfg, key)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+    noisy=st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_kernel_matches_ref_hypothesis(m, k, n, seed, noisy):
+    cfg = DpeCfg(cv=0.05 if noisy else 0.0, noise_free=not noisy, kblk=32, nblk=32)
+    a, b = _rand((m, k), seed=seed), _rand((k, n), seed=seed + 1)
+    key = _key(seed)
+    ref = dpe_matmul_ref(a, b, cfg, key)
+    ker = dpe_matmul(a, b, cfg, key)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+def test_kernel_jits():
+    cfg = DpeCfg()
+    a, b = _rand((8, 64), seed=20), _rand((64, 64), seed=21)
+    f = jax.jit(lambda a, b, k: dpe_matmul(a, b, cfg, k))
+    out = f(a, b, _key(0))
+    ref = dpe_matmul_ref(a, b, cfg, _key(0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------- DPE semantics
+
+
+def test_ideal_int8_accuracy():
+    a, b = _rand((32, 64), 30, 0.5), _rand((64, 32), 31, 0.5)
+    out = dpe_matmul(a, b, CFG_IDEAL, _key(0))
+    ideal = a @ b
+    re = float(jnp.linalg.norm(out - ideal) / jnp.linalg.norm(ideal))
+    assert re < 0.02, re
+
+
+def test_more_bits_less_error():
+    a, b = _rand((32, 64), 32), _rand((64, 32), 33)
+    ideal = a @ b
+
+    def re(widths):
+        cfg = DpeCfg(widths_a=widths, widths_w=widths, noise_free=True, cv=0.0)
+        out = dpe_matmul(a, b, cfg, _key(0))
+        return float(jnp.linalg.norm(out - ideal) / jnp.linalg.norm(ideal))
+
+    assert re((1, 1, 2, 4, 4)) < re((1, 1, 2, 4)) < re((1, 1, 2))
+
+
+def test_noise_increases_error():
+    a, b = _rand((32, 64), 34), _rand((64, 32), 35)
+    ideal = a @ b
+
+    def re(cv):
+        cfg = DpeCfg(cv=cv, noise_free=False)
+        out = dpe_matmul(a, b, cfg, _key(7))
+        return float(jnp.linalg.norm(out - ideal) / jnp.linalg.norm(ideal))
+
+    assert re(0.2) > re(0.01)
+
+
+def test_noise_is_keyed():
+    cfg = DpeCfg(cv=0.1)
+    a, b = _rand((8, 64), 36), _rand((64, 16), 37)
+    o1 = dpe_matmul(a, b, cfg, _key(1))
+    o2 = dpe_matmul(a, b, cfg, _key(2))
+    assert not np.allclose(np.asarray(o1), np.asarray(o2))
+    o1b = dpe_matmul(a, b, cfg, _key(1))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o1b))

@@ -1,0 +1,11 @@
+//! Bench: regenerates the paper's fig03_device artifact at full scale.
+//! Run: `cargo bench --bench fig03_device`  (all benches: `cargo bench`)
+
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+
+fn main() {
+    let cfg = SimConfig::default();
+    let t0 = std::time::Instant::now();
+    run_experiment("fig03_device", &cfg, Scale::Full).expect("experiment failed");
+    println!("\n[fig03_device] total {:.1} s", t0.elapsed().as_secs_f64());
+}

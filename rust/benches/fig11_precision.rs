@@ -1,0 +1,11 @@
+//! Bench: regenerates the paper's fig11_precision artifact at full scale.
+//! Run: `cargo bench --bench fig11_precision`  (all benches: `cargo bench`)
+
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+
+fn main() {
+    let cfg = SimConfig::default();
+    let t0 = std::time::Instant::now();
+    run_experiment("fig11_precision", &cfg, Scale::Full).expect("experiment failed");
+    println!("\n[fig11_precision] total {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerates the paper's fig13_solver artifact at full scale.
+//! Run: `cargo bench --bench fig13_solver`  (all benches: `cargo bench`)
+
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+
+fn main() {
+    let cfg = SimConfig::default();
+    let t0 = std::time::Instant::now();
+    run_experiment("fig13_solver", &cfg, Scale::Full).expect("experiment failed");
+    println!("\n[fig13_solver] total {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerates the paper's fig15_kmeans artifact at full scale.
+//! Run: `cargo bench --bench fig15_kmeans`  (all benches: `cargo bench`)
+
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+
+fn main() {
+    let cfg = SimConfig::default();
+    let t0 = std::time::Instant::now();
+    run_experiment("fig15_kmeans", &cfg, Scale::Full).expect("experiment failed");
+    println!("\n[fig15_kmeans] total {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerates the paper's fig17_inference artifact at full scale.
+//! Run: `cargo bench --bench fig17_inference`  (all benches: `cargo bench`)
+
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+
+fn main() {
+    let cfg = SimConfig::default();
+    let t0 = std::time::Instant::now();
+    run_experiment("fig17_inference", &cfg, Scale::Full).expect("experiment failed");
+    println!("\n[fig17_inference] total {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerates the paper's table3_throughput artifact at full scale.
+//! Run: `cargo bench --bench table3_throughput`  (all benches: `cargo bench`)
+
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+
+fn main() {
+    let cfg = SimConfig::default();
+    let t0 = std::time::Instant::now();
+    run_experiment("table3_throughput", &cfg, Scale::Full).expect("experiment failed");
+    println!("\n[table3_throughput] total {:.1} s", t0.elapsed().as_secs_f64());
+}

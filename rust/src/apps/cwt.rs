@@ -1,0 +1,208 @@
+//! Continuous wavelet transform on the DPE (paper §5, Fig 14).
+//!
+//! The Morlet CWT is organized as a matrix multiplication: each row of the
+//! kernel matrix is one scaled/shifted wavelet, so the transform of a
+//! windowed signal is `K · s`. The complex Morlet is split into real and
+//! imaginary kernel matrices, each quantized to signed INT4 and mapped on
+//! separate arrays (Fig 14(c)); the power spectrum recombines the two
+//! convolution results.
+
+use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+use crate::tensor::Matrix;
+
+/// Morlet wavelet (ω₀ = 6): `ψ(t) = π^(−1/4)·exp(iω₀t)·exp(−t²/2)`.
+/// Returns (real, imag) at time `t`.
+pub fn morlet(t: f64) -> (f64, f64) {
+    let envelope = (-t * t / 2.0).exp() * std::f64::consts::PI.powf(-0.25);
+    let omega0 = 6.0;
+    ((omega0 * t).cos() * envelope, (omega0 * t).sin() * envelope)
+}
+
+/// Build the Morlet kernel matrices for a window of length `n` and the
+/// given scales (in samples). Row `s` of each matrix is the wavelet at
+/// scale `scales[s]` centered in the window, normalized by 1/√scale.
+pub fn morlet_kernels(n: usize, scales: &[f64]) -> (Matrix, Matrix) {
+    let mut real = Matrix::zeros(scales.len(), n);
+    let mut imag = Matrix::zeros(scales.len(), n);
+    for (si, &scale) in scales.iter().enumerate() {
+        assert!(scale > 0.0);
+        let norm = 1.0 / scale.sqrt();
+        for j in 0..n {
+            let t = (j as f64 - n as f64 / 2.0) / scale;
+            let (re, im) = morlet(t);
+            *real.at_mut(si, j) = norm * re;
+            *imag.at_mut(si, j) = norm * im;
+        }
+    }
+    (real, imag)
+}
+
+/// Dyadic-ish scale ladder from `min` to `max` (samples), `per_octave`
+/// voices per octave — the standard CWT scale axis.
+pub fn scale_ladder(min: f64, max: f64, per_octave: usize) -> Vec<f64> {
+    let mut scales = Vec::new();
+    let step = (2f64).powf(1.0 / per_octave as f64);
+    let mut s = min;
+    while s <= max {
+        scales.push(s);
+        s *= step;
+    }
+    scales
+}
+
+/// CWT power spectrum computed on hardware.
+///
+/// The signal is processed in sliding windows of the kernel length with
+/// stride 1 (each window = one DPE matvec batch); output is
+/// `(scales, time)` power. `engine = None` computes the digital reference.
+pub struct CwtProcessor {
+    pub real: Matrix,
+    pub imag: Matrix,
+    pub scales: Vec<f64>,
+}
+
+impl CwtProcessor {
+    pub fn new(window: usize, scales: Vec<f64>) -> Self {
+        let (real, imag) = morlet_kernels(window, &scales);
+        CwtProcessor { real, imag, scales }
+    }
+
+    /// Power spectrum |W|² of `signal`. With `Some((engine, method))` the
+    /// two kernel matmuls run on the DPE (real/imag mapped separately).
+    pub fn power(
+        &self,
+        signal: &[f64],
+        hw: Option<(&DotProductEngine, &SliceMethod)>,
+    ) -> Matrix {
+        let n = self.real.cols;
+        assert!(signal.len() >= n, "signal shorter than window");
+        let t_out = signal.len() - n + 1;
+        // Window matrix: (t_out, n) — each row one signal window.
+        let mut windows = Matrix::zeros(t_out, n);
+        for t in 0..t_out {
+            windows.row_mut(t).copy_from_slice(&signal[t..t + n]);
+        }
+        // (t_out, n) · (n, scales) for both parts.
+        let (re, im) = match hw {
+            Some((engine, method)) => {
+                let wr = engine.prepare_weights(&self.real.transpose(), method, 0);
+                let wi = engine.prepare_weights(&self.imag.transpose(), method, 1);
+                (
+                    engine.matmul_prepared(&windows, &wr, method, 0),
+                    engine.matmul_prepared(&windows, &wi, method, 1),
+                )
+            }
+            None => (
+                windows.matmul(&self.real.transpose()),
+                windows.matmul(&self.imag.transpose()),
+            ),
+        };
+        // Power = re² + im², transposed to (scales, time).
+        let mut out = Matrix::zeros(self.scales.len(), t_out);
+        for t in 0..t_out {
+            for s in 0..self.scales.len() {
+                let r = re.at(t, s);
+                let i = im.at(t, s);
+                *out.at_mut(s, t) = r * r + i * i;
+            }
+        }
+        out
+    }
+}
+
+/// The paper's INT4 mapping for the wavelet matrices.
+pub fn int4_method() -> SliceMethod {
+    SliceMethod::int(SliceSpec::int4())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpe::DpeConfig;
+
+    #[test]
+    fn morlet_is_normalized_gaussian_envelope() {
+        let (re0, im0) = morlet(0.0);
+        assert!(re0 > 0.7 && re0 < 0.8); // π^-1/4 ≈ 0.7511
+        assert!(im0.abs() < 1e-12);
+        let (re_far, im_far) = morlet(6.0);
+        assert!(re_far.abs() < 1e-6 && im_far.abs() < 1e-6);
+    }
+
+    #[test]
+    fn kernels_shape_and_symmetry() {
+        let scales = vec![2.0, 4.0, 8.0];
+        let (re, im) = morlet_kernels(64, &scales);
+        assert_eq!((re.rows, re.cols), (3, 64));
+        assert_eq!((im.rows, im.cols), (3, 64));
+        // Real part symmetric, imaginary antisymmetric around center.
+        for j in 0..31 {
+            assert!((re.at(1, 32 + j) - re.at(1, 32 - j)).abs() < 1e-9);
+            assert!((im.at(1, 32 + j) + im.at(1, 32 - j)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn scale_ladder_is_geometric() {
+        let s = scale_ladder(2.0, 64.0, 4);
+        assert!(s.len() > 10);
+        for w in s.windows(2) {
+            assert!((w[1] / w[0] - 2f64.powf(0.25)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cwt_peaks_at_matching_scale() {
+        // Pure sinusoid of period P: power should peak at scale ≈ ω₀·P/2π.
+        let period = 16.0;
+        let n_sig = 512;
+        let signal: Vec<f64> = (0..n_sig)
+            .map(|t| (std::f64::consts::TAU * t as f64 / period).sin())
+            .collect();
+        let scales = scale_ladder(2.0, 64.0, 8);
+        let proc = CwtProcessor::new(128, scales.clone());
+        let power = proc.power(&signal, None);
+        // Average power over time per scale; find argmax.
+        let mean_p: Vec<f64> = (0..scales.len())
+            .map(|s| power.row(s).iter().sum::<f64>() / power.cols as f64)
+            .collect();
+        let argmax = mean_p
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        let expected_scale = 6.0 * period / std::f64::consts::TAU;
+        let ratio = scales[argmax] / expected_scale;
+        assert!((0.8..1.25).contains(&ratio), "peak scale {} vs expected {expected_scale}", scales[argmax]);
+    }
+
+    #[test]
+    fn hardware_cwt_close_to_digital() {
+        // Fig 14: INT4-mapped kernels still resolve the spectrum.
+        let signal: Vec<f64> = (0..300)
+            .map(|t| (std::f64::consts::TAU * t as f64 / 20.0).sin())
+            .collect();
+        let scales = scale_ladder(4.0, 32.0, 4);
+        let proc = CwtProcessor::new(96, scales);
+        let digital = proc.power(&signal, None);
+        let mut cfg = DpeConfig::default();
+        cfg.device.cv = 0.02;
+        let engine = DotProductEngine::new(cfg, 5);
+        let method = int4_method();
+        let hw = proc.power(&signal, Some((&engine, &method)));
+        // Power spectra correlate strongly even at INT4.
+        let corr = pearson(&digital.data, &hw.data);
+        assert!(corr > 0.95, "spectrum correlation {corr}");
+    }
+
+    fn pearson(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().sum::<f64>() / n;
+        let mb = b.iter().sum::<f64>() / n;
+        let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum();
+        let va: f64 = a.iter().map(|x| (x - ma) * (x - ma)).sum();
+        let vb: f64 = b.iter().map(|y| (y - mb) * (y - mb)).sum();
+        cov / (va.sqrt() * vb.sqrt()).max(1e-300)
+    }
+}

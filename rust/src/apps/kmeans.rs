@@ -1,0 +1,307 @@
+//! K-means clustering on the DPE (paper §5, Fig 15).
+//!
+//! Squared items are unsupported on a crossbar, so Euclidean distance uses
+//! the paper's dot-product trick (after [21], Wang et al.): with the
+//! augmented vectors `x̃ = [x, −1/2, …, −1/2]` (n tail entries) and
+//! `ỹ = [y, y²/n, …, y²/n]`,
+//! `x̃·ỹ = x·y − y²/2 = (‖x‖² − ‖x − y‖²)/2`, so for a fixed input the
+//! similarity is maximal exactly where the Euclidean distance is minimal
+//! (the `‖x‖²` term is shared by all centers). Center similarity is
+//! therefore one DPE matmul per assignment pass — the paper's
+//! "similarity layer".
+
+use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// K-means configuration (paper: IRIS, INT8 (1,1,2,4), n = 10 tail).
+#[derive(Debug, Clone)]
+pub struct KmeansConfig {
+    pub k: usize,
+    pub tail: usize,
+    pub max_iter: usize,
+    pub seed: u64,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        KmeansConfig { k: 3, tail: 10, max_iter: 25, seed: 2024 }
+    }
+}
+
+/// Result of a clustering run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// Final centers, `k × d`.
+    pub centers: Matrix,
+    pub assignments: Vec<usize>,
+    pub iterations: usize,
+    /// Center trajectory per iteration (Fig 15(a) plots the evolution).
+    pub center_history: Vec<Matrix>,
+}
+
+/// Augment data rows: `[x, −1/2 × tail]`.
+fn augment_data(x: &Matrix, tail: usize) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols + tail);
+    for i in 0..x.rows {
+        out.row_mut(i)[..x.cols].copy_from_slice(x.row(i));
+        for t in 0..tail {
+            out.row_mut(i)[x.cols + t] = -0.5;
+        }
+    }
+    out
+}
+
+/// Augment centers: `[y, y²/n × tail]` (transposed for the matmul).
+fn augment_centers(centers: &Matrix, tail: usize) -> Matrix {
+    let mut out = Matrix::zeros(centers.cols + tail, centers.rows);
+    for c in 0..centers.rows {
+        let y = centers.row(c);
+        let y2: f64 = y.iter().map(|v| v * v).sum();
+        for (j, &v) in y.iter().enumerate() {
+            *out.at_mut(j, c) = v;
+        }
+        for t in 0..tail {
+            *out.at_mut(centers.cols + t, c) = y2 / tail as f64;
+        }
+    }
+    out
+}
+
+/// One assignment pass: similarity matmul (on DPE when provided), argmax.
+pub fn assign(
+    x: &Matrix,
+    centers: &Matrix,
+    tail: usize,
+    hw: Option<(&DotProductEngine, &SliceMethod)>,
+    tag: u64,
+) -> Vec<usize> {
+    let xa = augment_data(x, tail);
+    let ca = augment_centers(centers, tail);
+    let sim = match hw {
+        Some((engine, method)) => {
+            let w = engine.prepare_weights(&ca, method, tag);
+            engine.matmul_prepared(&xa, &w, method, tag)
+        }
+        None => xa.matmul(&ca),
+    };
+    (0..x.rows)
+        .map(|i| {
+            sim.row(i)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+/// Full K-means loop with hardware-assigned similarity.
+pub fn kmeans(
+    x: &Matrix,
+    cfg: &KmeansConfig,
+    hw: Option<(&DotProductEngine, &SliceMethod)>,
+) -> KmeansResult {
+    assert!(cfg.k >= 1 && x.rows >= cfg.k);
+    let mut rng = Pcg64::new(cfg.seed, 0x4B4D);
+    // k-means++-lite init: random distinct samples.
+    let mut chosen: Vec<usize> = Vec::new();
+    while chosen.len() < cfg.k {
+        let c = rng.below(x.rows);
+        if !chosen.contains(&c) {
+            chosen.push(c);
+        }
+    }
+    let mut centers = Matrix::zeros(cfg.k, x.cols);
+    for (c, &i) in chosen.iter().enumerate() {
+        centers.row_mut(c).copy_from_slice(x.row(i));
+    }
+    let mut history = vec![centers.clone()];
+    let mut assignments = vec![0usize; x.rows];
+    let mut iterations = 0;
+    for it in 0..cfg.max_iter {
+        iterations = it + 1;
+        let new_assign = assign(x, &centers, cfg.tail, hw, it as u64);
+        // Update centers (digital averaging, as in the paper's host loop).
+        let mut sums = Matrix::zeros(cfg.k, x.cols);
+        let mut counts = vec![0usize; cfg.k];
+        for (i, &c) in new_assign.iter().enumerate() {
+            counts[c] += 1;
+            for (s, &v) in sums.row_mut(c).iter_mut().zip(x.row(i)) {
+                *s += v;
+            }
+        }
+        let mut moved = 0.0f64;
+        for c in 0..cfg.k {
+            if counts[c] == 0 {
+                continue; // keep empty cluster's center
+            }
+            for j in 0..x.cols {
+                let nv = sums.at(c, j) / counts[c] as f64;
+                moved = moved.max((nv - centers.at(c, j)).abs());
+                *centers.at_mut(c, j) = nv;
+            }
+        }
+        history.push(centers.clone());
+        let stable = new_assign == assignments;
+        assignments = new_assign;
+        if stable || moved < 1e-12 {
+            break;
+        }
+    }
+    KmeansResult { centers, assignments, iterations, center_history: history }
+}
+
+/// Clustering agreement vs ground-truth labels: best-permutation accuracy
+/// over ≤4 clusters (exhaustive permutation search).
+pub fn clustering_accuracy(assignments: &[usize], labels: &[usize], k: usize) -> f64 {
+    assert!(k <= 4, "permutation search limited to k ≤ 4");
+    let perms = permutations(k);
+    let mut best = 0.0f64;
+    for perm in perms {
+        let correct = assignments
+            .iter()
+            .zip(labels)
+            .filter(|(&a, &l)| perm[a] == l)
+            .count();
+        best = best.max(correct as f64 / labels.len() as f64);
+    }
+    best
+}
+
+fn permutations(k: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut items: Vec<usize> = (0..k).collect();
+    permute(&mut items, 0, &mut out);
+    out
+}
+
+fn permute(items: &mut Vec<usize>, start: usize, out: &mut Vec<Vec<usize>>) {
+    if start == items.len() {
+        out.push(items.clone());
+        return;
+    }
+    for i in start..items.len() {
+        items.swap(start, i);
+        permute(items, start + 1, out);
+        items.swap(start, i);
+    }
+}
+
+/// The paper's INT8 (1,1,2,4) method for Fig 15.
+pub fn int8_method() -> SliceMethod {
+    SliceMethod::int(SliceSpec::int8())
+}
+
+/// Min–max normalize each feature column to [0, 1] — balances the feature
+/// and `y²/n` tail magnitudes so the INT8 quantization range is used
+/// evenly (required for hardware clustering fidelity).
+pub fn min_max_normalize(x: &mut Matrix) {
+    for j in 0..x.cols {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..x.rows {
+            lo = lo.min(x.at(i, j));
+            hi = hi.max(x.at(i, j));
+        }
+        let span = (hi - lo).max(1e-300);
+        for i in 0..x.rows {
+            *x.at_mut(i, j) = (x.at(i, j) - lo) / span;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::iris;
+    use crate::dpe::DpeConfig;
+
+    fn iris_matrix() -> (Matrix, Vec<usize>) {
+        let ds = iris::load(50, 42);
+        let mut m = Matrix::from_vec(ds.len(), 4, ds.features.clone());
+        min_max_normalize(&mut m);
+        (m, ds.labels.clone())
+    }
+
+    #[test]
+    fn distance_trick_is_monotone_in_distance() {
+        // x̃·ỹ = 2x·y − y²: for fixed x, larger similarity ⇔ smaller
+        // (x−y)².
+        let x = Matrix::from_vec(1, 3, vec![1.0, -0.5, 2.0]);
+        let centers =
+            Matrix::from_vec(3, 3, vec![1.0, -0.5, 2.0, 0.0, 0.0, 0.0, 2.0, 1.0, -1.0]);
+        let xa = augment_data(&x, 10);
+        let ca = augment_centers(&centers, 10);
+        let sim = xa.matmul(&ca);
+        let d2: Vec<f64> = (0..3)
+            .map(|c| {
+                x.row(0)
+                    .iter()
+                    .zip(centers.row(c))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum()
+            })
+            .collect();
+        // Verify sim = x² − d² up to the shared x² offset: ordering reversed.
+        for a in 0..3 {
+            for b in 0..3 {
+                if d2[a] < d2[b] {
+                    assert!(sim.at(0, a) > sim.at(0, b), "similarity must invert distance order");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn digital_kmeans_clusters_iris() {
+        let (x, labels) = iris_matrix();
+        let res = kmeans(&x, &KmeansConfig::default(), None);
+        let acc = clustering_accuracy(&res.assignments, &labels, 3);
+        assert!(acc > 0.8, "digital clustering accuracy {acc}");
+        assert!(res.iterations <= 25);
+    }
+
+    #[test]
+    fn hardware_kmeans_matches_digital_clusters() {
+        // Fig 15(b): hardware clustering results are counterparts of the
+        // full-precision ones.
+        let (x, labels) = iris_matrix();
+        let digital = kmeans(&x, &KmeansConfig::default(), None);
+        let mut cfg = DpeConfig::default();
+        cfg.device.cv = 0.02;
+        let engine = DotProductEngine::new(cfg, 3);
+        let method = int8_method();
+        let hw = kmeans(&x, &KmeansConfig::default(), Some((&engine, &method)));
+        let acc_d = clustering_accuracy(&digital.assignments, &labels, 3);
+        let acc_h = clustering_accuracy(&hw.assignments, &labels, 3);
+        assert!(acc_h > acc_d - 0.1, "hw {acc_h} vs digital {acc_d}");
+        // Centers land near each other (best permutation distance).
+        let agree = clustering_accuracy(&hw.assignments, &digital.assignments, 3);
+        assert!(agree > 0.85, "assignment agreement {agree}");
+    }
+
+    #[test]
+    fn center_history_recorded() {
+        let (x, _) = iris_matrix();
+        let res = kmeans(&x, &KmeansConfig { max_iter: 5, ..Default::default() }, None);
+        assert_eq!(res.center_history.len(), res.iterations + 1);
+    }
+
+    #[test]
+    fn accuracy_permutation_invariant() {
+        let labels = vec![0, 0, 1, 1, 2, 2];
+        let assign = vec![2, 2, 0, 0, 1, 1]; // relabeled perfectly
+        assert_eq!(clustering_accuracy(&assign, &labels, 3), 1.0);
+    }
+
+    #[test]
+    fn single_cluster_trivial() {
+        let x = Matrix::from_vec(4, 2, vec![0.0, 0.0, 0.1, 0.1, 0.2, 0.0, 0.1, 0.2]);
+        let res = kmeans(&x, &KmeansConfig { k: 1, ..Default::default() }, None);
+        assert!(res.assignments.iter().all(|&a| a == 0));
+        // Center = mean of data.
+        assert!((res.centers.at(0, 0) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,4 @@
+//! Application substrates demonstrating the DPE (paper §5).
+pub mod cwt;
+pub mod kmeans;
+pub mod solver;

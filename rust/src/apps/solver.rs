@@ -1,0 +1,310 @@
+//! Linear equation solving on the DPE (paper §5, Fig 13).
+//!
+//! The showcase problem is the paper's own word-line circuit equation: a
+//! banded symmetric positive-definite system from Ohm/Kirchhoff analysis of
+//! a resistive word line loaded by memristors, solved by conjugate
+//! gradients whose matvec runs on the (noisy, pre-aligned FP32) DPE.
+
+use crate::dpe::{DotProductEngine, SliceMethod};
+#[cfg(test)]
+use crate::dpe::SliceSpec;
+use crate::tensor::Matrix;
+
+/// Build the word-line circuit equation `A·v = b` (Fig 13(a)): `n` nodes
+/// chained by wire conductance `g_w = 1/r_wire`, each node loaded to ground
+/// through a memristor of conductance `g_load[i]`, driven by `v_in` through
+/// the first wire segment. The matrix is tridiagonal SPD.
+pub fn wordline_equation(g_load: &[f64], r_wire: f64, v_in: f64) -> (Matrix, Vec<f64>) {
+    let n = g_load.len();
+    assert!(n > 0 && r_wire > 0.0);
+    let gw = 1.0 / r_wire;
+    let mut a = Matrix::zeros(n, n);
+    let mut b = vec![0.0; n];
+    for i in 0..n {
+        let mut diag = g_load[i];
+        if i == 0 {
+            diag += gw;
+            b[0] = gw * v_in;
+        } else {
+            diag += gw;
+            *a.at_mut(i, i - 1) = -gw;
+        }
+        if i + 1 < n {
+            diag += gw;
+            *a.at_mut(i, i + 1) = -gw;
+        }
+        *a.at_mut(i, i) = diag;
+    }
+    (a, b)
+}
+
+/// Matvec backend for CG: software (exact) or the hardware DPE.
+///
+/// The hardware backend programs the coefficient matrix onto the arrays
+/// **once** (as real deployments do — `A` does not change between
+/// iterations); every matvec then reads the same programmed conductances.
+pub enum MatvecBackend<'a> {
+    Software,
+    Hardware {
+        engine: &'a DotProductEngine,
+        method: SliceMethod,
+        prepared: crate::dpe::PreparedWeights,
+    },
+}
+
+impl<'a> MatvecBackend<'a> {
+    /// Program `a` for hardware solving (Fig 13: pre-aligned fine slices + IntegerSnap ADC).
+    pub fn hardware(engine: &'a DotProductEngine, method: SliceMethod, a: &Matrix) -> Self {
+        let prepared = engine.prepare_weights(a, &method, 0);
+        MatvecBackend::Hardware { engine, method, prepared }
+    }
+
+    fn matvec(&self, a: &Matrix, x: &[f64], iter: u64) -> Vec<f64> {
+        match self {
+            MatvecBackend::Software => a.matvec(x),
+            MatvecBackend::Hardware { engine, method, prepared } => {
+                // x as a row vector: (1×n)·(n×n).
+                let xm = Matrix::from_vec(1, x.len(), x.to_vec());
+                engine.matmul_prepared(&xm, prepared, method, iter).data
+            }
+        }
+    }
+}
+
+/// Convergence log of one CG run.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    /// Residual norm ‖b − A·x‖₂ per iteration (Fig 13(b) plots these).
+    pub residuals: Vec<f64>,
+    pub converged: bool,
+}
+
+/// Conjugate gradients with the matvec routed through `backend`.
+///
+/// With a noisy hardware backend the recurrence residual drifts from the
+/// true residual, so the true residual is recomputed (in software, as the
+/// digital host would) every iteration for the convergence log.
+pub fn conjugate_gradient(
+    a: &Matrix,
+    b: &[f64],
+    backend: &MatvecBackend,
+    tol: f64,
+    max_iter: usize,
+) -> CgResult {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r: Vec<f64> = b.to_vec();
+    let mut p = r.clone();
+    let mut rs_old: f64 = r.iter().map(|v| v * v).sum();
+    let b_norm = rs_old.sqrt().max(1e-300);
+    let mut residuals = Vec::with_capacity(max_iter);
+    let mut converged = false;
+    let mut best_x = x.clone();
+    let mut best_res = f64::INFINITY;
+    for it in 0..max_iter {
+        let ap = backend.matvec(a, &p, it as u64);
+        let p_ap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if p_ap <= 0.0 {
+            // Hardware noise broke conjugacy (ascent direction): restart
+            // from the current residual (steepest descent).
+            p = r.clone();
+            rs_old = r.iter().map(|v| v * v).sum();
+            continue;
+        }
+        let alpha = rs_old / p_ap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        // True residual for the log (recomputed digitally).
+        let true_r = {
+            let ax = a.matvec(&x);
+            (b.iter().zip(&ax).map(|(bi, ai)| (bi - ai) * (bi - ai)).sum::<f64>()).sqrt() / b_norm
+        };
+        residuals.push(true_r);
+        if true_r < best_res {
+            best_res = true_r;
+            best_x.copy_from_slice(&x);
+        }
+        if true_r < tol {
+            converged = true;
+            break;
+        }
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+    // Return the best iterate seen (noisy matvecs are not monotone).
+    CgResult { x: best_x, residuals, converged }
+}
+
+/// Exact dense solve (Gaussian elimination with partial pivoting) — the
+/// digital reference for Fig 13(c).
+pub fn solve_dense(a: &Matrix, b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut rhs = b.to_vec();
+    for k in 0..n {
+        let piv = (k..n)
+            .max_by(|&p, &q| m.at(p, k).abs().total_cmp(&m.at(q, k).abs()))
+            .unwrap();
+        if piv != k {
+            for j in 0..n {
+                let tmp = m.at(k, j);
+                *m.at_mut(k, j) = m.at(piv, j);
+                *m.at_mut(piv, j) = tmp;
+            }
+            rhs.swap(k, piv);
+        }
+        let pk = m.at(k, k);
+        assert!(pk.abs() > 1e-300, "singular system");
+        for i in (k + 1)..n {
+            let f = m.at(i, k) / pk;
+            if f != 0.0 {
+                for j in k..n {
+                    let v = m.at(i, j) - f * m.at(k, j);
+                    *m.at_mut(i, j) = v;
+                }
+                rhs[i] -= f * rhs[k];
+            }
+        }
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = rhs[i];
+        for j in (i + 1)..n {
+            acc -= m.at(i, j) * x[j];
+        }
+        x[i] = acc / m.at(i, i);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpe::DpeConfig;
+    use crate::util::rng::Pcg64;
+
+    fn test_system(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Pcg64::seeded(seed);
+        let g_load: Vec<f64> = (0..n).map(|_| rng.uniform_range(1e-6, 1e-5)).collect();
+        wordline_equation(&g_load, 2.93, 0.2)
+    }
+
+    #[test]
+    fn wordline_matrix_is_spd_tridiagonal() {
+        let (a, b) = test_system(16, 1);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert!((a.at(i, j) - a.at(j, i)).abs() < 1e-18, "symmetric");
+                if (i as isize - j as isize).abs() > 1 {
+                    assert_eq!(a.at(i, j), 0.0, "tridiagonal");
+                }
+            }
+            assert!(a.at(i, i) > 0.0);
+        }
+        assert!(b[0] > 0.0);
+        assert!(b[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn software_cg_matches_dense() {
+        let (a, b) = test_system(32, 2);
+        let dense = solve_dense(&a, &b);
+        let cg = conjugate_gradient(&a, &b, &MatvecBackend::Software, 1e-12, 500);
+        assert!(cg.converged);
+        for (x, y) in cg.x.iter().zip(&dense) {
+            assert!((x - y).abs() < 1e-8 * y.abs().max(1e-3), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn voltages_decay_along_wordline() {
+        // Physics sanity: IR drop means monotone non-increasing node
+        // voltages away from the source.
+        let (a, b) = test_system(24, 3);
+        let v = solve_dense(&a, &b);
+        for w in v.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15);
+        }
+        assert!(v[0] < 0.2);
+    }
+
+    #[test]
+    fn hardware_cg_converges_close_to_software() {
+        // Fig 13(b)(c): the hardware solver needs more iterations but lands
+        // on a solution consistent with software. Solver method: 24-bit
+        // pre-aligned fine slices + calibrated ADC (see SliceSpec::solver26),
+        // device variation 2%.
+        let (a, b) = test_system(32, 4);
+        let mut cfg = DpeConfig::default();
+        cfg.array = (32, 32);
+        cfg.device.cv = 0.02;
+        cfg.adc_policy = crate::dpe::engine::AdcPolicy::IntegerSnap;
+        let engine = DotProductEngine::new(cfg, 11);
+        let method = SliceMethod::fp(SliceSpec::solver26());
+        let hw = MatvecBackend::hardware(&engine, method, &a);
+        let sw = conjugate_gradient(&a, &b, &MatvecBackend::Software, 1e-10, 300);
+        let hwr = conjugate_gradient(&a, &b, &hw, 1e-6, 300);
+        assert!(hwr.converged, "hardware CG did not reach 1e-6");
+        let rel_diff: f64 = hwr
+            .x
+            .iter()
+            .zip(&sw.x)
+            .map(|(h, s)| (h - s) * (h - s))
+            .sum::<f64>()
+            .sqrt()
+            / sw.x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(rel_diff < 1e-3, "hardware vs software solution diff {rel_diff}");
+        // Hardware needs at least as many iterations as software.
+        let sw_iters = sw.residuals.iter().position(|&r| r < 1e-6).unwrap();
+        assert!(
+            hwr.residuals.len() >= sw_iters,
+            "hw {} vs sw {}",
+            hwr.residuals.len(),
+            sw_iters
+        );
+        // Voltages consistent: max deviation far below the 0.2 V drive.
+        let maxdv = hwr.x.iter().zip(&sw.x).map(|(h, s)| (h - s).abs()).fold(0.0, f64::max);
+        assert!(maxdv < 0.002, "max voltage deviation {maxdv}");
+    }
+
+    #[test]
+    fn hardware_cg_breaks_down_at_high_variation() {
+        // The flip side (feeds the Fig 13 bench's cv sweep): at Table-2
+        // cv = 0.05 the ill-conditioned word-line system can no longer be
+        // solved to software precision.
+        let (a, b) = test_system(32, 4);
+        let mut cfg = DpeConfig::default();
+        cfg.array = (32, 32);
+        cfg.device.cv = 0.1;
+        cfg.adc_policy = crate::dpe::engine::AdcPolicy::IntegerSnap;
+        let engine = DotProductEngine::new(cfg, 11);
+        let method = SliceMethod::fp(SliceSpec::solver26());
+        let hw = MatvecBackend::hardware(&engine, method, &a);
+        let hwr = conjugate_gradient(&a, &b, &hw, 1e-6, 100);
+        assert!(!hwr.converged, "10% variation should not reach 1e-6");
+    }
+
+    #[test]
+    fn cg_residuals_decrease_software() {
+        let (a, b) = test_system(48, 5);
+        let cg = conjugate_gradient(&a, &b, &MatvecBackend::Software, 1e-12, 300);
+        let first = cg.residuals[0];
+        let last = *cg.residuals.last().unwrap();
+        assert!(last < first * 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn dense_rejects_singular() {
+        let a = Matrix::zeros(3, 3);
+        solve_dense(&a, &[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,408 @@
+//! Nodal solvers for the crossbar circuit: exact banded-LU and the paper's
+//! fast cross-iteration (alternating tridiagonal line relaxation).
+
+use super::banded::{solve_tridiagonal, Banded};
+use super::CrossbarCircuit;
+use crate::tensor::Matrix;
+use crate::util::parallel::par_map;
+
+/// Solved node voltages and derived outputs.
+#[derive(Debug, Clone)]
+pub struct CircuitSolution {
+    /// Word-line node voltages, `rows × cols`.
+    pub v_word: Matrix,
+    /// Bit-line node voltages, `rows × cols`.
+    pub v_bit: Matrix,
+    /// Column output currents into the TIAs (A).
+    pub i_out: Vec<f64>,
+}
+
+/// Convergence log of the cross-iteration solver.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iterations: usize,
+    /// Max |ΔV| per sweep (monitoring Fig 10(d)'s error-vs-iteration).
+    pub deltas: Vec<f64>,
+    pub converged: bool,
+}
+
+impl CrossbarCircuit {
+    /// Output currents as the sum of device currents into each bit line.
+    fn currents_from(&self, v_word: &Matrix, v_bit: &Matrix) -> Vec<f64> {
+        let (rows, cols) = (self.rows(), self.cols());
+        let mut out = vec![0.0; cols];
+        for i in 0..rows {
+            let gw = self.g.row(i);
+            let vw = v_word.row(i);
+            let vb = v_bit.row(i);
+            for j in 0..cols {
+                out[j] += (vw[j] - vb[j]) * gw[j];
+            }
+        }
+        out
+    }
+
+    /// Exact nodal solution via banded LU (the Fig 10 "LTspice" reference).
+    ///
+    /// Unknown ordering interleaves word/bit nodes per cell
+    /// (`idx_w = 2(i·cols + j)`, `idx_b = idx_w + 1`), giving half-bandwidth
+    /// `2·cols`. Cost O(rows·cols·cols²) — intended for arrays ≤ ~256 wide.
+    pub fn solve_direct(&self, v_in: &[f64]) -> anyhow::Result<CircuitSolution> {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(v_in.len(), rows);
+        if self.r_wire == 0.0 {
+            return Ok(self.ideal_solution(v_in));
+        }
+        let gw = 1.0 / self.r_wire;
+        let n = 2 * rows * cols;
+        let bw = 2 * cols;
+        let mut a = Banded::zeros(n, bw, bw);
+        let mut b = vec![0.0; n];
+        let idx_w = |i: usize, j: usize| 2 * (i * cols + j);
+        let idx_b = |i: usize, j: usize| 2 * (i * cols + j) + 1;
+        for i in 0..rows {
+            for j in 0..cols {
+                let g = self.g.at(i, j);
+                let w = idx_w(i, j);
+                let bidx = idx_b(i, j);
+                // Word node: segments + device.
+                let mut wdiag = g;
+                if j == 0 {
+                    // drive through source segment
+                    wdiag += gw;
+                    b[w] += gw * v_in[i];
+                } else {
+                    wdiag += gw;
+                    a.add(w, idx_w(i, j - 1), -gw);
+                }
+                if j + 1 < cols {
+                    wdiag += gw;
+                    a.add(w, idx_w(i, j + 1), -gw);
+                }
+                a.add(w, w, wdiag);
+                a.add(w, bidx, -g);
+                // Bit node: segments + device.
+                let mut bdiag = g;
+                if i > 0 {
+                    bdiag += gw;
+                    a.add(bidx, idx_b(i - 1, j), -gw);
+                }
+                if i + 1 < rows {
+                    bdiag += gw;
+                    a.add(bidx, idx_b(i + 1, j), -gw);
+                } else {
+                    // terminated into TIA virtual ground
+                    bdiag += gw;
+                }
+                a.add(bidx, bidx, bdiag);
+                a.add(bidx, w, -g);
+            }
+        }
+        a.lu_factor()?;
+        let x = a.lu_solve(&b);
+        let mut v_word = Matrix::zeros(rows, cols);
+        let mut v_bit = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                *v_word.at_mut(i, j) = x[idx_w(i, j)];
+                *v_bit.at_mut(i, j) = x[idx_b(i, j)];
+            }
+        }
+        let i_out = self.currents_from(&v_word, &v_bit);
+        Ok(CircuitSolution { v_word, v_bit, i_out })
+    }
+
+    fn ideal_solution(&self, v_in: &[f64]) -> CircuitSolution {
+        let (rows, cols) = (self.rows(), self.cols());
+        let v_word = Matrix::from_fn(rows, cols, |i, _| v_in[i]);
+        let v_bit = Matrix::zeros(rows, cols);
+        let i_out = self.ideal_currents(v_in);
+        CircuitSolution { v_word, v_bit, i_out }
+    }
+
+    /// The paper's cross-iteration solver: alternate between solving every
+    /// word line (tridiagonal in `j`, bit-line voltages frozen) and every
+    /// bit line (tridiagonal in `i`, word-line voltages frozen). Each line
+    /// solve is exact (Thomas algorithm); sweeps repeat until the max node
+    /// update falls below `tol` or `max_iter` sweeps.
+    ///
+    /// Lines are independent within a sweep, so they are solved in parallel.
+    pub fn solve_cross_iteration(
+        &self,
+        v_in: &[f64],
+        tol: f64,
+        max_iter: usize,
+    ) -> (CircuitSolution, IterStats) {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(v_in.len(), rows);
+        if self.r_wire == 0.0 {
+            let sol = self.ideal_solution(v_in);
+            return (sol, IterStats { iterations: 0, deltas: vec![], converged: true });
+        }
+        let gw = 1.0 / self.r_wire;
+        // Initial guess: ideal voltages.
+        let mut v_word = Matrix::from_fn(rows, cols, |i, _| v_in[i]);
+        let mut v_bit = Matrix::zeros(rows, cols);
+        let mut deltas = Vec::new();
+        let mut converged = false;
+        for _sweep in 0..max_iter {
+            // --- word-line sweep: for each row i solve tridiagonal in j.
+            let new_rows: Vec<Vec<f64>> = par_map(rows, |i| {
+                let mut lower = vec![0.0; cols];
+                let mut diag = vec![0.0; cols];
+                let mut upper = vec![0.0; cols];
+                let mut rhs = vec![0.0; cols];
+                for j in 0..cols {
+                    let g = self.g.at(i, j);
+                    let mut d = g;
+                    if j == 0 {
+                        d += gw;
+                        rhs[j] += gw * v_in[i];
+                    } else {
+                        d += gw;
+                        lower[j] = -gw;
+                    }
+                    if j + 1 < cols {
+                        d += gw;
+                        upper[j] = -gw;
+                    }
+                    rhs[j] += g * v_bit.at(i, j);
+                    diag[j] = d;
+                }
+                solve_tridiagonal(&lower, &diag, &upper, &rhs)
+            });
+            let mut delta = 0.0f64;
+            for (i, row) in new_rows.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    delta = delta.max((v - v_word.at(i, j)).abs());
+                    *v_word.at_mut(i, j) = v;
+                }
+            }
+            // --- bit-line sweep: for each column j solve tridiagonal in i.
+            let new_cols: Vec<Vec<f64>> = par_map(cols, |j| {
+                let mut lower = vec![0.0; rows];
+                let mut diag = vec![0.0; rows];
+                let mut upper = vec![0.0; rows];
+                let mut rhs = vec![0.0; rows];
+                for i in 0..rows {
+                    let g = self.g.at(i, j);
+                    let mut d = g;
+                    if i > 0 {
+                        d += gw;
+                        lower[i] = -gw;
+                    }
+                    if i + 1 < rows {
+                        d += gw;
+                        upper[i] = -gw;
+                    } else {
+                        d += gw; // ground termination
+                    }
+                    rhs[i] += g * v_word.at(i, j);
+                    diag[i] = d;
+                }
+                solve_tridiagonal(&lower, &diag, &upper, &rhs)
+            });
+            for (j, col) in new_cols.iter().enumerate() {
+                for (i, &v) in col.iter().enumerate() {
+                    delta = delta.max((v - v_bit.at(i, j)).abs());
+                    *v_bit.at_mut(i, j) = v;
+                }
+            }
+            deltas.push(delta);
+            if delta < tol {
+                converged = true;
+                break;
+            }
+        }
+        let i_out = self.currents_from(&v_word, &v_bit);
+        (
+            CircuitSolution { v_word, v_bit, i_out },
+            IterStats { iterations: deltas.len(), deltas, converged },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_xbar(rows: usize, cols: usize, r_wire: f64, seed: u64) -> CrossbarCircuit {
+        let mut rng = Pcg64::seeded(seed);
+        let g = Matrix::random_uniform(rows, cols, 1e-7, 1e-5, &mut rng);
+        CrossbarCircuit::new(g, r_wire)
+    }
+
+    /// Dense reference: assemble the full nodal system and Gauss-eliminate.
+    fn solve_dense_reference(xb: &CrossbarCircuit, v_in: &[f64]) -> Vec<f64> {
+        let (rows, cols) = (xb.rows(), xb.cols());
+        let gw = 1.0 / xb.r_wire;
+        let n = 2 * rows * cols;
+        let idx_w = |i: usize, j: usize| 2 * (i * cols + j);
+        let idx_b = |i: usize, j: usize| 2 * (i * cols + j) + 1;
+        let mut a = vec![vec![0.0f64; n]; n];
+        let mut b = vec![0.0f64; n];
+        for i in 0..rows {
+            for j in 0..cols {
+                let g = xb.g.at(i, j);
+                let w = idx_w(i, j);
+                let bb = idx_b(i, j);
+                let mut wd = g;
+                if j == 0 {
+                    wd += gw;
+                    b[w] += gw * v_in[i];
+                } else {
+                    wd += gw;
+                    a[w][idx_w(i, j - 1)] -= gw;
+                }
+                if j + 1 < cols {
+                    wd += gw;
+                    a[w][idx_w(i, j + 1)] -= gw;
+                }
+                a[w][w] += wd;
+                a[w][bb] -= g;
+                let mut bd = g;
+                if i > 0 {
+                    bd += gw;
+                    a[bb][idx_b(i - 1, j)] -= gw;
+                }
+                if i + 1 < rows {
+                    bd += gw;
+                    a[bb][idx_b(i + 1, j)] -= gw;
+                } else {
+                    bd += gw;
+                }
+                a[bb][bb] += bd;
+                a[bb][w] -= g;
+            }
+        }
+        // Gaussian elimination with partial pivoting.
+        for k in 0..n {
+            let piv = (k..n).max_by(|&p, &q| a[p][k].abs().total_cmp(&a[q][k].abs())).unwrap();
+            a.swap(k, piv);
+            b.swap(k, piv);
+            let pk = a[k][k];
+            for i in (k + 1)..n {
+                let m = a[i][k] / pk;
+                if m != 0.0 {
+                    for j in k..n {
+                        a[i][j] -= m * a[k][j];
+                    }
+                    b[i] -= m * b[k];
+                }
+            }
+        }
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut acc = b[i];
+            for j in (i + 1)..n {
+                acc -= a[i][j] * x[j];
+            }
+            x[i] = acc / a[i][i];
+        }
+        // currents
+        let mut out = vec![0.0; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                out[j] += (x[idx_w(i, j)] - x[idx_b(i, j)]) * xb.g.at(i, j);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn direct_matches_dense_reference() {
+        let xb = random_xbar(6, 5, 2.93, 41);
+        let v: Vec<f64> = (0..6).map(|i| 0.05 + 0.01 * i as f64).collect();
+        let direct = xb.solve_direct(&v).unwrap();
+        let dense = solve_dense_reference(&xb, &v);
+        for (a, b) in direct.i_out.iter().zip(&dense) {
+            assert!((a - b).abs() / b.abs().max(1e-30) < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cross_iteration_matches_direct() {
+        for &(rows, cols) in &[(8usize, 8usize), (16, 12), (32, 32)] {
+            let xb = random_xbar(rows, cols, 2.93, 42);
+            let v: Vec<f64> = (0..rows).map(|i| 0.1 * ((i % 5) as f64 + 1.0) / 5.0).collect();
+            let direct = xb.solve_direct(&v).unwrap();
+            let (iter, stats) = xb.solve_cross_iteration(&v, 1e-12, 100);
+            assert!(stats.converged, "not converged for {rows}x{cols}");
+            for (a, b) in iter.i_out.iter().zip(&direct.i_out) {
+                assert!(
+                    (a - b).abs() / b.abs().max(1e-30) < 1e-6,
+                    "{rows}x{cols}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn converges_within_20_iterations_at_1e3() {
+        // Fig 10(d): error < 1e-3 within 20 iterations, even for large
+        // arrays. Check the relative-delta criterion at 256 here (fast);
+        // the bench exercises 1024.
+        let xb = random_xbar(256, 256, 2.93, 43);
+        let v: Vec<f64> = (0..256).map(|i| 0.1 * ((i as f64 / 40.0).sin().abs())).collect();
+        let (_, stats) = xb.solve_cross_iteration(&v, 1e-3 * 0.1, 20);
+        assert!(stats.converged, "deltas={:?}", stats.deltas);
+        assert!(stats.iterations <= 20);
+    }
+
+    #[test]
+    fn ir_drop_attenuates_voltage_and_current() {
+        // Fig 10(b)(c): with wire resistance, far-end word-line voltage is
+        // below the drive and currents are below ideal.
+        let xb = random_xbar(64, 64, 2.93, 44);
+        let v = vec![0.2; 64];
+        let sol = xb.solve_direct(&v).unwrap();
+        for i in 0..64 {
+            assert!(sol.v_word.at(i, 63) < 0.2);
+            assert!(sol.v_word.at(i, 0) <= 0.2 + 1e-12);
+            // Monotone decay along the word line.
+            for j in 1..64 {
+                assert!(sol.v_word.at(i, j) <= sol.v_word.at(i, j - 1) + 1e-12);
+            }
+        }
+        let ideal = xb.ideal_currents(&v);
+        for (a, b) in sol.i_out.iter().zip(&ideal) {
+            assert!(a < b, "sim current should be attenuated: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_wire_resistance_is_ideal() {
+        let mut rng = Pcg64::seeded(45);
+        let g = Matrix::random_uniform(16, 16, 1e-7, 1e-5, &mut rng);
+        let xb = CrossbarCircuit::new(g.clone(), 0.0);
+        let v: Vec<f64> = (0..16).map(|_| rng.uniform_range(0.0, 0.2)).collect();
+        let sol = xb.solve_direct(&v).unwrap();
+        let ideal = xb.ideal_currents(&v);
+        for (a, b) in sol.i_out.iter().zip(&ideal) {
+            assert!((a - b).abs() < 1e-18);
+        }
+    }
+
+    #[test]
+    fn small_wire_resistance_approaches_ideal() {
+        let xb = random_xbar(16, 16, 1e-4, 46);
+        let v = vec![0.1; 16];
+        let sol = xb.solve_direct(&v).unwrap();
+        let ideal = xb.ideal_currents(&v);
+        for (a, b) in sol.i_out.iter().zip(&ideal) {
+            assert!((a - b).abs() / b < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn delta_sequence_is_decreasing() {
+        let xb = random_xbar(32, 32, 2.93, 47);
+        let v = vec![0.15; 32];
+        let (_, stats) = xb.solve_cross_iteration(&v, 0.0, 12);
+        for w in stats.deltas.windows(2) {
+            assert!(w[1] <= w[0] * 1.5, "delta not contracting: {:?}", stats.deltas);
+        }
+        assert!(stats.deltas.last().unwrap() < &1e-6);
+    }
+}

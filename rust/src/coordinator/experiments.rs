@@ -1,0 +1,640 @@
+//! Experiment registry: one entry per paper table/figure. The CLI
+//! (`memintelli run <id>`) and the bench binaries (`benches/`) share these
+//! implementations; benches run `Scale::Full`, the CLI defaults to
+//! `Scale::Quick`.
+
+use super::SimConfig;
+use crate::apps::{cwt, kmeans, solver};
+use crate::circuit::CrossbarCircuit;
+use crate::data::{cifar_like, iris, mnist_like, nino};
+use crate::device::{conductance_clouds, DeviceSpec};
+use crate::dpe::engine::AdcPolicy;
+use crate::dpe::montecarlo::{sweep, McConfig};
+use crate::dpe::{DataMode, DotProductEngine, SliceMethod, SliceSpec};
+use crate::nn::models::{lenet5, resnet18_cifar, vgg16_cifar};
+use crate::nn::train::{evaluate, train, TrainConfig};
+use crate::nn::{HwSpec, Sequential};
+use crate::tensor::Matrix;
+use crate::util::report::{fmt_duration, fmt_sig, time_it, Table};
+use crate::util::rng::Pcg64;
+
+/// Experiment scale: Quick for the CLI smoke path, Full for benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn pick(&self, quick: usize, full: usize) -> usize {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig03_device", "Device model: lognormal HRS/LRS conductance clouds"),
+    ("fig10_circuit", "Crossbar circuit: IR-drop + cross-iteration solver convergence"),
+    ("fig11_precision", "Variable-precision 128x128 matmul: INT8/FP32/BF16/FlexPoint16"),
+    ("fig12_montecarlo", "Monte-Carlo: RE vs bits, block size, variation; quant vs prealign"),
+    ("fig13_solver", "Linear equation solving: software vs hardware CG"),
+    ("fig14_cwt", "Morlet CWT of the ENSO-like series with INT4 kernels"),
+    ("fig15_kmeans", "K-means on IRIS with the dot-product distance trick"),
+    ("fig16_training", "LeNet-5 training under INT4/INT8/FP16"),
+    ("fig17_inference", "ResNet-18/VGG-16 inference vs slice bits and variation"),
+    ("table3_throughput", "Inference throughput (img/s): native vs XLA backend"),
+];
+
+/// Run one experiment by id; returns the emitted tables.
+pub fn run(id: &str, cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> {
+    let tables = match id {
+        "fig03_device" => fig03_device(cfg, scale),
+        "fig10_circuit" => fig10_circuit(cfg, scale),
+        "fig11_precision" => fig11_precision(cfg, scale),
+        "fig12_montecarlo" => fig12_montecarlo(cfg, scale),
+        "fig13_solver" => fig13_solver(cfg, scale),
+        "fig14_cwt" => fig14_cwt(cfg, scale),
+        "fig15_kmeans" => fig15_kmeans(cfg, scale),
+        "fig16_training" => fig16_training(cfg, scale),
+        "fig17_inference" => fig17_inference(cfg, scale),
+        "table3_throughput" => table3_throughput(cfg, scale),
+        _ => anyhow::bail!("unknown experiment '{id}' (see `memintelli list`)"),
+    };
+    for t in &tables {
+        t.emit(&format!("{id}_{}", sanitize(&t.title)));
+    }
+    Ok(tables)
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' }).collect()
+}
+
+// ---------------------------------------------------------------- Fig 3
+
+pub fn fig03_device(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let n = scale.pick(2_000, 20_000);
+    let mut t = Table::new(
+        "Fig 3 — conductance clouds (lognormal device model)",
+        &["state", "target G (S)", "mean (S)", "std (S)", "realized cv", "min", "max"],
+    );
+    for cv in [0.05, 0.1, 0.2] {
+        let spec = DeviceSpec { cv, ..cfg.dpe.device };
+        let (hrs, lrs) = conductance_clouds(&spec, n, cfg.seed);
+        for (name, target, xs) in [("HRS", spec.lgs, &hrs), ("LRS", spec.hgs, &lrs)] {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let std = (xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64).sqrt();
+            t.row(&[
+                format!("{name} cv={cv}"),
+                fmt_sig(target),
+                fmt_sig(mean),
+                fmt_sig(std),
+                format!("{:.4}", std / mean),
+                fmt_sig(xs.iter().cloned().fold(f64::INFINITY, f64::min)),
+                fmt_sig(xs.iter().cloned().fold(0.0, f64::max)),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+// --------------------------------------------------------------- Fig 10
+
+pub fn fig10_circuit(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let mut rng = Pcg64::new(cfg.seed, 0xF16);
+    // (a)-(c): 64×64 array, Rw = 2.93 Ω, sinusoidal word-line drive.
+    let g = Matrix::random_uniform(64, 64, cfg.dpe.device.lgs, cfg.dpe.device.hgs, &mut rng);
+    let xb = CrossbarCircuit::new(g, 2.93);
+    let v_in: Vec<f64> = (0..64).map(|i| 0.1 + 0.1 * (i as f64 / 6.0).sin().abs()).collect();
+    let direct = xb.solve_direct(&v_in).expect("direct solve");
+    let ideal = xb.ideal_currents(&v_in);
+    let mut t1 = Table::new(
+        "Fig 10(b)(c) — IR-drop attenuation, 64x64, Rw=2.93",
+        &["quantity", "near end", "mid", "far end"],
+    );
+    let row_v = |r: usize| {
+        vec![
+            format!("word-line V, row {r}"),
+            format!("{:.4}", direct.v_word.at(r, 0)),
+            format!("{:.4}", direct.v_word.at(r, 32)),
+            format!("{:.4}", direct.v_word.at(r, 63)),
+        ]
+    };
+    t1.row(&row_v(0));
+    t1.row(&row_v(31));
+    let att: Vec<f64> = direct.i_out.iter().zip(&ideal).map(|(s, i)| s / i).collect();
+    t1.row(&[
+        "I_out / I_ideal".into(),
+        format!("{:.4}", att[0]),
+        format!("{:.4}", att[32]),
+        format!("{:.4}", att[63]),
+    ]);
+
+    // (d): cross-iteration convergence vs array size.
+    let sizes: Vec<usize> = match scale {
+        Scale::Quick => vec![64, 128, 256],
+        Scale::Full => vec![64, 128, 256, 512, 1024],
+    };
+    let mut t2 = Table::new(
+        "Fig 10(d) — cross-iteration solver vs array size (target err < 1e-3·Vmax)",
+        &["size", "iterations", "max |dV| at stop", "vs direct (RE)", "solve time"],
+    );
+    for &n in &sizes {
+        let g = Matrix::random_uniform(n, n, cfg.dpe.device.lgs, cfg.dpe.device.hgs, &mut rng);
+        let xb = CrossbarCircuit::new(g, 2.93);
+        let v: Vec<f64> = (0..n).map(|i| 0.1 + 0.1 * (i as f64 / 9.0).sin().abs()).collect();
+        let t0 = std::time::Instant::now();
+        let (sol, stats) = xb.solve_cross_iteration(&v, 1e-3 * 0.2, 20);
+        let dt = t0.elapsed().as_secs_f64();
+        let re = if n <= 128 {
+            let d = xb.solve_direct(&v).unwrap();
+            let num: f64 = sol.i_out.iter().zip(&d.i_out).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f64 = d.i_out.iter().map(|v| v * v).sum();
+            format!("{:.2e}", (num / den).sqrt())
+        } else {
+            "-".into()
+        };
+        t2.row(&[
+            format!("{n}x{n}"),
+            stats.iterations.to_string(),
+            format!("{:.2e}", stats.deltas.last().unwrap()),
+            re,
+            fmt_duration(dt),
+        ]);
+    }
+    vec![t1, t2]
+}
+
+// --------------------------------------------------------------- Fig 11
+
+pub fn fig11_precision(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let size = 128;
+    let reps = scale.pick(1, 5);
+    let mut rng = Pcg64::new(cfg.seed, 0xF11);
+    let mut t = Table::new(
+        "Fig 11 — variable-precision matmul RE, 128x128 (FP64 source)",
+        &["format", "slices", "mode", "RE worst-case ADC", "RE calibrated ADC", "RE noise-free"],
+    );
+    let formats: Vec<(&str, SliceMethod)> = vec![
+        ("INT8", SliceMethod::int(SliceSpec::int8())),
+        ("FP32", SliceMethod::fp(SliceSpec::fp32())),
+        ("BF16", SliceMethod::fp(SliceSpec::bf16())),
+        ("FlexPoint16+5", SliceMethod::fp(SliceSpec::flex16())),
+    ];
+    for (name, method) in formats {
+        let mut means = Vec::new();
+        for variant in 0..3usize {
+            let mut res = Vec::new();
+            for rep in 0..reps {
+                let mut rng_rep = Pcg64::new(cfg.seed + rep as u64, 0xF11);
+                let a = Matrix::random_normal(size, size, 0.0, 1.0, &mut rng_rep);
+                let b = Matrix::random_normal(size, size, 0.0, 1.0, &mut rng_rep);
+                let mut dpe = cfg.dpe.clone();
+                match variant {
+                    0 => dpe.adc_policy = AdcPolicy::WorstCase,
+                    1 => dpe.adc_policy = AdcPolicy::Calibrated,
+                    _ => dpe.noise_free = true,
+                }
+                let engine = DotProductEngine::new(dpe, cfg.seed + rep as u64);
+                res.push(engine.relative_error(&a, &b, &method, &method));
+            }
+            means.push(res.iter().sum::<f64>() / res.len() as f64);
+        }
+        t.row(&[
+            name.into(),
+            format!("{:?}", method.spec.widths),
+            format!("{:?}", method.mode),
+            fmt_sig(means[0]),
+            fmt_sig(means[1]),
+            fmt_sig(means[2]),
+        ]);
+    }
+    let _ = &mut rng;
+    vec![t]
+}
+
+// --------------------------------------------------------------- Fig 12
+
+pub fn fig12_montecarlo(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let mc = McConfig {
+        size: scale.pick(64, 128),
+        cycles: scale.pick(10, 100),
+        base: cfg.dpe.clone(),
+        seed: cfg.seed,
+    };
+    let bits = [4usize, 6, 8, 12];
+    let blocks = [32usize, 64, 128];
+    let cvs = [0.0, 0.02, 0.05, 0.1];
+    let modes = [DataMode::Quantize, DataMode::PreAlign];
+    let pts = sweep(&mc, &bits, &blocks, &cvs, &modes);
+    let mut t = Table::new(
+        &format!("Fig 12 — Monte Carlo ({} cycles, {}x{} operands)", mc.cycles, mc.size, mc.size),
+        &["mode", "bits", "block", "cv", "RE mean", "RE std", "RE max"],
+    );
+    for p in pts {
+        t.row(&[
+            format!("{:?}", p.mode),
+            p.bits.to_string(),
+            p.block.to_string(),
+            format!("{}", p.cv),
+            fmt_sig(p.re_mean),
+            fmt_sig(p.re_std),
+            fmt_sig(p.re_max),
+        ]);
+    }
+    vec![t]
+}
+
+// --------------------------------------------------------------- Fig 13
+
+pub fn fig13_solver(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let n = scale.pick(32, 64);
+    let mut rng = Pcg64::new(cfg.seed, 0xF13);
+    let g_load: Vec<f64> =
+        (0..n).map(|_| rng.uniform_range(cfg.dpe.device.lgs, cfg.dpe.device.hgs)).collect();
+    let (a, b) = solver::wordline_equation(&g_load, 2.93, 0.2);
+    let sw = solver::conjugate_gradient(&a, &b, &solver::MatvecBackend::Software, 1e-10, 400);
+    let mut t = Table::new(
+        "Fig 13(b) — CG convergence: software vs hardware (block 32x32, pre-aligned)",
+        &["solver", "cv", "iters", "best residual", "max |dV| vs software"],
+    );
+    t.row(&[
+        "software".into(),
+        "-".into(),
+        sw.residuals.len().to_string(),
+        fmt_sig(*sw.residuals.last().unwrap()),
+        "0".into(),
+    ]);
+    for cv in [0.0, 0.02, 0.05] {
+        let mut dpe_cfg = cfg.dpe.clone();
+        dpe_cfg.array = (32, 32);
+        dpe_cfg.device.cv = cv;
+        dpe_cfg.adc_policy = AdcPolicy::IntegerSnap;
+        let engine = DotProductEngine::new(dpe_cfg, cfg.seed);
+        let method = SliceMethod::fp(SliceSpec::solver26());
+        let backend = solver::MatvecBackend::hardware(&engine, method, &a);
+        let hw = solver::conjugate_gradient(&a, &b, &backend, 1e-6, 400);
+        let maxdv = hw.x.iter().zip(&sw.x).map(|(h, s)| (h - s).abs()).fold(0.0, f64::max);
+        t.row(&[
+            "hardware".into(),
+            format!("{cv}"),
+            hw.residuals.len().to_string(),
+            fmt_sig(hw.residuals.iter().cloned().fold(f64::INFINITY, f64::min)),
+            fmt_sig(maxdv),
+        ]);
+    }
+    vec![t]
+}
+
+// --------------------------------------------------------------- Fig 14
+
+pub fn fig14_cwt(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let len = scale.pick(512, 1512);
+    let signal = nino::load(len, cfg.seed);
+    let scales = cwt::scale_ladder(4.0, 128.0, 4);
+    let proc = cwt::CwtProcessor::new(scale.pick(128, 256), scales.clone());
+    let digital = proc.power(&signal, None);
+    let engine = DotProductEngine::new(cfg.dpe.clone(), cfg.seed);
+    let method = cwt::int4_method();
+    let hw = proc.power(&signal, Some((&engine, &method)));
+    // Per-scale mean power + correlation.
+    let mut t = Table::new(
+        "Fig 14 — Morlet CWT power: digital vs INT4 hardware mapping",
+        &["scale (months)", "digital mean power", "hw mean power", "ratio"],
+    );
+    for (si, &s) in scales.iter().enumerate().step_by(3) {
+        let md = digital.row(si).iter().sum::<f64>() / digital.cols as f64;
+        let mh = hw.row(si).iter().sum::<f64>() / hw.cols as f64;
+        t.row(&[
+            format!("{s:.1}"),
+            fmt_sig(md),
+            fmt_sig(mh),
+            format!("{:.3}", mh / md.max(1e-300)),
+        ]);
+    }
+    let corr = pearson(&digital.data, &hw.data);
+    let mut t2 = Table::new("Fig 14 — spectrum agreement", &["metric", "value"]);
+    t2.row(&["pearson(digital, hw)".into(), format!("{corr:.4}")]);
+    let peak_d = argmax_scale(&digital, &scales);
+    let peak_h = argmax_scale(&hw, &scales);
+    t2.row(&["peak scale digital (months)".into(), format!("{peak_d:.1}")]);
+    t2.row(&["peak scale hardware (months)".into(), format!("{peak_h:.1}")]);
+    vec![t, t2]
+}
+
+fn argmax_scale(power: &Matrix, scales: &[f64]) -> f64 {
+    let means: Vec<f64> =
+        (0..power.rows).map(|s| power.row(s).iter().sum::<f64>() / power.cols as f64).collect();
+    scales[means.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0]
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum();
+    let va: f64 = a.iter().map(|x| (x - ma) * (x - ma)).sum();
+    let vb: f64 = b.iter().map(|y| (y - mb) * (y - mb)).sum();
+    cov / (va.sqrt() * vb.sqrt()).max(1e-300)
+}
+
+// --------------------------------------------------------------- Fig 15
+
+pub fn fig15_kmeans(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let ds = iris::load(50, cfg.seed);
+    let mut x = Matrix::from_vec(ds.len(), 4, ds.features.clone());
+    kmeans::min_max_normalize(&mut x);
+    let kcfg = kmeans::KmeansConfig { max_iter: scale.pick(15, 30), ..Default::default() };
+    let digital = kmeans::kmeans(&x, &kcfg, None);
+    let mut t = Table::new(
+        "Fig 15 — K-means on IRIS (INT8 slices 1,1,2,4; n=10 tail)",
+        &["engine", "cv", "accuracy", "agreement w/ digital", "iterations"],
+    );
+    let acc_d = kmeans::clustering_accuracy(&digital.assignments, &ds.labels, 3);
+    t.row(&["digital".into(), "-".into(), format!("{acc_d:.3}"), "1.000".into(), digital.iterations.to_string()]);
+    for cv in [0.02, 0.05] {
+        let mut dpe_cfg = cfg.dpe.clone();
+        dpe_cfg.device.cv = cv;
+        let engine = DotProductEngine::new(dpe_cfg, cfg.seed + 1);
+        let method = kmeans::int8_method();
+        let hw = kmeans::kmeans(&x, &kcfg, Some((&engine, &method)));
+        t.row(&[
+            "hardware".into(),
+            format!("{cv}"),
+            format!("{:.3}", kmeans::clustering_accuracy(&hw.assignments, &ds.labels, 3)),
+            format!("{:.3}", kmeans::clustering_accuracy(&hw.assignments, &digital.assignments, 3)),
+            hw.iterations.to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+// --------------------------------------------------------------- Fig 16
+
+pub fn fig16_training(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let n_train = scale.pick(512, 2048);
+    let data = mnist_like::load(n_train + 256, cfg.seed);
+    let (train_set, test_set) = data.split(n_train);
+    let steps = scale.pick(60, 300);
+    let tcfg = TrainConfig {
+        steps,
+        batch_size: 32,
+        lr: 0.05,
+        log_every: (steps / 10).max(1),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "Fig 16 — LeNet-5 hardware-aware training (loss / train acc / test acc)",
+        &["format", "first loss", "last loss", "final train acc", "test acc"],
+    );
+    let mut curves = Table::new(
+        "Fig 16 curves — loss per logged step",
+        &["format", "step", "loss", "train acc"],
+    );
+    let formats: Vec<(&str, Option<SliceMethod>)> = vec![
+        ("full precision", None),
+        ("INT4 (1,1,2)", Some(SliceMethod::int(SliceSpec::int4()))),
+        ("INT8 (1,1,2,4)", Some(SliceMethod::int(SliceSpec::int8()))),
+        ("FP16 (1,1,2,4,4)", Some(SliceMethod::fp(SliceSpec::fp16()))),
+    ];
+    for (name, method) in formats {
+        let hw = method.map(|m| {
+            HwSpec::uniform(DotProductEngine::new(cfg.dpe.clone(), cfg.seed), m)
+        });
+        let mut model = lenet5(hw, cfg.seed);
+        let logs = train(&mut model, &train_set, &tcfg);
+        let test_acc = evaluate(&mut model, &test_set, 32, scale.pick(128, 256));
+        for l in &logs {
+            curves.row(&[name.into(), l.step.to_string(), format!("{:.4}", l.loss), format!("{:.3}", l.train_acc)]);
+        }
+        t.row(&[
+            name.into(),
+            format!("{:.4}", logs.first().unwrap().loss),
+            format!("{:.4}", logs.last().unwrap().loss),
+            format!("{:.3}", logs.last().unwrap().train_acc),
+            format!("{:.3}", test_acc),
+        ]);
+    }
+    vec![t, curves]
+}
+
+// --------------------------------------------------------------- Fig 17
+
+/// Train a small digital CIFAR model once, then evaluate it under varying
+/// hardware configurations (the paper's direct-mapping inference flow).
+fn trained_cifar_model(
+    arch: &str,
+    width: usize,
+    train_imgs: usize,
+    steps: usize,
+    seed: u64,
+) -> (Sequential, crate::data::Dataset) {
+    let data = cifar_like::load(train_imgs + 256, seed);
+    let (train_set, test_set) = data.split(train_imgs);
+    let mut model = match arch {
+        "resnet18" => resnet18_cifar(width, None, seed),
+        "vgg16" => vgg16_cifar(width, None, seed),
+        _ => panic!("unknown arch"),
+    };
+    let tcfg = TrainConfig {
+        steps,
+        batch_size: 16,
+        lr: 0.02,
+        log_every: steps,
+        seed,
+        ..Default::default()
+    };
+    let _ = train(&mut model, &train_set, &tcfg);
+    (model, test_set)
+}
+
+/// Rebuild the model with hardware layers and copy the trained weights in
+/// (the paper's `torch.load_state_dict` + `update_weight()` flow).
+fn to_hardware(arch: &str, width: usize, seed: u64, digital: &mut Sequential, hw: HwSpec) -> Sequential {
+    let mut model = match arch {
+        "resnet18" => resnet18_cifar(width, Some(hw), seed),
+        "vgg16" => vgg16_cifar(width, Some(hw), seed),
+        _ => panic!("unknown arch"),
+    };
+    // `load_state_dict` + `update_weight()` flow: parameters AND buffers
+    // (BatchNorm running stats) transfer, then the arrays are programmed.
+    model.load_state_from(digital);
+    model.update_weight();
+    model
+}
+
+pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let width = scale.pick(4, 6);
+    let train_imgs = scale.pick(256, 768);
+    let steps = scale.pick(40, 120);
+    let eval_imgs = scale.pick(64, 128);
+    let mut t1 = Table::new(
+        "Fig 17(a) — accuracy vs number of 1-bit slices",
+        &["model", "digital acc", "3 bits", "4 bits", "5 bits", "6 bits", "8 bits"],
+    );
+    let mut t2 = Table::new(
+        "Fig 17(b) — accuracy vs conductance variation (INT8)",
+        &["model", "cv=0", "cv=0.02", "cv=0.05", "cv=0.1"],
+    );
+    for arch in ["resnet18", "vgg16"] {
+        let (mut digital, test_set) = trained_cifar_model(arch, width, train_imgs, steps, cfg.seed);
+        let acc_digital = evaluate(&mut digital, &test_set, 16, eval_imgs);
+        // (a) slice-bit sweep at low noise.
+        let mut row1 = vec![arch.to_string(), format!("{acc_digital:.3}")];
+        for bits in [3usize, 4, 5, 6, 8] {
+            let mut dpe_cfg = cfg.dpe.clone();
+            dpe_cfg.device.cv = 0.01;
+            let hw = HwSpec::uniform(
+                DotProductEngine::new(dpe_cfg, cfg.seed),
+                SliceMethod::int(SliceSpec::ones(bits)),
+            );
+            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw);
+            row1.push(format!("{:.3}", evaluate(&mut model, &test_set, 16, eval_imgs)));
+        }
+        t1.row(&row1);
+        // (b) variation sweep at INT8.
+        let mut row2 = vec![arch.to_string()];
+        for cv in [0.0, 0.02, 0.05, 0.1] {
+            let mut dpe_cfg = cfg.dpe.clone();
+            dpe_cfg.device.cv = cv;
+            let hw = HwSpec::uniform(
+                DotProductEngine::new(dpe_cfg, cfg.seed),
+                SliceMethod::int(SliceSpec::int8()),
+            );
+            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw);
+            row2.push(format!("{:.3}", evaluate(&mut model, &test_set, 16, eval_imgs)));
+        }
+        t2.row(&row2);
+    }
+    vec![t1, t2]
+}
+
+// -------------------------------------------------------------- Table 3
+
+pub fn table3_throughput(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 3 — inference throughput (img/s), FP16 slices (1,1,2,4,4)",
+        &["dataset", "model", "batch", "backend", "img/s", "latency/batch"],
+    );
+    let method = SliceMethod::fp(SliceSpec::fp16());
+    // LeNet-5 on digit data — native engine.
+    let data = mnist_like::load(64, cfg.seed);
+    let batch = scale.pick(16, 32);
+    let hw = HwSpec::uniform(DotProductEngine::new(cfg.dpe.clone(), cfg.seed), method.clone());
+    let mut lenet = lenet5(Some(hw), cfg.seed);
+    let idx: Vec<usize> = (0..batch).collect();
+    let (x, _) = crate::nn::train::make_batch(&data, &idx);
+    let timing = time_it(1, scale.pick(2, 5), || {
+        let _ = lenet.forward(&x, false);
+    });
+    t.row(&[
+        "MNIST-like".into(),
+        "LeNet-5".into(),
+        batch.to_string(),
+        "native".into(),
+        format!("{:.1}", timing.throughput(batch as f64)),
+        fmt_duration(timing.mean_s),
+    ]);
+    // LeNet-5 via the fused XLA artifact, when built.
+    if let Ok(rt) = crate::runtime::Runtime::cpu(&cfg.artifacts_dir) {
+        let xd = crate::runtime::XlaDpe::new(rt);
+        if xd.runtime().has_artifact("lenet_fwd_b32_int8") {
+            let xf: Vec<f32> = data.features[..32 * 784].iter().map(|&v| v as f32).collect();
+            let params = lenet_params_f32(&mut lenet);
+            let timing = time_it(1, scale.pick(3, 10), || {
+                let _ = xd.lenet_forward(32, "int8", false, &xf, &params, 1).unwrap();
+            });
+            t.row(&[
+                "MNIST-like".into(),
+                "LeNet-5".into(),
+                "32".into(),
+                "xla (AOT pallas)".into(),
+                format!("{:.1}", timing.throughput(32.0)),
+                fmt_duration(timing.mean_s),
+            ]);
+        }
+    }
+    // CIFAR models — native only (document relative ordering).
+    let cdata = cifar_like::load(scale.pick(8, 16), cfg.seed);
+    for (arch, width) in [("resnet18", scale.pick(4, 8)), ("vgg16", scale.pick(4, 8))] {
+        let hw = HwSpec::uniform(DotProductEngine::new(cfg.dpe.clone(), cfg.seed), method.clone());
+        let mut model = match arch {
+            "resnet18" => resnet18_cifar(width, Some(hw), cfg.seed),
+            _ => vgg16_cifar(width, Some(hw), cfg.seed),
+        };
+        let b = scale.pick(4, 8);
+        let idx: Vec<usize> = (0..b).collect();
+        let (x, _) = crate::nn::train::make_batch(&cdata, &idx);
+        let timing = time_it(0, scale.pick(1, 3), || {
+            let _ = model.forward(&x, false);
+        });
+        t.row(&[
+            "CIFAR-like".into(),
+            format!("{arch} (w={width})"),
+            b.to_string(),
+            "native".into(),
+            format!("{:.2}", timing.throughput(b as f64)),
+            fmt_duration(timing.mean_s),
+        ]);
+    }
+    vec![t]
+}
+
+/// Extract LeNet parameter buffers as f32 in `lenet_fwd` artifact order.
+pub fn lenet_params_f32(model: &mut Sequential) -> Vec<(Vec<usize>, Vec<f32>)> {
+    // Artifact order: conv1_w (6,25), conv1_b, conv2_w (16,150), conv2_b,
+    // fc1_w (256,120), fc1_b, fc2_w, fc2_b, fc3_w, fc3_b.
+    // LinearMem stores (in,out) = artifact layout; Conv2dMem stores
+    // (out_c, patch) = artifact layout. visit order matches construction.
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![6, 25], vec![6], vec![16, 150], vec![16],
+        vec![256, 120], vec![120], vec![120, 84], vec![84],
+        vec![84, 10], vec![10],
+    ];
+    let mut bufs: Vec<Vec<f32>> = Vec::new();
+    model.visit_params(&mut |p| bufs.push(p.value.iter().map(|&v| v as f32).collect()));
+    assert_eq!(bufs.len(), shapes.len(), "unexpected LeNet parameter count");
+    shapes.into_iter().zip(bufs).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn registry_lists_all_paper_artifacts() {
+        assert_eq!(EXPERIMENTS.len(), 10);
+        assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "table3_throughput"));
+    }
+
+    #[test]
+    fn unknown_experiment_is_error() {
+        assert!(run("nope", &quick_cfg(), Scale::Quick).is_err());
+    }
+
+    #[test]
+    fn fig03_quick_runs() {
+        let t = fig03_device(&quick_cfg(), Scale::Quick);
+        assert_eq!(t[0].rows.len(), 6);
+    }
+
+    #[test]
+    fn fig11_quick_runs() {
+        let t = fig11_precision(&quick_cfg(), Scale::Quick);
+        assert_eq!(t[0].rows.len(), 4);
+    }
+
+    #[test]
+    fn fig15_quick_runs() {
+        let t = fig15_kmeans(&quick_cfg(), Scale::Quick);
+        assert!(t[0].rows.len() >= 3);
+    }
+}

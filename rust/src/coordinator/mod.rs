@@ -1,0 +1,127 @@
+//! The framework coordinator: typed simulation config (Table 2 defaults +
+//! TOML overrides), the experiment registry behind the CLI, and run
+//! orchestration (engine construction, backend routing, report emission).
+
+pub mod experiments;
+
+pub use experiments::{run as run_experiment, Scale, EXPERIMENTS};
+
+use crate::device::DeviceSpec;
+use crate::dpe::engine::AdcPolicy;
+use crate::dpe::{DotProductEngine, DpeConfig, SliceMethod};
+use crate::nn::HwSpec;
+use crate::util::config::Doc;
+use std::path::Path;
+
+/// Fully-resolved simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub dpe: DpeConfig,
+    pub seed: u64,
+    /// "native" or "xla" (AOT artifacts via PJRT where available).
+    pub backend: String,
+    pub artifacts_dir: String,
+    /// Default slice method name for examples (e.g. "int8").
+    pub method: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            dpe: DpeConfig::default(),
+            seed: 2024,
+            backend: "native".into(),
+            artifacts_dir: "artifacts".into(),
+            method: "int8".into(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Load from a TOML-subset file (missing keys keep Table-2 defaults).
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let doc = Doc::load(path)?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    pub fn from_doc(doc: &Doc) -> Self {
+        let mut cfg = SimConfig::default();
+        let d = &mut cfg.dpe;
+        d.device = DeviceSpec {
+            hgs: doc.f64_or("engine", "hgs", 1e-5),
+            lgs: doc.f64_or("engine", "lgs", 1e-7),
+            g_levels: doc.usize_or("engine", "g_levels", 16),
+            cv: doc.f64_or("engine", "var", 0.05),
+        };
+        d.rdac = doc.usize_or("engine", "rdac", 256);
+        d.radc = doc.usize_or("engine", "radc", 1024);
+        if let Some(arr) = doc.get("engine", "array_size").and_then(|v| v.as_usize_array()) {
+            if arr.len() == 2 {
+                d.array = (arr[0], arr[1]);
+            }
+        }
+        d.noise_free = doc.bool_or("engine", "noise_free", false);
+        d.use_circuit = doc.bool_or("engine", "use_circuit", false);
+        d.r_wire = doc.f64_or("engine", "r_wire", 2.93);
+        d.adc_policy = match doc.str_or("engine", "adc_policy", "worst_case") {
+            "calibrated" => AdcPolicy::Calibrated,
+            "integer_snap" => AdcPolicy::IntegerSnap,
+            _ => AdcPolicy::WorstCase,
+        };
+        cfg.seed = doc.usize_or("run", "seed", 2024) as u64;
+        cfg.backend = doc.str_or("run", "backend", "native").to_string();
+        cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", "artifacts").to_string();
+        cfg.method = doc.str_or("run", "method", "int8").to_string();
+        cfg
+    }
+
+    /// Build an engine from this config.
+    pub fn engine(&self) -> DotProductEngine {
+        DotProductEngine::new(self.dpe.clone(), self.seed)
+    }
+
+    /// Build a hardware layer spec with the configured default method.
+    pub fn hw_spec(&self) -> anyhow::Result<HwSpec> {
+        let method = SliceMethod::parse(&self.method)?;
+        Ok(HwSpec::uniform(self.engine(), method))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let cfg = SimConfig::default();
+        assert_eq!(cfg.dpe.device.hgs, 1e-5);
+        assert_eq!(cfg.dpe.device.lgs, 1e-7);
+        assert_eq!(cfg.dpe.device.g_levels, 16);
+        assert_eq!(cfg.dpe.device.cv, 0.05);
+        assert_eq!(cfg.dpe.rdac, 256);
+        assert_eq!(cfg.dpe.radc, 1024);
+        assert_eq!(cfg.dpe.array, (64, 64));
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let doc = Doc::parse(
+            "[engine]\nvar = 0.1\narray_size = [32, 32]\nadc_policy = \"calibrated\"\n[run]\nseed = 7\nmethod = \"fp16\"\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc);
+        assert_eq!(cfg.dpe.device.cv, 0.1);
+        assert_eq!(cfg.dpe.array, (32, 32));
+        assert_eq!(cfg.dpe.adc_policy, AdcPolicy::Calibrated);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.method, "fp16");
+        assert!(cfg.hw_spec().is_ok());
+    }
+
+    #[test]
+    fn bad_method_is_error() {
+        let mut cfg = SimConfig::default();
+        cfg.method = "nope".into();
+        assert!(cfg.hw_spec().is_err());
+    }
+}

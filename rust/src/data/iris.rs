@@ -1,0 +1,104 @@
+//! IRIS-like clustering data (Fig 15).
+//!
+//! Offline substitution for the UCI IRIS dataset: 150 samples, 4 features,
+//! 3 balanced classes, sampled from the *published* per-class feature means
+//! and standard deviations of Fisher's data. K-means on this data has the
+//! same structure as on the original: setosa linearly separable, versicolor
+//! and virginica overlapping in petal dimensions.
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+/// Published per-class statistics of Fisher's IRIS
+/// (features: sepal length, sepal width, petal length, petal width).
+pub const CLASS_MEANS: [[f64; 4]; 3] = [
+    [5.006, 3.428, 1.462, 0.246], // setosa
+    [5.936, 2.770, 4.260, 1.326], // versicolor
+    [6.588, 2.974, 5.552, 2.026], // virginica
+];
+
+pub const CLASS_STDS: [[f64; 4]; 3] = [
+    [0.352, 0.379, 0.174, 0.105],
+    [0.516, 0.314, 0.470, 0.198],
+    [0.636, 0.322, 0.552, 0.275],
+];
+
+pub const CLASS_NAMES: [&str; 3] = ["setosa", "versicolor", "virginica"];
+
+/// Generate an IRIS-like dataset: `per_class` samples per class (the
+/// original has 50), deterministic in `seed`.
+pub fn load(per_class: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0x1815);
+    let n = per_class * 3;
+    let mut features = Vec::with_capacity(n * 4);
+    let mut labels = Vec::with_capacity(n);
+    for class in 0..3 {
+        for _ in 0..per_class {
+            for f in 0..4 {
+                let v = rng.normal_ms(CLASS_MEANS[class][f], CLASS_STDS[class][f]);
+                features.push(v.max(0.05)); // measurements are positive
+            }
+            labels.push(class);
+        }
+    }
+    // Shuffle samples (keeping feature/label association).
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut sf = Vec::with_capacity(n * 4);
+    let mut sl = Vec::with_capacity(n);
+    for &i in &order {
+        sf.extend_from_slice(&features[i * 4..(i + 1) * 4]);
+        sl.push(labels[i]);
+    }
+    Dataset { sample_shape: vec![4], features: sf, labels: sl, num_classes: 3 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_size() {
+        let d = load(50, 42);
+        assert_eq!(d.len(), 150);
+        assert_eq!(d.sample_shape, vec![4]);
+        assert_eq!(d.num_classes, 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = load(50, 42);
+        let b = load(50, 42);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn class_means_recovered() {
+        let d = load(200, 7);
+        for class in 0..3 {
+            let rows: Vec<&[f64]> = (0..d.len())
+                .filter(|&i| d.labels[i] == class)
+                .map(|i| d.sample(i))
+                .collect();
+            for f in 0..4 {
+                let mean = rows.iter().map(|r| r[f]).sum::<f64>() / rows.len() as f64;
+                assert!(
+                    (mean - CLASS_MEANS[class][f]).abs() < 0.1,
+                    "class {class} feature {f}: mean {mean}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_and_positive() {
+        let d = load(50, 1);
+        let mut counts = [0usize; 3];
+        for &l in &d.labels {
+            counts[l] += 1;
+        }
+        assert_eq!(counts, [50, 50, 50]);
+        assert!(d.features.iter().all(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,206 @@
+//! Procedural MNIST substitute (Fig 16): deterministic 28×28 grayscale
+//! digit images rendered from stroke skeletons with random affine jitter and
+//! pixel noise.
+//!
+//! Each digit 0–9 is defined as a set of polyline strokes in a unit box.
+//! Rendering draws each stroke with an anti-aliased pen (intensity falls off
+//! with distance to the segment), then applies a per-sample random
+//! translation/scale/rotation/shear and additive noise. The task is
+//! learnable by LeNet-5 to >95% with full precision, which is what the
+//! INT4/INT8/FP16 training comparison (Fig 16) needs: a headroom-rich
+//! baseline whose degradation under sliced precision can be observed.
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+const SIDE: usize = 28;
+
+/// Stroke skeletons per digit: polylines in [0,1]² (x right, y down).
+fn strokes(digit: usize) -> Vec<Vec<(f64, f64)>> {
+    // Helper to shorten literals.
+    let p = |x: f64, y: f64| (x, y);
+    match digit {
+        0 => vec![vec![
+            p(0.50, 0.08), p(0.78, 0.22), p(0.82, 0.50), p(0.78, 0.78),
+            p(0.50, 0.92), p(0.22, 0.78), p(0.18, 0.50), p(0.22, 0.22), p(0.50, 0.08),
+        ]],
+        1 => vec![vec![p(0.35, 0.22), p(0.55, 0.08), p(0.55, 0.92)],
+                  vec![p(0.35, 0.92), p(0.75, 0.92)]],
+        2 => vec![vec![
+            p(0.22, 0.28), p(0.35, 0.10), p(0.65, 0.10), p(0.78, 0.28),
+            p(0.72, 0.48), p(0.25, 0.88), p(0.80, 0.88),
+        ]],
+        3 => vec![vec![
+            p(0.22, 0.16), p(0.60, 0.08), p(0.78, 0.25), p(0.55, 0.45),
+            p(0.80, 0.65), p(0.60, 0.90), p(0.22, 0.84),
+        ]],
+        4 => vec![vec![p(0.62, 0.92), p(0.62, 0.08), p(0.18, 0.62), p(0.85, 0.62)]],
+        5 => vec![vec![
+            p(0.75, 0.10), p(0.30, 0.10), p(0.26, 0.45), p(0.60, 0.42),
+            p(0.80, 0.62), p(0.70, 0.88), p(0.25, 0.88),
+        ]],
+        6 => vec![vec![
+            p(0.70, 0.10), p(0.35, 0.35), p(0.22, 0.65), p(0.40, 0.90),
+            p(0.70, 0.85), p(0.78, 0.62), p(0.55, 0.50), p(0.28, 0.60),
+        ]],
+        7 => vec![vec![p(0.20, 0.10), p(0.80, 0.10), p(0.45, 0.92)],
+                  vec![p(0.35, 0.50), p(0.70, 0.50)]],
+        8 => vec![vec![
+            p(0.50, 0.08), p(0.74, 0.20), p(0.68, 0.42), p(0.50, 0.50),
+            p(0.30, 0.42), p(0.26, 0.20), p(0.50, 0.08),
+        ], vec![
+            p(0.50, 0.50), p(0.78, 0.62), p(0.72, 0.86), p(0.50, 0.92),
+            p(0.28, 0.86), p(0.22, 0.62), p(0.50, 0.50),
+        ]],
+        9 => vec![vec![
+            p(0.72, 0.40), p(0.45, 0.50), p(0.24, 0.38), p(0.30, 0.15),
+            p(0.55, 0.08), p(0.74, 0.18), p(0.74, 0.60), p(0.60, 0.92), p(0.30, 0.88),
+        ]],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Squared distance from point to segment.
+fn dist2_to_segment(px: f64, py: f64, a: (f64, f64), b: (f64, f64)) -> f64 {
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let (dx, dy) = (bx - ax, by - ay);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 { (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0) } else { 0.0 };
+    let (cx, cy) = (ax + t * dx, ay + t * dy);
+    (px - cx) * (px - cx) + (py - cy) * (py - cy)
+}
+
+/// Render one digit with jitter parameters drawn from `rng`.
+fn render(digit: usize, rng: &mut Pcg64, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), SIDE * SIDE);
+    let scale = rng.uniform_range(0.85, 1.15);
+    let theta = rng.uniform_range(-0.22, 0.22);
+    let shear = rng.uniform_range(-0.15, 0.15);
+    let (tx, ty) = (rng.uniform_range(-0.08, 0.08), rng.uniform_range(-0.08, 0.08));
+    let pen = rng.uniform_range(0.045, 0.065); // stroke half-width in unit box
+    let (sin_t, cos_t) = theta.sin_cos();
+    // Transform skeleton points: center, shear, rotate, scale, translate.
+    let tf = |(x, y): (f64, f64)| -> (f64, f64) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let sx = cx + shear * cy;
+        let rx = cos_t * sx - sin_t * cy;
+        let ry = sin_t * sx + cos_t * cy;
+        (0.5 + scale * rx + tx, 0.5 + scale * ry + ty)
+    };
+    let segs: Vec<((f64, f64), (f64, f64))> = strokes(digit)
+        .iter()
+        .flat_map(|poly| {
+            poly.windows(2).map(|w| (tf(w[0]), tf(w[1]))).collect::<Vec<_>>()
+        })
+        .collect();
+    let pen2 = pen * pen;
+    for iy in 0..SIDE {
+        let py = (iy as f64 + 0.5) / SIDE as f64;
+        for ix in 0..SIDE {
+            let px = (ix as f64 + 0.5) / SIDE as f64;
+            let mut d2 = f64::INFINITY;
+            for &(a, b) in &segs {
+                d2 = d2.min(dist2_to_segment(px, py, a, b));
+                if d2 < pen2 * 0.25 {
+                    break;
+                }
+            }
+            // Smooth falloff: 1 inside the pen, gaussian tail outside.
+            let v = if d2 <= pen2 { 1.0 } else { (-(d2 - pen2) / (pen2 * 1.5)).exp() };
+            let noise = rng.uniform_range(-0.04, 0.04);
+            out[iy * SIDE + ix] = (v + noise).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Generate `n` labelled digit images (classes cycle 0..9), deterministic in
+/// `seed`. Sample shape `[1, 28, 28]`, values in [0, 1].
+pub fn load(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0x3A15);
+    let d = SIDE * SIDE;
+    let mut features = vec![0.0; n * d];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let digit = rng.below(10);
+        render(digit, &mut rng, &mut features[i * d..(i + 1) * d]);
+        labels.push(digit);
+    }
+    Dataset { sample_shape: vec![1, SIDE, SIDE], features, labels, num_classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_range() {
+        let ds = load(64, 3);
+        assert_eq!(ds.len(), 64);
+        assert_eq!(ds.sample_shape, vec![1, 28, 28]);
+        assert!(ds.features.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = load(16, 5);
+        let b = load(16, 5);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn images_have_ink_and_background() {
+        let ds = load(32, 9);
+        for i in 0..ds.len() {
+            let s = ds.sample(i);
+            let ink = s.iter().filter(|&&v| v > 0.6).count();
+            let bg = s.iter().filter(|&&v| v < 0.2).count();
+            assert!(ink > 20, "sample {i} has too little ink ({ink})");
+            assert!(bg > 300, "sample {i} has too little background ({bg})");
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean images of different digits should differ substantially.
+        let ds = load(400, 11);
+        let d = ds.sample_len();
+        let mut means = vec![vec![0.0; d]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..ds.len() {
+            let c = ds.labels[i];
+            counts[c] += 1;
+            for (m, &v) in means[c].iter_mut().zip(ds.sample(i)) {
+                *m += v;
+            }
+        }
+        for c in 0..10 {
+            assert!(counts[c] > 10, "class {c} undersampled");
+            for m in means[c].iter_mut() {
+                *m /= counts[c] as f64;
+            }
+        }
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let dist: f64 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(dist > 1.0, "digits {a} and {b} too similar (d={dist})");
+            }
+        }
+    }
+
+    #[test]
+    fn all_ten_digits_renderable() {
+        let mut rng = Pcg64::seeded(1);
+        let mut buf = vec![0.0; SIDE * SIDE];
+        for d in 0..10 {
+            render(d, &mut rng, &mut buf);
+            assert!(buf.iter().any(|&v| v > 0.5));
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Datasets for the paper's application experiments.
+//!
+//! The container is offline, so real MNIST/CIFAR-10/NINO3 downloads are
+//! replaced by deterministic synthetic equivalents that exercise the exact
+//! same code paths (see DESIGN.md §Substitutions):
+//! - [`iris`] — Fisher-IRIS-like data sampled from the published per-class
+//!   feature statistics (Fig 15 clustering);
+//! - [`mnist_like`] — procedurally rasterized 28×28 digits (Fig 16 LeNet-5
+//!   training);
+//! - [`cifar_like`] — class-structured 3×32×32 color images (Fig 17
+//!   ResNet/VGG inference);
+//! - [`nino`] — ENSO-like monthly sea-surface-temperature anomaly series
+//!   (Fig 14 CWT).
+
+pub mod cifar_like;
+pub mod iris;
+pub mod mnist_like;
+pub mod nino;
+
+/// A labelled dataset of flat feature vectors.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Per-sample feature dimensions (e.g. `[1, 28, 28]`).
+    pub sample_shape: Vec<usize>,
+    /// `n × prod(sample_shape)`, row-major.
+    pub features: Vec<f64>,
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f64] {
+        let d = self.sample_len();
+        &self.features[i * d..(i + 1) * d]
+    }
+
+    /// Split into (train, test) at `n_train`.
+    pub fn split(&self, n_train: usize) -> (Dataset, Dataset) {
+        assert!(n_train <= self.len());
+        let d = self.sample_len();
+        let train = Dataset {
+            sample_shape: self.sample_shape.clone(),
+            features: self.features[..n_train * d].to_vec(),
+            labels: self.labels[..n_train].to_vec(),
+            num_classes: self.num_classes,
+        };
+        let test = Dataset {
+            sample_shape: self.sample_shape.clone(),
+            features: self.features[n_train * d..].to_vec(),
+            labels: self.labels[n_train..].to_vec(),
+            num_classes: self.num_classes,
+        };
+        (train, test)
+    }
+
+    /// Gather a batch of samples into a `(batch, d)` row-major buffer.
+    pub fn batch(&self, idx: &[usize]) -> (Vec<f64>, Vec<usize>) {
+        let d = self.sample_len();
+        let mut feats = Vec::with_capacity(idx.len() * d);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            feats.extend_from_slice(self.sample(i));
+            labels.push(self.labels[i]);
+        }
+        (feats, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            sample_shape: vec![2],
+            features: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            labels: vec![0, 1, 0],
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn sample_access() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.sample(1), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = tiny();
+        let (tr, te) = d.split(2);
+        assert_eq!(tr.len(), 2);
+        assert_eq!(te.len(), 1);
+        assert_eq!(te.sample(0), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn batch_gathers() {
+        let d = tiny();
+        let (f, l) = d.batch(&[2, 0]);
+        assert_eq!(f, vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(l, vec![2usize, 0].iter().map(|&i| d.labels[i]).collect::<Vec<_>>());
+    }
+}

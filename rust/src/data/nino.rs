@@ -1,0 +1,74 @@
+//! ENSO-like time series (Fig 14 CWT input).
+//!
+//! Offline substitution for the UCI El-Niño / NINO3 sea-surface-temperature
+//! anomaly record: a monthly series combining
+//! - an annual seasonal cycle,
+//! - a quasi-periodic El-Niño oscillation (~3.5-year period with slow
+//!   period/amplitude wander, the feature the paper's CWT power spectrum
+//!   highlights around the 2–7-year band),
+//! - red (AR(1)) noise.
+
+use crate::util::rng::Pcg64;
+
+/// Generate `n` monthly samples, deterministic in `seed`.
+pub fn load(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 0x9170);
+    let mut out = Vec::with_capacity(n);
+    let mut ar = 0.0f64;
+    // Slowly wandering ENSO phase: period drifts between ~2.5 and ~5 years.
+    let mut enso_phase = 0.0f64;
+    let mut period_months = 42.0f64; // 3.5 years
+    for t in 0..n {
+        let month = t as f64;
+        // Seasonal cycle (12-month), small amplitude.
+        let seasonal = 0.4 * (std::f64::consts::TAU * month / 12.0).sin();
+        // ENSO oscillation with wandering instantaneous period and amplitude
+        // modulation on a ~14-year envelope.
+        period_months = (period_months + rng.normal_ms(0.0, 0.35)).clamp(30.0, 60.0);
+        enso_phase += std::f64::consts::TAU / period_months;
+        let envelope = 1.0 + 0.5 * (std::f64::consts::TAU * month / 168.0).sin();
+        let enso = 1.2 * envelope * enso_phase.sin();
+        // Red noise.
+        ar = 0.8 * ar + rng.normal_ms(0.0, 0.25);
+        out.push(seasonal + enso + ar);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_and_determinism() {
+        let a = load(1512, 3);
+        assert_eq!(a.len(), 1512);
+        assert_eq!(a, load(1512, 3));
+    }
+
+    #[test]
+    fn roughly_zero_mean_bounded() {
+        let xs = load(2048, 5);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.5, "mean={mean}");
+        assert!(xs.iter().all(|x| x.abs() < 10.0));
+    }
+
+    #[test]
+    fn has_interannual_power() {
+        // Autocorrelation at ~42 months should be non-trivially negative or
+        // positive (oscillatory), and at lag 1 strongly positive (red noise).
+        let xs = load(2048, 7);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+        let ac = |lag: usize| -> f64 {
+            xs.iter()
+                .zip(xs.iter().skip(lag))
+                .map(|(a, b)| (a - mean) * (b - mean))
+                .sum::<f64>()
+                / var
+        };
+        assert!(ac(1) > 0.5, "lag-1 autocorrelation {}", ac(1));
+        assert!(ac(21).abs() > 0.05, "no interannual structure: {}", ac(21));
+    }
+}

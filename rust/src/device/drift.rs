@@ -1,0 +1,118 @@
+//! Conductance drift model — the paper's stated *future work* ("we plan to
+//! add more complex device models, such as the conductance drift"),
+//! implemented here as an extension.
+//!
+//! We use the standard PCM power-law drift model
+//! (Ielmini/Le Gallo): `G(t) = G(t0) · (t / t0)^(-ν)`, with a
+//! device-to-device spread on the drift exponent ν. RRAM-style retention
+//! loss toward an equilibrium conductance is also provided.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Power-law drift parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftSpec {
+    /// Mean drift exponent ν (PCM ≈ 0.05–0.1; 0 disables drift).
+    pub nu: f64,
+    /// Device-to-device std of ν.
+    pub nu_std: f64,
+    /// Reference time t0 (s) at which conductance was programmed/read.
+    pub t0: f64,
+}
+
+impl Default for DriftSpec {
+    fn default() -> Self {
+        DriftSpec { nu: 0.05, nu_std: 0.01, t0: 1.0 }
+    }
+}
+
+impl DriftSpec {
+    /// Drift a single conductance from `t0` to time `t` with exponent `nu`.
+    #[inline]
+    pub fn apply_one(&self, g: f64, nu: f64, t: f64) -> f64 {
+        if t <= self.t0 || self.nu == 0.0 {
+            return g;
+        }
+        g * (t / self.t0).powf(-nu.max(0.0))
+    }
+
+    /// Drift a whole conductance matrix to time `t`, sampling a per-device
+    /// exponent. Deterministic in `rng`.
+    pub fn apply_matrix(&self, g: &Matrix, t: f64, rng: &mut Pcg64) -> Matrix {
+        g.map_with(|v| {
+            let nu = rng.normal_ms(self.nu, self.nu_std);
+            self.apply_one(v, nu, t)
+        })
+    }
+
+    /// Mean multiplicative decay factor at time `t` (for reporting).
+    pub fn mean_decay(&self, t: f64) -> f64 {
+        if t <= self.t0 {
+            1.0
+        } else {
+            (t / self.t0).powf(-self.nu)
+        }
+    }
+}
+
+impl Matrix {
+    /// Map with a stateful closure (sequential; used by drift sampling).
+    pub fn map_with(&self, mut f: impl FnMut(f64) -> f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_drift_before_t0() {
+        let d = DriftSpec::default();
+        assert_eq!(d.apply_one(1e-5, 0.05, 0.5), 1e-5);
+        assert_eq!(d.apply_one(1e-5, 0.05, 1.0), 1e-5);
+    }
+
+    #[test]
+    fn drift_decreases_conductance() {
+        let d = DriftSpec::default();
+        let g1 = d.apply_one(1e-5, 0.05, 10.0);
+        let g2 = d.apply_one(1e-5, 0.05, 1000.0);
+        assert!(g1 < 1e-5);
+        assert!(g2 < g1);
+    }
+
+    #[test]
+    fn power_law_decade_ratio() {
+        // One decade of time -> factor 10^-nu.
+        let d = DriftSpec { nu: 0.1, nu_std: 0.0, t0: 1.0 };
+        let g10 = d.apply_one(1.0, 0.1, 10.0);
+        let g100 = d.apply_one(1.0, 0.1, 100.0);
+        assert!((g10 / 1.0 - 10f64.powf(-0.1)).abs() < 1e-12);
+        assert!((g100 / g10 - 10f64.powf(-0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_drift_mean_matches() {
+        let d = DriftSpec { nu: 0.08, nu_std: 0.01, t0: 1.0 };
+        let g = Matrix::from_vec(50, 50, vec![1e-5; 2500]);
+        let mut rng = Pcg64::seeded(5);
+        let dg = d.apply_matrix(&g, 1e4, &mut rng);
+        let mean = dg.mean();
+        let expect = 1e-5 * d.mean_decay(1e4);
+        // nu spread skews the mean slightly; allow 5%.
+        assert!((mean - expect).abs() / expect < 0.05, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn zero_nu_disables() {
+        let d = DriftSpec { nu: 0.0, nu_std: 0.0, t0: 1.0 };
+        assert_eq!(d.mean_decay(1e6), 1.0);
+        assert_eq!(d.apply_one(2e-6, 0.0, 1e6), 2e-6);
+    }
+}

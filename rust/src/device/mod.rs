@@ -1,0 +1,178 @@
+//! Memristive device models (paper §3.2, Fig 3).
+//!
+//! The conductance of a programmed memristor is modeled as a lognormal
+//! random variable around its target state (Eq. 1): device-to-device and
+//! cycle-to-cycle variation are folded into one coefficient-of-variation
+//! `cv` applied as real-time noise on the ideal conductance matrix. The
+//! mapping between digital slice values and conductance is linear between
+//! the low (`lgs`) and high (`hgs`) conductance states with `g_levels`
+//! programmable levels.
+
+pub mod drift;
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Device/array electrical parameters (Table 2 defaults).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    /// High conductance state (S). Table 2: 1e-5.
+    pub hgs: f64,
+    /// Low conductance state (S). Table 2: 1e-7.
+    pub lgs: f64,
+    /// Number of programmable conductance levels. Table 2: 16.
+    pub g_levels: usize,
+    /// Coefficient of variation of the programmed conductance. Table 2: 0.05.
+    pub cv: f64,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        DeviceSpec { hgs: 1e-5, lgs: 1e-7, g_levels: 16, cv: 0.05 }
+    }
+}
+
+impl DeviceSpec {
+    /// Maximum digital value storable on a single device.
+    pub fn max_digit(&self) -> u32 {
+        (self.g_levels - 1) as u32
+    }
+
+    /// Conductance step between adjacent levels.
+    pub fn step(&self) -> f64 {
+        (self.hgs - self.lgs) / (self.g_levels as f64 - 1.0)
+    }
+
+    /// Ideal conductance for a digital level `d ∈ [0, g_levels)`.
+    #[inline]
+    pub fn level_to_g(&self, d: u32) -> f64 {
+        debug_assert!((d as usize) < self.g_levels, "level {d} out of range");
+        self.lgs + self.step() * d as f64
+    }
+
+    /// Nearest digital level for a target conductance (clamped).
+    pub fn g_to_level(&self, g: f64) -> u32 {
+        let d = ((g - self.lgs) / self.step()).round();
+        d.clamp(0.0, (self.g_levels - 1) as f64) as u32
+    }
+
+    /// Program-and-read sample: lognormal noise with mean `level_to_g(d)`
+    /// and the spec's `cv` (Eq. 1).
+    #[inline]
+    pub fn sample_level(&self, d: u32, rng: &mut Pcg64) -> f64 {
+        rng.lognormal_cv(self.level_to_g(d), self.cv)
+    }
+
+    /// Map a matrix of digital levels to a noisy conductance matrix — this
+    /// is what one crossbar array "stores" for one weight slice.
+    pub fn program_matrix(&self, digits: &Matrix, rng: &mut Pcg64) -> Matrix {
+        Matrix {
+            rows: digits.rows,
+            cols: digits.cols,
+            data: digits
+                .data
+                .iter()
+                .map(|&d| {
+                    debug_assert!(d >= 0.0 && (d as usize) < self.g_levels);
+                    self.sample_level(d as u32, rng)
+                })
+                .collect(),
+        }
+    }
+
+    /// Relative-noise shortcut used on the DPE hot path: multiply each ideal
+    /// value by a lognormal factor of mean 1 and the spec's cv. Equivalent
+    /// in distribution to `program_matrix` for nonzero targets but
+    /// independent of the conductance mapping, so it can be applied directly
+    /// in digit space.
+    pub fn noise_factor(&self, rng: &mut Pcg64) -> f64 {
+        rng.lognormal_cv(1.0, self.cv)
+    }
+}
+
+/// Generate the Fig-3-style conductance clouds: `n` reads of devices
+/// programmed to HRS (low conductance) and LRS (high conductance).
+/// Returns (hrs_samples, lrs_samples).
+pub fn conductance_clouds(spec: &DeviceSpec, n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(seed, 0xDE71CE);
+    let hrs = (0..n).map(|_| spec.sample_level(0, &mut rng)).collect();
+    let lrs = (0..n).map(|_| spec.sample_level(spec.max_digit(), &mut rng)).collect();
+    (hrs, lrs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_mapping_endpoints() {
+        let s = DeviceSpec::default();
+        assert_eq!(s.level_to_g(0), 1e-7);
+        assert!((s.level_to_g(15) - 1e-5).abs() < 1e-18);
+    }
+
+    #[test]
+    fn g_to_level_roundtrip() {
+        let s = DeviceSpec::default();
+        for d in 0..16 {
+            assert_eq!(s.g_to_level(s.level_to_g(d)), d);
+        }
+    }
+
+    #[test]
+    fn g_to_level_clamps() {
+        let s = DeviceSpec::default();
+        assert_eq!(s.g_to_level(-1.0), 0);
+        assert_eq!(s.g_to_level(1.0), 15);
+    }
+
+    #[test]
+    fn sample_statistics_match_eq1() {
+        let s = DeviceSpec { cv: 0.1, ..DeviceSpec::default() };
+        let mut rng = Pcg64::seeded(1);
+        let xs: Vec<f64> = (0..60_000).map(|_| s.sample_level(8, &mut rng)).collect();
+        let target = s.level_to_g(8);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let std =
+            (xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64).sqrt();
+        assert!((mean - target).abs() / target < 0.02);
+        assert!((std / mean - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn clouds_separated_for_small_cv() {
+        // Fig 3: HRS and LRS distributions must be clearly separated at
+        // cv = 0.05 with the Table-2 on/off ratio of 100.
+        let (hrs, lrs) = conductance_clouds(&DeviceSpec::default(), 5000, 9);
+        let hrs_max = hrs.iter().cloned().fold(0.0f64, f64::max);
+        let lrs_min = lrs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(hrs_max < lrs_min, "hrs_max={hrs_max} lrs_min={lrs_min}");
+    }
+
+    #[test]
+    fn program_matrix_shape_and_positivity() {
+        let s = DeviceSpec::default();
+        let digits = Matrix::from_fn(4, 4, |i, j| ((i + j) % 16) as f64);
+        let mut rng = Pcg64::seeded(2);
+        let g = s.program_matrix(&digits, &mut rng);
+        assert_eq!((g.rows, g.cols), (4, 4));
+        assert!(g.data.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn noise_factor_mean_one() {
+        let s = DeviceSpec { cv: 0.2, ..DeviceSpec::default() };
+        let mut rng = Pcg64::seeded(3);
+        let mean =
+            (0..50_000).map(|_| s.noise_factor(&mut rng)).sum::<f64>() / 50_000.0;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn zero_cv_is_noise_free() {
+        let s = DeviceSpec { cv: 0.0, ..DeviceSpec::default() };
+        let mut rng = Pcg64::seeded(4);
+        assert_eq!(s.sample_level(5, &mut rng), s.level_to_g(5));
+        assert_eq!(s.noise_factor(&mut rng), 1.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Block matrix mapping (paper §3.3, Fig 7).
+//!
+//! Matrices larger than the physical array are decomposed into
+//! `l_blk_m × l_blk_n` submatrices; each block gets its own quantization
+//! coefficient or shared exponent (shrinking the pre-processing error with
+//! the block size), and matrices whose dimensions are not divisible by the
+//! array size are zero-padded.
+
+/// A block partition of one matrix dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockDim {
+    pub total: usize,
+    pub block: usize,
+}
+
+impl BlockDim {
+    pub fn new(total: usize, block: usize) -> Self {
+        assert!(block > 0, "block size must be positive");
+        BlockDim { total, block }
+    }
+
+    /// Number of blocks (ceil division).
+    pub fn count(&self) -> usize {
+        self.total.div_ceil(self.block)
+    }
+
+    /// Padded total length.
+    pub fn padded(&self) -> usize {
+        self.count() * self.block
+    }
+
+    /// (start, len) of block `i` in the *unpadded* matrix; the last block
+    /// may be short (the remainder is the zero padding).
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.count());
+        let start = i * self.block;
+        (start, self.block.min(self.total - start))
+    }
+}
+
+/// Block grid for a matmul `A(m×k) · B(k×n)` on arrays of `l_m × l_n`
+/// devices: the contraction dimension `k` is split by the array's row count
+/// `l_m` and the output dimension `n` by the array's column count `l_n`.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulBlocks {
+    pub k: BlockDim,
+    pub n: BlockDim,
+}
+
+impl MatmulBlocks {
+    pub fn new(k_total: usize, n_total: usize, array: (usize, usize)) -> Self {
+        MatmulBlocks {
+            k: BlockDim::new(k_total, array.0),
+            n: BlockDim::new(n_total, array.1),
+        }
+    }
+
+    /// Number of physical arrays per weight slice.
+    pub fn arrays_per_slice(&self) -> usize {
+        self.k.count() * self.n.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_division() {
+        let d = BlockDim::new(128, 64);
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.padded(), 128);
+        assert_eq!(d.range(0), (0, 64));
+        assert_eq!(d.range(1), (64, 64));
+    }
+
+    #[test]
+    fn remainder_padding() {
+        let d = BlockDim::new(100, 64);
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.padded(), 128);
+        assert_eq!(d.range(1), (64, 36)); // short last block
+    }
+
+    #[test]
+    fn small_matrix_single_block() {
+        let d = BlockDim::new(10, 64);
+        assert_eq!(d.count(), 1);
+        assert_eq!(d.range(0), (0, 10));
+    }
+
+    #[test]
+    fn matmul_blocks_array_count() {
+        let b = MatmulBlocks::new(128, 128, (64, 64));
+        assert_eq!(b.arrays_per_slice(), 4);
+        let b = MatmulBlocks::new(130, 64, (64, 64));
+        assert_eq!(b.arrays_per_slice(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "block size")]
+    fn zero_block_rejected() {
+        BlockDim::new(10, 0);
+    }
+}

@@ -1,0 +1,591 @@
+//! The variable-precision dot-product engine (paper §3.3, Figs 5–7).
+//!
+//! Computes `C = A·B` on simulated crossbar hardware:
+//! 1. split the contraction/output dimensions into array-sized blocks
+//!    (Fig 7), each block sharing one quantization coefficient (INT path)
+//!    or one exponent (FP pre-alignment path);
+//! 2. slice the block integers into the spec's digit planes (Fig 1);
+//! 3. program every weight digit plane onto a (noisy) crossbar array via
+//!    the device model — lognormal conductance variation, `g_levels`
+//!    discrete states;
+//! 4. for each (input-slice, weight-slice) pair run the analog MVM —
+//!    ideal Ohm/Kirchhoff dot product, or the full IR-drop circuit solve
+//!    when `use_circuit` is set — and quantize the readout with the ADC;
+//! 5. recombine partials with signed shift-and-add weights and the block
+//!    scales.
+//!
+//! Weight preparation (steps 1–3) is separated into [`PreparedWeights`] so
+//! NN layers can slice+program once per weight update and reuse across
+//! batches, matching the paper's "sliced copy of the weight saved as an
+//! attribute in the computing graph".
+
+use super::blocks::MatmulBlocks;
+use super::quant::Adc;
+use super::slicing::{quantize_block, slice_digits, DataMode, SliceSpec};
+use crate::circuit::CrossbarCircuit;
+use crate::device::DeviceSpec;
+use crate::tensor::Matrix;
+use crate::util::parallel::par_map;
+use crate::util::rng::Pcg64;
+
+/// A slice method: spec + how continuous data becomes integers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceMethod {
+    pub spec: SliceSpec,
+    pub mode: DataMode,
+}
+
+impl SliceMethod {
+    pub fn int(spec: SliceSpec) -> Self {
+        SliceMethod { spec, mode: DataMode::Quantize }
+    }
+    pub fn fp(spec: SliceSpec) -> Self {
+        SliceMethod { spec, mode: DataMode::PreAlign }
+    }
+    /// Parse a paper-style name: "int4", "int8", "fp16", "bf16", "fp32",
+    /// "flex16", or "ones<N>"; "fp*" names select pre-alignment.
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        let lower = name.to_ascii_lowercase();
+        Ok(match lower.as_str() {
+            "int4" => Self::int(SliceSpec::int4()),
+            "int8" => Self::int(SliceSpec::int8()),
+            "fp16" => Self::fp(SliceSpec::fp16()),
+            "bf16" => Self::fp(SliceSpec::bf16()),
+            "fp32" => Self::fp(SliceSpec::fp32()),
+            "flex16" | "flexpoint16" => Self::fp(SliceSpec::flex16()),
+            _ => {
+                if let Some(n) = lower.strip_prefix("ones") {
+                    Self::int(SliceSpec::ones(n.parse()?))
+                } else {
+                    anyhow::bail!("unknown slice method '{name}'")
+                }
+            }
+        })
+    }
+}
+
+/// How the ADC full-scale range is chosen per slice-pair readout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdcPolicy {
+    /// Fixed worst-case range `rows·max_a·max_w` — conservative, matches
+    /// the AOT artifacts (`python/compile/`), and is the paper's "hard to
+    /// achieve software accuracy" regime.
+    #[default]
+    WorstCase,
+    /// Per-readout calibrated range (programmable-gain amplifier): the
+    /// gain maps the actual peak of each readout to full scale —
+    /// amplifying small signals, attenuating large ones. Strictly finer
+    /// than `WorstCase`. Models calibrated ADC ranges à la CrossSim.
+    Calibrated,
+    /// Count-mode readout: like `Calibrated` but the step never drops
+    /// below one digit unit, so integer-valued partials below `radc` are
+    /// converted **exactly** and sub-LSB analog noise is absorbed by the
+    /// code boundary. Required for the high-precision FP32 solver
+    /// workloads (Fig 13).
+    IntegerSnap,
+}
+
+/// Engine configuration (defaults = Table 2).
+#[derive(Debug, Clone)]
+pub struct DpeConfig {
+    pub device: DeviceSpec,
+    /// Physical array size `(rows = contraction block, cols = output block)`.
+    pub array: (usize, usize),
+    /// DAC levels (input side). Table 2: 256.
+    pub rdac: usize,
+    /// ADC levels (readout side). Table 2: 1024.
+    pub radc: usize,
+    /// ADC range selection policy.
+    pub adc_policy: AdcPolicy,
+    /// Disable all analog noise/quantization (ideal sliced arithmetic).
+    pub noise_free: bool,
+    /// Route every block MVM through the IR-drop circuit solver.
+    pub use_circuit: bool,
+    /// Wire resistance for the circuit model (Ω).
+    pub r_wire: f64,
+    /// Read voltage at full input scale (V), used by the circuit path.
+    pub v_read: f64,
+}
+
+impl Default for DpeConfig {
+    fn default() -> Self {
+        DpeConfig {
+            device: DeviceSpec::default(),
+            array: (64, 64),
+            rdac: 256,
+            radc: 1024,
+            adc_policy: AdcPolicy::default(),
+            noise_free: false,
+            use_circuit: false,
+            r_wire: 2.93,
+            v_read: 0.2,
+        }
+    }
+}
+
+/// One weight block programmed on hardware: per-slice *analog* digit
+/// matrices (noise applied) plus the block's recovery scale.
+#[derive(Debug, Clone)]
+struct PreparedBlock {
+    /// `num_slices` matrices of `l_m × l_n` analog digit values.
+    slices: Vec<Matrix>,
+    scale: f64,
+}
+
+/// A weight matrix sliced, blocked, and programmed onto arrays.
+#[derive(Debug, Clone)]
+pub struct PreparedWeights {
+    blocks: Vec<PreparedBlock>, // indexed kb * n_blocks + nb
+    grid: MatmulBlocks,
+    method: SliceMethod,
+    k: usize,
+    n: usize,
+}
+
+impl PreparedWeights {
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+    pub fn method(&self) -> &SliceMethod {
+        &self.method
+    }
+    /// Number of physical arrays used (blocks × slices) — the paper's
+    /// "array groups" resource count (Fig 6).
+    pub fn arrays_used(&self) -> usize {
+        self.blocks.len() * self.method.spec.num_slices()
+    }
+}
+
+/// The hardware dot-product engine.
+#[derive(Debug, Clone)]
+pub struct DotProductEngine {
+    pub cfg: DpeConfig,
+    seed: u64,
+}
+
+impl DotProductEngine {
+    pub fn new(cfg: DpeConfig, seed: u64) -> Self {
+        assert!(cfg.array.0 > 0 && cfg.array.1 > 0);
+        DotProductEngine { cfg, seed }
+    }
+
+    /// An engine that performs exact sliced arithmetic (no noise, no ADC) —
+    /// used for backend cross-validation.
+    pub fn ideal(array: (usize, usize)) -> Self {
+        DotProductEngine::new(
+            DpeConfig { noise_free: true, array, ..DpeConfig::default() },
+            0,
+        )
+    }
+
+    /// Program `b` onto crossbar arrays with `method` (steps 1–3 above).
+    /// `tag` decorrelates the programming noise between calls (e.g. Monte
+    /// Carlo cycle index).
+    pub fn prepare_weights(&self, b: &Matrix, method: &SliceMethod, tag: u64) -> PreparedWeights {
+        let grid = MatmulBlocks::new(b.rows, b.cols, self.cfg.array);
+        let (kc, nc) = (grid.k.count(), grid.n.count());
+        let max_digits: Vec<f64> =
+            method.spec.widths.iter().map(|&w| ((1u64 << w) - 1) as f64).collect();
+        assert!(
+            max_digits.iter().all(|&d| d <= self.cfg.device.max_digit() as f64),
+            "slice width exceeds device g_levels={}",
+            self.cfg.device.g_levels
+        );
+        let blocks: Vec<PreparedBlock> = par_map(kc * nc, |blk| {
+            let (kb, nb) = (blk / nc, blk % nc);
+            let (k0, kl) = grid.k.range(kb);
+            let (n0, nl) = grid.n.range(nb);
+            // Pad short edge blocks to the full array size with zeros.
+            let sub = b.block(k0, n0, kl, nl).pad_to(self.cfg.array.0, self.cfg.array.1);
+            let qb = quantize_block(&sub, &method.spec, method.mode);
+            let digit_planes = slice_digits(&qb.q, &method.spec);
+            let mut rng = Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), blk as u64);
+            let slices = digit_planes
+                .into_iter()
+                .map(|plane| {
+                    if self.cfg.noise_free {
+                        plane
+                    } else {
+                        self.program_plane(&plane, &mut rng)
+                    }
+                })
+                .collect();
+            PreparedBlock { slices, scale: qb.scale }
+        });
+        PreparedWeights { blocks, grid, method: method.clone(), k: b.rows, n: b.cols }
+    }
+
+    /// Program one digit plane through the device model: digit → target
+    /// conductance → lognormal sample → effective analog digit
+    /// (offset-corrected, i.e. `(G − LGS)/step`).
+    fn program_plane(&self, plane: &Matrix, rng: &mut Pcg64) -> Matrix {
+        let dev = &self.cfg.device;
+        let step = dev.step();
+        Matrix {
+            rows: plane.rows,
+            cols: plane.cols,
+            data: plane
+                .data
+                .iter()
+                .map(|&d| {
+                    let g = dev.sample_level(d as u32, rng);
+                    (g - dev.lgs) / step
+                })
+                .collect(),
+        }
+    }
+
+    /// Full matmul `a (m×k) · b (k×n)` with per-call weight programming.
+    pub fn matmul(&self, a: &Matrix, b: &Matrix, a_med: &SliceMethod, b_med: &SliceMethod) -> Matrix {
+        let prepared = self.prepare_weights(b, b_med, 0);
+        self.matmul_prepared(a, &prepared, a_med, 0)
+    }
+
+    /// INT-path convenience (both operands quantization-sliced).
+    pub fn matmul_int(&self, a: &Matrix, b: &Matrix, a_spec: &SliceSpec, b_spec: &SliceSpec) -> Matrix {
+        self.matmul(a, b, &SliceMethod::int(a_spec.clone()), &SliceMethod::int(b_spec.clone()))
+    }
+
+    /// FP-path convenience (both operands pre-aligned).
+    pub fn matmul_fp(&self, a: &Matrix, b: &Matrix, a_spec: &SliceSpec, b_spec: &SliceSpec) -> Matrix {
+        self.matmul(a, b, &SliceMethod::fp(a_spec.clone()), &SliceMethod::fp(b_spec.clone()))
+    }
+
+    /// Matmul against pre-programmed weights (the NN hot path). `tag`
+    /// decorrelates read noise between calls.
+    pub fn matmul_prepared(
+        &self,
+        a: &Matrix,
+        w: &PreparedWeights,
+        a_med: &SliceMethod,
+        tag: u64,
+    ) -> Matrix {
+        assert_eq!(a.cols, w.k, "matmul dim mismatch: a is {}x{}, weights are {}x{}", a.rows, a.cols, w.k, w.n);
+        let grid = w.grid;
+        let (m, n) = (a.rows, w.n);
+        let (kc, nc) = (grid.k.count(), grid.n.count());
+        let adc = Adc::new(self.cfg.radc);
+        let a_spec = &a_med.spec;
+        let w_spec = &w.method.spec;
+        let a_weights: Vec<f64> = (0..a_spec.num_slices()).map(|i| a_spec.weight(i)).collect();
+        let w_weights: Vec<f64> = (0..w_spec.num_slices()).map(|i| w_spec.weight(i)).collect();
+        let a_max: Vec<f64> =
+            a_spec.widths.iter().map(|&wd| ((1u64 << wd) - 1) as f64).collect();
+        let w_max: Vec<f64> =
+            w_spec.widths.iter().map(|&wd| ((1u64 << wd) - 1) as f64).collect();
+
+        // Quantize + slice each k-block of the input once (shared across
+        // all n-blocks).
+        struct InputBlock {
+            slices: Vec<Matrix>, // m × l_m digit planes
+            scale: f64,
+        }
+        let a_blocks: Vec<InputBlock> = par_map(kc, |kb| {
+            let (k0, kl) = grid.k.range(kb);
+            let sub = a.block(0, k0, m, kl).pad_to(m, self.cfg.array.0);
+            let qb = quantize_block(&sub, a_spec, a_med.mode);
+            InputBlock { slices: slice_digits(&qb.q, a_spec), scale: qb.scale }
+        });
+
+        // Column-block outputs accumulate independently → parallel over nb
+        // when there are enough blocks to amortize thread spawn; otherwise
+        // serial here and the inner matmuls parallelize themselves for
+        // large m (§Perf).
+        let nb_work = m * self.cfg.array.0 * self.cfg.array.1
+            * a_spec.num_slices() * w_spec.num_slices() * kc;
+        let _ = nb_work;
+        // One task per (kb, nb) array-pair: returns the scaled block
+        // contribution; per-nb reduction afterwards is cheap.
+        let pair_body = |task: usize| -> Matrix {
+            let (kb, nb) = (task / nc, task % nc);
+            {
+                let ab = &a_blocks[kb];
+                let wb = &w.blocks[kb * nc + nb];
+                if ab.scale == 0.0 || wb.scale == 0.0 {
+                    return Matrix::zeros(m, self.cfg.array.1);
+                }
+                let mut block_acc = Matrix::zeros(m, self.cfg.array.1);
+                for (sa, a_plane) in ab.slices.iter().enumerate() {
+                    for (sw, w_plane) in wb.slices.iter().enumerate() {
+                        let mut partial = if self.cfg.use_circuit {
+                            self.circuit_mvm(a_plane, w_plane, a_max[sa])
+                        } else {
+                            a_plane.matmul(w_plane)
+                        };
+                        if !self.cfg.noise_free {
+                            // ADC full scale for this slice pair's readout.
+                            let worst = self.cfg.array.0 as f64 * a_max[sa] * w_max[sw];
+                            match self.cfg.adc_policy {
+                                AdcPolicy::WorstCase => {
+                                    adc.for_full_scale(worst).quantize_slice(&mut partial.data);
+                                }
+                                AdcPolicy::Calibrated | AdcPolicy::IntegerSnap => {
+                                    let peak = partial.data.iter().fold(0.0f64, |m, &v| m.max(v));
+                                    let mut step = peak / (self.cfg.radc as f64 - 1.0);
+                                    if self.cfg.adc_policy == AdcPolicy::IntegerSnap {
+                                        step = step.max(1.0);
+                                    }
+                                    if step > 0.0 {
+                                        for v in partial.data.iter_mut() {
+                                            *v = (*v / step).round().max(0.0) * step;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        let wgt = a_weights[sa] * w_weights[sw];
+                        for (o, &p) in block_acc.data.iter_mut().zip(&partial.data) {
+                            *o += wgt * p;
+                        }
+                    }
+                }
+                let s = ab.scale * wb.scale;
+                for v in block_acc.data.iter_mut() {
+                    *v *= s;
+                }
+                block_acc
+            }
+        };
+        // Parallelize across all (kb, nb) array-pairs when each carries
+        // real work; the inner matmuls stay serial below their own
+        // threshold, so there is no nested spawn (§Perf).
+        let per_pair_work =
+            m * self.cfg.array.0 * self.cfg.array.1 * a_spec.num_slices() * w_spec.num_slices();
+        let tasks = kc * nc;
+        let pair_results: Vec<Matrix> = if tasks >= 2 && per_pair_work >= (1 << 19) {
+            par_map(tasks, pair_body)
+        } else {
+            (0..tasks).map(pair_body).collect()
+        };
+
+        let mut out = Matrix::zeros(m, n);
+        for nb in 0..nc {
+            let (n0, nl) = grid.n.range(nb);
+            let mut acc = Matrix::zeros(m, self.cfg.array.1);
+            for kb in 0..kc {
+                for (o, &p) in acc.data.iter_mut().zip(&pair_results[kb * nc + nb].data) {
+                    *o += p;
+                }
+            }
+            out.set_block_clipped(0, n0, &acc.block(0, 0, m, nl));
+        }
+        // Read-noise decorrelation tag is consumed implicitly by weight
+        // programming; keep the parameter for future per-read noise.
+        let _ = tag;
+        out
+    }
+
+    /// Route one digit-plane MVM through the IR-drop circuit model: inputs
+    /// become voltages (`digit/a_max · v_read`), digits become conductances,
+    /// output currents convert back to digit units.
+    fn circuit_mvm(&self, a_plane: &Matrix, w_plane: &Matrix, a_max: f64) -> Matrix {
+        let dev = &self.cfg.device;
+        let step = dev.step();
+        // Conductance matrix for this plane: G = digit·step + LGS.
+        let g = w_plane.map(|d| d * step + dev.lgs);
+        let xb = CrossbarCircuit::new(g, self.cfg.r_wire);
+        let mut out = Matrix::zeros(a_plane.rows, w_plane.cols);
+        let scale_v = if a_max > 0.0 { self.cfg.v_read / a_max } else { 0.0 };
+        for r in 0..a_plane.rows {
+            let v: Vec<f64> = a_plane.row(r).iter().map(|&d| d * scale_v).collect();
+            let (sol, _) = xb.solve_cross_iteration(&v, 1e-9, 40);
+            // Subtract the LGS offset column contribution digitally and
+            // convert current → digit units.
+            let v_sum: f64 = v.iter().sum();
+            for c in 0..w_plane.cols {
+                let i_dev = sol.i_out[c];
+                let digit_val = (i_dev - v_sum * dev.lgs) / (step * scale_v.max(f64::MIN_POSITIVE));
+                *out.at_mut(r, c) = digit_val;
+            }
+        }
+        out
+    }
+
+    /// Relative error of this engine vs the ideal matmul for given operands
+    /// (the paper's RE metric).
+    pub fn relative_error(&self, a: &Matrix, b: &Matrix, a_med: &SliceMethod, b_med: &SliceMethod) -> f64 {
+        self.matmul(a, b, a_med, b_med).relative_error(&a.matmul(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        Matrix::random_uniform(m, n, -1.0, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn ideal_engine_int8_small_error() {
+        // Noise-free sliced arithmetic: only quantization error remains,
+        // which for INT8 on 64-blocks is well under 1%.
+        let e = DotProductEngine::ideal((64, 64));
+        let a = rand_mat(32, 50, 61);
+        let b = rand_mat(50, 40, 62);
+        let re = e.relative_error(&a, &b, &SliceMethod::int(SliceSpec::int8()), &SliceMethod::int(SliceSpec::int8()));
+        assert!(re < 0.01, "re={re}");
+    }
+
+    #[test]
+    fn ideal_engine_fp32_tiny_error() {
+        let e = DotProductEngine::ideal((64, 64));
+        let a = rand_mat(16, 16, 63);
+        let b = rand_mat(16, 16, 64);
+        let re = e.relative_error(&a, &b, &SliceMethod::fp(SliceSpec::fp32()), &SliceMethod::fp(SliceSpec::fp32()));
+        assert!(re < 1e-5, "re={re}");
+    }
+
+    #[test]
+    fn noisy_engine_error_ordering() {
+        // More bits → lower error; noise → higher error than ideal.
+        let a = rand_mat(64, 64, 65);
+        let b = rand_mat(64, 64, 66);
+        let noisy = DotProductEngine::new(DpeConfig::default(), 7);
+        let re4 = noisy.relative_error(&a, &b, &SliceMethod::int(SliceSpec::int4()), &SliceMethod::int(SliceSpec::int4()));
+        let re8 = noisy.relative_error(&a, &b, &SliceMethod::int(SliceSpec::int8()), &SliceMethod::int(SliceSpec::int8()));
+        assert!(re8 < re4, "re8={re8} re4={re4}");
+        let ideal = DotProductEngine::ideal((64, 64));
+        let re8i = ideal.relative_error(&a, &b, &SliceMethod::int(SliceSpec::int8()), &SliceMethod::int(SliceSpec::int8()));
+        assert!(re8i < re8, "ideal {re8i} vs noisy {re8}");
+    }
+
+    #[test]
+    fn block_decomposition_matches_unblocked() {
+        // Ideal engine: block size must not change the exact result when
+        // scales are per-block exact (noise-free, generous bits).
+        let a = rand_mat(20, 100, 67);
+        let b = rand_mat(100, 30, 68);
+        let big = DotProductEngine::ideal((128, 128));
+        let small = DotProductEngine::ideal((32, 32));
+        let med = SliceMethod::fp(SliceSpec::fp32());
+        let r1 = big.matmul(&a, &b, &med, &med);
+        let r2 = small.matmul(&a, &b, &med, &med);
+        let ideal = a.matmul(&b);
+        assert!(r1.relative_error(&ideal) < 1e-5);
+        assert!(r2.relative_error(&ideal) < 1e-5);
+    }
+
+    #[test]
+    fn smaller_blocks_reduce_quant_error() {
+        // Fig 12: quantizing per smaller block tracks local dynamic range.
+        // Construct a matrix with badly mismatched block magnitudes.
+        let mut rng = Pcg64::seeded(69);
+        let b = Matrix::from_fn(128, 128, |i, _| {
+            let scale = if i < 64 { 1.0 } else { 1e-3 };
+            scale * rng.uniform_range(-1.0, 1.0)
+        });
+        let a = rand_mat(32, 128, 70);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let ideal = a.matmul(&b);
+        let e_small = DotProductEngine::ideal((32, 32));
+        let e_big = DotProductEngine::ideal((128, 128));
+        let re_small = e_small.matmul(&a, &b, &med, &med).relative_error(&ideal);
+        let re_big = e_big.matmul(&a, &b, &med, &med).relative_error(&ideal);
+        assert!(re_small < re_big, "small={re_small} big={re_big}");
+    }
+
+    #[test]
+    fn quantize_beats_prealign_same_bits() {
+        // Fig 12's headline: quantization-based dot product beats the
+        // pre-alignment method at the same effective bit width. The gap
+        // shows when block maxima are away from powers of two (pre-align
+        // rounds the scale up to 2^e): scale operands to ~0.7.
+        let a = rand_mat(64, 64, 71).scale(0.7);
+        let b = rand_mat(64, 64, 72).scale(0.7);
+        let e = DotProductEngine::ideal((64, 64));
+        let spec = SliceSpec::int8();
+        let re_q = e.relative_error(&a, &b, &SliceMethod::int(spec.clone()), &SliceMethod::int(spec.clone()));
+        let re_p = e.relative_error(&a, &b, &SliceMethod::fp(spec.clone()), &SliceMethod::fp(spec.clone()));
+        assert!(re_q < re_p, "quant={re_q} prealign={re_p}");
+    }
+
+    #[test]
+    fn prepared_weights_reused_across_inputs() {
+        let e = DotProductEngine::new(DpeConfig::default(), 3);
+        let b = rand_mat(64, 32, 73);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let w = e.prepare_weights(&b, &med, 0);
+        assert_eq!(w.shape(), (64, 32));
+        assert_eq!(w.arrays_used(), 4); // 1 k-block × 1 n-block × 4 slices
+        let a1 = rand_mat(8, 64, 74);
+        let r1 = e.matmul_prepared(&a1, &w, &med, 0);
+        let r1b = e.matmul_prepared(&a1, &w, &med, 0);
+        // Same programmed weights → identical results.
+        assert_eq!(r1.data, r1b.data);
+        assert!(r1.relative_error(&a1.matmul(&b)) < 0.15);
+    }
+
+    #[test]
+    fn programming_tag_decorrelates_noise() {
+        let e = DotProductEngine::new(DpeConfig::default(), 3);
+        let b = rand_mat(64, 64, 75);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(8, 64, 76);
+        let w0 = e.prepare_weights(&b, &med, 0);
+        let w1 = e.prepare_weights(&b, &med, 1);
+        let r0 = e.matmul_prepared(&a, &w0, &med, 0);
+        let r1 = e.matmul_prepared(&a, &w1, &med, 0);
+        assert_ne!(r0.data, r1.data);
+    }
+
+    #[test]
+    fn nonsquare_and_padded_shapes() {
+        let e = DotProductEngine::ideal((64, 64));
+        let med = SliceMethod::int(SliceSpec::int8());
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 65, 7), (10, 100, 130), (128, 64, 1)] {
+            let a = rand_mat(m, k, 80 + m as u64);
+            let b = rand_mat(k, n, 90 + n as u64);
+            let r = e.matmul(&a, &b, &med, &med);
+            assert_eq!((r.rows, r.cols), (m, n));
+            assert!(r.relative_error(&a.matmul(&b)) < 0.02, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn circuit_path_close_to_ideal_for_tiny_rwire() {
+        let mut cfg = DpeConfig { use_circuit: true, r_wire: 1e-6, array: (16, 16), ..DpeConfig::default() };
+        cfg.device.cv = 0.0;
+        cfg.noise_free = false;
+        let e = DotProductEngine::new(cfg, 5);
+        let a = rand_mat(4, 16, 77);
+        let b = rand_mat(16, 8, 78);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let re = e.matmul(&a, &b, &med, &med).relative_error(&a.matmul(&b));
+        assert!(re < 0.02, "re={re}");
+    }
+
+    #[test]
+    fn circuit_path_ir_drop_increases_error() {
+        let mk = |r_wire: f64| {
+            let mut cfg = DpeConfig { use_circuit: true, r_wire, array: (32, 32), ..DpeConfig::default() };
+            cfg.device.cv = 0.0;
+            DotProductEngine::new(cfg, 5)
+        };
+        let a = rand_mat(4, 32, 81).map(f64::abs);
+        let b = rand_mat(32, 16, 82).map(f64::abs);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let ideal = a.matmul(&b);
+        let re_small = mk(0.1).matmul(&a, &b, &med, &med).relative_error(&ideal);
+        let re_large = mk(10.0).matmul(&a, &b, &med, &med).relative_error(&ideal);
+        assert!(re_large > re_small, "re_large={re_large} re_small={re_small}");
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn shape_mismatch_panics() {
+        let e = DotProductEngine::ideal((64, 64));
+        let med = SliceMethod::int(SliceSpec::int8());
+        let w = e.prepare_weights(&rand_mat(10, 10, 1), &med, 0);
+        let _ = e.matmul_prepared(&rand_mat(2, 11, 2), &w, &med, 0);
+    }
+
+    #[test]
+    fn parse_method_names() {
+        assert_eq!(SliceMethod::parse("int8").unwrap().spec.total_bits(), 8);
+        assert_eq!(SliceMethod::parse("FP16").unwrap().mode, DataMode::PreAlign);
+        assert_eq!(SliceMethod::parse("ones6").unwrap().spec.num_slices(), 6);
+        assert!(SliceMethod::parse("nope").is_err());
+    }
+}

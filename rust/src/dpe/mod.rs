@@ -1,0 +1,19 @@
+//! The variable-precision bit-slicing dot-product engine (DPE) — the
+//! paper's core contribution (§3.3).
+//!
+//! - [`quant`] — DAC/ADC converter models;
+//! - [`slicing`] — dynamic INT bit-slicing + block quantization /
+//!   FP shared-exponent pre-alignment;
+//! - [`blocks`] — block matrix mapping onto fixed-size arrays;
+//! - [`engine`] — the DPE itself ([`DotProductEngine`]), with weight
+//!   preparation for reuse across calls;
+//! - [`montecarlo`] — the Monte-Carlo nonideality analysis driver (Fig 12).
+
+pub mod blocks;
+pub mod engine;
+pub mod montecarlo;
+pub mod quant;
+pub mod slicing;
+
+pub use engine::{DotProductEngine, DpeConfig, PreparedWeights, SliceMethod};
+pub use slicing::{DataMode, SliceSpec};

@@ -1,0 +1,196 @@
+//! Monte-Carlo nonideality analysis (paper Fig 12): repeated DPE matmuls
+//! with freshly sampled programming noise, sweeping bit width, block size,
+//! and conductance variation, reporting relative-error statistics.
+
+use super::engine::{DotProductEngine, DpeConfig, SliceMethod};
+use super::slicing::{DataMode, SliceSpec};
+use crate::tensor::Matrix;
+use crate::util::parallel::par_map;
+use crate::util::rng::Pcg64;
+
+/// One Monte-Carlo sweep point.
+#[derive(Debug, Clone)]
+pub struct McPoint {
+    pub label: String,
+    pub bits: usize,
+    pub block: usize,
+    pub cv: f64,
+    pub mode: DataMode,
+    /// Mean / std / min / max of the relative error over the cycles.
+    pub re_mean: f64,
+    pub re_std: f64,
+    pub re_min: f64,
+    pub re_max: f64,
+}
+
+/// Monte-Carlo experiment configuration.
+#[derive(Debug, Clone)]
+pub struct McConfig {
+    /// Operand size (paper: 128×128).
+    pub size: usize,
+    /// Cycles per point (paper: 100).
+    pub cycles: usize,
+    pub base: DpeConfig,
+    pub seed: u64,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        McConfig { size: 128, cycles: 100, base: DpeConfig::default(), seed: 2024 }
+    }
+}
+
+/// Build a signed slice spec of `bits` total (1-bit sign slice, then 1, 2,
+/// then 4-bit slices — the paper's dynamic pattern generalized).
+pub fn spec_for_bits(bits: usize) -> SliceSpec {
+    assert!(bits >= 2, "need at least sign + 1 bit");
+    let mut widths = vec![1usize];
+    let mut rest = bits - 1;
+    for w in [1usize, 2] {
+        if rest == 0 {
+            break;
+        }
+        let take = w.min(rest);
+        widths.push(take);
+        rest -= take;
+    }
+    while rest > 0 {
+        let take = rest.min(4);
+        widths.push(take);
+        rest -= take;
+    }
+    SliceSpec::new(&widths, true)
+}
+
+/// Run one sweep point: `cycles` independent programming cycles of the
+/// same operands; each cycle re-programs with fresh noise.
+pub fn run_point(cfg: &McConfig, bits: usize, block: usize, cv: f64, mode: DataMode) -> McPoint {
+    let mut rng = Pcg64::new(cfg.seed, 0x4D43);
+    run_point_with_operands(cfg, bits, block, cv, mode, &mut rng)
+}
+
+fn mc_operands(cfg: &McConfig, rng: &mut Pcg64) -> (Matrix, Matrix) {
+    // Normal operands: per-block maxima land away from powers of two, so
+    // the pre-alignment exponent rounding (vs full-precision quantization
+    // coefficients) is exercised — the distinction Fig 12 plots.
+    (
+        Matrix::random_normal(cfg.size, cfg.size, 0.0, 1.0, rng),
+        Matrix::random_normal(cfg.size, cfg.size, 0.0, 1.0, rng),
+    )
+}
+
+fn run_point_with_operands(
+    cfg: &McConfig,
+    bits: usize,
+    block: usize,
+    cv: f64,
+    mode: DataMode,
+    rng: &mut Pcg64,
+) -> McPoint {
+    let (a, b) = mc_operands(cfg, rng);
+    let ideal = a.matmul(&b);
+    let spec = spec_for_bits(bits);
+    let method = SliceMethod { spec, mode };
+    let mut dpe_cfg = cfg.base.clone();
+    dpe_cfg.array = (block, block);
+    dpe_cfg.device.cv = cv;
+    let res: Vec<f64> = par_map(cfg.cycles, |cycle| {
+        let engine = DotProductEngine::new(dpe_cfg.clone(), cfg.seed.wrapping_add(cycle as u64));
+        let w = engine.prepare_weights(&b, &method, cycle as u64);
+        engine
+            .matmul_prepared(&a, &w, &method, cycle as u64)
+            .relative_error(&ideal)
+    });
+    let n = res.len() as f64;
+    let mean = res.iter().sum::<f64>() / n;
+    let var = res.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n;
+    McPoint {
+        label: format!("{bits}b/{block}blk/cv{cv}/{mode:?}"),
+        bits,
+        block,
+        cv,
+        mode,
+        re_mean: mean,
+        re_std: var.sqrt(),
+        re_min: res.iter().cloned().fold(f64::INFINITY, f64::min),
+        re_max: res.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// The full Fig-12-style sweep grid.
+pub fn sweep(
+    cfg: &McConfig,
+    bits: &[usize],
+    blocks: &[usize],
+    cvs: &[f64],
+    modes: &[DataMode],
+) -> Vec<McPoint> {
+    let mut rng = Pcg64::new(cfg.seed, 0x57EE9);
+    let mut out = Vec::new();
+    for &mode in modes {
+        for &b in bits {
+            for &blk in blocks {
+                for &cv in cvs {
+                    out.push(run_point_with_operands(cfg, b, blk, cv, mode, &mut rng));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> McConfig {
+        McConfig { size: 32, cycles: 8, ..McConfig::default() }
+    }
+
+    #[test]
+    fn spec_for_bits_patterns() {
+        assert_eq!(spec_for_bits(4).widths, vec![1, 1, 2]);
+        assert_eq!(spec_for_bits(8).widths, vec![1, 1, 2, 4]);
+        assert_eq!(spec_for_bits(12).widths, vec![1, 1, 2, 4, 4]);
+        assert_eq!(spec_for_bits(2).widths, vec![1, 1]);
+        for bits in 2..=24 {
+            assert_eq!(spec_for_bits(bits).total_bits(), bits);
+        }
+    }
+
+    #[test]
+    fn more_bits_lower_error() {
+        let cfg = small_cfg();
+        let p4 = run_point(&cfg, 4, 32, 0.02, DataMode::Quantize);
+        let p8 = run_point(&cfg, 8, 32, 0.02, DataMode::Quantize);
+        assert!(p8.re_mean < p4.re_mean, "8b {} vs 4b {}", p8.re_mean, p4.re_mean);
+    }
+
+    #[test]
+    fn more_variation_higher_error() {
+        let cfg = small_cfg();
+        let lo = run_point(&cfg, 8, 32, 0.01, DataMode::Quantize);
+        let hi = run_point(&cfg, 8, 32, 0.2, DataMode::Quantize);
+        assert!(hi.re_mean > lo.re_mean, "hi {} vs lo {}", hi.re_mean, lo.re_mean);
+    }
+
+    #[test]
+    fn quantize_beats_prealign() {
+        // Fig 12: at matched slice config the full-precision quantization
+        // coefficient beats the power-of-two shared exponent. Needs enough
+        // blocks for the per-block exponent rounding to average out.
+        let cfg = McConfig { size: 64, cycles: 10, seed: 99, ..McConfig::default() };
+        let q = run_point(&cfg, 6, 32, 0.01, DataMode::Quantize);
+        let p = run_point(&cfg, 6, 32, 0.01, DataMode::PreAlign);
+        assert!(q.re_mean < p.re_mean, "q {} vs p {}", q.re_mean, p.re_mean);
+    }
+
+    #[test]
+    fn sweep_grid_size() {
+        let cfg = McConfig { size: 16, cycles: 3, ..McConfig::default() };
+        let pts = sweep(&cfg, &[4, 8], &[16, 32], &[0.05], &[DataMode::Quantize, DataMode::PreAlign]);
+        assert_eq!(pts.len(), 8);
+        assert!(pts.iter().all(|p| p.re_mean.is_finite() && p.re_mean >= 0.0));
+        assert!(pts.iter().all(|p| p.re_min <= p.re_mean && p.re_mean <= p.re_max));
+    }
+}

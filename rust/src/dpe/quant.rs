@@ -1,0 +1,173 @@
+//! DAC / ADC converter models (paper Fig 4(b)).
+//!
+//! Both converters are modeled as uniform mid-tread quantizers over a known
+//! full-scale range. In the digit-domain DPE the DAC reproduces input slice
+//! digits exactly whenever the slice width fits its resolution (`rdac` of
+//! 256 covers any ≤8-bit slice), while the ADC quantizes each partial
+//! dot-product to `radc` levels over the block's worst-case output range —
+//! the dominant peripheral-circuit error source.
+
+/// Uniform quantizer: `levels` output codes over `[0, full_scale]`.
+#[derive(Debug, Clone, Copy)]
+pub struct UniformQuantizer {
+    pub levels: usize,
+    pub full_scale: f64,
+}
+
+impl UniformQuantizer {
+    pub fn new(levels: usize, full_scale: f64) -> Self {
+        assert!(levels >= 2, "quantizer needs ≥2 levels");
+        assert!(full_scale > 0.0, "full scale must be positive");
+        UniformQuantizer { levels, full_scale }
+    }
+
+    /// Quantization step.
+    #[inline]
+    pub fn step(&self) -> f64 {
+        self.full_scale / (self.levels as f64 - 1.0)
+    }
+
+    /// Quantize a value: clamp to range, round to nearest code, return the
+    /// reconstructed analog value.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        let step = self.step();
+        let code = (x / step).round().clamp(0.0, self.levels as f64 - 1.0);
+        code * step
+    }
+
+    /// Quantize in place over a slice.
+    pub fn quantize_slice(&self, xs: &mut [f64]) {
+        let step = self.step();
+        let max_code = self.levels as f64 - 1.0;
+        let inv = 1.0 / step;
+        for x in xs.iter_mut() {
+            *x = (*x * inv).round().clamp(0.0, max_code) * step;
+        }
+    }
+}
+
+/// DAC model: `rdac` voltage levels (Table 2: 256). A slice digit `d` of
+/// width `w` is representable exactly iff `2^w ≤ rdac`.
+#[derive(Debug, Clone, Copy)]
+pub struct Dac {
+    pub rdac: usize,
+    /// Read voltage corresponding to full scale (V); affects only the
+    /// physical-units view, the digit-domain engine works normalized.
+    pub v_read: f64,
+}
+
+impl Dac {
+    pub fn new(rdac: usize) -> Self {
+        Dac { rdac, v_read: 0.2 }
+    }
+
+    /// Can a `width`-bit slice digit be converted exactly?
+    pub fn supports_width(&self, width: usize) -> bool {
+        (1usize << width) <= self.rdac
+    }
+
+    /// Convert digit to normalized drive level, quantized to rdac levels
+    /// over `[0, max_digit]`.
+    pub fn convert(&self, digit: f64, max_digit: u32) -> f64 {
+        if max_digit == 0 {
+            return 0.0;
+        }
+        UniformQuantizer::new(self.rdac, max_digit as f64).quantize(digit)
+    }
+}
+
+/// ADC model: `radc` codes (Table 2: 1024) over the per-readout worst-case
+/// range.
+#[derive(Debug, Clone, Copy)]
+pub struct Adc {
+    pub radc: usize,
+}
+
+impl Adc {
+    pub fn new(radc: usize) -> Self {
+        Adc { radc }
+    }
+
+    /// Quantizer for one partial readout with the given full scale.
+    pub fn for_full_scale(&self, full_scale: f64) -> UniformQuantizer {
+        UniformQuantizer::new(self.radc, full_scale.max(f64::MIN_POSITIVE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let q = UniformQuantizer::new(1024, 64.0);
+        for &x in &[0.0, 0.03, 1.0, 17.77, 63.9, 64.0] {
+            let once = q.quantize(x);
+            assert_eq!(q.quantize(once), once);
+        }
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_half_step() {
+        let q = UniformQuantizer::new(1024, 64.0);
+        let step = q.step();
+        let mut x = 0.0;
+        while x < 64.0 {
+            assert!((q.quantize(x) - x).abs() <= step / 2.0 + 1e-12);
+            x += 0.0173;
+        }
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        let q = UniformQuantizer::new(16, 15.0);
+        assert_eq!(q.quantize(-3.0), 0.0);
+        assert_eq!(q.quantize(99.0), 15.0);
+    }
+
+    #[test]
+    fn integers_exact_when_levels_cover() {
+        // step=1 when levels-1 == full_scale: integers survive exactly.
+        let q = UniformQuantizer::new(65, 64.0);
+        for d in 0..=64 {
+            assert_eq!(q.quantize(d as f64), d as f64);
+        }
+    }
+
+    #[test]
+    fn dac_supports_paper_slices() {
+        let dac = Dac::new(256);
+        for w in 1..=8 {
+            assert!(dac.supports_width(w));
+        }
+        assert!(!dac.supports_width(9));
+    }
+
+    #[test]
+    fn dac_exact_for_small_digits() {
+        let dac = Dac::new(256);
+        for d in 0..=15u32 {
+            assert_eq!(dac.convert(d as f64, 15), d as f64);
+        }
+    }
+
+    #[test]
+    fn adc_step_scales_with_full_scale() {
+        let adc = Adc::new(1024);
+        let q1 = adc.for_full_scale(64.0);
+        let q2 = adc.for_full_scale(640.0);
+        assert!((q2.step() / q1.step() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_slice_matches_scalar() {
+        let q = UniformQuantizer::new(1024, 10.0);
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 * 0.1).collect();
+        let mut ys = xs.clone();
+        q.quantize_slice(&mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(q.quantize(*x), *y);
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Dynamic bit-slicing (paper §2.2, Fig 1) and block quantization /
+//! pre-alignment (§3.3, Fig 5).
+//!
+//! A [`SliceSpec`] lists slice widths **from MSB to LSB**, e.g. the paper's
+//! INT8 method `(1, 1, 2, 4)`. For signed data the first slice must be the
+//! 1-bit sign slice; its contribution carries weight `−2^(B−1)` in the
+//! digital shift-and-add recombination, which keeps every stored digit
+//! non-negative (required: conductances are non-negative) while staying
+//! linear in the digits — exactly two's complement.
+//!
+//! Continuous data enters the integer domain one of two ways (Fig 5):
+//! - **Quantization** (INT path): per-block scale `s = max|x| / (2^(B−1)−1)`,
+//!   stored as a full-precision coefficient in the digital periphery;
+//! - **Pre-alignment** (FP path): the block shares one exponent
+//!   `e = ⌈log₂ max|x|⌉`, so the scale is constrained to a power of two
+//!   (`s = 2^e / (2^(B−1))`) — cheaper hardware, up to one bit worse, which
+//!   is precisely the quantization-vs-pre-alignment gap of Fig 12.
+
+use crate::tensor::Matrix;
+
+/// How continuous values map to integers before slicing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataMode {
+    /// Full-precision per-block scale coefficient (INT path).
+    Quantize,
+    /// Power-of-two shared exponent per block (FP path).
+    PreAlign,
+}
+
+/// Slice widths, MSB first. `signed` data requires `widths[0] == 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SliceSpec {
+    pub widths: Vec<usize>,
+    pub signed: bool,
+}
+
+impl SliceSpec {
+    pub fn new(widths: &[usize], signed: bool) -> Self {
+        assert!(!widths.is_empty(), "need at least one slice");
+        assert!(widths.iter().all(|&w| (1..=8).contains(&w)), "slice widths must be 1..=8");
+        if signed {
+            assert_eq!(widths[0], 1, "signed data needs a 1-bit sign slice first");
+        }
+        SliceSpec { widths: widths.to_vec(), signed }
+    }
+
+    /// Total bits across slices.
+    pub fn total_bits(&self) -> usize {
+        self.widths.iter().sum()
+    }
+
+    pub fn num_slices(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Bit position (shift) of the LSB of each slice, MSB-first order.
+    pub fn shifts(&self) -> Vec<u32> {
+        let total: usize = self.total_bits();
+        let mut shifts = Vec::with_capacity(self.widths.len());
+        let mut used = 0usize;
+        for &w in &self.widths {
+            used += w;
+            shifts.push((total - used) as u32);
+        }
+        shifts
+    }
+
+    /// Signed weight of slice `k` in the recombination:
+    /// sign slice → `−2^shift`, others → `+2^shift`.
+    pub fn weight(&self, k: usize) -> f64 {
+        let shift = self.shifts()[k];
+        let w = (shift as f64).exp2();
+        if self.signed && k == 0 {
+            -w
+        } else {
+            w
+        }
+    }
+
+    /// Largest representable integer.
+    pub fn max_int(&self) -> i64 {
+        if self.signed {
+            (1i64 << (self.total_bits() - 1)) - 1
+        } else {
+            (1i64 << self.total_bits()) - 1
+        }
+    }
+
+    /// Smallest representable integer.
+    pub fn min_int(&self) -> i64 {
+        if self.signed {
+            -(1i64 << (self.total_bits() - 1))
+        } else {
+            0
+        }
+    }
+
+    // ---- paper's named slice methods ----
+
+    /// INT4 (1,1,2) — Fig 16.
+    pub fn int4() -> Self {
+        SliceSpec::new(&[1, 1, 2], true)
+    }
+    /// INT8 (1,1,2,4) — Fig 15/16.
+    pub fn int8() -> Self {
+        SliceSpec::new(&[1, 1, 2, 4], true)
+    }
+    /// FP16-effective (1,1,2,4,4) — Fig 16 (sign + 11 mantissa bits).
+    pub fn fp16() -> Self {
+        SliceSpec::new(&[1, 1, 2, 4, 4], true)
+    }
+    /// BF16-effective (1,1,2,4) — 8 mantissa bits incl. sign.
+    pub fn bf16() -> Self {
+        SliceSpec::new(&[1, 1, 2, 4], true)
+    }
+    /// FP32-effective (1,1,2,4,4,4,4,4) — 24 mantissa bits incl. sign.
+    pub fn fp32() -> Self {
+        SliceSpec::new(&[1, 1, 2, 4, 4, 4, 4, 4], true)
+    }
+    /// FlexPoint16+5 (1,1,2,4,4,4) — 16-bit mantissa, 5-bit shared exponent.
+    pub fn flex16() -> Self {
+        SliceSpec::new(&[1, 1, 2, 4, 4, 4], true)
+    }
+    /// Uniform 1-bit slices (Fig 17's INTn = (1,)*n).
+    pub fn ones(n: usize) -> Self {
+        SliceSpec::new(&vec![1; n], true)
+    }
+    /// 26-bit solver method with ≤2-bit slices: keeps every slice-pair
+    /// readout within the ADC's integer-exact range (used with
+    /// `AdcPolicy::Calibrated` for the Fig 13 equation solver).
+    pub fn solver26() -> Self {
+        SliceSpec::new(&[1, 1, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2], true)
+    }
+}
+
+/// A quantized block: integer values (stored as f64) plus the scale that
+/// recovers the original data (`x ≈ q · scale`).
+#[derive(Debug, Clone)]
+pub struct QuantizedBlock {
+    pub q: Matrix,
+    pub scale: f64,
+}
+
+/// Quantize a block to the spec's integer range using `mode`.
+pub fn quantize_block(x: &Matrix, spec: &SliceSpec, mode: DataMode) -> QuantizedBlock {
+    let max_abs = x.abs_max();
+    if max_abs == 0.0 {
+        return QuantizedBlock { q: Matrix::zeros(x.rows, x.cols), scale: 0.0 };
+    }
+    let max_int = spec.max_int() as f64;
+    let scale = match mode {
+        DataMode::Quantize => max_abs / max_int,
+        DataMode::PreAlign => {
+            // Shared exponent: smallest power of two ≥ max_abs, then the
+            // mantissa uses total_bits−1 magnitude bits.
+            let e = max_abs.log2().ceil();
+            e.exp2() / (max_int + 1.0)
+        }
+    };
+    let min_int = spec.min_int() as f64;
+    let q = x.map(|v| (v / scale).round().clamp(min_int, max_int));
+    QuantizedBlock { q, scale }
+}
+
+/// Slice an integer matrix (two's complement) into per-slice digit
+/// matrices, MSB first. Every digit is in `[0, 2^width_k)`.
+pub fn slice_digits(q: &Matrix, spec: &SliceSpec) -> Vec<Matrix> {
+    let total = spec.total_bits() as u32;
+    let modulus = 1i64 << total;
+    let shifts = spec.shifts();
+    let mut out: Vec<Matrix> =
+        spec.widths.iter().map(|_| Matrix::zeros(q.rows, q.cols)).collect();
+    for (idx, &v) in q.data.iter().enumerate() {
+        let vi = v as i64;
+        debug_assert!(
+            vi >= spec.min_int() && vi <= spec.max_int(),
+            "value {vi} outside spec range"
+        );
+        // Two's complement representation.
+        let u = vi.rem_euclid(modulus) as u64;
+        for (k, &w) in spec.widths.iter().enumerate() {
+            let mask = (1u64 << w) - 1;
+            let digit = (u >> shifts[k]) & mask;
+            out[k].data[idx] = digit as f64;
+        }
+    }
+    out
+}
+
+/// Recombine digit matrices back to the integer matrix (shift-and-add with
+/// the sign-slice weight). Inverse of [`slice_digits`].
+pub fn reconstruct(digits: &[Matrix], spec: &SliceSpec) -> Matrix {
+    assert_eq!(digits.len(), spec.num_slices());
+    let mut out = Matrix::zeros(digits[0].rows, digits[0].cols);
+    for (k, d) in digits.iter().enumerate() {
+        let w = spec.weight(k);
+        for (o, &v) in out.data.iter_mut().zip(&d.data) {
+            *o += w * v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn shifts_and_weights_int8() {
+        let s = SliceSpec::int8();
+        assert_eq!(s.total_bits(), 8);
+        assert_eq!(s.shifts(), vec![7, 6, 4, 0]);
+        assert_eq!(s.weight(0), -128.0);
+        assert_eq!(s.weight(1), 64.0);
+        assert_eq!(s.weight(2), 16.0);
+        assert_eq!(s.weight(3), 1.0);
+        assert_eq!(s.max_int(), 127);
+        assert_eq!(s.min_int(), -128);
+    }
+
+    #[test]
+    fn slice_reconstruct_exhaustive_int8() {
+        let s = SliceSpec::int8();
+        let vals: Vec<f64> = (-128..=127).map(|v| v as f64).collect();
+        let q = Matrix::from_vec(16, 16, vals.clone());
+        let digits = slice_digits(&q, &s);
+        // All digits within width range.
+        for (k, d) in digits.iter().enumerate() {
+            let max = (1u64 << s.widths[k]) as f64;
+            assert!(d.data.iter().all(|&x| x >= 0.0 && x < max));
+        }
+        let r = reconstruct(&digits, &s);
+        assert_eq!(r.data, vals);
+    }
+
+    #[test]
+    fn slice_reconstruct_roundtrip_property() {
+        prop_check("slice/reconstruct roundtrip", 300, |g| {
+            // Random spec: signed, 1-bit first slice, 1..5 more slices.
+            let n_extra = g.usize_in(1..=4);
+            let mut widths = vec![1usize];
+            for _ in 0..n_extra {
+                widths.push(g.usize_in(1..=4));
+            }
+            let spec = SliceSpec::new(&widths, true);
+            let rows = g.usize_in(1..=8);
+            let cols = g.usize_in(1..=8);
+            let vals: Vec<f64> = (0..rows * cols)
+                .map(|_| g.i64_in(spec.min_int()..=spec.max_int()) as f64)
+                .collect();
+            let q = Matrix::from_vec(rows, cols, vals.clone());
+            let r = reconstruct(&slice_digits(&q, &spec), &spec);
+            if r.data != vals {
+                return Err(format!("roundtrip failed for widths {widths:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unsigned_slicing_roundtrip() {
+        let spec = SliceSpec::new(&[2, 2], false);
+        let vals: Vec<f64> = (0..16).map(|v| v as f64).collect();
+        let q = Matrix::from_vec(4, 4, vals.clone());
+        let r = reconstruct(&slice_digits(&q, &spec), &spec);
+        assert_eq!(r.data, vals);
+    }
+
+    #[test]
+    fn quantize_block_error_bound() {
+        let mut rng = Pcg64::seeded(51);
+        let spec = SliceSpec::int8();
+        let x = Matrix::random_uniform(32, 32, -3.0, 3.0, &mut rng);
+        for mode in [DataMode::Quantize, DataMode::PreAlign] {
+            let qb = quantize_block(&x, &spec, mode);
+            let recon = qb.q.scale(qb.scale);
+            let max_err = recon.sub(&x).abs_max();
+            // Error ≤ scale/2 per element.
+            assert!(max_err <= qb.scale / 2.0 + 1e-12, "{mode:?}: {max_err}");
+        }
+    }
+
+    #[test]
+    fn quantize_beats_prealign_scale() {
+        // Quantization uses the full integer range; pre-alignment rounds the
+        // scale up to a power of two, so its step can be up to 2× coarser.
+        let mut rng = Pcg64::seeded(52);
+        let x = Matrix::random_uniform(16, 16, -1.3, 1.3, &mut rng);
+        let spec = SliceSpec::int8();
+        let q = quantize_block(&x, &spec, DataMode::Quantize);
+        let p = quantize_block(&x, &spec, DataMode::PreAlign);
+        assert!(q.scale <= p.scale + 1e-18);
+        assert!(p.scale / q.scale <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn prealign_scale_is_power_of_two_multiple() {
+        let mut rng = Pcg64::seeded(53);
+        let spec = SliceSpec::int8();
+        let x = Matrix::random_uniform(8, 8, -5.0, 5.0, &mut rng);
+        let p = quantize_block(&x, &spec, DataMode::PreAlign);
+        // scale * 2^(B-1) must be a power of two.
+        let v = p.scale * (spec.max_int() as f64 + 1.0);
+        let l = v.log2();
+        assert!((l - l.round()).abs() < 1e-9, "scale={}", p.scale);
+    }
+
+    #[test]
+    fn zero_block_quantizes_to_zero() {
+        let spec = SliceSpec::int8();
+        let x = Matrix::zeros(4, 4);
+        let qb = quantize_block(&x, &spec, DataMode::Quantize);
+        assert_eq!(qb.scale, 0.0);
+        assert!(qb.q.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantized_dot_product_accuracy_property() {
+        // End-to-end digit-domain check: quantize → slice → exact digit
+        // matmul with recombination == matmul of quantized values.
+        prop_check("sliced matmul equals quantized matmul", 50, |g| {
+            let spec = SliceSpec::int8();
+            let m = g.usize_in(1..=6);
+            let k = g.usize_in(1..=6);
+            let n = g.usize_in(1..=6);
+            let mut mk_int = |rows: usize, cols: usize, g: &mut crate::util::prop::Gen| {
+                let vals: Vec<f64> = (0..rows * cols)
+                    .map(|_| g.i64_in(-128..=127) as f64)
+                    .collect();
+                Matrix::from_vec(rows, cols, vals)
+            };
+            let a = mk_int(m, k, g);
+            let b = mk_int(k, n, g);
+            let a_sl = slice_digits(&a, &spec);
+            let b_sl = slice_digits(&b, &spec);
+            let mut acc = Matrix::zeros(m, n);
+            for (ka, da) in a_sl.iter().enumerate() {
+                for (kb, db) in b_sl.iter().enumerate() {
+                    let part = da.matmul(db);
+                    let w = spec.weight(ka) * spec.weight(kb);
+                    acc = acc.add(&part.scale(w));
+                }
+            }
+            let ideal = a.matmul(&b);
+            if acc.relative_error(&ideal) > 1e-12 {
+                return Err(format!("re={}", acc.relative_error(&ideal)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "sign slice")]
+    fn signed_spec_requires_sign_slice() {
+        SliceSpec::new(&[2, 2], true);
+    }
+
+    #[test]
+    fn named_formats_bits() {
+        assert_eq!(SliceSpec::int4().total_bits(), 4);
+        assert_eq!(SliceSpec::int8().total_bits(), 8);
+        assert_eq!(SliceSpec::fp16().total_bits(), 12);
+        assert_eq!(SliceSpec::bf16().total_bits(), 8);
+        assert_eq!(SliceSpec::fp32().total_bits(), 24);
+        assert_eq!(SliceSpec::flex16().total_bits(), 16);
+        assert_eq!(SliceSpec::ones(5).total_bits(), 5);
+    }
+}

@@ -1,0 +1,30 @@
+//! # MemIntelli-RS
+//!
+//! A Rust + JAX + Pallas reproduction of **MemIntelli: A Generic End-to-End
+//! Simulation Framework for Memristive Intelligent Computing** (Zhou et al.,
+//! HUST, 2024/2025).
+//!
+//! MemIntelli simulates intelligent-computing workloads running on
+//! memristive crossbar arrays: a lognormal device-variation model, a
+//! crossbar circuit model with wire resistance / IR-drop, DAC–ADC
+//! quantization, and a **variable-precision bit-slicing dot-product engine
+//! (DPE)** supporting INT and shared-exponent FP data, composed into
+//! hardware-aware neural-network layers and application substrates
+//! (equation solving, wavelet transforms, clustering).
+//!
+//! Architecture (see `DESIGN.md`):
+//! - **L3 (this crate)** — the full simulator + coordinator, pure Rust;
+//! - **L2/L1 (`python/compile/`)** — JAX graph + Pallas kernel, AOT-lowered
+//!   once to HLO text (`artifacts/`), executed from Rust via PJRT
+//!   ([`runtime`]); Python is never on the request path.
+
+pub mod apps;
+pub mod circuit;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod dpe;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,148 @@
+//! memintelli — CLI for the MemIntelli-RS simulation framework.
+//!
+//! ```text
+//! memintelli list                         list experiments (paper figures/tables)
+//! memintelli run <id> [--full] [--config memintelli.toml]
+//! memintelli run all [--full]
+//! memintelli info                         environment + artifact status
+//! memintelli matmul --size N --method int8   one-off DPE matmul RE check
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline registry has no clap.)
+
+use memintelli::coordinator::{run_experiment, Scale, SimConfig, EXPERIMENTS};
+use memintelli::dpe::{DotProductEngine, SliceMethod};
+use memintelli::tensor::Matrix;
+use memintelli::util::rng::Pcg64;
+use std::path::Path;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: memintelli <command>\n\
+         \n\
+         commands:\n\
+         \x20 list                         list all experiments\n\
+         \x20 run <id>|all [--full] [--config FILE]   run experiment(s)\n\
+         \x20 info                         show environment + artifacts\n\
+         \x20 matmul [--size N] [--method M] [--config FILE]\n\
+         \x20                              one-off DPE matmul accuracy check"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // Boolean flag when no value follows.
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<SimConfig> {
+    match args.flags.get("config") {
+        Some(path) => SimConfig::load(Path::new(path)),
+        None => {
+            let default = Path::new("memintelli.toml");
+            if default.exists() {
+                SimConfig::load(default)
+            } else {
+                Ok(SimConfig::default())
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].as_str();
+    let args = parse_args(&argv[1..]);
+    match cmd {
+        "list" => {
+            println!("experiments (paper artifact → id):\n");
+            for (id, desc) in EXPERIMENTS {
+                println!("  {id:<20} {desc}");
+            }
+        }
+        "run" => {
+            let Some(id) = args.positional.first() else { usage() };
+            let cfg = load_config(&args)?;
+            let scale = if args.flags.contains_key("full") { Scale::Full } else { Scale::Quick };
+            if id == "all" {
+                for (eid, _) in EXPERIMENTS {
+                    println!("\n===== {eid} =====");
+                    run_experiment(eid, &cfg, scale)?;
+                }
+            } else {
+                run_experiment(id, &cfg, scale)?;
+            }
+        }
+        "info" => {
+            let cfg = load_config(&args)?;
+            println!("MemIntelli-RS — memristive IMC simulation framework");
+            println!("engine defaults : {:?}", cfg.dpe);
+            println!("seed            : {}", cfg.seed);
+            println!("workers         : {}", memintelli::util::parallel::worker_count());
+            match memintelli::runtime::Runtime::cpu(&cfg.artifacts_dir) {
+                Ok(rt) => {
+                    println!("PJRT platform   : {}", rt.platform());
+                    let names = [
+                        "dpe_mm_128x128x128_int8",
+                        "dpe_mm_128x128x128_int8_ideal",
+                        "dpe_mm_128x128x128_fp16",
+                        "dpe_mm_256x256x256_int8",
+                        "lenet_fwd_b32_int8",
+                        "lenet_fwd_b128_fp16",
+                    ];
+                    for n in names {
+                        println!(
+                            "artifact {n:<32} {}",
+                            if rt.has_artifact(n) { "present" } else { "MISSING (run `make artifacts`)" }
+                        );
+                    }
+                }
+                Err(e) => println!("PJRT            : unavailable ({e})"),
+            }
+        }
+        "matmul" => {
+            let cfg = load_config(&args)?;
+            let size: usize = args.flags.get("size").map(|s| s.parse()).transpose()?.unwrap_or(128);
+            let method_name = args.flags.get("method").cloned().unwrap_or_else(|| cfg.method.clone());
+            let method = SliceMethod::parse(&method_name)?;
+            let mut rng = Pcg64::seeded(cfg.seed);
+            let a = Matrix::random_normal(size, size, 0.0, 1.0, &mut rng);
+            let b = Matrix::random_normal(size, size, 0.0, 1.0, &mut rng);
+            let engine = DotProductEngine::new(cfg.dpe.clone(), cfg.seed);
+            let t0 = std::time::Instant::now();
+            let re = engine.relative_error(&a, &b, &method, &method);
+            println!(
+                "{size}x{size} {method_name}: relative error {re:.4e} ({} ms)",
+                t0.elapsed().as_millis()
+            );
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,917 @@
+//! Hardware and digital layers (paper §3.4, Fig 8).
+//!
+//! `LinearMem` / `Conv2dMem` run their forward dot products on the bound
+//! DPE ([`HwSpec`]) when one is attached, or in full precision otherwise;
+//! backward is always full-precision straight-through. Pooling, ReLU,
+//! BatchNorm and Flatten are digital layers.
+
+use super::{HwSpec, Layer, Param};
+use crate::dpe::PreparedWeights;
+use crate::tensor::{col2im_accumulate, im2col, Conv2dDims, Matrix, Tensor};
+use crate::util::parallel::par_map;
+use crate::util::rng::Pcg64;
+
+/// Fully-connected layer: `y = x·W + b`, `W (in × out)`.
+pub struct LinearMem {
+    pub in_features: usize,
+    pub out_features: usize,
+    pub w: Param,
+    pub b: Param,
+    pub hw: Option<HwSpec>,
+    prepared: Option<PreparedWeights>,
+    /// Weight-programming generation (decorrelates programming noise).
+    generation: u64,
+    cache_x: Option<Matrix>,
+}
+
+impl LinearMem {
+    pub fn new(inf: usize, outf: usize, hw: Option<HwSpec>, rng: &mut Pcg64) -> Self {
+        // He-uniform init.
+        let bound = (6.0 / inf as f64).sqrt();
+        let w = (0..inf * outf).map(|_| rng.uniform_range(-bound, bound)).collect();
+        let mut l = LinearMem {
+            in_features: inf,
+            out_features: outf,
+            w: Param::new(w),
+            b: Param::new(vec![0.0; outf]),
+            hw,
+            prepared: None,
+            generation: 0,
+            cache_x: None,
+        };
+        l.update_weight();
+        l
+    }
+
+    fn weight_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.in_features, self.out_features, self.w.value.clone())
+    }
+}
+
+impl Layer for LinearMem {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        assert_eq!(x.shape.len(), 2, "LinearMem expects (B, in)");
+        assert_eq!(x.shape[1], self.in_features);
+        let xm = x.to_matrix();
+        let mut y = match (&self.hw, &self.prepared) {
+            (Some(hw), Some(prep)) => {
+                hw.engine.matmul_prepared(&xm, prep, &hw.input_method, self.generation)
+            }
+            _ => xm.matmul(&self.weight_matrix()),
+        };
+        for i in 0..y.rows {
+            for (v, b) in y.row_mut(i).iter_mut().zip(&self.b.value) {
+                *v += b;
+            }
+        }
+        if train {
+            self.cache_x = Some(xm);
+        }
+        Tensor::from_matrix(&y)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let g = grad_out.to_matrix();
+        let x = self.cache_x.take().expect("forward(train=true) before backward");
+        // Full-precision gradients (straight-through).
+        let grad_w = x.transpose().matmul(&g);
+        for (gw, &v) in self.w.grad.iter_mut().zip(&grad_w.data) {
+            *gw += v;
+        }
+        for j in 0..self.out_features {
+            let mut acc = 0.0;
+            for i in 0..g.rows {
+                acc += g.at(i, j);
+            }
+            self.b.grad[j] += acc;
+        }
+        let grad_x = g.matmul(&self.weight_matrix().transpose());
+        Tensor::from_matrix(&grad_x)
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.w);
+        f(&mut self.b);
+    }
+
+    fn update_weight(&mut self) {
+        if let Some(hw) = &self.hw {
+            self.generation += 1;
+            self.prepared = Some(hw.engine.prepare_weights(
+                &self.weight_matrix(),
+                &hw.weight_method,
+                self.generation,
+            ));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "LinearMem"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape[0], self.out_features]
+    }
+}
+
+/// 2-D convolution via im2col (paper Fig 8(c)). Weights `(out_c, C·kh·kw)`.
+pub struct Conv2dMem {
+    pub dims_chw: (usize, usize, usize), // expected input C,H,W
+    pub out_c: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub w: Param,
+    pub b: Param,
+    pub hw: Option<HwSpec>,
+    /// Prepared transposed weights `(patch, out_c)` for the DPE.
+    prepared: Option<PreparedWeights>,
+    generation: u64,
+    cache: Option<(Vec<Matrix>, Conv2dDims)>, // per-sample im2col columns
+}
+
+impl Conv2dMem {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        hw: Option<HwSpec>,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let patch = in_c * kernel * kernel;
+        let bound = (6.0 / patch as f64).sqrt();
+        let w = (0..out_c * patch).map(|_| rng.uniform_range(-bound, bound)).collect();
+        let mut l = Conv2dMem {
+            dims_chw: (in_c, in_h, in_w),
+            out_c,
+            kernel,
+            stride,
+            pad,
+            w: Param::new(w),
+            b: Param::new(vec![0.0; out_c]),
+            hw,
+            prepared: None,
+            generation: 0,
+            cache: None,
+        };
+        l.update_weight();
+        l
+    }
+
+    fn conv_dims(&self) -> Conv2dDims {
+        let (c, h, w) = self.dims_chw;
+        Conv2dDims { in_c: c, in_h: h, in_w: w, kh: self.kernel, kw: self.kernel, stride: self.stride, pad: self.pad }
+    }
+
+    fn patch_len(&self) -> usize {
+        let (c, _, _) = self.dims_chw;
+        c * self.kernel * self.kernel
+    }
+
+    /// Weight as `(patch, out_c)` — the layout mapped onto the arrays.
+    fn weight_t(&self) -> Matrix {
+        Matrix::from_vec(self.out_c, self.patch_len(), self.w.value.clone()).transpose()
+    }
+}
+
+impl Layer for Conv2dMem {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (c, h, w) = self.dims_chw;
+        assert_eq!(x.shape, vec![x.shape[0], c, h, w], "Conv2dMem input shape");
+        let bsz = x.shape[0];
+        let d = self.conv_dims();
+        let (oh, ow) = (d.out_h(), d.out_w());
+        let sample_len = c * h * w;
+        let cols: Vec<Matrix> = par_map(bsz, |i| {
+            im2col(&x.data[i * sample_len..(i + 1) * sample_len], d)
+        });
+        // Stack columns: (B·OH·OW, patch) then one DPE matmul.
+        let rows = bsz * oh * ow;
+        let patch = self.patch_len();
+        let mut stacked = Matrix::zeros(rows, patch);
+        for (i, colm) in cols.iter().enumerate() {
+            // colm is (patch, OH·OW): transpose into the stacked rows.
+            for p in 0..patch {
+                for q in 0..oh * ow {
+                    *stacked.at_mut(i * oh * ow + q, p) = colm.at(p, q);
+                }
+            }
+        }
+        let y = match (&self.hw, &self.prepared) {
+            (Some(hw), Some(prep)) => {
+                hw.engine.matmul_prepared(&stacked, prep, &hw.input_method, self.generation)
+            }
+            _ => stacked.matmul(&self.weight_t()),
+        };
+        // (B·OH·OW, out_c) → (B, out_c, OH, OW) + bias.
+        let mut out = Tensor::zeros(&[bsz, self.out_c, oh, ow]);
+        for i in 0..bsz {
+            for q in 0..oh * ow {
+                for oc in 0..self.out_c {
+                    out.data[((i * self.out_c + oc) * oh * ow) + q] =
+                        y.at(i * oh * ow + q, oc) + self.b.value[oc];
+                }
+            }
+        }
+        if train {
+            self.cache = Some((cols, d));
+        }
+        out
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let (cols, d) = self.cache.take().expect("forward(train=true) before backward");
+        let bsz = grad_out.shape[0];
+        let (oh, ow) = (d.out_h(), d.out_w());
+        let patch = self.patch_len();
+        let wt = Matrix::from_vec(self.out_c, patch, self.w.value.clone());
+        // Per-sample: grad_y (out_c, OH·OW); grad_w += grad_y · colsᵀ;
+        // grad_cols = wᵀ·grad_y; grad_x = col2im(grad_cols).
+        let results: Vec<(Matrix, Vec<f64>, Vec<f64>)> = par_map(bsz, |i| {
+            let gy = Matrix::from_vec(
+                self.out_c,
+                oh * ow,
+                grad_out.data[i * self.out_c * oh * ow..(i + 1) * self.out_c * oh * ow].to_vec(),
+            );
+            let gw = gy.matmul(&cols[i].transpose());
+            let gb: Vec<f64> = (0..self.out_c).map(|oc| gy.row(oc).iter().sum()).collect();
+            let gcols = wt.transpose().matmul(&gy);
+            let mut gx = vec![0.0; d.in_c * d.in_h * d.in_w];
+            col2im_accumulate(&gcols, d, &mut gx);
+            (gw, gb, gx)
+        });
+        let mut grad_x = Tensor::zeros(&[bsz, d.in_c, d.in_h, d.in_w]);
+        let sample_len = d.in_c * d.in_h * d.in_w;
+        for (i, (gw, gb, gx)) in results.into_iter().enumerate() {
+            for (acc, v) in self.w.grad.iter_mut().zip(&gw.data) {
+                *acc += v;
+            }
+            for (acc, v) in self.b.grad.iter_mut().zip(&gb) {
+                *acc += v;
+            }
+            grad_x.data[i * sample_len..(i + 1) * sample_len].copy_from_slice(&gx);
+        }
+        grad_x
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.w);
+        f(&mut self.b);
+    }
+
+    fn update_weight(&mut self) {
+        if let Some(hw) = &self.hw {
+            self.generation += 1;
+            self.prepared =
+                Some(hw.engine.prepare_weights(&self.weight_t(), &hw.weight_method, self.generation));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "Conv2dMem"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        let d = self.conv_dims();
+        vec![in_shape[0], self.out_c, d.out_h(), d.out_w()]
+    }
+}
+
+/// ReLU.
+pub struct Relu {
+    mask: Option<Vec<bool>>,
+}
+
+impl Relu {
+    pub fn new() -> Self {
+        Relu { mask: None }
+    }
+}
+
+impl Default for Relu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Relu {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let mut out = x.clone();
+        if train {
+            self.mask = Some(x.data.iter().map(|&v| v > 0.0).collect());
+        }
+        for v in out.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        out
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let mask = self.mask.take().expect("forward before backward");
+        let mut g = grad_out.clone();
+        for (v, keep) in g.data.iter_mut().zip(mask) {
+            if !keep {
+                *v = 0.0;
+            }
+        }
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        "Relu"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        in_shape.to_vec()
+    }
+}
+
+/// 2×2 average pooling (LeNet subsampling).
+pub struct AvgPool2 {
+    cache_shape: Option<Vec<usize>>,
+}
+
+impl AvgPool2 {
+    pub fn new() -> Self {
+        AvgPool2 { cache_shape: None }
+    }
+}
+
+impl Default for AvgPool2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for AvgPool2 {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        assert!(h % 2 == 0 && w % 2 == 0, "AvgPool2 needs even dims");
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = Tensor::zeros(&[b, c, oh, ow]);
+        for bc in 0..b * c {
+            let src = &x.data[bc * h * w..(bc + 1) * h * w];
+            let dst = &mut out.data[bc * oh * ow..(bc + 1) * oh * ow];
+            for i in 0..oh {
+                for j in 0..ow {
+                    dst[i * ow + j] = 0.25
+                        * (src[2 * i * w + 2 * j]
+                            + src[2 * i * w + 2 * j + 1]
+                            + src[(2 * i + 1) * w + 2 * j]
+                            + src[(2 * i + 1) * w + 2 * j + 1]);
+                }
+            }
+        }
+        if train {
+            self.cache_shape = Some(x.shape.clone());
+        }
+        out
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let shape = self.cache_shape.take().expect("forward before backward");
+        let (b, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut g = Tensor::zeros(&shape);
+        for bc in 0..b * c {
+            let src = &grad_out.data[bc * oh * ow..(bc + 1) * oh * ow];
+            let dst = &mut g.data[bc * h * w..(bc + 1) * h * w];
+            for i in 0..oh {
+                for j in 0..ow {
+                    let v = 0.25 * src[i * ow + j];
+                    dst[2 * i * w + 2 * j] = v;
+                    dst[2 * i * w + 2 * j + 1] = v;
+                    dst[(2 * i + 1) * w + 2 * j] = v;
+                    dst[(2 * i + 1) * w + 2 * j + 1] = v;
+                }
+            }
+        }
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        "AvgPool2"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape[0], in_shape[1], in_shape[2] / 2, in_shape[3] / 2]
+    }
+}
+
+/// 2×2 max pooling (VGG-style).
+pub struct MaxPool2 {
+    cache: Option<(Vec<usize>, Vec<usize>)>, // input shape, argmax indices
+}
+
+impl MaxPool2 {
+    pub fn new() -> Self {
+        MaxPool2 { cache: None }
+    }
+}
+
+impl Default for MaxPool2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for MaxPool2 {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        assert!(h % 2 == 0 && w % 2 == 0, "MaxPool2 needs even dims");
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = Tensor::zeros(&[b, c, oh, ow]);
+        let mut argmax = vec![0usize; b * c * oh * ow];
+        for bc in 0..b * c {
+            let src = &x.data[bc * h * w..(bc + 1) * h * w];
+            for i in 0..oh {
+                for j in 0..ow {
+                    let cand = [
+                        2 * i * w + 2 * j,
+                        2 * i * w + 2 * j + 1,
+                        (2 * i + 1) * w + 2 * j,
+                        (2 * i + 1) * w + 2 * j + 1,
+                    ];
+                    let (best, &val) = cand
+                        .iter()
+                        .map(|&k| (k, &src[k]))
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .unwrap();
+                    out.data[bc * oh * ow + i * ow + j] = val;
+                    argmax[bc * oh * ow + i * ow + j] = bc * h * w + best;
+                }
+            }
+        }
+        if train {
+            self.cache = Some((x.shape.clone(), argmax));
+        }
+        out
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let (shape, argmax) = self.cache.take().expect("forward before backward");
+        let mut g = Tensor::zeros(&shape);
+        for (o, &src_idx) in argmax.iter().enumerate() {
+            g.data[src_idx] += grad_out.data[o];
+        }
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        "MaxPool2"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape[0], in_shape[1], in_shape[2] / 2, in_shape[3] / 2]
+    }
+}
+
+/// Global average pooling over spatial dims: (B, C, H, W) → (B, C).
+pub struct GlobalAvgPool {
+    cache_shape: Option<Vec<usize>>,
+}
+
+impl GlobalAvgPool {
+    pub fn new() -> Self {
+        GlobalAvgPool { cache_shape: None }
+    }
+}
+
+impl Default for GlobalAvgPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for GlobalAvgPool {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let mut out = Tensor::zeros(&[b, c]);
+        for bc in 0..b * c {
+            out.data[bc] =
+                x.data[bc * h * w..(bc + 1) * h * w].iter().sum::<f64>() / (h * w) as f64;
+        }
+        if train {
+            self.cache_shape = Some(x.shape.clone());
+        }
+        out
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let shape = self.cache_shape.take().expect("forward before backward");
+        let (h, w) = (shape[2], shape[3]);
+        let mut g = Tensor::zeros(&shape);
+        let inv = 1.0 / (h * w) as f64;
+        for (bc, &go) in grad_out.data.iter().enumerate() {
+            for v in g.data[bc * h * w..(bc + 1) * h * w].iter_mut() {
+                *v = go * inv;
+            }
+        }
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        "GlobalAvgPool"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape[0], in_shape[1]]
+    }
+}
+
+/// Flatten (B, ...) → (B, prod).
+pub struct Flatten {
+    cache_shape: Option<Vec<usize>>,
+}
+
+impl Flatten {
+    pub fn new() -> Self {
+        Flatten { cache_shape: None }
+    }
+}
+
+impl Default for Flatten {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Flatten {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        if train {
+            self.cache_shape = Some(x.shape.clone());
+        }
+        let b = x.shape[0];
+        let d: usize = x.shape[1..].iter().product();
+        Tensor::from_vec(&[b, d], x.data.clone())
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let shape = self.cache_shape.take().expect("forward before backward");
+        Tensor::from_vec(&shape, grad_out.data.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "Flatten"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape[0], in_shape[1..].iter().product()]
+    }
+}
+
+/// Digital batch normalization over channels of (B, C, H, W) — IMC designs
+/// keep normalization in the digital domain; required for ResNet/VGG
+/// training stability.
+pub struct BatchNorm2d {
+    pub channels: usize,
+    pub gamma: Param,
+    pub beta: Param,
+    pub running_mean: Vec<f64>,
+    pub running_var: Vec<f64>,
+    pub momentum: f64,
+    pub eps: f64,
+    cache: Option<(Tensor, Vec<f64>, Vec<f64>)>, // x_hat, mean, var
+}
+
+impl BatchNorm2d {
+    pub fn new(channels: usize) -> Self {
+        BatchNorm2d {
+            channels,
+            gamma: Param::new(vec![1.0; channels]),
+            beta: Param::new(vec![0.0; channels]),
+            running_mean: vec![0.0; channels],
+            running_var: vec![1.0; channels],
+            momentum: 0.1,
+            eps: 1e-5,
+            cache: None,
+        }
+    }
+}
+
+impl Layer for BatchNorm2d {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        assert_eq!(c, self.channels);
+        let n = (b * h * w) as f64;
+        let mut out = x.clone();
+        let (mean, var) = if train {
+            let mut mean = vec![0.0; c];
+            let mut var = vec![0.0; c];
+            for bi in 0..b {
+                for ci in 0..c {
+                    let base = (bi * c + ci) * h * w;
+                    for &v in &x.data[base..base + h * w] {
+                        mean[ci] += v;
+                    }
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= n;
+            }
+            for bi in 0..b {
+                for ci in 0..c {
+                    let base = (bi * c + ci) * h * w;
+                    for &v in &x.data[base..base + h * w] {
+                        var[ci] += (v - mean[ci]) * (v - mean[ci]);
+                    }
+                }
+            }
+            for v in var.iter_mut() {
+                *v /= n;
+            }
+            for ci in 0..c {
+                self.running_mean[ci] =
+                    (1.0 - self.momentum) * self.running_mean[ci] + self.momentum * mean[ci];
+                self.running_var[ci] =
+                    (1.0 - self.momentum) * self.running_var[ci] + self.momentum * var[ci];
+            }
+            (mean, var)
+        } else {
+            (self.running_mean.clone(), self.running_var.clone())
+        };
+        let mut x_hat = Tensor::zeros(&x.shape);
+        for bi in 0..b {
+            for ci in 0..c {
+                let base = (bi * c + ci) * h * w;
+                let inv_std = 1.0 / (var[ci] + self.eps).sqrt();
+                for k in 0..h * w {
+                    let xh = (x.data[base + k] - mean[ci]) * inv_std;
+                    x_hat.data[base + k] = xh;
+                    out.data[base + k] = self.gamma.value[ci] * xh + self.beta.value[ci];
+                }
+            }
+        }
+        if train {
+            self.cache = Some((x_hat, mean, var));
+        }
+        out
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let (x_hat, _mean, var) = self.cache.take().expect("forward before backward");
+        let (b, c, h, w) = (
+            grad_out.shape[0],
+            grad_out.shape[1],
+            grad_out.shape[2],
+            grad_out.shape[3],
+        );
+        let n = (b * h * w) as f64;
+        let mut g = Tensor::zeros(&grad_out.shape);
+        for ci in 0..c {
+            let mut sum_gy = 0.0;
+            let mut sum_gy_xh = 0.0;
+            for bi in 0..b {
+                let base = (bi * c + ci) * h * w;
+                for k in 0..h * w {
+                    sum_gy += grad_out.data[base + k];
+                    sum_gy_xh += grad_out.data[base + k] * x_hat.data[base + k];
+                }
+            }
+            self.beta.grad[ci] += sum_gy;
+            self.gamma.grad[ci] += sum_gy_xh;
+            let inv_std = 1.0 / (var[ci] + self.eps).sqrt();
+            let gamma = self.gamma.value[ci];
+            for bi in 0..b {
+                let base = (bi * c + ci) * h * w;
+                for k in 0..h * w {
+                    let gy = grad_out.data[base + k];
+                    let xh = x_hat.data[base + k];
+                    g.data[base + k] =
+                        gamma * inv_std * (gy - sum_gy / n - xh * sum_gy_xh / n);
+                }
+            }
+        }
+        g
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.gamma);
+        f(&mut self.beta);
+    }
+
+    fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
+        f(&mut self.running_mean);
+        f(&mut self.running_var);
+    }
+
+    fn name(&self) -> &'static str {
+        "BatchNorm2d"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        in_shape.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+
+    fn num_grad(
+        layer: &mut dyn Layer,
+        x: &Tensor,
+        loss: &dyn Fn(&Tensor) -> f64,
+        idx: usize,
+        eps: f64,
+    ) -> f64 {
+        let mut xp = x.clone();
+        xp.data[idx] += eps;
+        let mut xm = x.clone();
+        xm.data[idx] -= eps;
+        (loss(&layer.forward(&xp, false)) - loss(&layer.forward(&xm, false))) / (2.0 * eps)
+    }
+
+    /// Quadratic test loss: L = Σ y²/2, dL/dy = y.
+    fn qloss(y: &Tensor) -> f64 {
+        y.data.iter().map(|v| v * v).sum::<f64>() / 2.0
+    }
+
+    #[test]
+    fn linear_gradcheck_digital() {
+        let mut rng = Pcg64::seeded(5);
+        let mut l = LinearMem::new(7, 4, None, &mut rng);
+        let x = Tensor::from_vec(&[3, 7], (0..21).map(|i| (i as f64) / 10.0 - 1.0).collect());
+        let y = l.forward(&x, true);
+        let gx = l.backward(&y); // dL/dy = y for quadratic loss
+        for idx in [0usize, 5, 13, 20] {
+            let want = num_grad(&mut l, &x, &qloss, idx, 1e-5);
+            assert!((gx.data[idx] - want).abs() < 1e-6, "idx {idx}: {} vs {want}", gx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn linear_weight_gradcheck() {
+        let mut rng = Pcg64::seeded(6);
+        let mut l = LinearMem::new(5, 3, None, &mut rng);
+        let x = Tensor::from_vec(&[2, 5], (0..10).map(|i| (i as f64) / 7.0 - 0.6).collect());
+        let y = l.forward(&x, true);
+        l.backward(&y);
+        for idx in [0usize, 7, 14] {
+            let orig = l.w.value[idx];
+            let eps = 1e-5;
+            l.w.value[idx] = orig + eps;
+            let lp = qloss(&l.forward(&x, false));
+            l.w.value[idx] = orig - eps;
+            let lm = qloss(&l.forward(&x, false));
+            l.w.value[idx] = orig;
+            let want = (lp - lm) / (2.0 * eps);
+            assert!((l.w.grad[idx] - want).abs() < 1e-5, "{} vs {want}", l.w.grad[idx]);
+        }
+    }
+
+    #[test]
+    fn conv_gradcheck_digital() {
+        let mut rng = Pcg64::seeded(7);
+        let mut l = Conv2dMem::new(2, 6, 6, 3, 3, 1, 1, None, &mut rng);
+        let x = Tensor::from_vec(
+            &[2, 2, 6, 6],
+            (0..144).map(|i| ((i * 31 % 17) as f64) / 8.0 - 1.0).collect(),
+        );
+        let y = l.forward(&x, true);
+        let gx = l.backward(&y);
+        for idx in [0usize, 50, 99, 143] {
+            let want = num_grad(&mut l, &x, &qloss, idx, 1e-5);
+            assert!((gx.data[idx] - want).abs() < 1e-5, "idx {idx}: {} vs {want}", gx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn conv_matches_linear_semantics_1x1() {
+        // A 1×1 conv over 1×1 spatial dims is a linear layer.
+        let mut rng = Pcg64::seeded(8);
+        let mut conv = Conv2dMem::new(4, 1, 1, 3, 1, 1, 0, None, &mut rng);
+        let mut lin = LinearMem::new(4, 3, None, &mut rng);
+        lin.w.value = Matrix::from_vec(3, 4, conv.w.value.clone()).transpose().data;
+        lin.b.value = conv.b.value.clone();
+        let x = Tensor::from_vec(&[2, 4, 1, 1], (0..8).map(|i| i as f64 * 0.3).collect());
+        let xf = Tensor::from_vec(&[2, 4], x.data.clone());
+        let yc = conv.forward(&x, false);
+        let yl = lin.forward(&xf, false);
+        for (a, b) in yc.data.iter().zip(&yl.data) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hw_linear_close_to_digital() {
+        let mut rng = Pcg64::seeded(9);
+        let hw = HwSpec::uniform(
+            DotProductEngine::ideal((64, 64)),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut l_hw = LinearMem::new(32, 16, Some(hw), &mut rng);
+        let mut l_dig = LinearMem::new(32, 16, None, &mut rng);
+        l_dig.w.value = l_hw.w.value.clone();
+        l_dig.b.value = l_hw.b.value.clone();
+        let x = Tensor::from_vec(&[4, 32], (0..128).map(|i| ((i % 13) as f64) / 6.5 - 1.0).collect());
+        let y_hw = l_hw.forward(&x, false).to_matrix();
+        let y_dig = l_dig.forward(&x, false).to_matrix();
+        let re = y_hw.relative_error(&y_dig);
+        assert!(re < 0.02, "re={re}");
+    }
+
+    #[test]
+    fn relu_and_pool_shapes() {
+        let x = Tensor::from_vec(&[1, 2, 4, 4], (0..32).map(|i| i as f64 - 16.0).collect());
+        let mut r = Relu::new();
+        let y = r.forward(&x, true);
+        assert!(y.data.iter().all(|&v| v >= 0.0));
+        let g = r.backward(&Tensor::from_vec(&x.shape, vec![1.0; 32]));
+        assert_eq!(g.data.iter().filter(|&&v| v > 0.0).count(), 15); // x > 0 count
+        let mut p = AvgPool2::new();
+        let y = p.forward(&x, true);
+        assert_eq!(y.shape, vec![1, 2, 2, 2]);
+        let g = p.backward(&Tensor::from_vec(&[1, 2, 2, 2], vec![4.0; 8]));
+        assert!(g.data.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn avgpool_gradcheck() {
+        let x = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i as f64 * 0.37 - 2.0).collect());
+        let mut p = AvgPool2::new();
+        let y = p.forward(&x, true);
+        let gx = p.backward(&y);
+        for idx in [0usize, 7, 15] {
+            let want = num_grad(&mut p, &x, &qloss, idx, 1e-5);
+            assert!((gx.data[idx] - want).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn batchnorm_normalizes_and_gradchecks() {
+        let mut bn = BatchNorm2d::new(2);
+        let x = Tensor::from_vec(
+            &[4, 2, 2, 2],
+            (0..32).map(|i| ((i * 7 % 23) as f64) - 11.0).collect(),
+        );
+        let y = bn.forward(&x, true);
+        // Per-channel mean ≈ 0, var ≈ 1 after affine with γ=1, β=0.
+        for c in 0..2 {
+            let mut vals = vec![];
+            for b in 0..4 {
+                let base = (b * 2 + c) * 4;
+                vals.extend_from_slice(&y.data[base..base + 4]);
+            }
+            let mean: f64 = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var: f64 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-6);
+        }
+        // Gradcheck input grads.
+        let y = bn.forward(&x, true);
+        let gx = bn.backward(&y);
+        for idx in [0usize, 9, 31] {
+            let mut xp = x.clone();
+            xp.data[idx] += 1e-5;
+            let mut xm = x.clone();
+            xm.data[idx] -= 1e-5;
+            let lp = qloss(&bn.forward(&xp, true));
+            let lm = qloss(&bn.forward(&xm, true));
+            bn.cache = None;
+            let want = (lp - lm) / 2e-5;
+            assert!((gx.data[idx] - want).abs() < 1e-4, "{} vs {want}", gx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn global_pool_and_flatten() {
+        let x = Tensor::from_vec(&[2, 3, 2, 2], (0..24).map(|i| i as f64).collect());
+        let mut g = GlobalAvgPool::new();
+        let y = g.forward(&x, true);
+        assert_eq!(y.shape, vec![2, 3]);
+        assert!((y.data[0] - 1.5).abs() < 1e-12);
+        let gx = g.backward(&Tensor::from_vec(&[2, 3], vec![4.0; 6]));
+        assert!(gx.data.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+        let mut f = Flatten::new();
+        let y = f.forward(&x, true);
+        assert_eq!(y.shape, vec![2, 12]);
+        let back = f.backward(&y);
+        assert_eq!(back.shape, x.shape);
+    }
+
+    #[test]
+    fn update_weight_reprograms_noise() {
+        let mut rng = Pcg64::seeded(10);
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(Default::default(), 3),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut l = LinearMem::new(16, 8, Some(hw), &mut rng);
+        let x = Tensor::from_vec(&[2, 16], vec![0.5; 32]);
+        let y1 = l.forward(&x, false);
+        let y1b = l.forward(&x, false);
+        assert_eq!(y1.data, y1b.data, "same programming → same output");
+        l.update_weight();
+        let y2 = l.forward(&x, false);
+        assert_ne!(y1.data, y2.data, "reprogramming must resample noise");
+    }
+}

@@ -1,0 +1,98 @@
+//! Losses: softmax cross-entropy (the framework is "totally compatible
+//! with the functions in PyTorch, such as the loss function" — here the
+//! digital loss head lives outside the hardware layers).
+
+use crate::tensor::Tensor;
+
+/// Softmax cross-entropy over logits `(B, C)` with integer labels.
+/// Returns `(mean_loss, grad_logits)`.
+pub fn softmax_cross_entropy(logits: &Tensor, labels: &[usize]) -> (f64, Tensor) {
+    assert_eq!(logits.shape.len(), 2);
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), b);
+    let mut grad = Tensor::zeros(&logits.shape);
+    let mut loss = 0.0;
+    for i in 0..b {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = row.iter().map(|&v| (v - max).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        let label = labels[i];
+        assert!(label < c, "label {label} out of range");
+        loss += -(exps[label] / sum).max(1e-300).ln();
+        for j in 0..c {
+            let p = exps[j] / sum;
+            grad.data[i * c + j] = (p - if j == label { 1.0 } else { 0.0 }) / b as f64;
+        }
+    }
+    (loss / b as f64, grad)
+}
+
+/// Classification accuracy of logits vs labels.
+pub fn accuracy(logits: &Tensor, labels: &[usize]) -> f64 {
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    let correct = (0..b)
+        .filter(|&i| {
+            let row = &logits.data[i * c..(i + 1) * c];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap();
+            argmax == labels[i]
+        })
+        .count();
+    correct as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_c() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let (loss, _) = softmax_cross_entropy(&logits, &[0, 3, 5, 9]);
+        assert!((loss - (10f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_sums_to_zero_per_row() {
+        let logits = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let (_, g) = softmax_cross_entropy(&logits, &[0, 2]);
+        for i in 0..2 {
+            let s: f64 = g.data[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gradcheck() {
+        let logits = Tensor::from_vec(&[2, 4], vec![0.3, -1.2, 0.7, 0.1, 2.0, 0.5, -0.5, 0.0]);
+        let labels = [2usize, 0];
+        let (_, g) = softmax_cross_entropy(&logits, &labels);
+        for idx in 0..8 {
+            let mut lp = logits.clone();
+            lp.data[idx] += 1e-6;
+            let mut lm = logits.clone();
+            lm.data[idx] -= 1e-6;
+            let (fp, _) = softmax_cross_entropy(&lp, &labels);
+            let (fm, _) = softmax_cross_entropy(&lm, &labels);
+            let want = (fp - fm) / 2e-6;
+            assert!((g.data[idx] - want).abs() < 1e-6, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn perfect_prediction_low_loss_full_accuracy() {
+        let mut logits = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            logits.data[i * 3 + i] = 20.0;
+        }
+        let (loss, _) = softmax_cross_entropy(&logits, &[0, 1, 2]);
+        assert!(loss < 1e-6);
+        assert_eq!(accuracy(&logits, &[0, 1, 2]), 1.0);
+        assert!((accuracy(&logits, &[1, 1, 2]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,210 @@
+//! Hardware neural-network layers with a computing graph (paper §3.4).
+//!
+//! The paper builds PyTorch layers whose **forward pass runs on the
+//! hardware DPE** (quantized, sliced, noisy) while the **backward pass
+//! applies errors to the full-precision weights and inputs** ("to ensure
+//! the model is trainable and not trapped in the local minimum") — the
+//! straight-through scheme. This module reproduces that design natively:
+//!
+//! - [`Layer`] — forward/backward/param plumbing (explicit backprop;
+//!   activations cached per layer exactly like autograd saved tensors);
+//! - [`layers`] — `LinearMem`, `Conv2dMem` (im2col), pooling, ReLU,
+//!   `BatchNorm2d` (digital), flatten;
+//! - [`HwSpec`] — per-layer hardware binding: each layer owns its engine
+//!   configuration and slice methods (ultra-flexible layer-wise
+//!   mixed-precision, Fig 9(a)), or `None` for a full-precision digital
+//!   layer (hybrid structures, Fig 9(b));
+//! - [`models`] — LeNet-5, MLP, CIFAR-scale ResNet-18 and VGG-16;
+//! - [`optim`] / [`loss`] / [`train`] — SGD/Adam, softmax cross-entropy,
+//!   and the training/eval loops.
+//!
+//! Weights are kept in full precision; `update_weight()` refreshes the
+//! sliced+programmed hardware copy (the paper's `update_weight()`), which
+//! layers reuse across forward passes until the next optimizer step.
+
+pub mod layers;
+pub mod loss;
+pub mod models;
+pub mod optim;
+pub mod train;
+
+use crate::dpe::{DotProductEngine, SliceMethod};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Per-layer hardware binding: the engine plus input/weight slice methods
+/// (the paper's `input_sli_med` / `weight_sli_med` constructor arguments).
+#[derive(Debug, Clone)]
+pub struct HwSpec {
+    pub engine: Arc<DotProductEngine>,
+    pub input_method: SliceMethod,
+    pub weight_method: SliceMethod,
+}
+
+impl HwSpec {
+    pub fn new(
+        engine: DotProductEngine,
+        input_method: SliceMethod,
+        weight_method: SliceMethod,
+    ) -> Self {
+        HwSpec { engine: Arc::new(engine), input_method, weight_method }
+    }
+
+    /// Same slice method on both operands (the common configuration in §5).
+    pub fn uniform(engine: DotProductEngine, method: SliceMethod) -> Self {
+        HwSpec { engine: Arc::new(engine), input_method: method.clone(), weight_method: method }
+    }
+}
+
+/// A parameter tensor with its gradient accumulator.
+pub struct Param {
+    pub value: Vec<f64>,
+    pub grad: Vec<f64>,
+}
+
+impl Param {
+    pub fn new(value: Vec<f64>) -> Self {
+        let grad = vec![0.0; value.len()];
+        Param { value, grad }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.grad.fill(0.0);
+    }
+}
+
+/// A differentiable layer. `forward` caches whatever `backward` needs;
+/// `backward` consumes the cache, accumulates parameter gradients, and
+/// returns the input gradient.
+pub trait Layer {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor;
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor;
+    /// Visit parameters (for the optimizer).
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        let _ = f;
+    }
+    /// Visit non-parameter state buffers (e.g. BatchNorm running stats),
+    /// needed when transferring a trained model between engine bindings.
+    fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
+        let _ = f;
+    }
+    /// Refresh the hardware (sliced/programmed) weight copy from the
+    /// full-precision weights — the paper's `update_weight()`.
+    fn update_weight(&mut self) {}
+    fn name(&self) -> &'static str;
+    /// Output shape for a given input shape (sanity checks / model summary).
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize>;
+}
+
+/// A sequential model.
+pub struct Sequential {
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Self {
+        Sequential { layers }
+    }
+
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let mut h = x.clone();
+        for l in self.layers.iter_mut() {
+            h = l.forward(&h, train);
+        }
+        h
+    }
+
+    pub fn backward(&mut self, grad: &Tensor) -> Tensor {
+        let mut g = grad.clone();
+        for l in self.layers.iter_mut().rev() {
+            g = l.backward(&g);
+        }
+        g
+    }
+
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        for l in self.layers.iter_mut() {
+            l.visit_params(f);
+        }
+    }
+
+    pub fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
+        for l in self.layers.iter_mut() {
+            l.visit_buffers(f);
+        }
+    }
+
+    /// Copy all parameters and buffers from another model with identical
+    /// topology (the paper's `load_state_dict` flow); call
+    /// `update_weight()` afterwards to program the arrays.
+    pub fn load_state_from(&mut self, src: &mut Sequential) {
+        let mut params: Vec<Vec<f64>> = Vec::new();
+        src.visit_params(&mut |p| params.push(p.value.clone()));
+        let mut i = 0;
+        self.visit_params(&mut |p| {
+            assert_eq!(p.value.len(), params[i].len(), "param shape mismatch");
+            p.value.copy_from_slice(&params[i]);
+            i += 1;
+        });
+        assert_eq!(i, params.len(), "param count mismatch");
+        let mut bufs: Vec<Vec<f64>> = Vec::new();
+        src.visit_buffers(&mut |b| bufs.push(b.clone()));
+        let mut j = 0;
+        self.visit_buffers(&mut |b| {
+            b.copy_from_slice(&bufs[j]);
+            j += 1;
+        });
+        assert_eq!(j, bufs.len(), "buffer count mismatch");
+    }
+
+    pub fn update_weight(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.update_weight();
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.visit_params(&mut |p| p.zero_grad());
+    }
+
+    pub fn num_params(&mut self) -> usize {
+        let mut n = 0;
+        self.visit_params(&mut |p| n += p.value.len());
+        n
+    }
+
+    /// Model summary line per layer.
+    pub fn summary(&self, mut in_shape: Vec<usize>) -> String {
+        let mut s = String::new();
+        for l in &self.layers {
+            let out = l.out_shape(&in_shape);
+            s.push_str(&format!("{:<12} {:?} -> {:?}\n", l.name(), in_shape, out));
+            in_shape = out;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::layers::{Flatten, LinearMem, Relu};
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn sequential_shapes_and_params() {
+        let mut rng = Pcg64::seeded(1);
+        let mut m = Sequential::new(vec![
+            Box::new(Flatten::new()),
+            Box::new(LinearMem::new(12, 5, None, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(LinearMem::new(5, 3, None, &mut rng)),
+        ]);
+        let x = Tensor::from_vec(&[2, 3, 4], vec![0.1; 24]);
+        let y = m.forward(&x, true);
+        assert_eq!(y.shape, vec![2, 3]);
+        assert_eq!(m.num_params(), 12 * 5 + 5 + 5 * 3 + 3);
+        let summary = m.summary(vec![2, 3, 4]);
+        assert!(summary.contains("LinearMem"));
+    }
+}

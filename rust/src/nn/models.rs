@@ -1,0 +1,350 @@
+//! Model zoo: LeNet-5 (Fig 16), MLP, and CIFAR-scale ResNet-18 / VGG-16
+//! (Fig 17), each constructible fully digital, fully hardware, or mixed
+//! (per-layer `HwSpec`s — Fig 9).
+//!
+//! The CIFAR models keep the papers' topologies (18-layer residual net with
+//! [2,2,2,2] stages; VGG-16's 13 conv + 3 fc) but take a width parameter —
+//! the offline testbed substitutes narrower nets trained on synthetic data
+//! (see DESIGN.md §Substitutions); `width = 64` recovers the standard
+//! configuration.
+
+use super::layers::{
+    AvgPool2, BatchNorm2d, Conv2dMem, Flatten, GlobalAvgPool, LinearMem, MaxPool2, Relu,
+};
+use super::{HwSpec, Layer, Param, Sequential};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Basic residual block (two 3×3 convs + identity/projection skip).
+pub struct ResidualBlock {
+    conv1: Conv2dMem,
+    bn1: BatchNorm2d,
+    relu1: Relu,
+    conv2: Conv2dMem,
+    bn2: BatchNorm2d,
+    proj: Option<(Conv2dMem, BatchNorm2d)>,
+    relu_out: Relu,
+    cache_x: Option<Tensor>,
+}
+
+impl ResidualBlock {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        out_c: usize,
+        stride: usize,
+        hw: Option<HwSpec>,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let (oh, ow) = ((in_h - 1) / stride + 1, (in_w - 1) / stride + 1);
+        let conv1 = Conv2dMem::new(in_c, in_h, in_w, out_c, 3, stride, 1, hw.clone(), rng);
+        let conv2 = Conv2dMem::new(out_c, oh, ow, out_c, 3, 1, 1, hw.clone(), rng);
+        let proj = if stride != 1 || in_c != out_c {
+            Some((
+                Conv2dMem::new(in_c, in_h, in_w, out_c, 1, stride, 0, hw, rng),
+                BatchNorm2d::new(out_c),
+            ))
+        } else {
+            None
+        };
+        ResidualBlock {
+            conv1,
+            bn1: BatchNorm2d::new(out_c),
+            relu1: Relu::new(),
+            conv2,
+            bn2: BatchNorm2d::new(out_c),
+            proj,
+            relu_out: Relu::new(),
+            cache_x: None,
+        }
+    }
+}
+
+impl Layer for ResidualBlock {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let mut h = self.conv1.forward(x, train);
+        h = self.bn1.forward(&h, train);
+        h = self.relu1.forward(&h, train);
+        h = self.conv2.forward(&h, train);
+        h = self.bn2.forward(&h, train);
+        let skip = match &mut self.proj {
+            Some((conv, bn)) => {
+                let s = conv.forward(x, train);
+                bn.forward(&s, train)
+            }
+            None => x.clone(),
+        };
+        let mut sum = h;
+        for (a, b) in sum.data.iter_mut().zip(&skip.data) {
+            *a += b;
+        }
+        if train {
+            self.cache_x = Some(x.clone());
+        }
+        self.relu_out.forward(&sum, train)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let _ = self.cache_x.take();
+        let g_sum = self.relu_out.backward(grad_out);
+        // Main path.
+        let mut g = self.bn2.backward(&g_sum);
+        g = self.conv2.backward(&g);
+        g = self.relu1.backward(&g);
+        g = self.bn1.backward(&g);
+        let g_main = self.conv1.backward(&g);
+        // Skip path.
+        let g_skip = match &mut self.proj {
+            Some((conv, bn)) => {
+                let g = bn.backward(&g_sum);
+                conv.backward(&g)
+            }
+            None => g_sum,
+        };
+        let mut out = g_main;
+        for (a, b) in out.data.iter_mut().zip(&g_skip.data) {
+            *a += b;
+        }
+        out
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.conv1.visit_params(f);
+        self.bn1.visit_params(f);
+        self.conv2.visit_params(f);
+        self.bn2.visit_params(f);
+        if let Some((conv, bn)) = &mut self.proj {
+            conv.visit_params(f);
+            bn.visit_params(f);
+        }
+    }
+
+    fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
+        self.bn1.visit_buffers(f);
+        self.bn2.visit_buffers(f);
+        if let Some((_, bn)) = &mut self.proj {
+            bn.visit_buffers(f);
+        }
+    }
+
+    fn update_weight(&mut self) {
+        self.conv1.update_weight();
+        self.conv2.update_weight();
+        if let Some((conv, _)) = &mut self.proj {
+            conv.update_weight();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ResidualBlock"
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        self.conv1.out_shape(in_shape)
+    }
+}
+
+/// LeNet-5 for 28×28 grayscale (Fig 16): conv(1→6,5) – pool – conv(6→16,5)
+/// – pool – fc 256→120→84→10 (matches `python/compile/model.py::lenet_fwd`).
+pub fn lenet5(hw: Option<HwSpec>, seed: u64) -> Sequential {
+    let mut rng = Pcg64::new(seed, 0x1E5E7);
+    Sequential::new(vec![
+        Box::new(Conv2dMem::new(1, 28, 28, 6, 5, 1, 0, hw.clone(), &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(AvgPool2::new()),
+        Box::new(Conv2dMem::new(6, 12, 12, 16, 5, 1, 0, hw.clone(), &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(AvgPool2::new()),
+        Box::new(Flatten::new()),
+        Box::new(LinearMem::new(256, 120, hw.clone(), &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(LinearMem::new(120, 84, hw.clone(), &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(LinearMem::new(84, 10, hw, &mut rng)),
+    ])
+}
+
+/// Two-layer MLP (quickstart / ablations).
+pub fn mlp(input: usize, hidden: usize, classes: usize, hw: Option<HwSpec>, seed: u64) -> Sequential {
+    let mut rng = Pcg64::new(seed, 0x3319);
+    Sequential::new(vec![
+        Box::new(Flatten::new()),
+        Box::new(LinearMem::new(input, hidden, hw.clone(), &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(LinearMem::new(hidden, classes, hw, &mut rng)),
+    ])
+}
+
+/// ResNet-18 topology at CIFAR scale: stem conv3×3, stages [2,2,2,2] with
+/// widths (w, 2w, 4w, 8w), global average pool, fc.
+pub fn resnet18_cifar(width: usize, hw: Option<HwSpec>, seed: u64) -> Sequential {
+    let mut rng = Pcg64::new(seed, 0x4E57);
+    let w = width;
+    let mut layers: Vec<Box<dyn Layer>> = vec![
+        Box::new(Conv2dMem::new(3, 32, 32, w, 3, 1, 1, hw.clone(), &mut rng)),
+        Box::new(BatchNorm2d::new(w)),
+        Box::new(Relu::new()),
+    ];
+    let stages: [(usize, usize, usize, usize); 4] = [
+        // (in_c, out_c, stride, spatial_in)
+        (w, w, 1, 32),
+        (w, 2 * w, 2, 32),
+        (2 * w, 4 * w, 2, 16),
+        (4 * w, 8 * w, 2, 8),
+    ];
+    for &(in_c, out_c, stride, hw_in) in &stages {
+        layers.push(Box::new(ResidualBlock::new(
+            in_c, hw_in, hw_in, out_c, stride, hw.clone(), &mut rng,
+        )));
+        let hw_out = (hw_in - 1) / stride + 1;
+        layers.push(Box::new(ResidualBlock::new(
+            out_c, hw_out, hw_out, out_c, 1, hw.clone(), &mut rng,
+        )));
+    }
+    layers.push(Box::new(GlobalAvgPool::new()));
+    layers.push(Box::new(LinearMem::new(8 * w, 10, hw, &mut rng)));
+    Sequential::new(layers)
+}
+
+/// VGG-16 topology at CIFAR scale: 13 convs in 5 max-pooled groups with
+/// widths (w, 2w, 4w, 8w, 8w), then fc ×3.
+pub fn vgg16_cifar(width: usize, hw: Option<HwSpec>, seed: u64) -> Sequential {
+    let mut rng = Pcg64::new(seed, 0x5657);
+    let w = width;
+    let groups: [(usize, usize); 5] = [(2, w), (2, 2 * w), (3, 4 * w), (3, 8 * w), (3, 8 * w)];
+    let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+    let mut in_c = 3;
+    let mut spatial = 32;
+    for &(convs, out_c) in &groups {
+        for _ in 0..convs {
+            layers.push(Box::new(Conv2dMem::new(
+                in_c, spatial, spatial, out_c, 3, 1, 1, hw.clone(), &mut rng,
+            )));
+            layers.push(Box::new(BatchNorm2d::new(out_c)));
+            layers.push(Box::new(Relu::new()));
+            in_c = out_c;
+        }
+        layers.push(Box::new(MaxPool2::new()));
+        spatial /= 2;
+    }
+    // spatial is now 1: flatten 8w features.
+    layers.push(Box::new(Flatten::new()));
+    layers.push(Box::new(LinearMem::new(8 * w, 4 * w, hw.clone(), &mut rng)));
+    layers.push(Box::new(Relu::new()));
+    layers.push(Box::new(LinearMem::new(4 * w, 4 * w, hw.clone(), &mut rng)));
+    layers.push(Box::new(Relu::new()));
+    layers.push(Box::new(LinearMem::new(4 * w, 10, hw, &mut rng)));
+    Sequential::new(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+
+    #[test]
+    fn lenet_shapes() {
+        let mut m = lenet5(None, 1);
+        let x = Tensor::zeros(&[2, 1, 28, 28]);
+        let y = m.forward(&x, false);
+        assert_eq!(y.shape, vec![2, 10]);
+        // 6·25+6 + 16·150+16 + 256·120+120 + 120·84+84 + 84·10+10
+        assert_eq!(m.num_params(), 156 + 2416 + 30840 + 10164 + 850);
+    }
+
+    #[test]
+    fn lenet_hw_forward_close_to_digital() {
+        let hw = HwSpec::uniform(
+            DotProductEngine::ideal((64, 64)),
+            SliceMethod::int(SliceSpec::fp32()),
+        );
+        let mut m_hw = lenet5(Some(hw), 7);
+        let mut m_dig = lenet5(None, 7);
+        let x = Tensor::from_vec(
+            &[2, 1, 28, 28],
+            (0..2 * 784).map(|i| ((i * 37 % 101) as f64) / 101.0).collect(),
+        );
+        let y_hw = m_hw.forward(&x, false).to_matrix();
+        let y_dig = m_dig.forward(&x, false).to_matrix();
+        let re = y_hw.relative_error(&y_dig);
+        assert!(re < 0.01, "re={re}");
+    }
+
+    #[test]
+    fn resnet_shapes_and_backward() {
+        let mut m = resnet18_cifar(4, None, 2);
+        let x = Tensor::from_vec(
+            &[2, 3, 32, 32],
+            (0..2 * 3 * 1024).map(|i| ((i % 11) as f64) / 11.0).collect(),
+        );
+        let y = m.forward(&x, true);
+        assert_eq!(y.shape, vec![2, 10]);
+        let g = m.backward(&y);
+        assert_eq!(g.shape, x.shape);
+        assert!(g.data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn vgg_shapes_and_backward() {
+        let mut m = vgg16_cifar(2, None, 3);
+        let x = Tensor::from_vec(
+            &[1, 3, 32, 32],
+            (0..3 * 1024).map(|i| ((i % 13) as f64) / 13.0).collect(),
+        );
+        let y = m.forward(&x, true);
+        assert_eq!(y.shape, vec![1, 10]);
+        let g = m.backward(&y);
+        assert_eq!(g.shape, x.shape);
+    }
+
+    #[test]
+    fn residual_block_gradcheck() {
+        let mut rng = Pcg64::seeded(5);
+        let mut blk = ResidualBlock::new(2, 4, 4, 3, 2, None, &mut rng);
+        let x = Tensor::from_vec(&[1, 2, 4, 4], (0..32).map(|i| (i as f64) / 16.0 - 1.0).collect());
+        let y = blk.forward(&x, true);
+        let gx = blk.backward(&y);
+        // Numerical check on a few coordinates. BatchNorm uses batch stats,
+        // forward(train=true) keeps semantics identical.
+        for idx in [0usize, 13, 31] {
+            let eps = 1e-5;
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let lp: f64 = blk.forward(&xp, true).data.iter().map(|v| v * v).sum::<f64>() / 2.0;
+            let lm: f64 = blk.forward(&xm, true).data.iter().map(|v| v * v).sum::<f64>() / 2.0;
+            let want = (lp - lm) / (2.0 * eps);
+            assert!(
+                (gx.data[idx] - want).abs() < 2e-4,
+                "idx {idx}: {} vs {want}",
+                gx.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_precision_layers_supported() {
+        // Fig 9: different engines/methods per layer in one model.
+        let mut rng = Pcg64::new(9, 9);
+        let hw8 = HwSpec::uniform(
+            DotProductEngine::ideal((64, 64)),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let hw4 = HwSpec::uniform(
+            DotProductEngine::ideal((32, 32)),
+            SliceMethod::int(SliceSpec::int4()),
+        );
+        let mut m = Sequential::new(vec![
+            Box::new(Flatten::new()),
+            Box::new(LinearMem::new(16, 12, Some(hw8), &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(LinearMem::new(12, 4, Some(hw4), &mut rng)),
+        ]);
+        let x = Tensor::from_vec(&[2, 16], (0..32).map(|i| (i as f64) / 32.0).collect());
+        let y = m.forward(&x, false);
+        assert_eq!(y.shape, vec![2, 4]);
+    }
+}

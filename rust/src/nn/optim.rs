@@ -1,0 +1,153 @@
+//! Optimizers operating on the full-precision master weights (the
+//! hardware copies are refreshed via `update_weight()` after each step).
+
+use super::Sequential;
+
+/// SGD with momentum and optional weight decay.
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    velocity: Vec<Vec<f64>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64, weight_decay: f64) -> Self {
+        Sgd { lr, momentum, weight_decay, velocity: Vec::new() }
+    }
+
+    pub fn step(&mut self, model: &mut Sequential) {
+        let mut idx = 0;
+        // Lazily size the velocity buffers on first step.
+        let need_init = self.velocity.is_empty();
+        let velocity = &mut self.velocity;
+        let (lr, mu, wd) = (self.lr, self.momentum, self.weight_decay);
+        model.visit_params(&mut |p| {
+            if need_init {
+                velocity.push(vec![0.0; p.value.len()]);
+            }
+            let v = &mut velocity[idx];
+            assert_eq!(v.len(), p.value.len(), "param set changed between steps");
+            for ((value, grad), vel) in p.value.iter_mut().zip(&p.grad).zip(v.iter_mut()) {
+                let g = grad + wd * *value;
+                *vel = mu * *vel + g;
+                *value -= lr * *vel;
+            }
+            idx += 1;
+        });
+    }
+}
+
+/// Adam.
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    t: u64,
+    m: Vec<Vec<f64>>,
+    v: Vec<Vec<f64>>,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    pub fn step(&mut self, model: &mut Sequential) {
+        self.t += 1;
+        let mut idx = 0;
+        let need_init = self.m.is_empty();
+        let (m_all, v_all) = (&mut self.m, &mut self.v);
+        let (lr, b1, b2, eps, t) = (self.lr, self.beta1, self.beta2, self.eps, self.t);
+        let bc1 = 1.0 - b1.powi(t as i32);
+        let bc2 = 1.0 - b2.powi(t as i32);
+        model.visit_params(&mut |p| {
+            if need_init {
+                m_all.push(vec![0.0; p.value.len()]);
+                v_all.push(vec![0.0; p.value.len()]);
+            }
+            let m = &mut m_all[idx];
+            let v = &mut v_all[idx];
+            for i in 0..p.value.len() {
+                let g = p.grad[i];
+                m[i] = b1 * m[i] + (1.0 - b1) * g;
+                v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                p.value[i] -= lr * mh / (vh.sqrt() + eps);
+            }
+            idx += 1;
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::LinearMem;
+    use crate::nn::Sequential;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    /// One linear layer fit to a fixed target with quadratic loss must
+    /// reduce the loss monotonically-ish.
+    fn fit(optim: &mut dyn FnMut(&mut Sequential), steps: usize) -> (f64, f64) {
+        let mut rng = Pcg64::seeded(42);
+        let mut model = Sequential::new(vec![Box::new(LinearMem::new(4, 2, None, &mut rng))]);
+        let x = Tensor::from_vec(&[8, 4], (0..32).map(|i| ((i % 7) as f64) / 3.0 - 1.0).collect());
+        let target = Tensor::from_vec(&[8, 2], (0..16).map(|i| ((i % 5) as f64) / 2.0).collect());
+        let loss_of = |y: &Tensor| -> f64 {
+            y.data.iter().zip(&target.data).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+        };
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..steps {
+            model.zero_grad();
+            let y = model.forward(&x, true);
+            last = loss_of(&y);
+            first.get_or_insert(last);
+            let grad = Tensor::from_vec(
+                &y.shape,
+                y.data.iter().zip(&target.data).map(|(a, b)| 2.0 * (a - b)).collect(),
+            );
+            model.backward(&grad);
+            optim(&mut model);
+        }
+        (first.unwrap(), last)
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let mut opt = Sgd::new(0.01, 0.9, 0.0);
+        let (first, last) = fit(&mut |m| opt.step(m), 60);
+        assert!(last < first * 0.2, "first={first} last={last}");
+    }
+
+    #[test]
+    fn adam_reduces_loss() {
+        let mut opt = Adam::new(0.05);
+        let (first, last) = fit(&mut |m| opt.step(m), 80);
+        assert!(last < first * 0.2, "first={first} last={last}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let mut rng = Pcg64::seeded(7);
+        let mut model = Sequential::new(vec![Box::new(LinearMem::new(3, 3, None, &mut rng))]);
+        let norm_before: f64 = {
+            let mut n = 0.0;
+            model.visit_params(&mut |p| n += p.value.iter().map(|v| v * v).sum::<f64>());
+            n
+        };
+        let mut opt = Sgd::new(0.1, 0.0, 0.5);
+        model.zero_grad();
+        opt.step(&mut model);
+        let norm_after: f64 = {
+            let mut n = 0.0;
+            model.visit_params(&mut |p| n += p.value.iter().map(|v| v * v).sum::<f64>());
+            n
+        };
+        assert!(norm_after < norm_before);
+    }
+}

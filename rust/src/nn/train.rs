@@ -1,0 +1,152 @@
+//! Training / evaluation loops (Fig 16's hardware-aware training: DPE
+//! forward, full-precision backward, `update_weight()` after every
+//! optimizer step so the arrays hold the freshly-quantized weights).
+
+use super::loss::{accuracy, softmax_cross_entropy};
+use super::optim::Sgd;
+use super::Sequential;
+use crate::data::Dataset;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Per-step training record (Fig 16 plots these curves).
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f64,
+    pub train_acc: f64,
+}
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub seed: u64,
+    /// Log every n steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch_size: 32,
+            steps: 200,
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            seed: 7,
+            log_every: 10,
+        }
+    }
+}
+
+/// Assemble a batch tensor from dataset rows.
+pub fn make_batch(data: &Dataset, idx: &[usize]) -> (Tensor, Vec<usize>) {
+    let (feats, labels) = data.batch(idx);
+    let mut shape = vec![idx.len()];
+    shape.extend_from_slice(&data.sample_shape);
+    (Tensor::from_vec(&shape, feats), labels)
+}
+
+/// SGD training loop. Returns the per-`log_every` step log.
+pub fn train(model: &mut Sequential, data: &Dataset, cfg: &TrainConfig) -> Vec<StepLog> {
+    let mut rng = Pcg64::new(cfg.seed, 0x7e41);
+    let mut opt = Sgd::new(cfg.lr, cfg.momentum, cfg.weight_decay);
+    let mut logs = Vec::new();
+    let mut order: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+    for step in 0..cfg.steps {
+        if cursor + cfg.batch_size > order.len() {
+            rng.shuffle(&mut order);
+            cursor = 0;
+        }
+        let idx = &order[cursor..cursor + cfg.batch_size];
+        cursor += cfg.batch_size;
+        let (x, labels) = make_batch(data, idx);
+        model.zero_grad();
+        let logits = model.forward(&x, true);
+        let (loss, grad) = softmax_cross_entropy(&logits, &labels);
+        let acc = accuracy(&logits, &labels);
+        model.backward(&grad);
+        opt.step(model);
+        // Refresh the hardware weight copies from the updated masters.
+        model.update_weight();
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            logs.push(StepLog { step, loss, train_acc: acc });
+        }
+    }
+    logs
+}
+
+/// Evaluate classification accuracy over (a prefix of) a dataset.
+pub fn evaluate(model: &mut Sequential, data: &Dataset, batch: usize, limit: usize) -> f64 {
+    let n = data.len().min(limit);
+    let mut correct = 0.0;
+    let mut seen = 0usize;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + batch).min(n);
+        let idx: Vec<usize> = (i..hi).collect();
+        let (x, labels) = make_batch(data, &idx);
+        let logits = model.forward(&x, false);
+        correct += accuracy(&logits, &labels) * idx.len() as f64;
+        seen += idx.len();
+        i = hi;
+    }
+    correct / seen as f64
+}
+
+/// Mean loss over a dataset prefix (for test-loss curves).
+pub fn evaluate_loss(model: &mut Sequential, data: &Dataset, batch: usize, limit: usize) -> f64 {
+    let n = data.len().min(limit);
+    let mut total = 0.0;
+    let mut seen = 0usize;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + batch).min(n);
+        let idx: Vec<usize> = (i..hi).collect();
+        let (x, labels) = make_batch(data, &idx);
+        let logits = model.forward(&x, false);
+        let (loss, _) = softmax_cross_entropy(&logits, &labels);
+        total += loss * idx.len() as f64;
+        seen += idx.len();
+        i = hi;
+    }
+    total / seen as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mnist_like;
+    use crate::nn::models::mlp;
+
+    #[test]
+    fn mlp_learns_digits_digital() {
+        // The end-to-end signal: a digital MLP must learn the synthetic
+        // digit task quickly.
+        let data = mnist_like::load(512, 42);
+        let (train_set, test_set) = data.split(448);
+        let mut model = mlp(784, 64, 10, None, 1);
+        let cfg = TrainConfig { steps: 120, batch_size: 32, lr: 0.1, ..Default::default() };
+        let logs = train(&mut model, &train_set, &cfg);
+        let first = logs.first().unwrap().loss;
+        let last = logs.last().unwrap().loss;
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+        let acc = evaluate(&mut model, &test_set, 32, 64);
+        assert!(acc > 0.55, "test acc {acc}");
+    }
+
+    #[test]
+    fn evaluate_handles_ragged_batches() {
+        let data = mnist_like::load(10, 3);
+        let mut model = mlp(784, 8, 10, None, 2);
+        let acc = evaluate(&mut model, &data, 4, 10);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

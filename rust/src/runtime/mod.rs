@@ -1,0 +1,163 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`, L2/L1) and executes them from the Rust hot path.
+//!
+//! Interchange format is HLO **text** — jax ≥ 0.5 emits serialized protos
+//! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Executables are compiled once per artifact and cached; Python never runs
+//! at request time.
+
+pub mod xla_dpe;
+
+pub use xla_dpe::XlaDpe;
+
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Runtime(dir={:?})", self.artifacts_dir)
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Path of a named artifact (`<name>.hlo.txt` under the artifacts dir).
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Whether the artifact exists on disk.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load + compile (cached) an artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifact_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 buffers. Each input is `(shape, data)`;
+    /// returns every output as `(shape, data)`. The artifact must have been
+    /// lowered with `return_tuple=True`.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[usize], &[f32])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(shape, data)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input to {dims:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let mut result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        tuple
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+
+    /// Execute with `Matrix` (f64) operands, converting to f32 at the
+    /// boundary (the artifacts are compiled for f32).
+    pub fn execute_matrices(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Vec<f32>>> {
+        let f32_bufs: Vec<(Vec<usize>, Vec<f32>)> = inputs
+            .iter()
+            .map(|m| {
+                (vec![m.rows, m.cols], m.data.iter().map(|&x| x as f32).collect::<Vec<f32>>())
+            })
+            .collect();
+        let refs: Vec<(&[usize], &[f32])> =
+            f32_bufs.iter().map(|(s, d)| (s.as_slice(), d.as_slice())).collect();
+        self.execute_f32(name, &refs)
+    }
+
+    /// Number of cached executables (for tests/metrics).
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the workspace root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn smoke_artifact_roundtrip() {
+        let dir = artifacts_dir();
+        if !dir.join("_smoke.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::cpu(&dir).unwrap();
+        assert!(rt.has_artifact("_smoke"));
+        let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let out = rt.execute_matrices("_smoke", &[&x, &y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
+        // Second call hits the cache.
+        let _ = rt.execute_matrices("_smoke", &[&x, &y]).unwrap();
+        assert_eq!(rt.cached_count(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        assert!(!rt.has_artifact("definitely_missing"));
+        assert!(rt.load("definitely_missing").is_err());
+    }
+}

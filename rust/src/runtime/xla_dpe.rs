@@ -1,0 +1,168 @@
+//! XLA backend for the DPE: executes the AOT-compiled Pallas/JAX DPE
+//! matmul artifacts (`dpe_mm_*.hlo.txt`) and the fused LeNet-5 forward
+//! (`lenet_fwd_*.hlo.txt`) from the Rust hot path.
+//!
+//! The artifact set is shape-specialized (HLO is static-shape); callers ask
+//! [`XlaDpe::supports`] first and fall back to the native engine otherwise —
+//! the coordinator's routing policy.
+
+use super::Runtime;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Named DPE artifact formats (must match `python/compile/aot.py`).
+pub const FORMATS: &[&str] = &["int4", "int8", "fp16", "bf16", "fp32", "flex16"];
+
+/// XLA-backed DPE matmul executor.
+#[derive(Debug)]
+pub struct XlaDpe {
+    rt: Runtime,
+}
+
+impl XlaDpe {
+    pub fn new(rt: Runtime) -> Self {
+        XlaDpe { rt }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Artifact name for a matmul shape + format.
+    pub fn mm_name(m: usize, k: usize, n: usize, fmt: &str, ideal: bool) -> String {
+        let suffix = if ideal { "_ideal" } else { "" };
+        format!("dpe_mm_{m}x{k}x{n}_{fmt}{suffix}")
+    }
+
+    /// Does a compiled artifact exist for this shape/format?
+    pub fn supports(&self, m: usize, k: usize, n: usize, fmt: &str, ideal: bool) -> bool {
+        self.rt.has_artifact(&Self::mm_name(m, k, n, fmt, ideal))
+    }
+
+    /// Execute the DPE matmul artifact. `seed` drives the in-graph
+    /// threefry programming-noise sampling (ignored by `_ideal` variants).
+    pub fn matmul(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        fmt: &str,
+        ideal: bool,
+        seed: u32,
+    ) -> Result<Matrix> {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        anyhow::ensure!(a.cols == b.rows, "matmul dim mismatch");
+        let name = Self::mm_name(m, k, n, fmt, ideal);
+        let a32: Vec<f32> = a.data.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b.data.iter().map(|&x| x as f32).collect();
+        let key = [0u32, seed];
+        let exe = self.rt.load(&name)?;
+        let lit_a = xla::Literal::vec1(&a32).reshape(&[m as i64, k as i64])?;
+        let lit_b = xla::Literal::vec1(&b32).reshape(&[k as i64, n as i64])?;
+        let lit_key = xla::Literal::vec1(&key);
+        let mut result = exe.execute::<xla::Literal>(&[lit_a, lit_b, lit_key])?[0][0]
+            .to_literal_sync()?;
+        let out = result.decompose_tuple()?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        let data32 = out.into_iter().next().unwrap().to_vec::<f32>()?;
+        Ok(Matrix::from_vec(m, n, data32.into_iter().map(|x| x as f64).collect()))
+    }
+
+    /// Execute a fused LeNet-5 forward artifact: `x` is `(batch, 784)`
+    /// row-major, `params` are the 10 parameter buffers in `lenet_fwd`
+    /// order. Returns `(batch, 10)` logits.
+    pub fn lenet_forward(
+        &self,
+        batch: usize,
+        fmt: &str,
+        ideal: bool,
+        x: &[f32],
+        params: &[(Vec<usize>, Vec<f32>)],
+        seed: u32,
+    ) -> Result<Matrix> {
+        anyhow::ensure!(x.len() == batch * 784, "bad input length");
+        anyhow::ensure!(params.len() == 10, "lenet has 10 parameter buffers");
+        let suffix = if ideal { "_ideal" } else { "" };
+        let name = format!("lenet_fwd_b{batch}_{fmt}{suffix}");
+        let exe = self.rt.load(&name)?;
+        let mut literals = Vec::with_capacity(12);
+        literals.push(
+            xla::Literal::vec1(x).reshape(&[batch as i64, 1, 28, 28])?,
+        );
+        literals.push(xla::Literal::vec1(&[0u32, seed]));
+        for (shape, data) in params {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let mut result =
+            exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.decompose_tuple()?;
+        let logits = out.into_iter().next().unwrap().to_vec::<f32>()?;
+        Ok(Matrix::from_vec(batch, 10, logits.into_iter().map(|v| v as f64).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+    use crate::util::rng::Pcg64;
+    use std::path::PathBuf;
+
+    fn xla_dpe() -> Option<XlaDpe> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("dpe_mm_128x128x128_int8_ideal.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(XlaDpe::new(Runtime::cpu(dir).unwrap()))
+    }
+
+    #[test]
+    fn xla_ideal_matches_native_ideal() {
+        // Backend cross-validation: the AOT Pallas path and the native Rust
+        // path implement the same noise-free sliced arithmetic.
+        let Some(dpe) = xla_dpe() else { return };
+        let mut rng = Pcg64::seeded(101);
+        let a = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+        let xla_out = dpe.matmul(&a, &b, "int8", true, 0).unwrap();
+        let native = DotProductEngine::ideal((64, 64)).matmul(
+            &a,
+            &b,
+            &SliceMethod::int(SliceSpec::int8()),
+            &SliceMethod::int(SliceSpec::int8()),
+        );
+        let ideal = a.matmul(&b);
+        let re_x = xla_out.relative_error(&ideal);
+        let re_n = native.relative_error(&ideal);
+        // Both are INT8-quantized products of the same data.
+        assert!(re_x < 0.02, "xla re={re_x}");
+        assert!(re_n < 0.02, "native re={re_n}");
+        // And they agree with each other far more closely than with ideal
+        // (identical algorithm, f32-vs-f64 rounding differences only).
+        let cross = xla_out.relative_error(&native);
+        assert!(cross < re_x.max(re_n) * 0.5, "cross={cross} re_x={re_x}");
+    }
+
+    #[test]
+    fn xla_noisy_differs_by_seed() {
+        let Some(dpe) = xla_dpe() else { return };
+        let mut rng = Pcg64::seeded(102);
+        let a = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+        let o1 = dpe.matmul(&a, &b, "int8", false, 1).unwrap();
+        let o2 = dpe.matmul(&a, &b, "int8", false, 2).unwrap();
+        let o1b = dpe.matmul(&a, &b, "int8", false, 1).unwrap();
+        assert_ne!(o1.data, o2.data, "different seeds must differ");
+        assert_eq!(o1.data, o1b.data, "same seed must reproduce");
+        let ideal = a.matmul(&b);
+        assert!(o1.relative_error(&ideal) < 0.2);
+    }
+
+    #[test]
+    fn supports_reports_artifact_presence() {
+        let Some(dpe) = xla_dpe() else { return };
+        assert!(dpe.supports(128, 128, 128, "int8", true));
+        assert!(!dpe.supports(64, 64, 64, "int8", true));
+    }
+}

@@ -1,0 +1,187 @@
+//! im2col / col2im: flatten 2-d convolutions into the dot products the
+//! crossbar arrays execute (paper Fig 8(c)).
+//!
+//! Layout conventions (PyTorch-like, NCHW):
+//! - input feature map: `[C, H, W]` flattened row-major;
+//! - im2col output: matrix of shape `[C*kh*kw, out_h*out_w]` — each column
+//!   is one receptive field, so `weights(out_c × C*kh*kw) · cols` yields the
+//!   convolution as a single matmul per sample.
+
+use super::Matrix;
+
+/// Convolution geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dDims {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dDims {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+    /// Rows of the im2col matrix (= columns of the weight matrix).
+    pub fn patch_len(&self) -> usize {
+        self.in_c * self.kh * self.kw
+    }
+}
+
+/// im2col for one sample. `input` is `[C, H, W]` flattened; returns
+/// `[C*kh*kw, out_h*out_w]`.
+pub fn im2col(input: &[f64], d: Conv2dDims) -> Matrix {
+    assert_eq!(input.len(), d.in_c * d.in_h * d.in_w, "input shape mismatch");
+    let (oh, ow) = (d.out_h(), d.out_w());
+    let mut out = Matrix::zeros(d.patch_len(), oh * ow);
+    for c in 0..d.in_c {
+        for ki in 0..d.kh {
+            for kj in 0..d.kw {
+                let row = (c * d.kh + ki) * d.kw + kj;
+                let dst_row = &mut out.data[row * oh * ow..(row + 1) * oh * ow];
+                for oi in 0..oh {
+                    let ii = (oi * d.stride + ki) as isize - d.pad as isize;
+                    if ii < 0 || ii as usize >= d.in_h {
+                        continue; // zero padding: leave zeros
+                    }
+                    let src_base = c * d.in_h * d.in_w + ii as usize * d.in_w;
+                    for oj in 0..ow {
+                        let jj = (oj * d.stride + kj) as isize - d.pad as isize;
+                        if jj < 0 || jj as usize >= d.in_w {
+                            continue;
+                        }
+                        dst_row[oi * ow + oj] = input[src_base + jj as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// col2im accumulation (the backward of im2col): scatter-add a
+/// `[C*kh*kw, out_h*out_w]` matrix of patch gradients back into a
+/// `[C, H, W]` gradient buffer.
+pub fn col2im_accumulate(cols: &Matrix, d: Conv2dDims, grad_input: &mut [f64]) {
+    assert_eq!(grad_input.len(), d.in_c * d.in_h * d.in_w);
+    let (oh, ow) = (d.out_h(), d.out_w());
+    assert_eq!((cols.rows, cols.cols), (d.patch_len(), oh * ow), "cols shape mismatch");
+    for c in 0..d.in_c {
+        for ki in 0..d.kh {
+            for kj in 0..d.kw {
+                let row = (c * d.kh + ki) * d.kw + kj;
+                let src_row = &cols.data[row * oh * ow..(row + 1) * oh * ow];
+                for oi in 0..oh {
+                    let ii = (oi * d.stride + ki) as isize - d.pad as isize;
+                    if ii < 0 || ii as usize >= d.in_h {
+                        continue;
+                    }
+                    let dst_base = c * d.in_h * d.in_w + ii as usize * d.in_w;
+                    for oj in 0..ow {
+                        let jj = (oj * d.stride + kj) as isize - d.pad as isize;
+                        if jj < 0 || jj as usize >= d.in_w {
+                            continue;
+                        }
+                        grad_input[dst_base + jj as usize] += src_row[oi * ow + oj];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Direct (reference) convolution for testing: weights `[out_c, C*kh*kw]`,
+/// returns `[out_c, out_h*out_w]`.
+pub fn conv2d_direct(input: &[f64], weights: &Matrix, d: Conv2dDims) -> Matrix {
+    let (oh, ow) = (d.out_h(), d.out_w());
+    assert_eq!(weights.cols, d.patch_len());
+    let mut out = Matrix::zeros(weights.rows, oh * ow);
+    for oc in 0..weights.rows {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let mut acc = 0.0;
+                for c in 0..d.in_c {
+                    for ki in 0..d.kh {
+                        for kj in 0..d.kw {
+                            let ii = (oi * d.stride + ki) as isize - d.pad as isize;
+                            let jj = (oj * d.stride + kj) as isize - d.pad as isize;
+                            if ii < 0 || jj < 0 || ii as usize >= d.in_h || jj as usize >= d.in_w {
+                                continue;
+                            }
+                            let w = weights.at(oc, (c * d.kh + ki) * d.kw + kj);
+                            acc += w * input[c * d.in_h * d.in_w + ii as usize * d.in_w + jj as usize];
+                        }
+                    }
+                }
+                *out.at_mut(oc, oi * ow + oj) = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn im2col_matmul_equals_direct_conv() {
+        let mut rng = Pcg64::seeded(11);
+        for &(c, h, w, kh, stride, pad) in
+            &[(1, 5, 5, 3, 1, 0), (3, 8, 8, 3, 1, 1), (2, 9, 7, 5, 2, 2), (4, 6, 6, 1, 1, 0)]
+        {
+            let d = Conv2dDims { in_c: c, in_h: h, in_w: w, kh, kw: kh, stride, pad };
+            let input: Vec<f64> = (0..c * h * w).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+            let weights = Matrix::random_uniform(6, d.patch_len(), -1.0, 1.0, &mut rng);
+            let via_cols = weights.matmul(&im2col(&input, d));
+            let direct = conv2d_direct(&input, &weights, d);
+            assert!(
+                via_cols.relative_error(&direct) < 1e-12,
+                "conv mismatch for {d:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn im2col_known_small_case() {
+        // 1x3x3 input, 2x2 kernel, stride 1, no pad -> 4 patches of len 4.
+        let d = Conv2dDims { in_c: 1, in_h: 3, in_w: 3, kh: 2, kw: 2, stride: 1, pad: 0 };
+        let input: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let cols = im2col(&input, d);
+        assert_eq!((cols.rows, cols.cols), (4, 4));
+        // First column = top-left patch [1,2,4,5].
+        let first: Vec<f64> = (0..4).map(|r| cols.at(r, 0)).collect();
+        assert_eq!(first, vec![1.0, 2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn output_dims() {
+        let d = Conv2dDims { in_c: 3, in_h: 32, in_w: 32, kh: 3, kw: 3, stride: 1, pad: 1 };
+        assert_eq!((d.out_h(), d.out_w()), (32, 32));
+        let d2 = Conv2dDims { in_c: 1, in_h: 28, in_w: 28, kh: 5, kw: 5, stride: 1, pad: 0 };
+        assert_eq!((d2.out_h(), d2.out_w()), (24, 24));
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — adjointness makes conv backward
+        // correct by construction.
+        let mut rng = Pcg64::seeded(12);
+        let d = Conv2dDims { in_c: 2, in_h: 6, in_w: 5, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let x: Vec<f64> = (0..d.in_c * d.in_h * d.in_w).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let cols = im2col(&x, d);
+        let y = Matrix::random_uniform(cols.rows, cols.cols, -1.0, 1.0, &mut rng);
+        let lhs: f64 = cols.data.iter().zip(&y.data).map(|(a, b)| a * b).sum();
+        let mut back = vec![0.0; x.len()];
+        col2im_accumulate(&y, d, &mut back);
+        let rhs: f64 = x.iter().zip(&back).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9, "lhs={lhs} rhs={rhs}");
+    }
+}

@@ -1,0 +1,375 @@
+//! Dense linear-algebra substrate: a row-major `f64` matrix with the
+//! operations the simulator needs (blocked matmul, transpose, padding,
+//! block views, norms) plus an N-d `Tensor` used by the NN layers.
+//!
+//! Built from scratch — the offline registry has no ndarray/nalgebra.
+
+mod conv;
+
+pub use conv::{col2im_accumulate, conv2d_direct, im2col, Conv2dDims};
+
+use crate::util::parallel::par_chunks_mut;
+use crate::util::rng::Pcg64;
+use std::fmt;
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Uniform random entries in [lo, hi).
+    pub fn random_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform_range(lo, hi)).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Normal random entries.
+    pub fn random_normal(rows: usize, cols: usize, mean: f64, std: f64, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_ms(mean, std)).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Matrix multiply `self (m×k) * other (k×n)`: i-k-j loop order
+    /// (unit-stride inner loops over both B and C rows), parallel over row
+    /// bands only when the work amortizes thread spawn (§Perf: nested
+    /// sub-millisecond parallelism was a 1.7× end-to-end regression).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        let kernel = |i0: usize, rows_here: usize, chunk: &mut [f64]| {
+            for di in 0..rows_here {
+                let i = i0 + di;
+                let a_row = &self.data[i * k..(i + 1) * k];
+                let c_row = &mut chunk[di * n..(di + 1) * n];
+                for (kk, &a) in a_row.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[kk * n..(kk + 1) * n];
+                    for (c, &b) in c_row.iter_mut().zip(b_row) {
+                        *c += a * b;
+                    }
+                }
+            }
+        };
+        if m * k * n < (1 << 21) {
+            kernel(0, m, &mut out.data);
+        } else {
+            let band = 32usize.max(1);
+            par_chunks_mut(&mut out.data, band * n, |band_idx, chunk| {
+                kernel(band_idx * band, chunk.len() / n, chunk);
+            });
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec dim mismatch");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn map(&self, f: impl Fn(f64) -> f64 + Sync) -> Matrix {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip_map(&self, other: &Matrix, f: impl Fn(f64, f64) -> f64) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        self.map(|x| x * s)
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Relative error `‖self − other‖₂ / ‖other‖₂` — the paper's RE metric
+    /// (Fig 11) with `other` as the ideal result.
+    pub fn relative_error(&self, ideal: &Matrix) -> f64 {
+        let denom = ideal.frobenius();
+        if denom == 0.0 {
+            return self.frobenius();
+        }
+        self.sub(ideal).frobenius() / denom
+    }
+
+    /// Zero-pad to `(rows, cols)` (paper Fig 7: pad to a multiple of the
+    /// array size).
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "pad_to must grow");
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            out.data[i * cols..i * cols + self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Extract the `r0..r0+h, c0..c0+w` submatrix.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        let mut out = Matrix::zeros(h, w);
+        for i in 0..h {
+            let src = (r0 + i) * self.cols + c0;
+            out.data[i * w..(i + 1) * w].copy_from_slice(&self.data[src..src + w]);
+        }
+        out
+    }
+
+    /// Write `blockm` into position `(r0, c0)`, clipping to bounds (used to
+    /// un-pad block results).
+    pub fn set_block_clipped(&mut self, r0: usize, c0: usize, blockm: &Matrix) {
+        let h = blockm.rows.min(self.rows.saturating_sub(r0));
+        let w = blockm.cols.min(self.cols.saturating_sub(c0));
+        for i in 0..h {
+            let dst = (r0 + i) * self.cols + c0;
+            self.data[dst..dst + w].copy_from_slice(&blockm.data[i * blockm.cols..i * blockm.cols + w]);
+        }
+    }
+
+    /// Accumulate (`+=`) `blockm` into position `(r0, c0)` with clipping.
+    pub fn add_block_clipped(&mut self, r0: usize, c0: usize, blockm: &Matrix) {
+        let h = blockm.rows.min(self.rows.saturating_sub(r0));
+        let w = blockm.cols.min(self.cols.saturating_sub(c0));
+        for i in 0..h {
+            let dst = (r0 + i) * self.cols + c0;
+            for j in 0..w {
+                self.data[dst + j] += blockm.data[i * blockm.cols + j];
+            }
+        }
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+}
+
+/// N-d tensor (row-major) for NN activations; thin wrapper sharing the
+/// `Matrix` storage conventions.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.numel(), shape.iter().product::<usize>(), "reshape numel mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// View a 2-d tensor as a Matrix (copies).
+    pub fn to_matrix(&self) -> Matrix {
+        assert_eq!(self.shape.len(), 2, "to_matrix needs 2-d");
+        Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Self {
+        Tensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seeded(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 64, 64), (70, 65, 130)] {
+            let a = Matrix::random_uniform(m, k, -1.0, 1.0, &mut rng);
+            let b = Matrix::random_uniform(k, n, -1.0, 1.0, &mut rng);
+            let c = a.matmul(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..k).map(|t| a.at(i, t) * b.at(t, j)).sum();
+                    assert!((c.at(i, j) - want).abs() < 1e-9, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Matrix::random_uniform(13, 13, -5.0, 5.0, &mut rng);
+        let c = a.matmul(&Matrix::identity(13));
+        assert!(c.relative_error(&a) < 1e-15);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Matrix::random_uniform(8, 5, -1.0, 1.0, &mut rng);
+        let x: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let xm = Matrix::from_vec(5, 1, x.clone());
+        let y = a.matvec(&x);
+        let ym = a.matmul(&xm);
+        for i in 0..8 {
+            assert!((y[i] - ym.at(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Matrix::random_uniform(7, 11, -1.0, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn pad_and_block_roundtrip() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Matrix::random_uniform(5, 7, -1.0, 1.0, &mut rng);
+        let p = a.pad_to(8, 8);
+        assert_eq!(p.block(0, 0, 5, 7), a);
+        assert_eq!(p.at(7, 7), 0.0);
+    }
+
+    #[test]
+    fn set_and_add_block_clipped() {
+        let mut m = Matrix::zeros(4, 4);
+        let b = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f64 + 1.0);
+        m.set_block_clipped(2, 2, &b); // clips to 2x2
+        assert_eq!(m.at(2, 2), 1.0);
+        assert_eq!(m.at(3, 3), 5.0);
+        m.add_block_clipped(2, 2, &b);
+        assert_eq!(m.at(3, 3), 10.0);
+    }
+
+    #[test]
+    fn relative_error_zero_for_equal() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.relative_error(&a), 0.0);
+    }
+
+    #[test]
+    fn relative_error_scale_invariance() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = a.scale(1.1);
+        let re = b.relative_error(&a);
+        assert!((re - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tensor_reshape_and_matrix_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f64).collect());
+        let m = t.to_matrix();
+        assert_eq!(m.at(1, 2), 5.0);
+        let t2 = Tensor::from_matrix(&m).reshape(&[3, 2]);
+        assert_eq!(t2.shape, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dim mismatch")]
+    fn matmul_rejects_mismatch() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

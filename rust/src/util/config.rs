@@ -1,0 +1,313 @@
+//! Configuration system: a TOML-subset parser plus the typed simulation
+//! config structs used across the framework.
+//!
+//! The offline registry has no `serde`/`toml`, so we parse a pragmatic TOML
+//! subset ourselves: `[section]` headers, `key = value` with strings, bools,
+//! integers, floats, and flat arrays (`[1, 1, 2, 4]`), `#` comments. This
+//! covers every config the framework ships (see `memintelli.toml`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_usize()).collect(),
+            _ => None,
+        }
+    }
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed document: `section.key -> Value`. Keys outside any section live in
+/// the `""` section.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let trimmed = strip_comment(raw).trim().to_string();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Some(name) = trimmed.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| ParseError { line, msg: "unterminated section header".into() })?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = trimmed
+                .find('=')
+                .ok_or_else(|| ParseError { line, msg: format!("expected key = value, got '{trimmed}'") })?;
+            let key = trimmed[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(ParseError { line, msg: "empty key".into() });
+            }
+            let value = parse_value(trimmed[eq + 1..].trim(), line)?;
+            doc.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Doc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Doc::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(Value::as_usize).unwrap_or(default)
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a double-quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(ParseError { line, msg: "empty value".into() });
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| ParseError { line, msg: "unterminated string".into() })?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| ParseError { line, msg: "unterminated array".into() })?;
+        let mut items = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError { line, msg: format!("cannot parse value '{s}'") })
+}
+
+/// Split on commas that are not nested inside brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# MemIntelli defaults (Table 2 of the paper)
+[engine]
+hgs = 1e-5       # high conductance state (S)
+lgs = 1e-7
+g_levels = 16
+var = 0.05
+rdac = 256
+radc = 1024
+array_size = [64, 64]
+backend = "native"
+noise_free = false
+
+[training]
+lr = 0.01
+slices = [1, 1, 2, 4]
+"#;
+
+    #[test]
+    fn parses_table2_defaults() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.f64_or("engine", "hgs", 0.0), 1e-5);
+        assert_eq!(doc.f64_or("engine", "lgs", 0.0), 1e-7);
+        assert_eq!(doc.usize_or("engine", "g_levels", 0), 16);
+        assert_eq!(doc.f64_or("engine", "var", 0.0), 0.05);
+        assert_eq!(doc.usize_or("engine", "rdac", 0), 256);
+        assert_eq!(doc.usize_or("engine", "radc", 0), 1024);
+        assert_eq!(
+            doc.get("engine", "array_size").unwrap().as_usize_array().unwrap(),
+            vec![64, 64]
+        );
+        assert_eq!(doc.str_or("engine", "backend", ""), "native");
+        assert!(!doc.bool_or("engine", "noise_free", true));
+        assert_eq!(
+            doc.get("training", "slices").unwrap().as_usize_array().unwrap(),
+            vec![1, 1, 2, 4]
+        );
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = Doc::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.f64_or("a", "y", 2.5), 2.5);
+        assert_eq!(doc.usize_or("b", "x", 7), 7);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = Doc::parse("# only comments\n\n  # indented\n").unwrap();
+        assert_eq!(doc.sections().count(), 0);
+    }
+
+    #[test]
+    fn string_with_hash_preserved() {
+        let doc = Doc::parse("[s]\nname = \"a#b\"\n").unwrap();
+        assert_eq!(doc.str_or("s", "name", ""), "a#b");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = Doc::parse("[s]\nblocks = [[32, 32], [64, 64]]\n").unwrap();
+        if let Some(Value::Array(items)) = doc.get("s", "blocks") {
+            assert_eq!(items.len(), 2);
+            assert_eq!(items[0].as_usize_array().unwrap(), vec![32, 32]);
+        } else {
+            panic!("expected array");
+        }
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = Doc::parse("[s]\nkey value\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        assert!(Doc::parse("[s]\nx = @nope\n").is_err());
+        assert!(Doc::parse("[s\nx = 1\n").is_err());
+        assert!(Doc::parse("[s]\nx = \"unterminated\n").is_err());
+        assert!(Doc::parse("[s]\nx = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Doc::parse("[s]\na = -3\nb = -1.5e-4\n").unwrap();
+        assert_eq!(doc.get("s", "a").unwrap().as_i64().unwrap(), -3);
+        assert_eq!(doc.f64_or("s", "b", 0.0), -1.5e-4);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrates built from scratch for the offline environment:
+//! deterministic RNG + distributions, a mini property-test harness, a
+//! TOML-subset config system, reporting/timing helpers, and scoped-thread
+//! parallel maps.
+
+pub mod config;
+pub mod parallel;
+pub mod prop;
+pub mod report;
+pub mod rng;

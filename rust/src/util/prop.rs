@@ -1,0 +1,150 @@
+//! Minimal property-based testing harness (the registry has no `proptest`
+//! offline, so we roll our own seeded-case runner).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("slicing roundtrip", 200, |g| {
+//!     let n = g.usize_in(1..=64);
+//!     let xs = g.vec_f64(n, -1e3..1e3);
+//!     // ... assert invariant, return Err(msg) on failure ...
+//!     Ok(())
+//! });
+//! ```
+//! Each case gets an independent RNG stream derived from the case index, so a
+//! failing case can be re-run in isolation by seed; the failure message
+//! includes the case index.
+
+use super::rng::Pcg64;
+use std::ops::{Range, RangeInclusive};
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg64,
+    /// Case index, for failure reports.
+    pub case: usize,
+}
+
+impl Gen {
+    #[inline]
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, r: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*r.start(), *r.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, r: RangeInclusive<i64>) -> i64 {
+        let (lo, hi) = (*r.start(), *r.end());
+        lo + self.rng.below((hi - lo + 1) as usize) as i64
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        self.rng.uniform_range(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, n: usize, r: Range<f64>) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform_range(r.start, r.end)).collect()
+    }
+
+    /// A vector mixing magnitudes (exercises FP pre-alignment paths).
+    pub fn vec_f64_multiscale(&mut self, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| {
+                let exp = self.i64_in(-8..=8) as i32;
+                let mantissa = self.rng.uniform_range(-1.0, 1.0);
+                mantissa * (2f64).powi(exp)
+            })
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` randomized cases of `prop`. Panics (test failure) with the
+/// case index and message on the first failing case.
+pub fn prop_check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    prop_check_seeded(name, 0xC0FFEE, cases, &mut prop);
+}
+
+/// Like [`prop_check`] with an explicit base seed (reproduce failures).
+pub fn prop_check_seeded<F>(name: &str, seed: u64, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut g = Gen { rng: Pcg64::new(seed, case as u64), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        prop_check("true", 50, |g| {
+            let n = g.usize_in(1..=10);
+            if n >= 1 && n <= 10 {
+                Ok(())
+            } else {
+                Err(format!("n={n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'false'")]
+    fn reports_failing_property() {
+        prop_check("false", 50, |g| {
+            let n = g.usize_in(0..=100);
+            if n < 95 {
+                Ok(())
+            } else {
+                Err(format!("n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn multiscale_vec_spans_magnitudes() {
+        let mut any_small = false;
+        let mut any_large = false;
+        prop_check("multiscale", 20, |g| {
+            let xs = g.vec_f64_multiscale(64);
+            any_small |= xs.iter().any(|x| x.abs() < 1e-2 && *x != 0.0);
+            any_large |= xs.iter().any(|x| x.abs() > 1e2);
+            Ok(())
+        });
+        assert!(any_small && any_large);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<usize> = vec![];
+        prop_check("record", 10, |g| {
+            first.push(g.usize_in(0..=1_000_000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = vec![];
+        prop_check("record", 10, |g| {
+            second.push(g.usize_in(0..=1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,265 @@
+//! Deterministic pseudo-random number generation and the statistical
+//! distributions MemIntelli's device models need.
+//!
+//! The container has no access to the `rand`/`rand_distr` crates, so this is
+//! a from-scratch implementation of:
+//! - PCG64 (O'Neill's permuted congruential generator, 128-bit state,
+//!   XSL-RR output) — fast, high-quality, reproducible across platforms;
+//! - uniform, standard normal (Box–Muller with caching), and lognormal
+//!   sampling, the latter parameterized exactly as Eq. (1) of the paper:
+//!   `sigma = sqrt(ln(cv^2 + 1))`, `mu = ln(E[G]) - sigma^2/2`.
+
+/// PCG-XSL-RR-128/64: 128-bit LCG state, 64-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second Box–Muller variate.
+    cached_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams with
+    /// the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64 | 0xda3e_39cb_94b9_5bdb) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc, cached_normal: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Seed-only constructor on the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0x853c_49e6_748f_ea9b)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias is negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (caches the paired variate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Avoid u == 0 so ln(u) is finite.
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with explicit mean / std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal sample with target mean `e_g` and coefficient of variation
+    /// `cv` (std/mean), per Eq. (1) of the paper. Returns `e_g` exactly when
+    /// `cv == 0`.
+    pub fn lognormal_cv(&mut self, e_g: f64, cv: f64) -> f64 {
+        if cv <= 0.0 || e_g <= 0.0 {
+            return e_g;
+        }
+        let (mu, sigma) = lognormal_params(e_g, cv);
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fill a slice with lognormal samples.
+    pub fn fill_lognormal_cv(&mut self, out: &mut [f64], e_g: f64, cv: f64) {
+        if cv <= 0.0 || e_g <= 0.0 {
+            out.fill(e_g);
+            return;
+        }
+        let (mu, sigma) = lognormal_params(e_g, cv);
+        for v in out.iter_mut() {
+            *v = (mu + sigma * self.normal()).exp();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Split off an independent child generator (for per-thread streams).
+    pub fn split(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), stream)
+    }
+}
+
+/// Eq. (1): lognormal `(mu, sigma)` such that the distribution has mean
+/// `e_g` and coefficient of variation `cv`.
+///
+/// `sigma = sqrt(ln(cv^2 + 1))`; we use the exact mean-preserving
+/// `mu = ln(E[G]) - sigma^2 / 2` (the paper prints `- sigma/2`, a typo: the
+/// exact lognormal mean is `exp(mu + sigma^2/2)`).
+#[inline]
+pub fn lognormal_params(e_g: f64, cv: f64) -> (f64, f64) {
+    let sigma = (cv * cv + 1.0).ln().sqrt();
+    let mu = e_g.ln() - sigma * sigma / 2.0;
+    (mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_centered() {
+        let mut rng = Pcg64::seeded(3);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.uniform()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (mean, std) = stats(&xs);
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!((std - (1.0f64 / 12.0).sqrt()).abs() < 0.01, "std={std}");
+    }
+
+    #[test]
+    fn below_is_bounded_and_covers() {
+        let mut rng = Pcg64::seeded(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = rng.below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(5);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.normal()).collect();
+        let (mean, std) = stats(&xs);
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((std - 1.0).abs() < 0.02, "std={std}");
+    }
+
+    #[test]
+    fn lognormal_matches_target_mean_and_cv() {
+        // The device-model contract (Eq. 1): samples should realize the
+        // requested E[G] and cv.
+        let mut rng = Pcg64::seeded(6);
+        for &(e_g, cv) in &[(1e-5, 0.05), (1e-7, 0.2), (2.5e-6, 0.5)] {
+            let xs: Vec<f64> = (0..100_000).map(|_| rng.lognormal_cv(e_g, cv)).collect();
+            let (mean, std) = stats(&xs);
+            assert!(
+                (mean - e_g).abs() / e_g < 0.02,
+                "e_g={e_g} cv={cv} mean={mean}"
+            );
+            assert!(
+                (std / mean - cv).abs() / cv < 0.05,
+                "e_g={e_g} cv={cv} realized_cv={}",
+                std / mean
+            );
+        }
+    }
+
+    #[test]
+    fn lognormal_zero_cv_is_exact() {
+        let mut rng = Pcg64::seeded(7);
+        assert_eq!(rng.lognormal_cv(1e-5, 0.0), 1e-5);
+    }
+
+    #[test]
+    fn lognormal_always_positive() {
+        let mut rng = Pcg64::seeded(8);
+        for _ in 0..10_000 {
+            assert!(rng.lognormal_cv(1e-6, 1.0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Pcg64::seeded(10);
+        let mut a = parent.split(0);
+        let mut b = parent.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration tests across modules: config → engine → layers → training →
+//! evaluation, backend cross-validation, and experiment registry smoke.
+
+use memintelli::apps::kmeans;
+use memintelli::coordinator::SimConfig;
+use memintelli::data::{iris, mnist_like};
+use memintelli::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+use memintelli::nn::models::{lenet5, mlp};
+use memintelli::nn::train::{evaluate, train, TrainConfig};
+use memintelli::nn::HwSpec;
+use memintelli::tensor::Matrix;
+use memintelli::util::config::Doc;
+use memintelli::util::rng::Pcg64;
+
+#[test]
+fn config_to_engine_to_matmul() {
+    // A config file drives an engine that multiplies correctly.
+    let doc = Doc::parse(
+        "[engine]\nvar = 0.0\nnoise_free = true\narray_size = [32, 32]\n[run]\nseed = 5\nmethod = \"fp32\"\n",
+    )
+    .unwrap();
+    let cfg = SimConfig::from_doc(&doc);
+    let engine = cfg.engine();
+    let method = SliceMethod::parse(&cfg.method).unwrap();
+    let mut rng = Pcg64::seeded(5);
+    let a = Matrix::random_normal(48, 40, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(40, 56, 0.0, 1.0, &mut rng);
+    let re = engine.matmul(&a, &b, &method, &method).relative_error(&a.matmul(&b));
+    assert!(re < 1e-5, "config-driven fp32 engine RE {re}");
+}
+
+#[test]
+fn hardware_mlp_trains_on_digits() {
+    // The full training stack on hardware layers: data gen → slicing →
+    // noisy DPE forward → straight-through backward → SGD → update_weight.
+    let data = mnist_like::load(320, 11);
+    let (train_set, test_set) = data.split(256);
+    let hw = HwSpec::uniform(
+        DotProductEngine::new(Default::default(), 11),
+        SliceMethod::int(SliceSpec::int8()),
+    );
+    let mut model = mlp(784, 32, 10, Some(hw), 11);
+    let cfg = TrainConfig { steps: 50, batch_size: 32, lr: 0.1, log_every: 10, seed: 11, ..Default::default() };
+    let logs = train(&mut model, &train_set, &cfg);
+    assert!(
+        logs.last().unwrap().loss < logs.first().unwrap().loss * 0.8,
+        "hardware training must reduce loss: {:?} -> {:?}",
+        logs.first().unwrap().loss,
+        logs.last().unwrap().loss
+    );
+    let acc = evaluate(&mut model, &test_set, 32, 64);
+    assert!(acc > 0.3, "hardware MLP test accuracy {acc}");
+}
+
+#[test]
+fn lenet_digital_vs_hardware_ideal_agree() {
+    // Ideal (noise-free) hardware LeNet must track the digital model.
+    let hw = HwSpec::uniform(
+        DotProductEngine::ideal((64, 64)),
+        SliceMethod::fp(SliceSpec::fp32()),
+    );
+    let mut m_hw = lenet5(Some(hw), 3);
+    let mut m_dig = lenet5(None, 3);
+    let data = mnist_like::load(8, 3);
+    let idx: Vec<usize> = (0..8).collect();
+    let (x, _) = memintelli::nn::train::make_batch(&data, &idx);
+    let y_hw = m_hw.forward(&x, false).to_matrix();
+    let y_dig = m_dig.forward(&x, false).to_matrix();
+    assert!(y_hw.relative_error(&y_dig) < 0.01);
+}
+
+#[test]
+fn state_transfer_preserves_predictions() {
+    // load_state_from moves parameters AND buffers between bindings.
+    let data = mnist_like::load(64, 13);
+    let mut digital = mlp(784, 16, 10, None, 13);
+    let cfg = TrainConfig { steps: 10, batch_size: 16, lr: 0.05, log_every: 5, seed: 13, ..Default::default() };
+    let _ = train(&mut digital, &data, &cfg);
+    let hw = HwSpec::uniform(
+        DotProductEngine::ideal((64, 64)),
+        SliceMethod::fp(SliceSpec::fp32()),
+    );
+    let mut hw_model = mlp(784, 16, 10, Some(hw), 99); // different init seed
+    hw_model.load_state_from(&mut digital);
+    hw_model.update_weight();
+    let idx: Vec<usize> = (0..16).collect();
+    let (x, _) = memintelli::nn::train::make_batch(&data, &idx);
+    let y_d = digital.forward(&x, false).to_matrix();
+    let y_h = hw_model.forward(&x, false).to_matrix();
+    assert!(y_h.relative_error(&y_d) < 0.01, "transfer RE {}", y_h.relative_error(&y_d));
+}
+
+#[test]
+fn kmeans_pipeline_from_dataset() {
+    let ds = iris::load(50, 21);
+    let mut x = Matrix::from_vec(ds.len(), 4, ds.features.clone());
+    kmeans::min_max_normalize(&mut x);
+    let res = kmeans::kmeans(&x, &kmeans::KmeansConfig::default(), None);
+    let acc = kmeans::clustering_accuracy(&res.assignments, &ds.labels, 3);
+    assert!(acc > 0.8, "end-to-end clustering accuracy {acc}");
+}
+
+#[test]
+fn xla_and_native_backends_agree_when_artifacts_present() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("dpe_mm_128x128x128_int8_ideal.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = memintelli::runtime::Runtime::cpu(&dir).unwrap();
+    let xd = memintelli::runtime::XlaDpe::new(rt);
+    let mut rng = Pcg64::seeded(31);
+    let a = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+    let xla = xd.matmul(&a, &b, "int8", true, 0).unwrap();
+    let native = DotProductEngine::ideal((64, 64)).matmul(
+        &a,
+        &b,
+        &SliceMethod::int(SliceSpec::int8()),
+        &SliceMethod::int(SliceSpec::int8()),
+    );
+    assert!(xla.relative_error(&native) < 0.01);
+}
+
+#[test]
+fn mixed_precision_model_runs_and_trains() {
+    // Fig 9: per-layer engines — first layer INT8 hardware, second digital.
+    let mut rng = Pcg64::new(17, 0);
+    let hw = HwSpec::uniform(
+        DotProductEngine::new(Default::default(), 17),
+        SliceMethod::int(SliceSpec::int8()),
+    );
+    let mut model = memintelli::nn::Sequential::new(vec![
+        Box::new(memintelli::nn::layers::Flatten::new()),
+        Box::new(memintelli::nn::layers::LinearMem::new(784, 24, Some(hw), &mut rng)),
+        Box::new(memintelli::nn::layers::Relu::new()),
+        Box::new(memintelli::nn::layers::LinearMem::new(24, 10, None, &mut rng)),
+    ]);
+    let data = mnist_like::load(128, 17);
+    let cfg = TrainConfig { steps: 20, batch_size: 16, lr: 0.05, log_every: 5, seed: 17, ..Default::default() };
+    let logs = train(&mut model, &data, &cfg);
+    assert!(logs.last().unwrap().loss.is_finite());
+    assert!(logs.last().unwrap().loss < logs.first().unwrap().loss);
+}
