@@ -1,11 +1,147 @@
-//! Bench: regenerates the paper's table3_throughput artifact at full scale.
-//! Run: `cargo bench --bench table3_throughput`  (all benches: `cargo bench`)
+//! Bench: regenerates the paper's table3_throughput artifact at full scale
+//! **and** emits `BENCH_table3.json`, the machine-readable perf-trajectory
+//! record for the DPE hot path (the fused slice-plane GEMM pipeline in
+//! `dpe::engine`). Compare the JSON across commits to track the
+//! `matmul_prepared` throughput: the headline case is INT8 on 64×64 arrays
+//! with batch 128 and a reused `PreparedWeights` (prepared-weight reuse is
+//! exactly the NN training/inference hot loop).
+//!
+//! Run: `cargo bench --bench table3_throughput`
+//! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench table3_throughput`
+//! (smaller iteration counts, quick-scale experiment).
 
 use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::tensor::Matrix;
+use memintelli::util::report::{time_it, Timing};
+use memintelli::util::rng::Pcg64;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+struct Case {
+    name: &'static str,
+    method_name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    arrays_used: usize,
+    prepare_s: f64,
+    timing: Timing,
+}
+
+/// Time `matmul_prepared` against weights programmed once (the reuse path).
+fn bench_prepared(
+    name: &'static str,
+    method_name: &'static str,
+    method: SliceMethod,
+    (m, k, n): (usize, usize, usize),
+    iters: usize,
+) -> Case {
+    // Table-2 defaults: 64×64 arrays, noisy device, worst-case ADC.
+    let engine = DotProductEngine::new(DpeConfig::default(), 2024);
+    let mut rng = Pcg64::seeded(7);
+    let a = Matrix::random_normal(m, k, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(k, n, 0.0, 1.0, &mut rng);
+    let t0 = Instant::now();
+    let w = engine.prepare_weights(&b, &method, 0);
+    let prepare_s = t0.elapsed().as_secs_f64();
+    let timing = time_it(1, iters, || {
+        let _ = engine.matmul_prepared(&a, &w, &method, 0);
+    });
+    Case { name, method_name, m, k, n, arrays_used: w.arrays_used(), prepare_s, timing }
+}
+
+fn emit_json(cases: &[Case], smoke: bool, total_s: f64) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"table3_throughput\",\n");
+    out.push_str("  \"pipeline\": \"fused-slice-plane-gemm\",\n");
+    let _ = writeln!(out, "  \"smoke\": {smoke},");
+    let _ = writeln!(out, "  \"total_s\": {total_s:.3},");
+    out.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        // GFLOP/s-equivalent of the logical GEMM the DPE emulates.
+        let flops = 2.0 * (c.m * c.k * c.n) as f64;
+        let _ = write!(
+            out,
+            "    {{\"name\": \"{}\", \"method\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+             \"arrays_used\": {}, \"iters\": {}, \"prepare_s\": {:.6}, \
+             \"wall_s_mean\": {:.6}, \"wall_s_min\": {:.6}, \
+             \"matmuls_per_s\": {:.3}, \"gflops_equiv\": {:.4}}}",
+            c.name,
+            c.method_name,
+            c.m,
+            c.k,
+            c.n,
+            c.arrays_used,
+            c.timing.iters,
+            c.prepare_s,
+            c.timing.mean_s,
+            c.timing.min_s,
+            1.0 / c.timing.mean_s,
+            flops / c.timing.mean_s / 1e9,
+        );
+        out.push_str(if i + 1 < cases.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
 
 fn main() {
+    let smoke = std::env::var("MEMINTELLI_BENCH_SMOKE").is_ok();
+    let iters = if smoke { 3 } else { 10 };
+    let t0 = Instant::now();
+
+    let cases = vec![
+        // Headline perf-acceptance case: INT8, 64×64 arrays, batch 128,
+        // reused PreparedWeights.
+        bench_prepared(
+            "matmul_prepared_int8_64x64_b128",
+            "int8",
+            SliceMethod::int(SliceSpec::int8()),
+            (128, 512, 512),
+            iters,
+        ),
+        // FP16 (5 slices/operand): larger fusion factor, bigger win.
+        bench_prepared(
+            "matmul_prepared_fp16_64x64_b128",
+            "fp16",
+            SliceMethod::fp(SliceSpec::fp16()),
+            (128, 512, 512),
+            iters,
+        ),
+        // Small-operand dispatch-overhead probe (LeNet-layer sized).
+        bench_prepared(
+            "matmul_prepared_int8_64x64_b32_small",
+            "int8",
+            SliceMethod::int(SliceSpec::int8()),
+            (32, 256, 120),
+            iters,
+        ),
+    ];
+
+    for c in &cases {
+        println!(
+            "[{}] {}x{}x{} {}: prepare {:.1} ms, matmul mean {:.2} ms ({:.1}/s, {:.2} GFLOP/s-equiv)",
+            c.name,
+            c.m,
+            c.k,
+            c.n,
+            c.method_name,
+            c.prepare_s * 1e3,
+            c.timing.mean_s * 1e3,
+            1.0 / c.timing.mean_s,
+            2.0 * (c.m * c.k * c.n) as f64 / c.timing.mean_s / 1e9,
+        );
+    }
+
+    // Paper artifact: the end-to-end inference-throughput table.
     let cfg = SimConfig::default();
-    let t0 = std::time::Instant::now();
-    run_experiment("table3_throughput", &cfg, Scale::Full).expect("experiment failed");
-    println!("\n[table3_throughput] total {:.1} s", t0.elapsed().as_secs_f64());
+    let scale = if smoke { Scale::Quick } else { Scale::Full };
+    run_experiment("table3_throughput", &cfg, scale).expect("experiment failed");
+
+    let json = emit_json(&cases, smoke, t0.elapsed().as_secs_f64());
+    std::fs::write("BENCH_table3.json", &json).expect("writing BENCH_table3.json");
+    println!("\nwrote BENCH_table3.json");
+    println!("[table3_throughput] total {:.1} s", t0.elapsed().as_secs_f64());
 }

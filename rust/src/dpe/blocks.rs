@@ -59,6 +59,21 @@ impl MatmulBlocks {
     pub fn arrays_per_slice(&self) -> usize {
         self.k.count() * self.n.count()
     }
+
+    /// Total `(k-block, n-block)` array pairs — the flat task count of the
+    /// fused matmul pipeline (alias of [`Self::arrays_per_slice`], named
+    /// for the scheduling view).
+    pub fn pair_count(&self) -> usize {
+        self.arrays_per_slice()
+    }
+
+    /// Decompose a flat pair index into `(kb, nb)`; pairs are laid out
+    /// row-major over n-blocks, matching the `kb * n_count + nb` block
+    /// storage order of `PreparedWeights`.
+    pub fn pair(&self, idx: usize) -> (usize, usize) {
+        let nc = self.n.count();
+        (idx / nc, idx % nc)
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +116,16 @@ mod tests {
     #[should_panic(expected = "block size")]
     fn zero_block_rejected() {
         BlockDim::new(10, 0);
+    }
+
+    #[test]
+    fn pair_indexing_roundtrip() {
+        let b = MatmulBlocks::new(130, 200, (64, 64));
+        assert_eq!(b.pair_count(), 3 * 4);
+        for idx in 0..b.pair_count() {
+            let (kb, nb) = b.pair(idx);
+            assert!(kb < b.k.count() && nb < b.n.count());
+            assert_eq!(kb * b.n.count() + nb, idx);
+        }
     }
 }

@@ -8,9 +8,10 @@
 //! 3. program every weight digit plane onto a (noisy) crossbar array via
 //!    the device model — lognormal conductance variation, `g_levels`
 //!    discrete states;
-//! 4. for each (input-slice, weight-slice) pair run the analog MVM —
-//!    ideal Ohm/Kirchhoff dot product, or the full IR-drop circuit solve
-//!    when `use_circuit` is set — and quantize the readout with the ADC;
+//! 4. for each input slice run the analog MVM against **all** weight digit
+//!    planes at once (fused slice-plane GEMM, see §Perf) — or the full
+//!    IR-drop circuit solve per plane when `use_circuit` is set — and
+//!    quantize each plane's readout with the ADC;
 //! 5. recombine partials with signed shift-and-add weights and the block
 //!    scales.
 //!
@@ -18,14 +19,55 @@
 //! NN layers can slice+program once per weight update and reuse across
 //! batches, matching the paper's "sliced copy of the weight saved as an
 //! attribute in the computing graph".
+//!
+//! # §Perf — the fused slice-plane GEMM pipeline
+//!
+//! The hot path of every workload (NN training/inference, the solver, CWT,
+//! k-means) bottoms out in [`DotProductEngine::matmul_prepared`]. The
+//! original implementation issued one small `Matrix::matmul` per
+//! (input-slice × weight-slice × array-block) triple with a fresh heap
+//! allocation per partial — `S_a · S_w` malloc-heavy micro-GEMMs per block,
+//! which for int8/fp16 specs (4–5 slices per operand) meant 16–25 dispatches
+//! where one suffices.
+//!
+//! The fused pipeline restructures this:
+//!
+//! - **Prepare time** ([`DotProductEngine::prepare_weights`]): each block's
+//!   `S_w` programmed digit planes are column-stacked into one contiguous
+//!   `l_m × (S_w·l_n)` matrix and packed into GEMM panels
+//!   ([`crate::tensor::PackedB`]) **once per prepared-weight lifetime** —
+//!   the packing is amortized over every batch/epoch that reuses the
+//!   weights, and only the packed form is retained (cold paths unpack the
+//!   stripe they need).
+//! - **Matmul time**: each input slice needs a single packed GEMM
+//!   ([`crate::tensor::matmul_packed_into`]) producing the partials of all
+//!   `S_w` weight slices as column stripes of one fused output buffer. ADC
+//!   quantization and signed shift-add recombination then operate on those
+//!   stripes in place. The fused output scratch is allocated once per
+//!   (k-block, n-block) task and reused across input slices, eliminating
+//!   the per-pair `Matrix::zeros` churn.
+//! - **Scheduling**: when there are several array pairs with real work the
+//!   pairs run on the lock-free `par_map` pool (GEMMs serial inside); a
+//!   single big pair instead row-band-parallelizes its fused GEMM via
+//!   `par_chunks_mut` — one level of parallelism either way, no nested
+//!   spawn.
+//!
+//! The retained per-slice-pair implementation
+//! (`matmul_prepared_reference`, compiled under `#[cfg(test)]`) is the
+//! correctness oracle: both paths accumulate every output element along
+//! ascending `k` in the same (sa, sw) order with the same ADC arithmetic,
+//! so the fused pipeline is asserted **bit-identical** across slice specs,
+//! ADC policies, and ragged shapes. The win is purely architectural: one
+//! well-shaped GEMM per (input-slice, block) instead of `S_w` tiny ones,
+//! measured by `benches/table3_throughput.rs` (`BENCH_table3.json`).
 
 use super::blocks::MatmulBlocks;
 use super::quant::Adc;
-use super::slicing::{quantize_block, slice_digits, DataMode, SliceSpec};
+use super::slicing::{quantize_block, slice_digits, DataMode, SliceSpec, SliceTables};
 use crate::circuit::CrossbarCircuit;
 use crate::device::DeviceSpec;
-use crate::tensor::Matrix;
-use crate::util::parallel::par_map;
+use crate::tensor::{matmul_packed_into, matmul_packed_rows_into, Matrix, PackedB};
+use crate::util::parallel::{par_chunks_mut, par_map};
 use crate::util::rng::Pcg64;
 
 /// A slice method: spec + how continuous data becomes integers.
@@ -123,13 +165,27 @@ impl Default for DpeConfig {
     }
 }
 
-/// One weight block programmed on hardware: per-slice *analog* digit
-/// matrices (noise applied) plus the block's recovery scale.
+/// One weight block programmed on hardware: the `S_w` analog digit planes
+/// (noise applied) column-stacked into one fused `l_m × (S_w·l_n)` matrix
+/// and kept **only** in packed-panel form (the dense fused matrix is a
+/// packing-time temporary — retaining both would double prepared-weight
+/// memory), plus the block's recovery scale.
 #[derive(Debug, Clone)]
 struct PreparedBlock {
-    /// `num_slices` matrices of `l_m × l_n` analog digit values.
-    slices: Vec<Matrix>,
+    /// Column-panel packing of the fused digit planes (columns
+    /// `[s·l_n, (s+1)·l_n)` hold weight slice `s`), built once per
+    /// programming and reused by every `matmul_prepared` call.
+    packed: PackedB,
     scale: f64,
+}
+
+impl PreparedBlock {
+    /// Materialize one weight-slice digit plane (a column stripe of the
+    /// fused matrix, unpacked from the panels) — cold paths only: the
+    /// circuit solver and the test oracle.
+    fn plane(&self, s: usize, l_n: usize) -> Matrix {
+        self.packed.unpack_cols(s * l_n, l_n)
+    }
 }
 
 /// A weight matrix sliced, blocked, and programmed onto arrays.
@@ -156,6 +212,67 @@ impl PreparedWeights {
     }
 }
 
+/// One k-block of the input, quantized and sliced once per call and shared
+/// across all n-blocks of the weight.
+struct InputBlock {
+    /// `S_a` digit planes of `m × l_m`.
+    slices: Vec<Matrix>,
+    scale: f64,
+}
+
+/// Per-call precomputed tables shared by the fused, circuit, and (test)
+/// reference matmul paths: the slice tables of both operands plus the
+/// combined per-(sa, sw) recombination weights and worst-case ADC ranges —
+/// hoisted out of the inner loops instead of being re-derived per pair.
+struct SlicePairPlan {
+    a: SliceTables,
+    w: SliceTables,
+    /// `pair_weight[sa·S_w + sw] = a.weights[sa] · w.weights[sw]`.
+    pair_weight: Vec<f64>,
+    /// `worst_scale[sa·S_w + sw] = rows · a_max[sa] · w_max[sw]`.
+    worst_scale: Vec<f64>,
+}
+
+impl SlicePairPlan {
+    fn new(rows: usize, a_spec: &SliceSpec, w_spec: &SliceSpec) -> Self {
+        let a = a_spec.tables();
+        let w = w_spec.tables();
+        let (sa_n, sw_n) = (a.num_slices(), w.num_slices());
+        let mut pair_weight = Vec::with_capacity(sa_n * sw_n);
+        let mut worst_scale = Vec::with_capacity(sa_n * sw_n);
+        for sa in 0..sa_n {
+            for sw in 0..sw_n {
+                pair_weight.push(a.weights[sa] * w.weights[sw]);
+                worst_scale.push(rows as f64 * a.max_digit[sa] * w.max_digit[sw]);
+            }
+        }
+        SlicePairPlan { a, w, pair_weight, worst_scale }
+    }
+
+    #[inline]
+    fn idx(&self, sa: usize, sw: usize) -> usize {
+        sa * self.w.num_slices() + sw
+    }
+}
+
+/// Geometry of one weight-slice stripe inside a row-major scratch buffer:
+/// `rows` rows of `width` values starting at column `c0` with `stride`
+/// values per row.
+#[derive(Clone, Copy)]
+struct Stripe {
+    rows: usize,
+    stride: usize,
+    c0: usize,
+    width: usize,
+}
+
+impl Stripe {
+    /// A stripe covering a whole contiguous `rows × width` buffer.
+    fn contiguous(rows: usize, width: usize) -> Stripe {
+        Stripe { rows, stride: width, c0: 0, width }
+    }
+}
+
 /// The hardware dot-product engine.
 #[derive(Debug, Clone)]
 pub struct DotProductEngine {
@@ -178,39 +295,42 @@ impl DotProductEngine {
         )
     }
 
-    /// Program `b` onto crossbar arrays with `method` (steps 1–3 above).
-    /// `tag` decorrelates the programming noise between calls (e.g. Monte
-    /// Carlo cycle index).
+    /// Program `b` onto crossbar arrays with `method` (steps 1–3 above):
+    /// quantize + slice each block, program every digit plane through the
+    /// device model, column-stack the planes into the fused matrix, and
+    /// pack it once for the GEMM micro-kernel (§Perf).
     pub fn prepare_weights(&self, b: &Matrix, method: &SliceMethod, tag: u64) -> PreparedWeights {
         let grid = MatmulBlocks::new(b.rows, b.cols, self.cfg.array);
-        let (kc, nc) = (grid.k.count(), grid.n.count());
-        let max_digits: Vec<f64> =
-            method.spec.widths.iter().map(|&w| ((1u64 << w) - 1) as f64).collect();
+        let w_tables = method.spec.tables();
         assert!(
-            max_digits.iter().all(|&d| d <= self.cfg.device.max_digit() as f64),
+            w_tables.max_digit.iter().all(|&d| d <= self.cfg.device.max_digit() as f64),
             "slice width exceeds device g_levels={}",
             self.cfg.device.g_levels
         );
-        let blocks: Vec<PreparedBlock> = par_map(kc * nc, |blk| {
-            let (kb, nb) = (blk / nc, blk % nc);
+        let (l_m, l_n) = self.cfg.array;
+        let n_slices = method.spec.num_slices();
+        let blocks: Vec<PreparedBlock> = par_map(grid.pair_count(), |blk| {
+            let (kb, nb) = grid.pair(blk);
             let (k0, kl) = grid.k.range(kb);
             let (n0, nl) = grid.n.range(nb);
             // Pad short edge blocks to the full array size with zeros.
-            let sub = b.block(k0, n0, kl, nl).pad_to(self.cfg.array.0, self.cfg.array.1);
+            let sub = b.block(k0, n0, kl, nl).pad_to(l_m, l_n);
             let qb = quantize_block(&sub, &method.spec, method.mode);
             let digit_planes = slice_digits(&qb.q, &method.spec);
             let mut rng = Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), blk as u64);
-            let slices = digit_planes
-                .into_iter()
-                .map(|plane| {
-                    if self.cfg.noise_free {
-                        plane
-                    } else {
-                        self.program_plane(&plane, &mut rng)
-                    }
-                })
-                .collect();
-            PreparedBlock { slices, scale: qb.scale }
+            let mut fused = Matrix::zeros(l_m, n_slices * l_n);
+            for (s, plane) in digit_planes.into_iter().enumerate() {
+                let programmed = if self.cfg.noise_free {
+                    plane
+                } else {
+                    self.program_plane(&plane, &mut rng)
+                };
+                for r in 0..l_m {
+                    let dst = r * n_slices * l_n + s * l_n;
+                    fused.data[dst..dst + l_n].copy_from_slice(programmed.row(r));
+                }
+            }
+            PreparedBlock { packed: PackedB::pack(&fused), scale: qb.scale }
         });
         PreparedWeights { blocks, grid, method: method.clone(), k: b.rows, n: b.cols }
     }
@@ -251,8 +371,22 @@ impl DotProductEngine {
         self.matmul(a, b, &SliceMethod::fp(a_spec.clone()), &SliceMethod::fp(b_spec.clone()))
     }
 
+    /// Quantize + slice each k-block of the input once (shared across all
+    /// n-blocks).
+    fn slice_input(&self, a: &Matrix, grid: &MatmulBlocks, a_med: &SliceMethod) -> Vec<InputBlock> {
+        let m = a.rows;
+        let l_m = self.cfg.array.0;
+        par_map(grid.k.count(), |kb| {
+            let (k0, kl) = grid.k.range(kb);
+            let sub = a.block(0, k0, m, kl).pad_to(m, l_m);
+            let qb = quantize_block(&sub, &a_med.spec, a_med.mode);
+            InputBlock { slices: slice_digits(&qb.q, &a_med.spec), scale: qb.scale }
+        })
+    }
+
     /// Matmul against pre-programmed weights (the NN hot path). `tag`
-    /// decorrelates read noise between calls.
+    /// decorrelates read noise between calls. See module §Perf for the
+    /// fused slice-plane pipeline this dispatches into.
     pub fn matmul_prepared(
         &self,
         a: &Matrix,
@@ -263,77 +397,226 @@ impl DotProductEngine {
         assert_eq!(a.cols, w.k, "matmul dim mismatch: a is {}x{}, weights are {}x{}", a.rows, a.cols, w.k, w.n);
         let grid = w.grid;
         let (m, n) = (a.rows, w.n);
-        let (kc, nc) = (grid.k.count(), grid.n.count());
+        let nc = grid.n.count();
+        let (l_m, l_n) = self.cfg.array;
         let adc = Adc::new(self.cfg.radc);
-        let a_spec = &a_med.spec;
-        let w_spec = &w.method.spec;
-        let a_weights: Vec<f64> = (0..a_spec.num_slices()).map(|i| a_spec.weight(i)).collect();
-        let w_weights: Vec<f64> = (0..w_spec.num_slices()).map(|i| w_spec.weight(i)).collect();
-        let a_max: Vec<f64> =
-            a_spec.widths.iter().map(|&wd| ((1u64 << wd) - 1) as f64).collect();
-        let w_max: Vec<f64> =
-            w_spec.widths.iter().map(|&wd| ((1u64 << wd) - 1) as f64).collect();
+        let plan = SlicePairPlan::new(l_m, &a_med.spec, &w.method.spec);
+        let a_blocks = self.slice_input(a, &grid, a_med);
 
-        // Quantize + slice each k-block of the input once (shared across
-        // all n-blocks).
-        struct InputBlock {
-            slices: Vec<Matrix>, // m × l_m digit planes
-            scale: f64,
-        }
-        let a_blocks: Vec<InputBlock> = par_map(kc, |kb| {
-            let (k0, kl) = grid.k.range(kb);
-            let sub = a.block(0, k0, m, kl).pad_to(m, self.cfg.array.0);
-            let qb = quantize_block(&sub, a_spec, a_med.mode);
-            InputBlock { slices: slice_digits(&qb.q, a_spec), scale: qb.scale }
-        });
+        // Parallelize across (kb, nb) array pairs when each carries real
+        // work; a lone big pair instead band-parallelizes its fused GEMM
+        // inside `pair_contribution_fused` — one level of parallelism
+        // either way, no nested spawn (§Perf).
+        let per_pair_work =
+            m * l_m * l_n * plan.a.num_slices() * plan.w.num_slices();
+        let tasks = grid.pair_count();
+        let across_pairs = tasks >= 2 && per_pair_work >= (1 << 19);
+        let band_parallel = !across_pairs;
 
-        // Column-block outputs accumulate independently → parallel over nb
-        // when there are enough blocks to amortize thread spawn; otherwise
-        // serial here and the inner matmuls parallelize themselves for
-        // large m (§Perf).
-        let nb_work = m * self.cfg.array.0 * self.cfg.array.1
-            * a_spec.num_slices() * w_spec.num_slices() * kc;
-        let _ = nb_work;
-        // One task per (kb, nb) array-pair: returns the scaled block
+        // One task per (kb, nb) array pair: returns the scaled block
         // contribution; per-nb reduction afterwards is cheap.
         let pair_body = |task: usize| -> Matrix {
-            let (kb, nb) = (task / nc, task % nc);
-            {
+            let (kb, nb) = grid.pair(task);
+            let ab = &a_blocks[kb];
+            let wb = &w.blocks[kb * nc + nb];
+            if ab.scale == 0.0 || wb.scale == 0.0 {
+                return Matrix::zeros(m, l_n);
+            }
+            if self.cfg.use_circuit {
+                self.pair_contribution_circuit(ab, wb, &plan, &adc)
+            } else {
+                self.pair_contribution_fused(ab, wb, &plan, &adc, band_parallel)
+            }
+        };
+        let pair_results: Vec<Matrix> = if across_pairs {
+            par_map(tasks, pair_body)
+        } else {
+            (0..tasks).map(pair_body).collect()
+        };
+
+        let out = assemble_output(&grid, m, n, l_n, &pair_results);
+        // Read-noise decorrelation tag is consumed implicitly by weight
+        // programming; keep the parameter for future per-read noise.
+        let _ = tag;
+        out
+    }
+
+    /// The fused slice-plane contribution of one (k-block, n-block) array
+    /// pair: one packed GEMM per input slice producing all `S_w`
+    /// weight-slice partials as column stripes, ADC'd and recombined in
+    /// place. The fused scratch is allocated once and reused across input
+    /// slices (§Perf).
+    fn pair_contribution_fused(
+        &self,
+        ab: &InputBlock,
+        wb: &PreparedBlock,
+        plan: &SlicePairPlan,
+        adc: &Adc,
+        band_parallel: bool,
+    ) -> Matrix {
+        let l_n = self.cfg.array.1;
+        let m = ab.slices[0].rows;
+        let sw_n = plan.w.num_slices();
+        let wide = sw_n * l_n;
+        let mut block_acc = Matrix::zeros(m, l_n);
+        let mut fused_out = vec![0.0f64; m * wide];
+        for (sa, a_plane) in ab.slices.iter().enumerate() {
+            let l_m = a_plane.cols;
+            if band_parallel && m * l_m * wide >= (1 << 21) {
+                const BAND: usize = 32;
+                par_chunks_mut(&mut fused_out, BAND * wide, |bi, chunk| {
+                    matmul_packed_rows_into(a_plane, bi * BAND, chunk.len() / wide, &wb.packed, chunk);
+                });
+            } else {
+                matmul_packed_into(a_plane, &wb.packed, &mut fused_out);
+            }
+            if !self.cfg.noise_free {
+                for sw in 0..sw_n {
+                    let stripe = Stripe { rows: m, stride: wide, c0: sw * l_n, width: l_n };
+                    self.adc_readout(adc, &mut fused_out, stripe, plan.worst_scale[plan.idx(sa, sw)]);
+                }
+            }
+            // Shift-add recombination over the stripes, in the same
+            // (sa, sw) order as the per-pair reference → bit-identical
+            // accumulation.
+            for sw in 0..sw_n {
+                let wgt = plan.pair_weight[plan.idx(sa, sw)];
+                for i in 0..m {
+                    let src = &fused_out[i * wide + sw * l_n..i * wide + (sw + 1) * l_n];
+                    let dst = &mut block_acc.data[i * l_n..(i + 1) * l_n];
+                    for (o, &p) in dst.iter_mut().zip(src) {
+                        *o += wgt * p;
+                    }
+                }
+            }
+        }
+        let s = ab.scale * wb.scale;
+        for v in block_acc.data.iter_mut() {
+            *v *= s;
+        }
+        block_acc
+    }
+
+    /// Per-plane contribution of one array pair through the IR-drop
+    /// circuit solver (the `use_circuit` path keeps the per-slice-pair
+    /// structure: the circuit solve itself is the bottleneck there, not
+    /// GEMM dispatch).
+    fn pair_contribution_circuit(
+        &self,
+        ab: &InputBlock,
+        wb: &PreparedBlock,
+        plan: &SlicePairPlan,
+        adc: &Adc,
+    ) -> Matrix {
+        let l_n = self.cfg.array.1;
+        let m = ab.slices[0].rows;
+        let sw_n = plan.w.num_slices();
+        let mut block_acc = Matrix::zeros(m, l_n);
+        // Unpack each weight plane once per pair (not once per slice pair).
+        let w_planes: Vec<Matrix> = (0..sw_n).map(|sw| wb.plane(sw, l_n)).collect();
+        for (sa, a_plane) in ab.slices.iter().enumerate() {
+            for (sw, w_plane) in w_planes.iter().enumerate() {
+                let mut partial = self.circuit_mvm(a_plane, w_plane, plan.a.max_digit[sa]);
+                if !self.cfg.noise_free {
+                    self.adc_readout(
+                        adc,
+                        &mut partial.data,
+                        Stripe::contiguous(m, l_n),
+                        plan.worst_scale[plan.idx(sa, sw)],
+                    );
+                }
+                let wgt = plan.pair_weight[plan.idx(sa, sw)];
+                for (o, &p) in block_acc.data.iter_mut().zip(&partial.data) {
+                    *o += wgt * p;
+                }
+            }
+        }
+        let s = ab.scale * wb.scale;
+        for v in block_acc.data.iter_mut() {
+            *v *= s;
+        }
+        block_acc
+    }
+
+    /// Apply the configured ADC policy to one readout stripe in place.
+    fn adc_readout(&self, adc: &Adc, data: &mut [f64], stripe: Stripe, worst: f64) {
+        match self.cfg.adc_policy {
+            AdcPolicy::WorstCase => {
+                let q = adc.for_full_scale(worst);
+                for i in 0..stripe.rows {
+                    let s = i * stripe.stride + stripe.c0;
+                    q.quantize_slice(&mut data[s..s + stripe.width]);
+                }
+            }
+            AdcPolicy::Calibrated | AdcPolicy::IntegerSnap => {
+                let mut peak = 0.0f64;
+                for i in 0..stripe.rows {
+                    let s = i * stripe.stride + stripe.c0;
+                    for &v in &data[s..s + stripe.width] {
+                        peak = peak.max(v);
+                    }
+                }
+                let mut step = peak / (self.cfg.radc as f64 - 1.0);
+                if self.cfg.adc_policy == AdcPolicy::IntegerSnap {
+                    step = step.max(1.0);
+                }
+                if step > 0.0 {
+                    for i in 0..stripe.rows {
+                        let s = i * stripe.stride + stripe.c0;
+                        for v in data[s..s + stripe.width].iter_mut() {
+                            *v = (*v / step).round().max(0.0) * step;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reference per-slice-pair implementation — the pre-fusion pipeline,
+    /// retained as the correctness oracle: the fused path must be
+    /// bit-identical to this for every spec/policy/shape.
+    #[cfg(test)]
+    pub(crate) fn matmul_prepared_reference(
+        &self,
+        a: &Matrix,
+        w: &PreparedWeights,
+        a_med: &SliceMethod,
+        tag: u64,
+    ) -> Matrix {
+        assert_eq!(a.cols, w.k, "matmul dim mismatch");
+        let grid = w.grid;
+        let (m, n) = (a.rows, w.n);
+        let nc = grid.n.count();
+        let (l_m, l_n) = self.cfg.array;
+        let adc = Adc::new(self.cfg.radc);
+        let plan = SlicePairPlan::new(l_m, &a_med.spec, &w.method.spec);
+        let a_blocks = self.slice_input(a, &grid, a_med);
+        let pair_results: Vec<Matrix> = (0..grid.pair_count())
+            .map(|task| {
+                let (kb, nb) = grid.pair(task);
                 let ab = &a_blocks[kb];
                 let wb = &w.blocks[kb * nc + nb];
                 if ab.scale == 0.0 || wb.scale == 0.0 {
-                    return Matrix::zeros(m, self.cfg.array.1);
+                    return Matrix::zeros(m, l_n);
                 }
-                let mut block_acc = Matrix::zeros(m, self.cfg.array.1);
+                let mut block_acc = Matrix::zeros(m, l_n);
                 for (sa, a_plane) in ab.slices.iter().enumerate() {
-                    for (sw, w_plane) in wb.slices.iter().enumerate() {
+                    for sw in 0..plan.w.num_slices() {
+                        let w_plane = wb.plane(sw, l_n);
                         let mut partial = if self.cfg.use_circuit {
-                            self.circuit_mvm(a_plane, w_plane, a_max[sa])
+                            self.circuit_mvm(a_plane, &w_plane, plan.a.max_digit[sa])
                         } else {
-                            a_plane.matmul(w_plane)
+                            a_plane.matmul(&w_plane)
                         };
                         if !self.cfg.noise_free {
-                            // ADC full scale for this slice pair's readout.
-                            let worst = self.cfg.array.0 as f64 * a_max[sa] * w_max[sw];
-                            match self.cfg.adc_policy {
-                                AdcPolicy::WorstCase => {
-                                    adc.for_full_scale(worst).quantize_slice(&mut partial.data);
-                                }
-                                AdcPolicy::Calibrated | AdcPolicy::IntegerSnap => {
-                                    let peak = partial.data.iter().fold(0.0f64, |m, &v| m.max(v));
-                                    let mut step = peak / (self.cfg.radc as f64 - 1.0);
-                                    if self.cfg.adc_policy == AdcPolicy::IntegerSnap {
-                                        step = step.max(1.0);
-                                    }
-                                    if step > 0.0 {
-                                        for v in partial.data.iter_mut() {
-                                            *v = (*v / step).round().max(0.0) * step;
-                                        }
-                                    }
-                                }
-                            }
+                            self.adc_readout(
+                                &adc,
+                                &mut partial.data,
+                                Stripe::contiguous(m, l_n),
+                                plan.worst_scale[plan.idx(sa, sw)],
+                            );
                         }
-                        let wgt = a_weights[sa] * w_weights[sw];
+                        let wgt = plan.pair_weight[plan.idx(sa, sw)];
                         for (o, &p) in block_acc.data.iter_mut().zip(&partial.data) {
                             *o += wgt * p;
                         }
@@ -344,33 +627,9 @@ impl DotProductEngine {
                     *v *= s;
                 }
                 block_acc
-            }
-        };
-        // Parallelize across all (kb, nb) array-pairs when each carries
-        // real work; the inner matmuls stay serial below their own
-        // threshold, so there is no nested spawn (§Perf).
-        let per_pair_work =
-            m * self.cfg.array.0 * self.cfg.array.1 * a_spec.num_slices() * w_spec.num_slices();
-        let tasks = kc * nc;
-        let pair_results: Vec<Matrix> = if tasks >= 2 && per_pair_work >= (1 << 19) {
-            par_map(tasks, pair_body)
-        } else {
-            (0..tasks).map(pair_body).collect()
-        };
-
-        let mut out = Matrix::zeros(m, n);
-        for nb in 0..nc {
-            let (n0, nl) = grid.n.range(nb);
-            let mut acc = Matrix::zeros(m, self.cfg.array.1);
-            for kb in 0..kc {
-                for (o, &p) in acc.data.iter_mut().zip(&pair_results[kb * nc + nb].data) {
-                    *o += p;
-                }
-            }
-            out.set_block_clipped(0, n0, &acc.block(0, 0, m, nl));
-        }
-        // Read-noise decorrelation tag is consumed implicitly by weight
-        // programming; keep the parameter for future per-read noise.
+            })
+            .collect();
+        let out = assemble_output(&grid, m, n, l_n, &pair_results);
         let _ = tag;
         out
     }
@@ -406,6 +665,30 @@ impl DotProductEngine {
     pub fn relative_error(&self, a: &Matrix, b: &Matrix, a_med: &SliceMethod, b_med: &SliceMethod) -> f64 {
         self.matmul(a, b, a_med, b_med).relative_error(&a.matmul(b))
     }
+}
+
+/// Reduce per-pair block contributions into the `m × n` output: sum over
+/// k-blocks per column block, then un-pad into place.
+fn assemble_output(
+    grid: &MatmulBlocks,
+    m: usize,
+    n: usize,
+    l_n: usize,
+    pair_results: &[Matrix],
+) -> Matrix {
+    let (kc, nc) = (grid.k.count(), grid.n.count());
+    let mut out = Matrix::zeros(m, n);
+    for nb in 0..nc {
+        let (n0, nl) = grid.n.range(nb);
+        let mut acc = Matrix::zeros(m, l_n);
+        for kb in 0..kc {
+            for (o, &p) in acc.data.iter_mut().zip(&pair_results[kb * nc + nb].data) {
+                *o += p;
+            }
+        }
+        out.set_block_clipped(0, n0, &acc.block(0, 0, m, nl));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -541,6 +824,75 @@ mod tests {
             assert_eq!((r.rows, r.cols), (m, n));
             assert!(r.relative_error(&a.matmul(&b)) < 0.02, "{m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn fused_pipeline_bit_identical_to_reference_oracle() {
+        // Tentpole invariant: the fused slice-plane GEMM pipeline must
+        // reproduce the retained per-slice-pair oracle bit for bit —
+        // noise-free and seeded-noise, every ADC policy, INT and FP specs,
+        // and ragged shapes that exercise edge-block padding.
+        let shapes = [(5usize, 100usize, 37usize), (12, 64, 64), (3, 65, 130), (1, 1, 1)];
+        let methods = [
+            SliceMethod::int(SliceSpec::int4()),
+            SliceMethod::int(SliceSpec::int8()),
+            SliceMethod::fp(SliceSpec::fp16()),
+            SliceMethod::fp(SliceSpec::bf16()),
+        ];
+        let policies = [AdcPolicy::WorstCase, AdcPolicy::Calibrated, AdcPolicy::IntegerSnap];
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            let a = rand_mat(m, k, 200 + si as u64);
+            let b = rand_mat(k, n, 300 + si as u64);
+            for method in &methods {
+                for (pi, &adc_policy) in policies.iter().enumerate() {
+                    for noise_free in [true, false] {
+                        let cfg = DpeConfig {
+                            array: (64, 64),
+                            adc_policy,
+                            noise_free,
+                            ..DpeConfig::default()
+                        };
+                        let e = DotProductEngine::new(cfg, 7 + pi as u64);
+                        let w = e.prepare_weights(&b, method, 1);
+                        let fused = e.matmul_prepared(&a, &w, method, 0);
+                        let oracle = e.matmul_prepared_reference(&a, &w, method, 0);
+                        assert_eq!(
+                            fused.data, oracle.data,
+                            "{m}x{k}x{n} widths={:?} policy={adc_policy:?} noise_free={noise_free}",
+                            method.spec.widths
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_band_parallel_matches_reference() {
+        // m large enough (with a single (kb, nb) task) to trip the in-pair
+        // row-band parallel GEMM: results must stay bit-identical.
+        let e = DotProductEngine::new(DpeConfig::default(), 9);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(300, 64, 501);
+        let b = rand_mat(64, 64, 502);
+        let w = e.prepare_weights(&b, &med, 0);
+        let fused = e.matmul_prepared(&a, &w, &med, 0);
+        let oracle = e.matmul_prepared_reference(&a, &w, &med, 0);
+        assert_eq!(fused.data, oracle.data);
+    }
+
+    #[test]
+    fn circuit_path_matches_reference_oracle() {
+        let mut cfg = DpeConfig { use_circuit: true, r_wire: 0.5, array: (16, 16), ..DpeConfig::default() };
+        cfg.device.cv = 0.0;
+        let e = DotProductEngine::new(cfg, 5);
+        let a = rand_mat(4, 20, 401);
+        let b = rand_mat(20, 18, 402);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let w = e.prepare_weights(&b, &med, 0);
+        let fused = e.matmul_prepared(&a, &w, &med, 0);
+        let oracle = e.matmul_prepared_reference(&a, &w, &med, 0);
+        assert_eq!(fused.data, oracle.data);
     }
 
     #[test]

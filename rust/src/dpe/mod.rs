@@ -6,7 +6,8 @@
 //!   FP shared-exponent pre-alignment;
 //! - [`blocks`] — block matrix mapping onto fixed-size arrays;
 //! - [`engine`] — the DPE itself ([`DotProductEngine`]), with weight
-//!   preparation for reuse across calls;
+//!   preparation for reuse across calls and the fused slice-plane GEMM
+//!   pipeline on the matmul hot path (see `engine` §Perf);
 //! - [`montecarlo`] — the Monte-Carlo nonideality analysis driver (Fig 12).
 
 pub mod blocks;
@@ -16,4 +17,4 @@ pub mod quant;
 pub mod slicing;
 
 pub use engine::{DotProductEngine, DpeConfig, PreparedWeights, SliceMethod};
-pub use slicing::{DataMode, SliceSpec};
+pub use slicing::{DataMode, SliceSpec, SliceTables};

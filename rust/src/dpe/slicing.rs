@@ -131,6 +131,33 @@ impl SliceSpec {
     pub fn solver26() -> Self {
         SliceSpec::new(&[1, 1, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2], true)
     }
+
+    /// Precompute the per-slice lookup tables the matmul hot paths need
+    /// (signed shift-add weights and per-slice digit maxima), instead of
+    /// re-deriving them per call site.
+    pub fn tables(&self) -> SliceTables {
+        SliceTables {
+            weights: (0..self.num_slices()).map(|k| self.weight(k)).collect(),
+            max_digit: self.widths.iter().map(|&w| ((1u64 << w) - 1) as f64).collect(),
+        }
+    }
+}
+
+/// Precomputed per-slice tables shared by the DPE matmul entry points
+/// (fused pipeline, circuit path, and weight preparation): the signed
+/// recombination weight and the largest digit value of each slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceTables {
+    /// Signed shift-add weight per slice (`−2^shift` for the sign slice).
+    pub weights: Vec<f64>,
+    /// Largest representable digit per slice: `2^width − 1`.
+    pub max_digit: Vec<f64>,
+}
+
+impl SliceTables {
+    pub fn num_slices(&self) -> usize {
+        self.weights.len()
+    }
 }
 
 /// A quantized block: integer values (stored as f64) plus the scale that
@@ -355,6 +382,18 @@ mod tests {
     #[should_panic(expected = "sign slice")]
     fn signed_spec_requires_sign_slice() {
         SliceSpec::new(&[2, 2], true);
+    }
+
+    #[test]
+    fn tables_match_per_slice_queries() {
+        for spec in [SliceSpec::int4(), SliceSpec::int8(), SliceSpec::fp16(), SliceSpec::ones(5)] {
+            let t = spec.tables();
+            assert_eq!(t.num_slices(), spec.num_slices());
+            for k in 0..spec.num_slices() {
+                assert_eq!(t.weights[k], spec.weight(k));
+                assert_eq!(t.max_digit[k], ((1u64 << spec.widths[k]) - 1) as f64);
+            }
+        }
     }
 
     #[test]

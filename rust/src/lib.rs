@@ -16,7 +16,16 @@
 //! - **L3 (this crate)** — the full simulator + coordinator, pure Rust;
 //! - **L2/L1 (`python/compile/`)** — JAX graph + Pallas kernel, AOT-lowered
 //!   once to HLO text (`artifacts/`), executed from Rust via PJRT
-//!   ([`runtime`]); Python is never on the request path.
+//!   ([`runtime`]); Python is never on the request path. The PJRT client
+//!   is gated behind the `xla` cargo feature (off by default for offline
+//!   builds); without it the runtime compiles as a stub and everything
+//!   routes through the native engine.
+//!
+//! The DPE hot path uses the fused slice-plane GEMM pipeline — one packed
+//! GEMM per (input slice, array block) covering all weight digit planes at
+//! once; see `dpe::engine` §Perf and `tensor` §Perf for the design and
+//! `benches/table3_throughput.rs` (`BENCH_table3.json`) for the tracked
+//! throughput numbers.
 
 pub mod apps;
 pub mod circuit;

@@ -127,7 +127,10 @@ pub struct Conv2dMem {
     /// Prepared transposed weights `(patch, out_c)` for the DPE.
     prepared: Option<PreparedWeights>,
     generation: u64,
-    cache: Option<(Vec<Matrix>, Conv2dDims)>, // per-sample im2col columns
+    /// Per-sample **transposed** im2col columns `(OH·OW, patch)` — kept in
+    /// stacked-row order so forward stacking and the weight-gradient GEMM
+    /// both use them without re-transposing.
+    cache: Option<(Vec<Matrix>, Conv2dDims)>,
 }
 
 impl Conv2dMem {
@@ -187,20 +190,20 @@ impl Layer for Conv2dMem {
         let d = self.conv_dims();
         let (oh, ow) = (d.out_h(), d.out_w());
         let sample_len = c * h * w;
-        let cols: Vec<Matrix> = par_map(bsz, |i| {
-            im2col(&x.data[i * sample_len..(i + 1) * sample_len], d)
+        // Transposed im2col per sample (parallel): `(OH·OW, patch)` is the
+        // stacked-row layout, so building the batch matrix below is one
+        // contiguous copy per sample instead of an element-wise transpose.
+        let cols_t: Vec<Matrix> = par_map(bsz, |i| {
+            im2col(&x.data[i * sample_len..(i + 1) * sample_len], d).transpose()
         });
-        // Stack columns: (B·OH·OW, patch) then one DPE matmul.
+        // Stack columns: (B·OH·OW, patch) then one DPE matmul routed
+        // through the fused slice-plane pipeline (`matmul_prepared`).
         let rows = bsz * oh * ow;
         let patch = self.patch_len();
+        let sample_rows = oh * ow * patch;
         let mut stacked = Matrix::zeros(rows, patch);
-        for (i, colm) in cols.iter().enumerate() {
-            // colm is (patch, OH·OW): transpose into the stacked rows.
-            for p in 0..patch {
-                for q in 0..oh * ow {
-                    *stacked.at_mut(i * oh * ow + q, p) = colm.at(p, q);
-                }
-            }
+        for (i, colt) in cols_t.iter().enumerate() {
+            stacked.data[i * sample_rows..(i + 1) * sample_rows].copy_from_slice(&colt.data);
         }
         let y = match (&self.hw, &self.prepared) {
             (Some(hw), Some(prep)) => {
@@ -219,26 +222,27 @@ impl Layer for Conv2dMem {
             }
         }
         if train {
-            self.cache = Some((cols, d));
+            self.cache = Some((cols_t, d));
         }
         out
     }
 
     fn backward(&mut self, grad_out: &Tensor) -> Tensor {
-        let (cols, d) = self.cache.take().expect("forward(train=true) before backward");
+        let (cols_t, d) = self.cache.take().expect("forward(train=true) before backward");
         let bsz = grad_out.shape[0];
         let (oh, ow) = (d.out_h(), d.out_w());
         let patch = self.patch_len();
         let wt = Matrix::from_vec(self.out_c, patch, self.w.value.clone());
-        // Per-sample: grad_y (out_c, OH·OW); grad_w += grad_y · colsᵀ;
-        // grad_cols = wᵀ·grad_y; grad_x = col2im(grad_cols).
+        // Per-sample: grad_y (out_c, OH·OW); grad_w += grad_y · colsᵀ
+        // (cached transposed already); grad_cols = wᵀ·grad_y;
+        // grad_x = col2im(grad_cols).
         let results: Vec<(Matrix, Vec<f64>, Vec<f64>)> = par_map(bsz, |i| {
             let gy = Matrix::from_vec(
                 self.out_c,
                 oh * ow,
                 grad_out.data[i * self.out_c * oh * ow..(i + 1) * self.out_c * oh * ow].to_vec(),
             );
-            let gw = gy.matmul(&cols[i].transpose());
+            let gw = gy.matmul(&cols_t[i]);
             let gb: Vec<f64> = (0..self.out_c).map(|oc| gy.row(oc).iter().sum()).collect();
             let gcols = wt.transpose().matmul(&gy);
             let mut gx = vec![0.0; d.in_c * d.in_h * d.in_w];

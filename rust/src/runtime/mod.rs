@@ -7,136 +7,225 @@
 //!
 //! Executables are compiled once per artifact and cached; Python never runs
 //! at request time.
+//!
+//! # Feature gate
+//!
+//! The real PJRT client lives behind the `xla` cargo feature because the
+//! external `xla` crate (and its libxla runtime) is not available in
+//! offline build environments. Without the feature this module compiles a
+//! **stub** whose constructor returns an error and whose surface matches
+//! the real one **except `Runtime::load`**, which only exists with the
+//! feature (its `Arc<xla::PjRtLoadedExecutable>` return type cannot be
+//! mirrored without the crate) — write feature-portable callers against
+//! `execute_f32`/`execute_matrices` instead. Every caller already handles
+//! `Runtime::cpu` failing (the CLI prints "PJRT unavailable", the
+//! coordinator and benches fall back to the native engine), so the rest
+//! of the framework is unaffected.
 
 pub mod xla_dpe;
 
 pub use xla_dpe::XlaDpe;
 
-use crate::tensor::Matrix;
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+use anyhow::Result;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-/// A PJRT CPU client plus a cache of compiled executables keyed by
-/// artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+/// `<name>.hlo.txt` under the artifacts dir — the single source of truth
+/// for the artifact naming scheme, shared by the real and stub runtimes.
+fn artifact_file(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.hlo.txt"))
 }
 
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Runtime(dir={:?})", self.artifacts_dir)
-    }
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::*;
+    use crate::tensor::Matrix;
+    use anyhow::Context;
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A PJRT CPU client plus a cache of compiled executables keyed by
+    /// artifact name.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifacts_dir: PathBuf,
+        cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     }
 
-    /// Path of a named artifact (`<name>.hlo.txt` under the artifacts dir).
-    pub fn artifact_path(&self, name: &str) -> PathBuf {
-        self.artifacts_dir.join(format!("{name}.hlo.txt"))
-    }
-
-    /// Whether the artifact exists on disk.
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifact_path(name).exists()
-    }
-
-    /// Load + compile (cached) an artifact.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Runtime(dir={:?})", self.artifacts_dir)
         }
-        let path = self.artifact_path(name);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact '{name}'"))?,
-        );
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
     }
 
-    /// Execute an artifact on f32 buffers. Each input is `(shape, data)`;
-    /// returns every output as `(shape, data)`. The artifact must have been
-    /// lowered with `return_tuple=True`.
-    pub fn execute_f32(
-        &self,
-        name: &str,
-        inputs: &[(&[usize], &[f32])],
-    ) -> Result<Vec<Vec<f32>>> {
-        let exe = self.load(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(shape, data)| {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data)
-                    .reshape(&dims)
-                    .with_context(|| format!("reshaping input to {dims:?}"))
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifacts directory.
+        pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
             })
-            .collect::<Result<_>>()?;
-        let mut result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing '{name}'"))?[0][0]
-            .to_literal_sync()?;
-        let tuple = result.decompose_tuple()?;
-        tuple
-            .into_iter()
-            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
-            .collect()
-    }
+        }
 
-    /// Execute with `Matrix` (f64) operands, converting to f32 at the
-    /// boundary (the artifacts are compiled for f32).
-    pub fn execute_matrices(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Vec<f32>>> {
-        let f32_bufs: Vec<(Vec<usize>, Vec<f32>)> = inputs
-            .iter()
-            .map(|m| {
-                (vec![m.rows, m.cols], m.data.iter().map(|&x| x as f32).collect::<Vec<f32>>())
-            })
-            .collect();
-        let refs: Vec<(&[usize], &[f32])> =
-            f32_bufs.iter().map(|(s, d)| (s.as_slice(), d.as_slice())).collect();
-        self.execute_f32(name, &refs)
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Number of cached executables (for tests/metrics).
-    pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        /// Path of a named artifact (see [`super::artifact_file`]).
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            super::artifact_file(&self.artifacts_dir, name)
+        }
+
+        /// Whether the artifact exists on disk.
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        /// Load + compile (cached) an artifact.
+        pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(name) {
+                return Ok(exe.clone());
+            }
+            let path = self.artifact_path(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Arc::new(
+                self.client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling artifact '{name}'"))?,
+            );
+            self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute an artifact on f32 buffers. Each input is `(shape, data)`;
+        /// returns every output as `(shape, data)`. The artifact must have
+        /// been lowered with `return_tuple=True`.
+        pub fn execute_f32(
+            &self,
+            name: &str,
+            inputs: &[(&[usize], &[f32])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let exe = self.load(name)?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(shape, data)| {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .with_context(|| format!("reshaping input to {dims:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let mut result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing '{name}'"))?[0][0]
+                .to_literal_sync()?;
+            let tuple = result.decompose_tuple()?;
+            tuple
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+                .collect()
+        }
+
+        /// Execute with `Matrix` (f64) operands, converting to f32 at the
+        /// boundary (the artifacts are compiled for f32).
+        pub fn execute_matrices(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Vec<f32>>> {
+            let f32_bufs: Vec<(Vec<usize>, Vec<f32>)> = inputs
+                .iter()
+                .map(|m| {
+                    (vec![m.rows, m.cols], m.data.iter().map(|&x| x as f32).collect::<Vec<f32>>())
+                })
+                .collect();
+            let refs: Vec<(&[usize], &[f32])> =
+                f32_bufs.iter().map(|(s, d)| (s.as_slice(), d.as_slice())).collect();
+            self.execute_f32(name, &refs)
+        }
+
+        /// Number of cached executables (for tests/metrics).
+        pub fn cached_count(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    /// Stub runtime compiled when the `xla` feature is off: the constructor
+    /// fails, so every caller takes its native-engine fallback path.
+    #[derive(Debug)]
+    pub struct Runtime {
+        artifacts_dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Always fails: the crate was built without the `xla` feature.
+        pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+            let _ = artifacts_dir.as_ref();
+            anyhow::bail!(
+                "PJRT runtime unavailable: memintelli was built without the `xla` feature"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without `xla` feature)".to_string()
+        }
+
+        /// Path of a named artifact (see [`super::artifact_file`]).
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            super::artifact_file(&self.artifacts_dir, name)
+        }
+
+        /// Whether the artifact exists on disk.
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        /// Always fails (stub).
+        pub fn execute_f32(
+            &self,
+            name: &str,
+            inputs: &[(&[usize], &[f32])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let _ = inputs;
+            anyhow::bail!("cannot execute '{name}': built without the `xla` feature")
+        }
+
+        /// Always fails (stub).
+        pub fn execute_matrices(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Vec<f32>>> {
+            let _ = inputs;
+            anyhow::bail!("cannot execute '{name}': built without the `xla` feature")
+        }
+
+        /// Number of cached executables (always zero for the stub).
+        pub fn cached_count(&self) -> usize {
+            0
+        }
+    }
+}
+
+pub use pjrt::Runtime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {
         // Tests run from the workspace root.
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn smoke_artifact_roundtrip() {
+        use crate::tensor::Matrix;
         let dir = artifacts_dir();
         if !dir.join("_smoke.hlo.txt").exists() {
             eprintln!("skipping: artifacts not built (run `make artifacts`)");
@@ -154,10 +243,18 @@ mod tests {
         assert_eq!(rt.cached_count(), 1);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn missing_artifact_is_error() {
         let rt = Runtime::cpu(artifacts_dir()).unwrap();
         assert!(!rt.has_artifact("definitely_missing"));
         assert!(rt.load("definitely_missing").is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_constructor_reports_unavailable() {
+        let err = Runtime::cpu(artifacts_dir()).unwrap_err();
+        assert!(format!("{err}").contains("xla"), "unexpected error: {err}");
     }
 }

@@ -5,6 +5,10 @@
 //! The artifact set is shape-specialized (HLO is static-shape); callers ask
 //! [`XlaDpe::supports`] first and fall back to the native engine otherwise —
 //! the coordinator's routing policy.
+//!
+//! Like [`super::Runtime`], the execution methods are real only with the
+//! `xla` cargo feature; the stub build keeps the same signatures but can
+//! never be reached because the stub `Runtime::cpu` constructor fails.
 
 use super::Runtime;
 use crate::tensor::Matrix;
@@ -41,6 +45,7 @@ impl XlaDpe {
 
     /// Execute the DPE matmul artifact. `seed` drives the in-graph
     /// threefry programming-noise sampling (ignored by `_ideal` variants).
+    #[cfg(feature = "xla")]
     pub fn matmul(
         &self,
         a: &Matrix,
@@ -67,9 +72,24 @@ impl XlaDpe {
         Ok(Matrix::from_vec(m, n, data32.into_iter().map(|x| x as f64).collect()))
     }
 
+    /// Stub: unreachable because the stub `Runtime` cannot be constructed.
+    #[cfg(not(feature = "xla"))]
+    pub fn matmul(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        fmt: &str,
+        ideal: bool,
+        seed: u32,
+    ) -> Result<Matrix> {
+        let _ = (a, b, ideal, seed);
+        anyhow::bail!("cannot run '{fmt}' artifact: built without the `xla` feature")
+    }
+
     /// Execute a fused LeNet-5 forward artifact: `x` is `(batch, 784)`
     /// row-major, `params` are the 10 parameter buffers in `lenet_fwd`
     /// order. Returns `(batch, 10)` logits.
+    #[cfg(feature = "xla")]
     pub fn lenet_forward(
         &self,
         batch: usize,
@@ -99,9 +119,24 @@ impl XlaDpe {
         let logits = out.into_iter().next().unwrap().to_vec::<f32>()?;
         Ok(Matrix::from_vec(batch, 10, logits.into_iter().map(|v| v as f64).collect()))
     }
+
+    /// Stub: unreachable because the stub `Runtime` cannot be constructed.
+    #[cfg(not(feature = "xla"))]
+    pub fn lenet_forward(
+        &self,
+        batch: usize,
+        fmt: &str,
+        ideal: bool,
+        x: &[f32],
+        params: &[(Vec<usize>, Vec<f32>)],
+        seed: u32,
+    ) -> Result<Matrix> {
+        let _ = (batch, ideal, x, params, seed);
+        anyhow::bail!("cannot run '{fmt}' artifact: built without the `xla` feature")
+    }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
     use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};

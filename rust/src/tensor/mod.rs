@@ -1,8 +1,36 @@
 //! Dense linear-algebra substrate: a row-major `f64` matrix with the
 //! operations the simulator needs (blocked matmul, transpose, padding,
-//! block views, norms) plus an N-d `Tensor` used by the NN layers.
+//! block views, norms), a packed-panel GEMM micro-kernel for the DPE's
+//! fused slice-plane pipeline, plus an N-d `Tensor` used by the NN layers.
 //!
 //! Built from scratch — the offline registry has no ndarray/nalgebra.
+//!
+//! # §Perf
+//!
+//! Two GEMM paths coexist:
+//!
+//! - [`Matrix::matmul`] — the general-purpose i-k-j kernel (unit-stride
+//!   inner loops over both B and C rows), parallel over row bands only
+//!   when the work amortizes thread spawn (nested sub-millisecond
+//!   parallelism was a 1.7× end-to-end regression).
+//! - [`PackedB`] + [`matmul_packed_into`] — the DPE hot path. B is packed
+//!   **once per prepared-weight lifetime** into column panels of
+//!   [`GEMM_NR`] (k-major inside each panel, zero-padded edge panel), and
+//!   the kernel computes register tiles of `GEMM_MR × GEMM_NR`
+//!   accumulators with the packed panel streamed contiguously. Because a
+//!   prepared weight block is reused across every batch/epoch, the packing
+//!   cost is paid once while every `matmul_prepared` call gets the
+//!   cache-friendly layout for free. The caller supplies the output
+//!   buffer, so repeated calls reuse one scratch allocation instead of a
+//!   `Matrix::zeros` per partial (the old per-slice-pair path's dominant
+//!   overhead, see `dpe::engine` §Perf).
+//!
+//! Both kernels accumulate each output element along ascending `k` with
+//! one multiply-add per step and no FMA contraction, so their results are
+//! bit-identical to each other — the property the DPE's fused-vs-reference
+//! oracle tests rely on. (The `a == 0.0` skips differ between the two
+//! kernels, but adding `±0.0` to an accumulator that is never `-0.0`
+//! cannot change its bits.)
 
 mod conv;
 
@@ -100,8 +128,8 @@ impl Matrix {
 
     /// Matrix multiply `self (m×k) * other (k×n)`: i-k-j loop order
     /// (unit-stride inner loops over both B and C rows), parallel over row
-    /// bands only when the work amortizes thread spawn (§Perf: nested
-    /// sub-millisecond parallelism was a 1.7× end-to-end regression).
+    /// bands only when the work amortizes thread spawn (see module §Perf;
+    /// the DPE hot path uses [`matmul_packed_into`] instead).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
         let (m, k, n) = (self.rows, self.cols, other.cols);
@@ -232,6 +260,156 @@ impl Matrix {
             return 0.0;
         }
         self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Convenience wrapper over [`matmul_packed_into`] allocating the
+    /// output (tests / cold paths; the DPE reuses a scratch buffer).
+    pub fn matmul_packed(&self, packed: &PackedB) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, packed.n);
+        matmul_packed_into(self, packed, &mut out.data);
+        out
+    }
+}
+
+/// GEMM panel width (columns per packed B panel / register-tile width).
+pub const GEMM_NR: usize = 8;
+/// GEMM register-tile height (rows of A per micro-kernel iteration).
+pub const GEMM_MR: usize = 4;
+
+/// A `k × n` matrix re-laid-out for the packed GEMM micro-kernel: column
+/// panels of [`GEMM_NR`], k-major within each panel, the last panel
+/// zero-padded to full width. Pack once (per prepared-weight lifetime),
+/// multiply many times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedB {
+    /// Contraction length (rows of the original B).
+    pub k: usize,
+    /// Logical column count (padding excluded).
+    pub n: usize,
+    data: Vec<f64>,
+}
+
+impl PackedB {
+    /// Pack `b` into [`GEMM_NR`]-wide column panels.
+    pub fn pack(b: &Matrix) -> PackedB {
+        let (k, n) = (b.rows, b.cols);
+        let panels = n.div_ceil(GEMM_NR).max(1);
+        let mut data = vec![0.0; panels * k * GEMM_NR];
+        for p in 0..n.div_ceil(GEMM_NR) {
+            let j0 = p * GEMM_NR;
+            let w = GEMM_NR.min(n - j0);
+            let base = p * k * GEMM_NR;
+            for kk in 0..k {
+                let dst = base + kk * GEMM_NR;
+                let src = kk * n + j0;
+                data[dst..dst + w].copy_from_slice(&b.data[src..src + w]);
+            }
+        }
+        PackedB { k, n, data }
+    }
+
+    /// Materialize columns `c0..c0 + w` as a dense `k × w` matrix — the
+    /// exact inverse of [`PackedB::pack`] over that column range. Lets the
+    /// packed form be the *only* retained copy of a prepared weight block
+    /// (cold paths unpack the stripe they need instead of keeping a second
+    /// dense copy alive).
+    pub fn unpack_cols(&self, c0: usize, w: usize) -> Matrix {
+        assert!(c0 + w <= self.n, "column range out of packed bounds");
+        let mut out = Matrix::zeros(self.k, w);
+        for j in 0..w {
+            let (p, jj) = ((c0 + j) / GEMM_NR, (c0 + j) % GEMM_NR);
+            let base = p * self.k * GEMM_NR + jj;
+            for kk in 0..self.k {
+                out.data[kk * w + j] = self.data[base + kk * GEMM_NR];
+            }
+        }
+        out
+    }
+}
+
+/// `out = a · B` where `B` was packed with [`PackedB::pack`]. `out` must
+/// hold exactly `a.rows × packed.n` elements and is fully overwritten —
+/// callers reuse one scratch buffer across calls. Bit-identical to
+/// [`Matrix::matmul`] (see module §Perf).
+pub fn matmul_packed_into(a: &Matrix, packed: &PackedB, out: &mut [f64]) {
+    assert_eq!(
+        a.cols, packed.k,
+        "matmul_packed dim mismatch: a is {}x{}, packed b is {}x{}",
+        a.rows, a.cols, packed.k, packed.n
+    );
+    assert_eq!(out.len(), a.rows * packed.n, "matmul_packed output buffer size mismatch");
+    matmul_packed_rows_into(a, 0, a.rows, packed, out);
+}
+
+/// Band variant of [`matmul_packed_into`]: compute output rows
+/// `i0..i0 + rows` into `out` (which holds exactly those rows). Disjoint
+/// bands are independent, so callers can parallelize over row chunks.
+pub fn matmul_packed_rows_into(
+    a: &Matrix,
+    i0: usize,
+    rows: usize,
+    packed: &PackedB,
+    out: &mut [f64],
+) {
+    debug_assert!(i0 + rows <= a.rows, "row band out of range");
+    debug_assert_eq!(out.len(), rows * packed.n, "band buffer size mismatch");
+    let (k, n) = (packed.k, packed.n);
+    for p in 0..n.div_ceil(GEMM_NR) {
+        let j0 = p * GEMM_NR;
+        let w = GEMM_NR.min(n - j0);
+        let bp = &packed.data[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+        let mut i = 0usize;
+        // MR×NR register tiles: each accumulator runs ascending k with one
+        // multiply-add per step (no FMA, no reassociation) — the
+        // bit-identity contract with `Matrix::matmul`.
+        while i + GEMM_MR <= rows {
+            let a0 = a.row(i0 + i);
+            let a1 = a.row(i0 + i + 1);
+            let a2 = a.row(i0 + i + 2);
+            let a3 = a.row(i0 + i + 3);
+            let mut c0 = [0.0f64; GEMM_NR];
+            let mut c1 = [0.0f64; GEMM_NR];
+            let mut c2 = [0.0f64; GEMM_NR];
+            let mut c3 = [0.0f64; GEMM_NR];
+            for kk in 0..k {
+                let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                // Digit planes (especially 1-bit sign slices) are mostly
+                // zeros; skipping a fully-zero A column of the tile keeps
+                // the sparse win of the i-k-j kernel.
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue;
+                }
+                let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                for jj in 0..GEMM_NR {
+                    let bv = brow[jj];
+                    c0[jj] += x0 * bv;
+                    c1[jj] += x1 * bv;
+                    c2[jj] += x2 * bv;
+                    c3[jj] += x3 * bv;
+                }
+            }
+            out[i * n + j0..i * n + j0 + w].copy_from_slice(&c0[..w]);
+            out[(i + 1) * n + j0..(i + 1) * n + j0 + w].copy_from_slice(&c1[..w]);
+            out[(i + 2) * n + j0..(i + 2) * n + j0 + w].copy_from_slice(&c2[..w]);
+            out[(i + 3) * n + j0..(i + 3) * n + j0 + w].copy_from_slice(&c3[..w]);
+            i += GEMM_MR;
+        }
+        // Remainder rows one at a time (same ascending-k accumulation).
+        while i < rows {
+            let ar = a.row(i0 + i);
+            let mut c = [0.0f64; GEMM_NR];
+            for (kk, &x) in ar.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                for jj in 0..GEMM_NR {
+                    c[jj] += x * brow[jj];
+                }
+            }
+            out[i * n + j0..i * n + j0 + w].copy_from_slice(&c[..w]);
+            i += 1;
+        }
     }
 }
 
@@ -371,5 +549,91 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(4, 2);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn packed_gemm_bit_identical_to_matmul() {
+        // The fused DPE pipeline depends on this being *exact*, not just
+        // close: ragged shapes (edge panels, remainder row tiles), signed
+        // values, and a shape big enough to trip matmul's parallel bands.
+        let mut rng = Pcg64::seeded(11);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 64, 8),
+            (13, 64, 130),
+            (70, 65, 9),
+            (130, 130, 130),
+        ] {
+            let a = Matrix::random_uniform(m, k, -1.0, 1.0, &mut rng);
+            let b = Matrix::random_uniform(k, n, -1.0, 1.0, &mut rng);
+            let packed = PackedB::pack(&b);
+            let via_packed = a.matmul_packed(&packed);
+            let via_matmul = a.matmul(&b);
+            assert_eq!(via_packed.data, via_matmul.data, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_bit_identical_on_sparse_digit_planes() {
+        // Digit-plane-shaped operands: small non-negative integers with
+        // many zeros (exercises both kernels' zero-skip paths).
+        let mut rng = Pcg64::seeded(12);
+        let a = Matrix::from_fn(37, 64, |_, _| (rng.uniform_range(0.0, 4.0) as i64).max(0) as f64)
+            .map(|v| if v < 2.0 { 0.0 } else { v });
+        let b = Matrix::from_fn(64, 96, |_, _| (rng.uniform_range(-2.0, 4.0) as i64) as f64);
+        let packed = PackedB::pack(&b);
+        assert_eq!(a.matmul_packed(&packed).data, a.matmul(&b).data);
+    }
+
+    #[test]
+    fn packed_gemm_band_variant_matches_full() {
+        let mut rng = Pcg64::seeded(13);
+        let a = Matrix::random_uniform(23, 40, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(40, 17, -1.0, 1.0, &mut rng);
+        let packed = PackedB::pack(&b);
+        let full = a.matmul_packed(&packed);
+        let mut banded = vec![0.0; 23 * 17];
+        for (i0, rows) in [(0usize, 9usize), (9, 4), (13, 10)] {
+            matmul_packed_rows_into(&a, i0, rows, &packed, &mut banded[i0 * 17..(i0 + rows) * 17]);
+        }
+        assert_eq!(banded, full.data);
+    }
+
+    #[test]
+    fn packed_buffer_is_overwritten_not_accumulated() {
+        let a = Matrix::identity(4);
+        let b = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let packed = PackedB::pack(&b);
+        let mut out = vec![123.0; 16];
+        matmul_packed_into(&a, &packed, &mut out);
+        assert_eq!(out, b.data);
+        // Second call over dirty scratch must give the same result.
+        matmul_packed_into(&a, &packed, &mut out);
+        assert_eq!(out, b.data);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Pcg64::seeded(14);
+        for &(k, n) in &[(1usize, 1usize), (5, 8), (7, 19), (64, 320)] {
+            let b = Matrix::random_uniform(k, n, -1.0, 1.0, &mut rng);
+            let packed = PackedB::pack(&b);
+            assert_eq!(packed.unpack_cols(0, n), b, "{k}x{n} full");
+            // Arbitrary interior stripe (may straddle panel boundaries).
+            if n >= 3 {
+                let (c0, w) = (1, n - 2);
+                assert_eq!(packed.unpack_cols(c0, w), b.block(0, c0, k, w), "{k}x{n} stripe");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_packed dim mismatch")]
+    fn packed_gemm_rejects_mismatch() {
+        let a = Matrix::zeros(2, 3);
+        let packed = PackedB::pack(&Matrix::zeros(4, 2));
+        let mut out = vec![0.0; 4];
+        matmul_packed_into(&a, &packed, &mut out);
     }
 }

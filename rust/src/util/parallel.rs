@@ -1,5 +1,10 @@
 //! Scoped-thread parallel helpers (no tokio/rayon offline): a chunked
-//! parallel map used by the Monte-Carlo driver and the batched NN forward.
+//! parallel map used by the Monte-Carlo driver and the batched NN forward,
+//! and a parallel for-each over mutable chunks used by the GEMM row bands.
+//!
+//! Both schedulers are lock-free: workers claim work items with a single
+//! shared atomic counter (`fetch_add`) instead of popping a mutex-guarded
+//! queue, so sub-millisecond items don't serialize on the lock.
 
 /// Number of worker threads to use: `MEMINTELLI_THREADS` env override, else
 /// available parallelism, capped at 16.
@@ -55,31 +60,42 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
-/// Parallel for-each over mutable chunks of a slice.
+/// Parallel for-each over mutable chunks of a slice. Work distribution
+/// uses the same lock-free atomic-counter scheme as [`par_map`]: each
+/// worker claims the next chunk index with one `fetch_add`, so there is no
+/// queue mutex to serialize on when chunks are sub-millisecond (the GEMM
+/// row-band case).
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
-    let workers = worker_count().min(chunks.len().max(1));
+    let mut chunks: Vec<&mut [T]> = data.chunks_mut(chunk).collect();
+    let n = chunks.len();
+    let workers = worker_count().min(n.max(1));
     if workers <= 1 {
-        for (i, c) in chunks {
+        for (i, c) in chunks.into_iter().enumerate() {
             f(i, c);
         }
         return;
     }
-    let queue = std::sync::Mutex::new(chunks);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let chunks_ptr = SendPtr(chunks.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            let queue = &queue;
+            let next = &next;
             let f = &f;
+            let chunks_ptr = &chunks_ptr;
             scope.spawn(move || loop {
-                let item = queue.lock().unwrap().pop();
-                match item {
-                    Some((i, c)) => f(i, c),
-                    None => break,
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
                 }
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, the chunk slices are pairwise disjoint,
+                // and the scope guarantees `chunks` outlives all workers.
+                let c: &mut [T] = unsafe { &mut *(*chunks_ptr.0.add(i)) };
+                f(i, c);
             });
         }
     });
@@ -109,7 +125,19 @@ mod tests {
                 *v = i as u32 + 1;
             }
         });
-        assert!(data.iter().all(|&v| v > 0));
+        // Every element written exactly once, with the right chunk index.
+        let want: Vec<u32> = (0..103u32).map(|j| j / 10 + 1).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn par_chunks_mut_many_small_chunks() {
+        // Stress the lock-free claim loop: more chunks than workers by far.
+        let mut data = vec![0usize; 4096];
+        par_chunks_mut(&mut data, 1, |i, c| {
+            c[0] = i * 3 + 1;
+        });
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i * 3 + 1));
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Minimal, dependency-free shim of the `anyhow` error-handling API.
+//!
+//! The offline build environment has no crate registry, so this vendored
+//! crate provides exactly the surface memintelli uses from the real
+//! `anyhow`: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`]
+//! macros, and the [`Context`] extension trait for `Result` and `Option`.
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on any
+//! standard error type) possible.
+
+use std::fmt;
+
+/// A string-backed error value with an optional chain of context lines
+/// (most recent context first, matching `anyhow`'s Display behaviour).
+pub struct Error {
+    context: Vec<String>,
+    source: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error { context: Vec::new(), source: message.to_string() }
+    }
+
+    /// Push a higher-level context line onto the chain.
+    pub fn add_context(mut self, c: impl fmt::Display) -> Self {
+        self.context.insert(0, c.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        &self.source
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.first() {
+            Some(c) => write!(f, "{c}"),
+            None => write!(f, "{}", self.source),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in &self.context {
+            writeln!(f, "{c}")?;
+            writeln!(f, "\nCaused by:")?;
+        }
+        write!(f, "{}", self.source)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to errors (and convert `Option` to `Result`).
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::msg(e).add_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(e).add_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_number(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // via blanket From<ParseIntError>
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_number("42").unwrap(), 42);
+        assert!(parse_number("nope").is_err());
+        assert!(parse_number("-3").is_err());
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f() -> Result<()> {
+            bail!("broke with code {}", 7)
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "broke with code 7");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::other("io boom"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(e.root_cause(), "io boom");
+
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::other("root"));
+        let e = r.context("top").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("top") && dbg.contains("Caused by") && dbg.contains("root"));
+    }
+}
