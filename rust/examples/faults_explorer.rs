@@ -1,0 +1,94 @@
+//! faults_explorer: stress a DPE matmul against the unified fault model.
+//!
+//! ```bash
+//! cd rust && cargo run --release --example faults_explorer
+//! ```
+//!
+//! Walks the `device::faults` knobs one at a time — stuck-at cells, dead
+//! lines, retention at read time, per-column ADC error, floor rounding —
+//! and prints the accuracy impact of each, then a small Monte-Carlo
+//! yield curve vs stuck-at rate (the `fig_faults` experiment runs the
+//! full grid: `cargo run --release -- fig_faults --quick`).
+
+use memintelli::device::drift::DriftSpec;
+use memintelli::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
+use memintelli::dpe::montecarlo::{run_fault_point, McConfig};
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::tensor::Matrix;
+use memintelli::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seeded(7);
+    let a = Matrix::random_normal(64, 128, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(128, 128, 0.0, 1.0, &mut rng);
+    let ideal = a.matmul(&b);
+    let med = SliceMethod::int(SliceSpec::int8());
+
+    // 1. One knob at a time: how much error does each non-ideality add on
+    //    top of the Table-2 baseline (cv = 5%, worst-case ADC)?
+    let cases: Vec<(&str, NonIdealitySpec)> = vec![
+        ("baseline (no faults)", NonIdealitySpec::none()),
+        (
+            "1% stuck-at cells",
+            NonIdealitySpec { faults: FaultSpec::cells(0.01), ..NonIdealitySpec::none() },
+        ),
+        (
+            "5% stuck-at cells",
+            NonIdealitySpec { faults: FaultSpec::cells(0.05), ..NonIdealitySpec::none() },
+        ),
+        (
+            "2% dead rows + cols",
+            NonIdealitySpec {
+                faults: FaultSpec { dead_row: 0.02, dead_col: 0.02, ..FaultSpec::none() },
+                ..NonIdealitySpec::none()
+            },
+        ),
+        (
+            "retention, read at t=1e6 s",
+            NonIdealitySpec {
+                drift: DriftSpec { nu: 0.05, nu_std: 0.01, t0: 1.0 },
+                t_read: 1e6,
+                ..NonIdealitySpec::none()
+            },
+        ),
+        (
+            "ADC offset 0.5 LSB + gain 2%",
+            NonIdealitySpec {
+                adc: AdcErrorSpec { gain_std: 0.02, offset_std_lsb: 0.5, rounding: AdcRounding::Round },
+                ..NonIdealitySpec::none()
+            },
+        ),
+        (
+            "ADC floor rounding",
+            NonIdealitySpec {
+                adc: AdcErrorSpec { rounding: AdcRounding::Floor, ..AdcErrorSpec::none() },
+                ..NonIdealitySpec::none()
+            },
+        ),
+    ];
+    println!("INT8 128x128 matmul, 64x64 arrays, cv = 5% — relative error per injection:\n");
+    for (name, ni) in cases {
+        let engine =
+            DotProductEngine::new(DpeConfig { nonideal: ni, ..DpeConfig::default() }, 42);
+        let w = engine.prepare_weights(&b, &med, 0);
+        let re = engine.matmul_prepared(&a, &w, &med, 0).relative_error(&ideal);
+        println!("  {name:<30} RE = {re:.4}");
+    }
+
+    // 2. Yield vs stuck-at rate: the fraction of independently programmed
+    //    array instances whose error stays within a 10% budget.
+    println!("\nMonte-Carlo yield @ RE <= 0.1 (20 programming cycles, 64x64 operands):\n");
+    let mc = McConfig { size: 64, cycles: 20, ..McConfig::default() };
+    for rate in [0.0, 0.005, 0.01, 0.02, 0.05, 0.1] {
+        let ni = NonIdealitySpec { faults: FaultSpec::cells(rate), ..NonIdealitySpec::none() };
+        let p = run_fault_point(&mc, 8, 0.05, &ni, 0.1);
+        let bar = "#".repeat((p.yield_frac * 30.0).round() as usize);
+        println!(
+            "  rate {rate:<6} RE mean {:.4}  yield {:>5.1}% {bar}",
+            p.re_mean,
+            p.yield_frac * 100.0
+        );
+    }
+    println!("\nFull grid (rate x cv x bits, dead lines, retention, ADC):");
+    println!("  cargo run --release -- fig_faults --quick");
+}

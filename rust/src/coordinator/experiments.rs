@@ -7,9 +7,10 @@ use super::SimConfig;
 use crate::apps::{cwt, kmeans, solver};
 use crate::circuit::CrossbarCircuit;
 use crate::data::{cifar_like, iris, mnist_like, nino};
+use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
 use crate::device::{conductance_clouds, DeviceSpec};
 use crate::dpe::engine::AdcPolicy;
-use crate::dpe::montecarlo::{sweep, McConfig};
+use crate::dpe::montecarlo::{run_fault_point, sweep, sweep_faults, McConfig};
 use crate::dpe::{DataMode, DotProductEngine, SliceMethod, SliceSpec};
 use crate::nn::models::{lenet5, resnet18_cifar, vgg16_cifar};
 use crate::nn::train::{evaluate, train, TrainConfig};
@@ -40,6 +41,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig10_circuit", "Crossbar circuit: IR-drop + cross-iteration solver convergence"),
     ("fig11_precision", "Variable-precision 128x128 matmul: INT8/FP32/BF16/FlexPoint16"),
     ("fig12_montecarlo", "Monte-Carlo: RE vs bits, block size, variation; quant vs prealign"),
+    ("fig_faults", "Fault injection: accuracy/yield vs stuck-at rate x cv x bits; lines, retention, ADC error"),
     ("fig13_solver", "Linear equation solving: software vs hardware CG"),
     ("fig14_cwt", "Morlet CWT of the ENSO-like series with INT4 kernels"),
     ("fig15_kmeans", "K-means on IRIS with the dot-product distance trick"),
@@ -55,11 +57,12 @@ pub fn run(id: &str, cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>
         "fig10_circuit" => fig10_circuit(cfg, scale),
         "fig11_precision" => fig11_precision(cfg, scale),
         "fig12_montecarlo" => fig12_montecarlo(cfg, scale),
+        "fig_faults" => fig_faults(cfg, scale),
         "fig13_solver" => fig13_solver(cfg, scale),
         "fig14_cwt" => fig14_cwt(cfg, scale),
         "fig15_kmeans" => fig15_kmeans(cfg, scale),
         "fig16_training" => fig16_training(cfg, scale),
-        "fig17_inference" => fig17_inference(cfg, scale),
+        "fig17_inference" => fig17_inference(cfg, scale)?,
         "table3_throughput" => table3_throughput(cfg, scale),
         _ => anyhow::bail!("unknown experiment '{id}' (see `memintelli list`)"),
     };
@@ -248,6 +251,126 @@ pub fn fig12_montecarlo(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
     vec![t]
 }
 
+// ------------------------------------------------------------ fig_faults
+
+/// Fault-injection robustness study (extension beyond the paper, see
+/// `device::faults`): Monte-Carlo accuracy **and yield** under stuck-at
+/// cells, dead lines, retention loss at read time, and per-column ADC
+/// gain/offset error — the pre-verification question "what fraction of
+/// programmed chips still meets the error budget?".
+pub fn fig_faults(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+    let mc = McConfig {
+        size: scale.pick(48, 128),
+        cycles: scale.pick(8, 50),
+        base: cfg.dpe.clone(),
+        seed: cfg.seed,
+    };
+    let yield_re = 0.1;
+    let bits: Vec<usize> = match scale {
+        Scale::Quick => vec![4, 8],
+        Scale::Full => vec![4, 8, 12],
+    };
+    let cvs: Vec<f64> = match scale {
+        Scale::Quick => vec![0.0, 0.05],
+        Scale::Full => vec![0.0, 0.02, 0.05, 0.1],
+    };
+    let rates: Vec<f64> = match scale {
+        Scale::Quick => vec![0.0, 0.01, 0.05],
+        Scale::Full => vec![0.0, 0.001, 0.01, 0.05, 0.1],
+    };
+
+    // The configured [faults] spec is the base everywhere: each table
+    // overrides only the knob it studies, so retention/ADC/seed settings
+    // from `--config` carry through (table (a) replaces the cell rates,
+    // (b) the fault/retention knobs, (c) the ADC error).
+    let base = &cfg.dpe.nonideal;
+
+    // (a) stuck-at cell sweep: fault rate × cv × bit width.
+    let mut t1 = Table::new(
+        &format!(
+            "fig_faults(a) — stuck-at cells: RE and yield@RE<={yield_re} ({} cycles, {}x{})",
+            mc.cycles, mc.size, mc.size
+        ),
+        &["bits", "cv", "fault rate", "RE mean", "RE std", "RE max", "yield"],
+    );
+    for p in sweep_faults(&mc, &bits, &cvs, &rates, base, yield_re) {
+        t1.row(&[
+            p.bits.to_string(),
+            format!("{}", p.cv),
+            format!("{}", p.fault_rate),
+            fmt_sig(p.re_mean),
+            fmt_sig(p.re_std),
+            fmt_sig(p.re_max),
+            format!("{:.2}", p.yield_frac),
+        ]);
+    }
+
+    // (b) line faults and retention at read time, 8-bit at the config cv.
+    let cv = cfg.dpe.device.cv;
+    let mut t2 = Table::new(
+        "fig_faults(b) — dead lines and retention (8-bit)",
+        &["injection", "RE mean", "RE max", "yield"],
+    );
+    // Each case pins the fault/retention knobs, inheriting drift
+    // parameters, ADC error, and the injection seed from the config base.
+    let with = |faults: FaultSpec, t_read: f64| NonIdealitySpec { faults, t_read, ..base.clone() };
+    let line_cases: Vec<(String, NonIdealitySpec)> = vec![
+        ("none".into(), with(FaultSpec::none(), 0.0)),
+        (
+            "dead rows 2%".into(),
+            with(FaultSpec { dead_row: 0.02, ..FaultSpec::none() }, 0.0),
+        ),
+        (
+            "dead cols 2%".into(),
+            with(FaultSpec { dead_col: 0.02, ..FaultSpec::none() }, 0.0),
+        ),
+        ("retention t_read=1e3 s".into(), with(FaultSpec::none(), 1e3)),
+        ("retention t_read=1e6 s".into(), with(FaultSpec::none(), 1e6)),
+    ];
+    for (name, ni) in &line_cases {
+        let p = run_fault_point(&mc, 8, cv, ni, yield_re);
+        t2.row(&[
+            name.clone(),
+            fmt_sig(p.re_mean),
+            fmt_sig(p.re_max),
+            format!("{:.2}", p.yield_frac),
+        ]);
+    }
+
+    // (c) ADC peripheral error: per-column offset/gain and rounding mode.
+    let mut t3 = Table::new(
+        "fig_faults(c) — per-column ADC error (8-bit)",
+        &["adc error", "RE mean", "RE max", "yield"],
+    );
+    let adc_cases: Vec<(String, AdcErrorSpec)> = vec![
+        ("ideal".into(), AdcErrorSpec::none()),
+        (
+            "offset 0.5 LSB".into(),
+            AdcErrorSpec { offset_std_lsb: 0.5, ..AdcErrorSpec::none() },
+        ),
+        ("gain 2%".into(), AdcErrorSpec { gain_std: 0.02, ..AdcErrorSpec::none() }),
+        (
+            "floor rounding".into(),
+            AdcErrorSpec { rounding: AdcRounding::Floor, ..AdcErrorSpec::none() },
+        ),
+        (
+            "offset+gain+floor".into(),
+            AdcErrorSpec { gain_std: 0.02, offset_std_lsb: 0.5, rounding: AdcRounding::Floor },
+        ),
+    ];
+    for (name, adc) in &adc_cases {
+        let ni = NonIdealitySpec { adc: *adc, ..base.clone() };
+        let p = run_fault_point(&mc, 8, cv, &ni, yield_re);
+        t3.row(&[
+            name.clone(),
+            fmt_sig(p.re_mean),
+            fmt_sig(p.re_max),
+            format!("{:.2}", p.yield_frac),
+        ]);
+    }
+    vec![t1, t2, t3]
+}
+
 // --------------------------------------------------------------- Fig 13
 
 pub fn fig13_solver(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
@@ -424,6 +547,21 @@ pub fn fig16_training(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
 
 // --------------------------------------------------------------- Fig 17
 
+/// Build a CIFAR model by architecture name; unknown names are a proper
+/// error propagated through the experiment `run` path (not a panic).
+fn cifar_model(
+    arch: &str,
+    width: usize,
+    hw: Option<HwSpec>,
+    seed: u64,
+) -> anyhow::Result<Sequential> {
+    match arch {
+        "resnet18" => Ok(resnet18_cifar(width, hw, seed)),
+        "vgg16" => Ok(vgg16_cifar(width, hw, seed)),
+        _ => anyhow::bail!("unknown CIFAR architecture '{arch}' (expected resnet18 or vgg16)"),
+    }
+}
+
 /// Train a small digital CIFAR model once, then evaluate it under varying
 /// hardware configurations (the paper's direct-mapping inference flow).
 fn trained_cifar_model(
@@ -432,14 +570,10 @@ fn trained_cifar_model(
     train_imgs: usize,
     steps: usize,
     seed: u64,
-) -> (Sequential, crate::data::Dataset) {
+) -> anyhow::Result<(Sequential, crate::data::Dataset)> {
     let data = cifar_like::load(train_imgs + 256, seed);
     let (train_set, test_set) = data.split(train_imgs);
-    let mut model = match arch {
-        "resnet18" => resnet18_cifar(width, None, seed),
-        "vgg16" => vgg16_cifar(width, None, seed),
-        _ => panic!("unknown arch"),
-    };
+    let mut model = cifar_model(arch, width, None, seed)?;
     let tcfg = TrainConfig {
         steps,
         batch_size: 16,
@@ -449,25 +583,27 @@ fn trained_cifar_model(
         ..Default::default()
     };
     let _ = train(&mut model, &train_set, &tcfg);
-    (model, test_set)
+    Ok((model, test_set))
 }
 
 /// Rebuild the model with hardware layers and copy the trained weights in
 /// (the paper's `torch.load_state_dict` + `update_weight()` flow).
-fn to_hardware(arch: &str, width: usize, seed: u64, digital: &mut Sequential, hw: HwSpec) -> Sequential {
-    let mut model = match arch {
-        "resnet18" => resnet18_cifar(width, Some(hw), seed),
-        "vgg16" => vgg16_cifar(width, Some(hw), seed),
-        _ => panic!("unknown arch"),
-    };
+fn to_hardware(
+    arch: &str,
+    width: usize,
+    seed: u64,
+    digital: &mut Sequential,
+    hw: HwSpec,
+) -> anyhow::Result<Sequential> {
+    let mut model = cifar_model(arch, width, Some(hw), seed)?;
     // `load_state_dict` + `update_weight()` flow: parameters AND buffers
     // (BatchNorm running stats) transfer, then the arrays are programmed.
     model.load_state_from(digital);
     model.update_weight();
-    model
+    Ok(model)
 }
 
-pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
+pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> {
     let width = scale.pick(4, 6);
     let train_imgs = scale.pick(256, 768);
     let steps = scale.pick(40, 120);
@@ -481,7 +617,7 @@ pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
         &["model", "cv=0", "cv=0.02", "cv=0.05", "cv=0.1"],
     );
     for arch in ["resnet18", "vgg16"] {
-        let (mut digital, test_set) = trained_cifar_model(arch, width, train_imgs, steps, cfg.seed);
+        let (mut digital, test_set) = trained_cifar_model(arch, width, train_imgs, steps, cfg.seed)?;
         let acc_digital = evaluate(&mut digital, &test_set, 16, eval_imgs);
         // (a) slice-bit sweep at low noise.
         let mut row1 = vec![arch.to_string(), format!("{acc_digital:.3}")];
@@ -492,7 +628,7 @@ pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
                 DotProductEngine::new(dpe_cfg, cfg.seed),
                 SliceMethod::int(SliceSpec::ones(bits)),
             );
-            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw);
+            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw)?;
             row1.push(format!("{:.3}", evaluate(&mut model, &test_set, 16, eval_imgs)));
         }
         t1.row(&row1);
@@ -505,12 +641,12 @@ pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
                 DotProductEngine::new(dpe_cfg, cfg.seed),
                 SliceMethod::int(SliceSpec::int8()),
             );
-            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw);
+            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw)?;
             row2.push(format!("{:.3}", evaluate(&mut model, &test_set, 16, eval_imgs)));
         }
         t2.row(&row2);
     }
-    vec![t1, t2]
+    Ok(vec![t1, t2])
 }
 
 // -------------------------------------------------------------- Table 3
@@ -611,8 +747,9 @@ mod tests {
 
     #[test]
     fn registry_lists_all_paper_artifacts() {
-        assert_eq!(EXPERIMENTS.len(), 10);
+        assert_eq!(EXPERIMENTS.len(), 11);
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "table3_throughput"));
+        assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_faults"));
     }
 
     #[test]
@@ -636,5 +773,20 @@ mod tests {
     fn fig15_quick_runs() {
         let t = fig15_kmeans(&quick_cfg(), Scale::Quick);
         assert!(t[0].rows.len() >= 3);
+    }
+
+    #[test]
+    fn fig_faults_quick_runs_and_tables_well_formed() {
+        let tables = fig_faults(&quick_cfg(), Scale::Quick);
+        assert_eq!(tables.len(), 3);
+        // (a): bits × cv × rate grid fully populated.
+        assert_eq!(tables[0].rows.len(), 2 * 2 * 3);
+        // Yield column parses and stays within [0, 1].
+        for row in &tables[0].rows {
+            let y: f64 = row.last().unwrap().parse().unwrap();
+            assert!((0.0..=1.0).contains(&y), "yield {y}");
+        }
+        assert_eq!(tables[1].rows.len(), 5);
+        assert_eq!(tables[2].rows.len(), 5);
     }
 }

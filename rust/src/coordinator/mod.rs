@@ -6,6 +6,8 @@ pub mod experiments;
 
 pub use experiments::{run as run_experiment, Scale, EXPERIMENTS};
 
+use crate::device::drift::DriftSpec;
+use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec};
 use crate::device::DeviceSpec;
 use crate::dpe::engine::AdcPolicy;
 use crate::dpe::{DotProductEngine, DpeConfig, SliceMethod};
@@ -68,6 +70,30 @@ impl SimConfig {
             "integer_snap" => AdcPolicy::IntegerSnap,
             _ => AdcPolicy::WorstCase,
         };
+        // [faults] — unified non-ideality injection (all-off by default;
+        // see `device::faults` for knob semantics and sources).
+        let ni = &mut d.nonideal;
+        ni.faults = FaultSpec {
+            sa0: doc.f64_or("faults", "sa0", 0.0),
+            sa1: doc.f64_or("faults", "sa1", 0.0),
+            dead_row: doc.f64_or("faults", "dead_row", 0.0),
+            dead_col: doc.f64_or("faults", "dead_col", 0.0),
+        };
+        ni.t_read = doc.f64_or("faults", "t_read", 0.0);
+        ni.drift = DriftSpec {
+            nu: doc.f64_or("faults", "drift_nu", ni.drift.nu),
+            nu_std: doc.f64_or("faults", "drift_nu_std", ni.drift.nu_std),
+            t0: doc.f64_or("faults", "drift_t0", ni.drift.t0),
+        };
+        ni.adc = AdcErrorSpec {
+            gain_std: doc.f64_or("faults", "adc_gain_std", 0.0),
+            offset_std_lsb: doc.f64_or("faults", "adc_offset_lsb", 0.0),
+            rounding: match doc.str_or("faults", "adc_rounding", "round") {
+                "floor" => AdcRounding::Floor,
+                _ => AdcRounding::Round,
+            },
+        };
+        ni.seed = doc.usize_or("faults", "seed", ni.seed as usize) as u64;
         cfg.seed = doc.usize_or("run", "seed", 2024) as u64;
         cfg.backend = doc.str_or("run", "backend", "native").to_string();
         cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", "artifacts").to_string();
@@ -116,6 +142,31 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.method, "fp16");
         assert!(cfg.hw_spec().is_ok());
+    }
+
+    #[test]
+    fn faults_section_defaults_off_and_overrides_apply() {
+        // No [faults] section → the all-off spec (bit-identical engine).
+        let cfg = SimConfig::from_doc(&Doc::parse("[engine]\nvar = 0.05\n").unwrap());
+        assert!(cfg.dpe.nonideal.is_none());
+        let doc = Doc::parse(
+            "[faults]\nsa0 = 0.01\nsa1 = 0.02\ndead_row = 0.005\nt_read = 1e4\n\
+             drift_nu = 0.08\nadc_gain_std = 0.02\nadc_offset_lsb = 0.5\n\
+             adc_rounding = \"floor\"\nseed = 99\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc);
+        let ni = &cfg.dpe.nonideal;
+        assert_eq!(ni.faults.sa0, 0.01);
+        assert_eq!(ni.faults.sa1, 0.02);
+        assert_eq!(ni.faults.dead_row, 0.005);
+        assert_eq!(ni.t_read, 1e4);
+        assert_eq!(ni.drift.nu, 0.08);
+        assert_eq!(ni.adc.gain_std, 0.02);
+        assert_eq!(ni.adc.offset_std_lsb, 0.5);
+        assert_eq!(ni.adc.rounding, AdcRounding::Floor);
+        assert_eq!(ni.seed, 99);
+        assert!(ni.drift_enabled() && !ni.is_none());
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
 
 /// Power-law drift parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DriftSpec {
     /// Mean drift exponent ν (PCM ≈ 0.05–0.1; 0 disables drift).
     pub nu: f64,

@@ -1,0 +1,538 @@
+//! Unified fault / non-ideality injection for the crossbar arrays.
+//!
+//! The paper's engine models programming variation ([`DeviceSpec::cv`],
+//! Eq. 1) and ships a standalone drift model ([`super::drift`]); real
+//! deployments are additionally dominated by hard faults and peripheral
+//! errors. This module makes those first-class, mapping each knob to its
+//! source in the paper or the related-work simulators:
+//!
+//! | knob | models | source |
+//! |---|---|---|
+//! | [`FaultSpec::sa0`] / [`FaultSpec::sa1`] | cells stuck at LGS / HGS (forming/endurance failures) | the `stuck_at_fault` parameter surface of MemMIMO/simbrain; IMAC-Sim's circuit-level defect injection |
+//! | [`FaultSpec::dead_row`] / [`FaultSpec::dead_col`] | whole word/bit lines dead (driver or selector failure, all cells read as LGS) | IMAC-Sim line-defect modeling |
+//! | [`NonIdealitySpec::t_read`] + [`DriftSpec`] | retention loss between programming and read, folded into the programming path | the paper's stated future work ("conductance drift"); `retention_loss` in MemMIMO/simbrain; Ielmini/Le Gallo PCM power law |
+//! | [`AdcErrorSpec::gain_std`] / [`AdcErrorSpec::offset_std_lsb`] | per-column ADC gain/offset mismatch | CrossSim's calibrated-ADC error model; IMAC-Sim peripheral non-idealities |
+//! | [`AdcErrorSpec::rounding`] | ADC transfer-curve rounding mode (mid-tread round vs truncating floor) | ADC rounding in the MemMIMO/simbrain parameter surface |
+//!
+//! # Composition order (deterministic, seeded)
+//!
+//! [`NonIdealitySpec::inject_plane`] applies the program-time effects to
+//! one programmed digit plane in a fixed order, drawing from one seeded
+//! RNG stream per (weight-block, tag):
+//!
+//! 1. **programming variation** has already been applied by
+//!    [`DeviceSpec::sample_level`] (unchanged, separate RNG stream);
+//! 2. **retention/drift** to the configured read time `t_read`, in the
+//!    conductance domain (digit → G → power-law decay → digit), one
+//!    per-device drift exponent per cell;
+//! 3. **stuck-at cell faults** (row-major, one draw per cell);
+//! 4. **dead rows**, then **dead columns** (one draw per line), which
+//!    override cell state with SA0.
+//!
+//! Stuck cells are pinned *after* drift: a stuck-at-HGS cell reads the
+//! full-scale conductance regardless of retention loss. ADC gain/offset
+//! error is a **read-time** effect sampled per physical column of each
+//! array block, deterministically in (engine seed, injection seed, block
+//! id) ([`AdcChain`]); the engine applies it inside `adc_readout` so the
+//! fused pipeline and the per-slice-pair reference oracle stay
+//! bit-identical under every injection.
+//!
+//! Everything is gated so that a zero-rate spec draws **no** random
+//! numbers and leaves the engine bit-identical to no injection.
+//!
+//! The engine's `noise_free` flag remains the master kill-switch for all
+//! analog effects, injection included. To isolate faults from
+//! programming noise, set `device.cv = 0` (and keep `noise_free` off)
+//! rather than enabling `noise_free`.
+
+use super::drift::DriftSpec;
+use super::DeviceSpec;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Stuck-at cell and dead-line fault rates (probabilities per cell/line).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Probability a cell is stuck at the low conductance state (reads as
+    /// digit 0 regardless of the programmed value).
+    pub sa0: f64,
+    /// Probability a cell is stuck at the high conductance state (reads as
+    /// the device's maximum digit).
+    pub sa1: f64,
+    /// Probability an entire array row (word line) is dead — all its cells
+    /// read as SA0.
+    pub dead_row: f64,
+    /// Probability an entire array column (bit line) is dead (SA0).
+    pub dead_col: f64,
+}
+
+impl FaultSpec {
+    /// No faults.
+    pub fn none() -> Self {
+        FaultSpec::default()
+    }
+
+    /// True iff every rate is zero (no injection, no RNG draws).
+    pub fn is_none(&self) -> bool {
+        self.sa0 == 0.0 && self.sa1 == 0.0 && self.dead_row == 0.0 && self.dead_col == 0.0
+    }
+
+    /// Combined per-cell stuck-at rate (reporting label).
+    pub fn cell_rate(&self) -> f64 {
+        self.sa0 + self.sa1
+    }
+
+    /// Symmetric cell-fault shorthand: total `rate` split evenly between
+    /// SA0 and SA1, no line faults.
+    pub fn cells(rate: f64) -> Self {
+        FaultSpec { sa0: rate / 2.0, sa1: rate / 2.0, dead_row: 0.0, dead_col: 0.0 }
+    }
+}
+
+/// Per-cell fault state in a sampled [`FaultMask`].
+const CELL_OK: u8 = 0;
+const CELL_SA0: u8 = 1;
+const CELL_SA1: u8 = 2;
+
+/// One sampled fault pattern for an `rows × cols` physical array plane.
+/// Sampling is deterministic in the RNG; applying is idempotent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultMask {
+    pub rows: usize,
+    pub cols: usize,
+    cells: Vec<u8>,
+}
+
+impl FaultMask {
+    /// Sample a mask. Draw order (fixed, so masks are reproducible per
+    /// seed): one uniform per cell row-major, then one per row, then one
+    /// per column. A zero-rate spec returns a clean mask **without
+    /// consuming any RNG draws**.
+    pub fn sample(spec: &FaultSpec, rows: usize, cols: usize, rng: &mut Pcg64) -> FaultMask {
+        let mut cells = vec![CELL_OK; rows * cols];
+        if spec.is_none() {
+            return FaultMask { rows, cols, cells };
+        }
+        let p0 = spec.sa0.clamp(0.0, 1.0);
+        let p1 = spec.sa1.clamp(0.0, 1.0 - p0);
+        if p0 > 0.0 || p1 > 0.0 {
+            for c in cells.iter_mut() {
+                let u = rng.uniform();
+                if u < p0 {
+                    *c = CELL_SA0;
+                } else if u < p0 + p1 {
+                    *c = CELL_SA1;
+                }
+            }
+        }
+        if spec.dead_row > 0.0 {
+            for row in cells.chunks_mut(cols.max(1)) {
+                if rng.uniform() < spec.dead_row {
+                    row.fill(CELL_SA0);
+                }
+            }
+        }
+        if spec.dead_col > 0.0 {
+            for col in 0..cols {
+                if rng.uniform() < spec.dead_col {
+                    for r in 0..rows {
+                        cells[r * cols + col] = CELL_SA0;
+                    }
+                }
+            }
+        }
+        FaultMask { rows, cols, cells }
+    }
+
+    /// Pin faulty cells of a programmed digit plane: SA0 → 0 (LGS), SA1 →
+    /// `max_digit` (HGS). Healthy cells are untouched; applying a mask
+    /// twice equals applying it once.
+    pub fn apply(&self, plane: &mut Matrix, max_digit: f64) {
+        assert_eq!(
+            (plane.rows, plane.cols),
+            (self.rows, self.cols),
+            "fault mask shape mismatch"
+        );
+        for (v, &c) in plane.data.iter_mut().zip(&self.cells) {
+            match c {
+                CELL_SA0 => *v = 0.0,
+                CELL_SA1 => *v = max_digit,
+                _ => {}
+            }
+        }
+    }
+
+    /// `(sa0, sa1)` faulty-cell counts (line faults count as SA0 cells).
+    pub fn counts(&self) -> (usize, usize) {
+        let sa0 = self.cells.iter().filter(|&&c| c == CELL_SA0).count();
+        let sa1 = self.cells.iter().filter(|&&c| c == CELL_SA1).count();
+        (sa0, sa1)
+    }
+
+    /// True iff no cell is faulty.
+    pub fn is_clean(&self) -> bool {
+        self.cells.iter().all(|&c| c == CELL_OK)
+    }
+}
+
+/// ADC transfer-curve rounding mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdcRounding {
+    /// Mid-tread rounding to the nearest code (the ideal quantizer).
+    #[default]
+    Round,
+    /// Truncating converter: the output code is the largest code below the
+    /// input (a systematic −0.5 LSB bias, common in low-power flash ADCs).
+    Floor,
+}
+
+/// Per-column ADC gain/offset mismatch and rounding behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AdcErrorSpec {
+    /// Std of the multiplicative per-column gain error (mean 1).
+    pub gain_std: f64,
+    /// Std of the additive per-column offset error, in ADC LSBs of the
+    /// selected full-scale range.
+    pub offset_std_lsb: f64,
+    /// Code rounding mode.
+    pub rounding: AdcRounding,
+}
+
+impl AdcErrorSpec {
+    pub fn none() -> Self {
+        AdcErrorSpec::default()
+    }
+
+    /// True iff the ADC behaves ideally (no error terms, nearest-code
+    /// rounding) — the engine then keeps its original readout path.
+    pub fn is_ideal(&self) -> bool {
+        self.gain_std == 0.0 && self.offset_std_lsb == 0.0 && self.rounding == AdcRounding::Round
+    }
+}
+
+/// The sampled per-column ADC chain of one physical array: one
+/// `(gain, offset)` pair per output column, shared by every digit plane
+/// of that block column (the shift-and-add periphery funnels all planes
+/// of one output column through the same converter), while distinct
+/// array blocks sample independent chains. The engine seeds sampling
+/// from (engine seed, injection seed, block id), so repeated reads see
+/// the same mismatch — it is a static calibration error, not noise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdcChain {
+    gain: Vec<f64>,
+    /// Offsets in LSB units (scaled by the per-readout step at apply time).
+    offset_lsb: Vec<f64>,
+    rounding: AdcRounding,
+}
+
+impl AdcChain {
+    /// The ideal chain: no per-column state, nearest-code rounding.
+    pub fn ideal() -> Self {
+        AdcChain { gain: Vec::new(), offset_lsb: Vec::new(), rounding: AdcRounding::Round }
+    }
+
+    /// Sample a chain for `cols` physical columns. Draw order: gains
+    /// (one normal per column), then offsets.
+    pub fn sample(spec: &AdcErrorSpec, cols: usize, rng: &mut Pcg64) -> AdcChain {
+        let gain = (0..cols).map(|_| rng.normal_ms(1.0, spec.gain_std)).collect();
+        let offset_lsb = (0..cols).map(|_| rng.normal_ms(0.0, spec.offset_std_lsb)).collect();
+        AdcChain { gain, offset_lsb, rounding: spec.rounding }
+    }
+
+    /// True for [`AdcChain::ideal`] — callers keep the fast readout path.
+    pub fn is_ideal(&self) -> bool {
+        self.gain.is_empty() && self.rounding == AdcRounding::Round
+    }
+
+    /// Convert one analog partial on column `col` through the erroneous
+    /// chain: apply gain and offset, round per the mode, clamp the code to
+    /// `[0, max_code]`, and reconstruct. `step` is the per-readout LSB.
+    #[inline]
+    pub fn convert(&self, v: f64, col: usize, step: f64, max_code: f64) -> f64 {
+        debug_assert!(col < self.gain.len(), "ADC chain column out of range");
+        let y = self.gain[col] * v + self.offset_lsb[col] * step;
+        let code = match self.rounding {
+            AdcRounding::Round => (y / step).round(),
+            AdcRounding::Floor => (y / step).floor(),
+        };
+        code.clamp(0.0, max_code) * step
+    }
+}
+
+/// The unified non-ideality specification threaded through
+/// [`crate::dpe::DpeConfig`]. Defaults are all-off: the engine is then
+/// bit-identical to one with no injection at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NonIdealitySpec {
+    /// Stuck-at cell and dead-line faults (program-time mask).
+    pub faults: FaultSpec,
+    /// Retention/drift model applied between programming and read.
+    pub drift: DriftSpec,
+    /// Read time (s) for the drift model; `t_read <= drift.t0` disables
+    /// retention loss (the default `0.0` always does).
+    pub t_read: f64,
+    /// Per-column ADC gain/offset error and rounding mode (read-time).
+    pub adc: AdcErrorSpec,
+    /// Extra seed decorrelating injection from programming noise; folded
+    /// with the engine seed so two engines can share weights-noise streams
+    /// while sampling different fault patterns.
+    pub seed: u64,
+}
+
+impl Default for NonIdealitySpec {
+    fn default() -> Self {
+        NonIdealitySpec {
+            faults: FaultSpec::none(),
+            drift: DriftSpec::default(),
+            t_read: 0.0,
+            adc: AdcErrorSpec::none(),
+            seed: 0x0FA1_7D05,
+        }
+    }
+}
+
+impl NonIdealitySpec {
+    /// The all-off spec.
+    pub fn none() -> Self {
+        NonIdealitySpec::default()
+    }
+
+    /// True iff retention loss is active at read time.
+    pub fn drift_enabled(&self) -> bool {
+        self.t_read > self.drift.t0 && self.drift.nu != 0.0
+    }
+
+    /// True iff the spec injects nothing anywhere.
+    pub fn is_none(&self) -> bool {
+        self.faults.is_none() && !self.drift_enabled() && self.adc.is_ideal()
+    }
+
+    /// True iff any *program-time* effect is active (drift or stuck-at);
+    /// the engine skips the injection pass — and all its RNG draws —
+    /// otherwise.
+    pub fn injects_at_program(&self) -> bool {
+        self.drift_enabled() || !self.faults.is_none()
+    }
+
+    /// Apply the program-time effects to one programmed digit plane
+    /// (values are offset-corrected analog digits, `(G − LGS)/step`), in
+    /// the documented order: drift to `t_read`, then stuck-at cells, then
+    /// dead lines. Deterministic in `rng`.
+    pub fn inject_plane(&self, plane: &mut Matrix, dev: &DeviceSpec, rng: &mut Pcg64) {
+        if self.drift_enabled() {
+            let step = dev.step();
+            for v in plane.data.iter_mut() {
+                let g = *v * step + dev.lgs;
+                let nu = rng.normal_ms(self.drift.nu, self.drift.nu_std);
+                *v = (self.drift.apply_one(g, nu, self.t_read) - dev.lgs) / step;
+            }
+        }
+        if !self.faults.is_none() {
+            let mask = FaultMask::sample(&self.faults, plane.rows, plane.cols, rng);
+            mask.apply(plane, dev.max_digit() as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn prop_stuck_at_rate_matches_request() {
+        // Injected SA0/SA1 rates must match the requested probabilities
+        // within a binomial confidence bound (6σ + discreteness slack).
+        prop_check("stuck-at rate matches request", 60, |g| {
+            let rows = g.usize_in(32..=96);
+            let cols = g.usize_in(32..=96);
+            let sa0 = g.f64_in(0.0..0.15);
+            let sa1 = g.f64_in(0.0..0.15);
+            let spec = FaultSpec { sa0, sa1, dead_row: 0.0, dead_col: 0.0 };
+            let mask = FaultMask::sample(&spec, rows, cols, g.rng());
+            let n = (rows * cols) as f64;
+            let (c0, c1) = mask.counts();
+            for (want, got) in [(sa0, c0 as f64 / n), (sa1, c1 as f64 / n)] {
+                let tol = 6.0 * (want * (1.0 - want) / n).sqrt() + 2.0 / n;
+                if (got - want).abs() > tol {
+                    return Err(format!(
+                        "rate {got:.4} vs requested {want:.4} (n={n}, tol={tol:.4})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mask_deterministic_per_seed_and_idempotent() {
+        prop_check("mask deterministic + idempotent", 100, |g| {
+            let rows = g.usize_in(1..=48);
+            let cols = g.usize_in(1..=48);
+            let spec = FaultSpec {
+                sa0: g.f64_in(0.0..0.3),
+                sa1: g.f64_in(0.0..0.3),
+                dead_row: g.f64_in(0.0..0.1),
+                dead_col: g.f64_in(0.0..0.1),
+            };
+            let seed = g.rng().next_u64();
+            let m1 = FaultMask::sample(&spec, rows, cols, &mut Pcg64::new(seed, 1));
+            let m2 = FaultMask::sample(&spec, rows, cols, &mut Pcg64::new(seed, 1));
+            if m1 != m2 {
+                return Err("same seed produced different masks".into());
+            }
+            let mut plane = Matrix::from_fn(rows, cols, |i, j| ((i * cols + j) % 16) as f64);
+            let mut once = plane.clone();
+            m1.apply(&mut once, 15.0);
+            plane = once.clone();
+            m1.apply(&mut plane, 15.0);
+            if plane.data != once.data {
+                return Err("mask application is not idempotent".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_zero_rate_is_bit_identical_and_draw_free() {
+        prop_check("zero-rate spec injects nothing", 100, |g| {
+            let rows = g.usize_in(1..=32);
+            let cols = g.usize_in(1..=32);
+            let vals = g.vec_f64(rows * cols, 0.0..15.0);
+            let mut plane = Matrix::from_vec(rows, cols, vals);
+            let orig = plane.clone();
+            let mut rng = Pcg64::new(g.rng().next_u64(), 7);
+            let mut untouched = rng.clone();
+            let mask = FaultMask::sample(&FaultSpec::none(), rows, cols, &mut rng);
+            if !mask.is_clean() {
+                return Err("zero-rate mask has faults".into());
+            }
+            mask.apply(&mut plane, 15.0);
+            if plane.data != orig.data {
+                return Err("zero-rate apply changed bits".into());
+            }
+            // No RNG draws may have been consumed.
+            if rng.next_u64() != untouched.next_u64() {
+                return Err("zero-rate sampling consumed RNG draws".into());
+            }
+            // Same for the full spec-level injection entry point.
+            let ni = NonIdealitySpec::none();
+            let mut rng2 = Pcg64::new(g.rng().next_u64(), 9);
+            let mut untouched2 = rng2.clone();
+            if ni.injects_at_program() {
+                return Err("none() spec claims program-time injection".into());
+            }
+            ni.inject_plane(&mut plane, &DeviceSpec::default(), &mut rng2);
+            if plane.data != orig.data {
+                return Err("none() inject_plane changed bits".into());
+            }
+            if rng2.next_u64() != untouched2.next_u64() {
+                return Err("none() inject_plane consumed RNG draws".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dead_lines_zero_whole_rows_and_cols() {
+        prop_check("dead lines pin whole rows/cols to SA0", 40, |g| {
+            let rows = g.usize_in(2..=24);
+            let cols = g.usize_in(2..=24);
+            // Certain line faults: every row and column dead.
+            let spec = FaultSpec { sa0: 0.0, sa1: 1.0, dead_row: 1.0, dead_col: 1.0 };
+            let mask = FaultMask::sample(&spec, rows, cols, g.rng());
+            let mut plane = Matrix::from_fn(rows, cols, |_, _| 7.0);
+            mask.apply(&mut plane, 15.0);
+            if plane.data.iter().any(|&v| v != 0.0) {
+                return Err("dead lines did not override SA1 cells".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sa1_pins_to_max_digit() {
+        let spec = FaultSpec { sa0: 0.0, sa1: 1.0, dead_row: 0.0, dead_col: 0.0 };
+        let mask = FaultMask::sample(&spec, 4, 4, &mut Pcg64::seeded(3));
+        let mut plane = Matrix::zeros(4, 4);
+        mask.apply(&mut plane, 15.0);
+        assert!(plane.data.iter().all(|&v| v == 15.0));
+        let (c0, c1) = mask.counts();
+        assert_eq!((c0, c1), (0, 16));
+    }
+
+    #[test]
+    fn drift_at_read_shrinks_digits() {
+        let dev = DeviceSpec::default();
+        let ni = NonIdealitySpec {
+            drift: DriftSpec { nu: 0.1, nu_std: 0.0, t0: 1.0 },
+            t_read: 1e4,
+            ..NonIdealitySpec::none()
+        };
+        assert!(ni.drift_enabled());
+        let mut plane = Matrix::from_vec(1, 3, vec![5.0, 10.0, 15.0]);
+        ni.inject_plane(&mut plane, &dev, &mut Pcg64::seeded(8));
+        // Power-law decay with nu_std = 0 is deterministic: each G decays
+        // by (1e4)^-0.1, and the offset-corrected digit strictly shrinks.
+        for (got, &orig) in plane.data.iter().zip(&[5.0, 10.0, 15.0]) {
+            let g = orig * dev.step() + dev.lgs;
+            let want = (g * 1e4f64.powf(-0.1) - dev.lgs) / dev.step();
+            assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+            assert!(*got < orig);
+        }
+    }
+
+    #[test]
+    fn stuck_cells_ignore_drift() {
+        // SA1 pins to max digit even when retention would have decayed it.
+        let dev = DeviceSpec::default();
+        let ni = NonIdealitySpec {
+            faults: FaultSpec { sa1: 1.0, ..FaultSpec::none() },
+            drift: DriftSpec { nu: 0.1, nu_std: 0.0, t0: 1.0 },
+            t_read: 1e6,
+            ..NonIdealitySpec::none()
+        };
+        let mut plane = Matrix::from_vec(2, 2, vec![3.0; 4]);
+        ni.inject_plane(&mut plane, &dev, &mut Pcg64::seeded(9));
+        assert!(plane.data.iter().all(|&v| v == 15.0));
+    }
+
+    #[test]
+    fn adc_chain_ideal_and_sampled() {
+        assert!(AdcChain::ideal().is_ideal());
+        assert!(AdcErrorSpec::none().is_ideal());
+        let spec = AdcErrorSpec { gain_std: 0.05, offset_std_lsb: 0.5, rounding: AdcRounding::Round };
+        assert!(!spec.is_ideal());
+        let c1 = AdcChain::sample(&spec, 64, &mut Pcg64::seeded(4));
+        let c2 = AdcChain::sample(&spec, 64, &mut Pcg64::seeded(4));
+        assert_eq!(c1, c2, "chain sampling must be deterministic per seed");
+        assert!(!c1.is_ideal());
+    }
+
+    #[test]
+    fn adc_chain_floor_biases_down() {
+        let spec = AdcErrorSpec { gain_std: 0.0, offset_std_lsb: 0.0, rounding: AdcRounding::Floor };
+        assert!(!spec.is_ideal(), "floor rounding is a non-ideal chain");
+        let chain = AdcChain::sample(&spec, 1, &mut Pcg64::seeded(5));
+        // 2.9 LSB floors to code 2 where round gives 3.
+        assert_eq!(chain.convert(2.9, 0, 1.0, 100.0), 2.0);
+        // Codes clamp to [0, max_code].
+        assert_eq!(chain.convert(-3.0, 0, 1.0, 100.0), 0.0);
+        assert_eq!(chain.convert(500.0, 0, 1.0, 100.0), 100.0);
+    }
+
+    #[test]
+    fn spec_gates_report_correctly() {
+        let mut ni = NonIdealitySpec::none();
+        assert!(ni.is_none() && !ni.injects_at_program());
+        ni.faults.sa0 = 0.01;
+        assert!(!ni.is_none() && ni.injects_at_program());
+        let mut ni2 = NonIdealitySpec::none();
+        ni2.adc.offset_std_lsb = 0.5;
+        // ADC error is read-time only: no program-time injection pass.
+        assert!(!ni2.is_none() && !ni2.injects_at_program());
+        let mut ni3 = NonIdealitySpec::none();
+        ni3.t_read = 1e5;
+        assert!(ni3.drift_enabled() && ni3.injects_at_program());
+    }
+}

@@ -7,8 +7,14 @@
 //! mapping between digital slice values and conductance is linear between
 //! the low (`lgs`) and high (`hgs`) conductance states with `g_levels`
 //! programmable levels.
+//!
+//! Beyond Eq. 1, [`drift`] models power-law retention loss and [`faults`]
+//! composes the unified non-ideality injection (stuck-at cells, dead
+//! lines, drift at read time, per-column ADC error) threaded through the
+//! DPE's weight-programming path.
 
 pub mod drift;
+pub mod faults;
 
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;

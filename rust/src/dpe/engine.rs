@@ -65,6 +65,7 @@ use super::blocks::MatmulBlocks;
 use super::quant::Adc;
 use super::slicing::{quantize_block, slice_digits, DataMode, SliceSpec, SliceTables};
 use crate::circuit::CrossbarCircuit;
+use crate::device::faults::{AdcChain, NonIdealitySpec};
 use crate::device::DeviceSpec;
 use crate::tensor::{matmul_packed_into, matmul_packed_rows_into, Matrix, PackedB};
 use crate::util::parallel::{par_chunks_mut, par_map};
@@ -147,6 +148,16 @@ pub struct DpeConfig {
     pub r_wire: f64,
     /// Read voltage at full input scale (V), used by the circuit path.
     pub v_read: f64,
+    /// Unified fault/non-ideality injection (stuck-at + dead lines,
+    /// retention at read time, per-column ADC error). The default all-off
+    /// spec leaves the engine bit-identical to no injection; see
+    /// [`crate::device::faults`] for the composition order.
+    ///
+    /// `noise_free = true` is the master kill-switch for **all** analog
+    /// effects and disables this injection too — to study faults in
+    /// isolation from programming noise, keep `noise_free = false` and
+    /// set `device.cv = 0` instead.
+    pub nonideal: NonIdealitySpec,
 }
 
 impl Default for DpeConfig {
@@ -161,6 +172,7 @@ impl Default for DpeConfig {
             use_circuit: false,
             r_wire: 2.93,
             v_read: 0.2,
+            nonideal: NonIdealitySpec::none(),
         }
     }
 }
@@ -177,6 +189,11 @@ struct PreparedBlock {
     /// programming and reused by every `matmul_prepared` call.
     packed: PackedB,
     scale: f64,
+    /// This array's per-column ADC chain (ideal unless the non-ideality
+    /// spec configures gain/offset error or floor rounding) — sampled
+    /// once at program time so the ADC knob, like the fault masks, costs
+    /// nothing per matmul.
+    chain: AdcChain,
 }
 
 impl PreparedBlock {
@@ -309,6 +326,12 @@ impl DotProductEngine {
         );
         let (l_m, l_n) = self.cfg.array;
         let n_slices = method.spec.num_slices();
+        // Fault/retention injection is a program-time effect: it runs once
+        // per prepared-weight lifetime on its own RNG stream (so an all-off
+        // spec leaves the programming-noise stream — and every bit of the
+        // result — untouched), and costs nothing per matmul.
+        let ni = &self.cfg.nonideal;
+        let inject = !self.cfg.noise_free && ni.injects_at_program();
         let blocks: Vec<PreparedBlock> = par_map(grid.pair_count(), |blk| {
             let (kb, nb) = grid.pair(blk);
             let (k0, kl) = grid.k.range(kb);
@@ -318,19 +341,32 @@ impl DotProductEngine {
             let qb = quantize_block(&sub, &method.spec, method.mode);
             let digit_planes = slice_digits(&qb.q, &method.spec);
             let mut rng = Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), blk as u64);
+            let mut fault_rng = inject.then(|| {
+                Pcg64::new(
+                    self.seed ^ ni.seed ^ tag.wrapping_mul(0xD1B5_4A32_D192_ED03),
+                    0x4641_544C ^ blk as u64,
+                )
+            });
             let mut fused = Matrix::zeros(l_m, n_slices * l_n);
             for (s, plane) in digit_planes.into_iter().enumerate() {
-                let programmed = if self.cfg.noise_free {
+                let mut programmed = if self.cfg.noise_free {
                     plane
                 } else {
                     self.program_plane(&plane, &mut rng)
                 };
+                if let Some(frng) = fault_rng.as_mut() {
+                    ni.inject_plane(&mut programmed, &self.cfg.device, frng);
+                }
                 for r in 0..l_m {
                     let dst = r * n_slices * l_n + s * l_n;
                     fused.data[dst..dst + l_n].copy_from_slice(programmed.row(r));
                 }
             }
-            PreparedBlock { packed: PackedB::pack(&fused), scale: qb.scale }
+            PreparedBlock {
+                packed: PackedB::pack(&fused),
+                scale: qb.scale,
+                chain: self.adc_chain_for(blk),
+            }
         });
         PreparedWeights { blocks, grid, method: method.clone(), k: b.rows, n: b.cols }
     }
@@ -423,9 +459,9 @@ impl DotProductEngine {
                 return Matrix::zeros(m, l_n);
             }
             if self.cfg.use_circuit {
-                self.pair_contribution_circuit(ab, wb, &plan, &adc)
+                self.pair_contribution_circuit(ab, wb, &plan, &adc, &wb.chain)
             } else {
-                self.pair_contribution_fused(ab, wb, &plan, &adc, band_parallel)
+                self.pair_contribution_fused(ab, wb, &plan, &adc, &wb.chain, band_parallel)
             }
         };
         let pair_results: Vec<Matrix> = if across_pairs {
@@ -441,6 +477,23 @@ impl DotProductEngine {
         out
     }
 
+    /// The per-column ADC chain of one physical array pair (block `blk` =
+    /// `kb·nc + nb`): ideal (fast readout path) unless the non-ideality
+    /// spec configures gain/offset error or floor rounding. Each block has
+    /// its own periphery, so distinct arrays sample independent mismatch;
+    /// the sampling is deterministic in (engine seed, injection seed,
+    /// block id) and happens once at `prepare_weights` time (the chain is
+    /// stored in the [`PreparedBlock`], a static calibration error shared
+    /// by every matmul — and by the `#[cfg(test)]` reference oracle).
+    fn adc_chain_for(&self, blk: usize) -> AdcChain {
+        let ni = &self.cfg.nonideal;
+        if self.cfg.noise_free || ni.adc.is_ideal() {
+            return AdcChain::ideal();
+        }
+        let mut rng = Pcg64::new(self.seed ^ ni.seed, 0xADC0_0000 ^ blk as u64);
+        AdcChain::sample(&ni.adc, self.cfg.array.1, &mut rng)
+    }
+
     /// The fused slice-plane contribution of one (k-block, n-block) array
     /// pair: one packed GEMM per input slice producing all `S_w`
     /// weight-slice partials as column stripes, ADC'd and recombined in
@@ -452,6 +505,7 @@ impl DotProductEngine {
         wb: &PreparedBlock,
         plan: &SlicePairPlan,
         adc: &Adc,
+        chain: &AdcChain,
         band_parallel: bool,
     ) -> Matrix {
         let l_n = self.cfg.array.1;
@@ -473,7 +527,7 @@ impl DotProductEngine {
             if !self.cfg.noise_free {
                 for sw in 0..sw_n {
                     let stripe = Stripe { rows: m, stride: wide, c0: sw * l_n, width: l_n };
-                    self.adc_readout(adc, &mut fused_out, stripe, plan.worst_scale[plan.idx(sa, sw)]);
+                    self.adc_readout(adc, &mut fused_out, stripe, plan.worst_scale[plan.idx(sa, sw)], chain);
                 }
             }
             // Shift-add recombination over the stripes, in the same
@@ -507,6 +561,7 @@ impl DotProductEngine {
         wb: &PreparedBlock,
         plan: &SlicePairPlan,
         adc: &Adc,
+        chain: &AdcChain,
     ) -> Matrix {
         let l_n = self.cfg.array.1;
         let m = ab.slices[0].rows;
@@ -523,6 +578,7 @@ impl DotProductEngine {
                         &mut partial.data,
                         Stripe::contiguous(m, l_n),
                         plan.worst_scale[plan.idx(sa, sw)],
+                        chain,
                     );
                 }
                 let wgt = plan.pair_weight[plan.idx(sa, sw)];
@@ -539,16 +595,34 @@ impl DotProductEngine {
     }
 
     /// Apply the configured ADC policy to one readout stripe in place.
-    fn adc_readout(&self, adc: &Adc, data: &mut [f64], stripe: Stripe, worst: f64) {
+    /// With a non-ideal `chain`, each value passes through its column's
+    /// gain/offset error and the configured rounding mode before code
+    /// reconstruction; stripe column `j` is physical array column `j` in
+    /// both the fused layout and the reference oracle's contiguous
+    /// partials, so the two paths stay bit-identical under injection.
+    fn adc_readout(&self, adc: &Adc, data: &mut [f64], stripe: Stripe, worst: f64, chain: &AdcChain) {
         match self.cfg.adc_policy {
             AdcPolicy::WorstCase => {
                 let q = adc.for_full_scale(worst);
-                for i in 0..stripe.rows {
-                    let s = i * stripe.stride + stripe.c0;
-                    q.quantize_slice(&mut data[s..s + stripe.width]);
+                if chain.is_ideal() {
+                    for i in 0..stripe.rows {
+                        let s = i * stripe.stride + stripe.c0;
+                        q.quantize_slice(&mut data[s..s + stripe.width]);
+                    }
+                } else {
+                    let step = q.step();
+                    let max_code = self.cfg.radc as f64 - 1.0;
+                    for i in 0..stripe.rows {
+                        let s = i * stripe.stride + stripe.c0;
+                        for (j, v) in data[s..s + stripe.width].iter_mut().enumerate() {
+                            *v = chain.convert(*v, j, step, max_code);
+                        }
+                    }
                 }
             }
             AdcPolicy::Calibrated | AdcPolicy::IntegerSnap => {
+                // The PGA calibrates the range on the undistorted peak;
+                // gain/offset mismatch then perturbs each conversion.
                 let mut peak = 0.0f64;
                 for i in 0..stripe.rows {
                     let s = i * stripe.stride + stripe.c0;
@@ -561,10 +635,20 @@ impl DotProductEngine {
                     step = step.max(1.0);
                 }
                 if step > 0.0 {
-                    for i in 0..stripe.rows {
-                        let s = i * stripe.stride + stripe.c0;
-                        for v in data[s..s + stripe.width].iter_mut() {
-                            *v = (*v / step).round().max(0.0) * step;
+                    if chain.is_ideal() {
+                        for i in 0..stripe.rows {
+                            let s = i * stripe.stride + stripe.c0;
+                            for v in data[s..s + stripe.width].iter_mut() {
+                                *v = (*v / step).round().max(0.0) * step;
+                            }
+                        }
+                    } else {
+                        let max_code = self.cfg.radc as f64 - 1.0;
+                        for i in 0..stripe.rows {
+                            let s = i * stripe.stride + stripe.c0;
+                            for (j, v) in data[s..s + stripe.width].iter_mut().enumerate() {
+                                *v = chain.convert(*v, j, step, max_code);
+                            }
                         }
                     }
                 }
@@ -599,6 +683,7 @@ impl DotProductEngine {
                 if ab.scale == 0.0 || wb.scale == 0.0 {
                     return Matrix::zeros(m, l_n);
                 }
+                let chain = &wb.chain;
                 let mut block_acc = Matrix::zeros(m, l_n);
                 for (sa, a_plane) in ab.slices.iter().enumerate() {
                     for sw in 0..plan.w.num_slices() {
@@ -614,6 +699,7 @@ impl DotProductEngine {
                                 &mut partial.data,
                                 Stripe::contiguous(m, l_n),
                                 plan.worst_scale[plan.idx(sa, sw)],
+                                chain,
                             );
                         }
                         let wgt = plan.pair_weight[plan.idx(sa, sw)];
@@ -939,5 +1025,125 @@ mod tests {
         assert_eq!(SliceMethod::parse("FP16").unwrap().mode, DataMode::PreAlign);
         assert_eq!(SliceMethod::parse("ones6").unwrap().spec.num_slices(), 6);
         assert!(SliceMethod::parse("nope").is_err());
+    }
+
+    /// The fault-injection variants the equivalence tests sweep: each
+    /// activates one non-ideality class, plus the all-on combination.
+    fn nonideal_variants() -> Vec<(&'static str, NonIdealitySpec)> {
+        use crate::device::drift::DriftSpec;
+        use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec};
+        let stuck = NonIdealitySpec {
+            faults: FaultSpec { sa0: 0.03, sa1: 0.02, dead_row: 0.02, dead_col: 0.02 },
+            ..NonIdealitySpec::none()
+        };
+        let drift = NonIdealitySpec {
+            drift: DriftSpec { nu: 0.08, nu_std: 0.02, t0: 1.0 },
+            t_read: 1e4,
+            ..NonIdealitySpec::none()
+        };
+        let adc = NonIdealitySpec {
+            adc: AdcErrorSpec { gain_std: 0.03, offset_std_lsb: 0.5, rounding: AdcRounding::Round },
+            ..NonIdealitySpec::none()
+        };
+        let floor = NonIdealitySpec {
+            adc: AdcErrorSpec { gain_std: 0.0, offset_std_lsb: 0.0, rounding: AdcRounding::Floor },
+            ..NonIdealitySpec::none()
+        };
+        let all = NonIdealitySpec {
+            faults: FaultSpec { sa0: 0.02, sa1: 0.02, dead_row: 0.01, dead_col: 0.01 },
+            drift: DriftSpec { nu: 0.05, nu_std: 0.01, t0: 1.0 },
+            t_read: 1e3,
+            adc: AdcErrorSpec { gain_std: 0.02, offset_std_lsb: 0.3, rounding: AdcRounding::Floor },
+            ..NonIdealitySpec::none()
+        };
+        vec![("stuck", stuck), ("drift", drift), ("adc", adc), ("floor", floor), ("all", all)]
+    }
+
+    #[test]
+    fn fused_matches_oracle_under_every_fault_injection() {
+        // Tentpole invariant extended: with stuck-at masks, retention at
+        // read time, and per-column ADC error active — alone and combined
+        // — the fused pipeline must still reproduce the per-slice-pair
+        // oracle bit for bit, for INT and FP methods on ragged shapes.
+        let shapes = [(5usize, 100usize, 37usize), (3, 65, 130), (12, 64, 64)];
+        let methods =
+            [SliceMethod::int(SliceSpec::int8()), SliceMethod::fp(SliceSpec::fp16())];
+        let policies = [AdcPolicy::WorstCase, AdcPolicy::Calibrated, AdcPolicy::IntegerSnap];
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            let a = rand_mat(m, k, 600 + si as u64);
+            let b = rand_mat(k, n, 700 + si as u64);
+            for method in &methods {
+                for &adc_policy in &policies {
+                    for (tag, ni) in nonideal_variants() {
+                        let cfg = DpeConfig {
+                            array: (64, 64),
+                            adc_policy,
+                            nonideal: ni,
+                            ..DpeConfig::default()
+                        };
+                        let e = DotProductEngine::new(cfg, 23);
+                        let w = e.prepare_weights(&b, method, 1);
+                        let fused = e.matmul_prepared(&a, &w, method, 0);
+                        let oracle = e.matmul_prepared_reference(&a, &w, method, 0);
+                        assert_eq!(
+                            fused.data, oracle.data,
+                            "{m}x{k}x{n} widths={:?} policy={adc_policy:?} nonideal={tag}",
+                            method.spec.widths
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rate_nonideal_spec_is_bit_identical_to_none() {
+        // An all-off NonIdealitySpec must leave the engine bit-identical
+        // to the default one *even when its injection seed differs*: if
+        // any gate were broken (fault RNG consulted, ADC chain sampled),
+        // the differing seed would perturb the output and fail this test.
+        let a = rand_mat(9, 80, 801);
+        let b = rand_mat(80, 70, 802);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let base = DotProductEngine::new(DpeConfig::default(), 5);
+        let explicit = DotProductEngine::new(
+            DpeConfig {
+                nonideal: NonIdealitySpec { seed: 0xDEAD_BEEF, ..NonIdealitySpec::none() },
+                ..DpeConfig::default()
+            },
+            5,
+        );
+        let wb = base.prepare_weights(&b, &med, 0);
+        let we = explicit.prepare_weights(&b, &med, 0);
+        assert_eq!(
+            base.matmul_prepared(&a, &wb, &med, 0).data,
+            explicit.matmul_prepared(&a, &we, &med, 0).data
+        );
+    }
+
+    #[test]
+    fn fault_injection_changes_results_and_degrades_accuracy() {
+        use crate::device::faults::FaultSpec;
+        let a = rand_mat(16, 128, 811);
+        let b = rand_mat(128, 64, 812);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let clean = DotProductEngine::new(DpeConfig::default(), 5);
+        let faulty = DotProductEngine::new(
+            DpeConfig {
+                nonideal: NonIdealitySpec {
+                    faults: FaultSpec::cells(0.1),
+                    ..NonIdealitySpec::none()
+                },
+                ..DpeConfig::default()
+            },
+            5,
+        );
+        let ideal = a.matmul(&b);
+        let re_clean = clean.matmul(&a, &b, &med, &med).relative_error(&ideal);
+        let re_faulty = faulty.matmul(&a, &b, &med, &med).relative_error(&ideal);
+        assert!(
+            re_faulty > re_clean,
+            "10% stuck cells must degrade accuracy: {re_faulty} vs {re_clean}"
+        );
     }
 }

@@ -8,7 +8,10 @@
 //! - [`engine`] — the DPE itself ([`DotProductEngine`]), with weight
 //!   preparation for reuse across calls and the fused slice-plane GEMM
 //!   pipeline on the matmul hot path (see `engine` §Perf);
-//! - [`montecarlo`] — the Monte-Carlo nonideality analysis driver (Fig 12).
+//! - [`montecarlo`] — the Monte-Carlo nonideality analysis driver (Fig 12)
+//!   plus the fault-injection accuracy/yield sweep
+//!   ([`montecarlo::sweep_faults`], backing the `fig_faults` experiment;
+//!   knobs live in [`crate::device::faults`]).
 
 pub mod blocks;
 pub mod engine;

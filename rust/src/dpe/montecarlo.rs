@@ -1,9 +1,15 @@
 //! Monte-Carlo nonideality analysis (paper Fig 12): repeated DPE matmuls
 //! with freshly sampled programming noise, sweeping bit width, block size,
-//! and conductance variation, reporting relative-error statistics.
+//! and conductance variation, reporting relative-error statistics — plus
+//! the fault-injection extension ([`run_fault_point`] / [`sweep_faults`]):
+//! each cycle re-programs with a fresh stuck-at/retention/ADC-error
+//! pattern and the point additionally reports **yield**, the fraction of
+//! programmed instances whose relative error stays within a target bound
+//! (the chip-binning view of robustness).
 
 use super::engine::{DotProductEngine, DpeConfig, SliceMethod};
 use super::slicing::{DataMode, SliceSpec};
+use crate::device::faults::NonIdealitySpec;
 use crate::tensor::Matrix;
 use crate::util::parallel::par_map;
 use crate::util::rng::Pcg64;
@@ -69,6 +75,17 @@ pub fn run_point(cfg: &McConfig, bits: usize, block: usize, cv: f64, mode: DataM
     run_point_with_operands(cfg, bits, block, cv, mode, &mut rng)
 }
 
+/// `(mean, std, min, max)` of a non-empty relative-error sample
+/// (population std, matching the paper's Fig-12 statistics).
+fn re_stats(res: &[f64]) -> (f64, f64, f64, f64) {
+    let n = res.len() as f64;
+    let mean = res.iter().sum::<f64>() / n;
+    let var = res.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n;
+    let min = res.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = res.iter().cloned().fold(0.0, f64::max);
+    (mean, var.sqrt(), min, max)
+}
+
 fn mc_operands(cfg: &McConfig, rng: &mut Pcg64) -> (Matrix, Matrix) {
     // Normal operands: per-block maxima land away from powers of two, so
     // the pre-alignment exponent rounding (vs full-precision quantization
@@ -101,20 +118,106 @@ fn run_point_with_operands(
             .matmul_prepared(&a, &w, &method, cycle as u64)
             .relative_error(&ideal)
     });
-    let n = res.len() as f64;
-    let mean = res.iter().sum::<f64>() / n;
-    let var = res.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n;
+    let (re_mean, re_std, re_min, re_max) = re_stats(&res);
     McPoint {
         label: format!("{bits}b/{block}blk/cv{cv}/{mode:?}"),
         bits,
         block,
         cv,
         mode,
-        re_mean: mean,
-        re_std: var.sqrt(),
-        re_min: res.iter().cloned().fold(f64::INFINITY, f64::min),
-        re_max: res.iter().cloned().fold(0.0, f64::max),
+        re_mean,
+        re_std,
+        re_min,
+        re_max,
     }
+}
+
+/// One fault-injection sweep point: RE statistics plus yield at a target
+/// error bound.
+#[derive(Debug, Clone)]
+pub struct FaultPoint {
+    pub label: String,
+    pub bits: usize,
+    pub cv: f64,
+    /// Combined per-cell stuck-at rate of the swept spec (reporting key).
+    pub fault_rate: f64,
+    pub re_mean: f64,
+    pub re_std: f64,
+    pub re_max: f64,
+    /// Fraction of Monte-Carlo cycles (independently programmed array
+    /// instances) with relative error ≤ the point's yield bound.
+    pub yield_frac: f64,
+    /// The RE bound used for `yield_frac`.
+    pub yield_re: f64,
+}
+
+/// Run one fault point: `cfg.cycles` independent programming cycles of
+/// the same operands under `ni`, each with a fresh fault pattern (the
+/// engine seed varies per cycle, which reseeds both the programming noise
+/// and the injection streams). Deterministic in `cfg.seed` regardless of
+/// thread count: per-cycle state derives only from the cycle index.
+pub fn run_fault_point(
+    cfg: &McConfig,
+    bits: usize,
+    cv: f64,
+    ni: &NonIdealitySpec,
+    yield_re: f64,
+) -> FaultPoint {
+    let mut rng = Pcg64::new(cfg.seed, 0x4641);
+    let (a, b) = mc_operands(cfg, &mut rng);
+    let ideal = a.matmul(&b);
+    let method = SliceMethod { spec: spec_for_bits(bits), mode: DataMode::Quantize };
+    let mut dpe_cfg = cfg.base.clone();
+    dpe_cfg.device.cv = cv;
+    dpe_cfg.nonideal = ni.clone();
+    let res: Vec<f64> = par_map(cfg.cycles, |cycle| {
+        let engine = DotProductEngine::new(dpe_cfg.clone(), cfg.seed.wrapping_add(cycle as u64));
+        let w = engine.prepare_weights(&b, &method, cycle as u64);
+        engine
+            .matmul_prepared(&a, &w, &method, cycle as u64)
+            .relative_error(&ideal)
+    });
+    let (re_mean, re_std, _, re_max) = re_stats(&res);
+    let good = res.iter().filter(|&&r| r <= yield_re).count();
+    let fault_rate = ni.faults.cell_rate();
+    FaultPoint {
+        label: format!("{bits}b/cv{cv}/fault{fault_rate}"),
+        bits,
+        cv,
+        fault_rate,
+        re_mean,
+        re_std,
+        re_max,
+        yield_frac: good as f64 / res.len() as f64,
+        yield_re,
+    }
+}
+
+/// The fault-injection sweep grid: symmetric stuck-at cell rates
+/// (`sa0 = sa1 = rate/2`) × conductance variation × bit width. Only the
+/// cell rates of `base` are overridden — its dead-line rates,
+/// retention/ADC knobs, and injection seed carry through to every point.
+/// Yield is evaluated at `yield_re`.
+pub fn sweep_faults(
+    cfg: &McConfig,
+    bits: &[usize],
+    cvs: &[f64],
+    rates: &[f64],
+    base: &NonIdealitySpec,
+    yield_re: f64,
+) -> Vec<FaultPoint> {
+    let mut out = Vec::new();
+    for &b in bits {
+        for &cv in cvs {
+            for &rate in rates {
+                let mut ni = base.clone();
+                ni.faults.sa0 = rate / 2.0;
+                ni.faults.sa1 = rate / 2.0;
+                out.push(run_fault_point(cfg, b, cv, &ni, yield_re));
+            }
+        }
+    }
+    out
 }
 
 /// The full Fig-12-style sweep grid.
@@ -183,6 +286,42 @@ mod tests {
         let q = run_point(&cfg, 6, 32, 0.01, DataMode::Quantize);
         let p = run_point(&cfg, 6, 32, 0.01, DataMode::PreAlign);
         assert!(q.re_mean < p.re_mean, "q {} vs p {}", q.re_mean, p.re_mean);
+    }
+
+    #[test]
+    fn fault_point_degrades_with_rate() {
+        let cfg = small_cfg();
+        let clean = run_fault_point(&cfg, 8, 0.02, &NonIdealitySpec::none(), 0.05);
+        let mut ni = NonIdealitySpec::none();
+        ni.faults = crate::device::faults::FaultSpec::cells(0.2);
+        let faulty = run_fault_point(&cfg, 8, 0.02, &ni, 0.05);
+        assert!(
+            faulty.re_mean > clean.re_mean,
+            "20% stuck cells must raise RE: {} vs {}",
+            faulty.re_mean,
+            clean.re_mean
+        );
+        assert!(faulty.yield_frac <= clean.yield_frac);
+        for p in [&clean, &faulty] {
+            assert!((0.0..=1.0).contains(&p.yield_frac));
+            assert!(p.re_mean.is_finite() && p.re_mean >= 0.0);
+        }
+    }
+
+    #[test]
+    fn fault_sweep_grid_size_and_labels() {
+        let cfg = McConfig { size: 16, cycles: 3, ..McConfig::default() };
+        let pts = sweep_faults(
+            &cfg,
+            &[4, 8],
+            &[0.0, 0.05],
+            &[0.0, 0.05],
+            &NonIdealitySpec::none(),
+            0.1,
+        );
+        assert_eq!(pts.len(), 8);
+        assert!(pts.iter().all(|p| p.yield_re == 0.1));
+        assert!(pts.iter().any(|p| p.fault_rate == 0.0) && pts.iter().any(|p| p.fault_rate > 0.0));
     }
 
     #[test]

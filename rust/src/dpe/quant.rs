@@ -98,6 +98,77 @@ impl Adc {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn prop_quantize_roundtrip_error_bound() {
+        // dequant(quant(x)) round-trip: for any in-range input the
+        // reconstruction error is at most half an LSB (mid-tread rounding),
+        // across random resolutions and full-scale ranges.
+        prop_check("quantize roundtrip error ≤ step/2", 200, |g| {
+            let levels = g.usize_in(2..=4096);
+            let full_scale = g.f64_in(1e-6..1e6);
+            let q = UniformQuantizer::new(levels, full_scale);
+            let step = q.step();
+            for _ in 0..16 {
+                let x = g.f64_in(0.0..full_scale);
+                let y = q.quantize(x);
+                if (y - x).abs() > step / 2.0 + full_scale * 1e-12 {
+                    return Err(format!(
+                        "levels={levels} fs={full_scale:.3e}: |q({x}) - {x}| = {} > step/2 = {}",
+                        (y - x).abs(),
+                        step / 2.0
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantize_idempotent_and_clamped() {
+        prop_check("quantize idempotent + clamped", 200, |g| {
+            let levels = g.usize_in(2..=1024);
+            let full_scale = g.f64_in(1e-3..1e3);
+            let q = UniformQuantizer::new(levels, full_scale);
+            // Idempotence on arbitrary (also out-of-range) inputs.
+            let x = g.f64_in(-2.0 * full_scale..3.0 * full_scale);
+            let once = q.quantize(x);
+            if q.quantize(once) != once {
+                return Err(format!("q(q({x})) != q({x})"));
+            }
+            // Output always lands on a code in [0, full_scale].
+            if !(0.0..=full_scale * (1.0 + 1e-12)).contains(&once) {
+                return Err(format!("q({x}) = {once} outside [0, {full_scale}]"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dac_conversion_error_bounded() {
+        // DAC conversion error is at most half its LSB for any in-range
+        // digit (exactness additionally needs `max_digit | rdac−1`, e.g.
+        // the Table-2 rdac=256 with 4-bit slices — covered by the unit
+        // tests below).
+        prop_check("DAC conversion error ≤ step/2", 100, |g| {
+            let rdac_bits = g.usize_in(2..=12);
+            let dac = Dac::new(1 << rdac_bits);
+            let width = g.usize_in(1..=rdac_bits.min(8));
+            let max_digit = (1u32 << width) - 1;
+            let d = g.usize_in(0..=max_digit as usize) as f64;
+            let got = dac.convert(d, max_digit);
+            let step = max_digit as f64 / ((1usize << rdac_bits) as f64 - 1.0);
+            if (got - d).abs() > step / 2.0 + 1e-12 {
+                return Err(format!(
+                    "rdac=2^{rdac_bits} width={width}: |convert({d}) - {d}| = {} > {}",
+                    (got - d).abs(),
+                    step / 2.0
+                ));
+            }
+            Ok(())
+        });
+    }
 
     #[test]
     fn quantize_is_idempotent() {

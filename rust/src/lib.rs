@@ -26,6 +26,13 @@
 //! once; see `dpe::engine` §Perf and `tensor` §Perf for the design and
 //! `benches/table3_throughput.rs` (`BENCH_table3.json`) for the tracked
 //! throughput numbers.
+//!
+//! Beyond the paper, [`device::faults`] adds a unified fault-injection
+//! subsystem (stuck-at cells, dead lines, retention at read time,
+//! per-column ADC error) threaded through weight programming so faults
+//! cost one mask application per prepared-weight lifetime; the
+//! `fig_faults` experiment and `dpe::montecarlo::sweep_faults` report
+//! accuracy/yield under it.
 
 pub mod apps;
 pub mod circuit;

@@ -4,6 +4,8 @@
 //! memintelli list                         list experiments (paper figures/tables)
 //! memintelli run <id> [--full] [--config memintelli.toml]
 //! memintelli run all [--full]
+//! memintelli <id> [--quick|--full]        shortcut: run one experiment directly
+//!                                         (e.g. `memintelli fig_faults --quick`)
 //! memintelli info                         environment + artifact status
 //! memintelli matmul --size N --method int8   one-off DPE matmul RE check
 //! ```
@@ -23,6 +25,7 @@ fn usage() -> ! {
          commands:\n\
          \x20 list                         list all experiments\n\
          \x20 run <id>|all [--full] [--config FILE]   run experiment(s)\n\
+         \x20 <id> [--quick|--full]        shortcut for `run <id>` (quick is the default)\n\
          \x20 info                         show environment + artifacts\n\
          \x20 matmul [--size N] [--method M] [--config FILE]\n\
          \x20                              one-off DPE matmul accuracy check"
@@ -141,6 +144,14 @@ fn main() -> anyhow::Result<()> {
                 "{size}x{size} {method_name}: relative error {re:.4e} ({} ms)",
                 t0.elapsed().as_millis()
             );
+        }
+        // Shortcut: a bare experiment id runs it directly, so
+        // `memintelli fig_faults --quick` ≡ `memintelli run fig_faults`
+        // (`--quick` is the default scale; `--full` selects full scale).
+        id if EXPERIMENTS.iter().any(|(eid, _)| *eid == id) => {
+            let cfg = load_config(&args)?;
+            let scale = if args.flags.contains_key("full") { Scale::Full } else { Scale::Quick };
+            run_experiment(id, &cfg, scale)?;
         }
         _ => usage(),
     }

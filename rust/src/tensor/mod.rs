@@ -455,6 +455,68 @@ impl Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn prop_pack_unpack_roundtrip_on_ragged_shapes() {
+        // pack → unpack_cols is the identity on any column stripe of any
+        // (ragged) shape: edge panels, stripes straddling panel
+        // boundaries, single columns.
+        prop_check("pack/unpack_cols roundtrip", 150, |g| {
+            let k = g.usize_in(1..=80);
+            let n = g.usize_in(1..=120);
+            let b = Matrix::from_vec(k, n, g.vec_f64(k * n, -10.0..10.0));
+            let packed = PackedB::pack(&b);
+            if packed.unpack_cols(0, n) != b {
+                return Err(format!("{k}x{n}: full unpack differs"));
+            }
+            let c0 = g.usize_in(0..=n - 1);
+            let w = g.usize_in(1..=n - c0);
+            if packed.unpack_cols(c0, w) != b.block(0, c0, k, w) {
+                return Err(format!("{k}x{n}: stripe [{c0}, {c0}+{w}) differs"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_packed_gemm_bit_identical_on_ragged_shapes() {
+        // The DPE's bit-identity contract, swept over random ragged shapes
+        // and multiscale values (subnormal-ish exponent spread included).
+        prop_check("packed GEMM == matmul bitwise", 60, |g| {
+            let m = g.usize_in(1..=24);
+            let k = g.usize_in(1..=48);
+            let n = g.usize_in(1..=64);
+            let a = Matrix::from_vec(m, k, g.vec_f64_multiscale(m * k));
+            let b = Matrix::from_vec(k, n, g.vec_f64_multiscale(k * n));
+            let packed = PackedB::pack(&b);
+            if a.matmul_packed(&packed).data != a.matmul(&b).data {
+                return Err(format!("{m}x{k}x{n}: packed GEMM diverged from matmul"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_transpose_and_pad_block_invariants() {
+        // Matrix algebra invariants on ragged shapes: double transpose is
+        // the identity, and pad_to → block recovers the original.
+        prop_check("transpose/pad/block invariants", 100, |g| {
+            let r = g.usize_in(1..=40);
+            let c = g.usize_in(1..=40);
+            let a = Matrix::from_vec(r, c, g.vec_f64(r * c, -100.0..100.0));
+            if a.transpose().transpose() != a {
+                return Err(format!("{r}x{c}: transpose involution broken"));
+            }
+            let pr = r + g.usize_in(0..=9);
+            let pc = c + g.usize_in(0..=9);
+            let p = a.pad_to(pr, pc);
+            if p.block(0, 0, r, c) != a {
+                return Err(format!("{r}x{c} -> {pr}x{pc}: pad/block roundtrip broken"));
+            }
+            Ok(())
+        });
+    }
 
     #[test]
     fn matmul_matches_naive() {

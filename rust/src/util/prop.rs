@@ -69,13 +69,26 @@ impl Gen {
     }
 }
 
-/// Run `cases` randomized cases of `prop`. Panics (test failure) with the
-/// case index and message on the first failing case.
+/// Effective case count for [`prop_check`]: the `MEMINTELLI_PROP_CASES`
+/// env var, when set to a positive integer, overrides the per-property
+/// default — nightly CI sweeps harder than a local `cargo test` without
+/// touching the test code. Unset/invalid values keep the default.
+pub fn case_count(default_cases: usize) -> usize {
+    std::env::var("MEMINTELLI_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default_cases)
+}
+
+/// Run `cases` randomized cases of `prop` (subject to the
+/// `MEMINTELLI_PROP_CASES` override, see [`case_count`]). Panics (test
+/// failure) with the case index and message on the first failing case.
 pub fn prop_check<F>(name: &str, cases: usize, mut prop: F)
 where
     F: FnMut(&mut Gen) -> Result<(), String>,
 {
-    prop_check_seeded(name, 0xC0FFEE, cases, &mut prop);
+    prop_check_seeded(name, 0xC0FFEE, case_count(cases), &mut prop);
 }
 
 /// Like [`prop_check`] with an explicit base seed (reproduce failures).
@@ -131,6 +144,22 @@ mod tests {
             Ok(())
         });
         assert!(any_small && any_large);
+    }
+
+    #[test]
+    fn case_count_default_when_env_unset() {
+        // Only assert the default path when the override is not active
+        // (CI's elevated sweep sets MEMINTELLI_PROP_CASES for the whole
+        // process).
+        match std::env::var("MEMINTELLI_PROP_CASES") {
+            Err(_) => assert_eq!(case_count(7), 7),
+            Ok(v) => {
+                let n: usize = v.parse().unwrap_or(0);
+                if n > 0 {
+                    assert_eq!(case_count(7), n);
+                }
+            }
+        }
     }
 
     #[test]

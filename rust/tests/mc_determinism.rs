@@ -1,0 +1,43 @@
+//! Monte-Carlo thread-count determinism, isolated in its own test binary:
+//! proving that the same seed yields bit-identical `FaultPoint` stats at
+//! any worker count requires mutating the process-global
+//! `MEMINTELLI_THREADS` env var, and concurrent `setenv`/`getenv` from
+//! parallel sibling tests would be undefined behavior on glibc. As the
+//! only test in this binary, every `set_var` here happens while no other
+//! thread is running: the `par_map` workers spawned inside
+//! `run_fault_point` are scoped, so they start after the write completes
+//! and join before the next one.
+
+use memintelli::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
+use memintelli::dpe::montecarlo::{run_fault_point, FaultPoint, McConfig};
+
+fn assert_points_identical(p: &FaultPoint, q: &FaultPoint) {
+    assert_eq!(p.re_mean.to_bits(), q.re_mean.to_bits(), "re_mean differs");
+    assert_eq!(p.re_std.to_bits(), q.re_std.to_bits(), "re_std differs");
+    assert_eq!(p.re_max.to_bits(), q.re_max.to_bits(), "re_max differs");
+    assert_eq!(p.yield_frac.to_bits(), q.yield_frac.to_bits(), "yield differs");
+}
+
+#[test]
+fn montecarlo_stats_identical_across_thread_counts() {
+    let cfg = McConfig { size: 24, cycles: 6, seed: 424_242, ..McConfig::default() };
+    let ni = NonIdealitySpec {
+        faults: FaultSpec { sa0: 0.02, sa1: 0.02, dead_row: 0.01, dead_col: 0.01 },
+        adc: AdcErrorSpec { gain_std: 0.02, offset_std_lsb: 0.3, rounding: AdcRounding::Floor },
+        ..NonIdealitySpec::none()
+    };
+    let prev = std::env::var("MEMINTELLI_THREADS").ok();
+    // Per-cycle state derives only from the cycle index, so the stats
+    // must not depend on how par_map schedules cycles across workers.
+    let mut points = Vec::new();
+    for workers in ["1", "2", "7"] {
+        std::env::set_var("MEMINTELLI_THREADS", workers);
+        points.push(run_fault_point(&cfg, 8, 0.05, &ni, 0.1));
+    }
+    match prev {
+        Some(v) => std::env::set_var("MEMINTELLI_THREADS", v),
+        None => std::env::remove_var("MEMINTELLI_THREADS"),
+    }
+    assert_points_identical(&points[0], &points[1]);
+    assert_points_identical(&points[0], &points[2]);
+}
