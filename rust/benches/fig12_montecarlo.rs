@@ -1,11 +1,199 @@
-//! Bench: regenerates the paper's fig12_montecarlo artifact at full scale.
-//! Run: `cargo bench --bench fig12_montecarlo`  (all benches: `cargo bench`)
+//! Bench: regenerates the paper's fig12_montecarlo artifact **and** emits
+//! `BENCH_mc.json`, the machine-readable Monte-Carlo perf-trajectory
+//! record for the cached per-cycle path (the `WeightTemplate` +
+//! `PreparedInputs` split, see `dpe::engine` §Perf).
+//!
+//! Two timings per case:
+//! - **before**: the pre-split per-cycle loop — every cycle re-quantizes,
+//!   re-slices, and re-packs both operands via `prepare_weights` +
+//!   `matmul_prepared`, with the nested thread scopes that implies inside
+//!   the cycle-level `par_map`;
+//! - **after**: `run_point` / `run_fault_point` as shipped — template and
+//!   prepared inputs built once, cycles pay only the noise-draw + pack +
+//!   matmul cost, serial inside each cycle.
+//!
+//! The two paths are asserted **bit-identical** (same seed → same RE
+//! statistics) before any number is reported. Headline acceptance case:
+//! 128×128 operands, INT8 (1,1,2,4), 64×64 arrays, cv = 0.05, 100 cycles.
+//!
+//! Run: `cargo bench --bench fig12_montecarlo`
+//! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench fig12_montecarlo`
+//! (fewer cycles, quick-scale experiment regeneration).
 
 use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+use memintelli::device::faults::{FaultSpec, NonIdealitySpec};
+use memintelli::dpe::montecarlo::{
+    fault_point_operands, point_operands, run_fault_point, run_point, spec_for_bits, McConfig,
+};
+use memintelli::dpe::{DataMode, DotProductEngine, DpeConfig, SliceMethod};
+use memintelli::tensor::Matrix;
+use memintelli::util::parallel::par_map;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+struct PathTiming {
+    wall_s: f64,
+    cycles_per_s: f64,
+    per_cycle_us: f64,
+}
+
+fn path_timing(wall_s: f64, cycles: usize) -> PathTiming {
+    PathTiming {
+        wall_s,
+        cycles_per_s: cycles as f64 / wall_s,
+        per_cycle_us: wall_s / cycles as f64 * 1e6,
+    }
+}
+
+struct Case {
+    name: &'static str,
+    before: PathTiming,
+    after: PathTiming,
+    re_mean: f64,
+}
+
+impl Case {
+    fn speedup(&self) -> f64 {
+        self.after.cycles_per_s / self.before.cycles_per_s
+    }
+}
+
+/// The pre-split per-cycle loop over fixed operands: per cycle a fresh
+/// engine, full `prepare_weights` (quantize + slice + program + pack), and
+/// `matmul_prepared` (re-slices the input). Returns the per-cycle REs in
+/// cycle order — the same statistic stream the cached path must reproduce.
+fn presplit_cycles(
+    cfg: &McConfig,
+    dpe_cfg: &DpeConfig,
+    a: &Matrix,
+    b: &Matrix,
+    method: &SliceMethod,
+) -> Vec<f64> {
+    let ideal = a.matmul(b);
+    par_map(cfg.cycles, |cycle| {
+        let engine = DotProductEngine::new(dpe_cfg.clone(), cfg.seed.wrapping_add(cycle as u64));
+        let w = engine.prepare_weights(b, method, cycle as u64);
+        engine
+            .matmul_prepared(a, &w, method, cycle as u64)
+            .relative_error(&ideal)
+    })
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn headline_case(cfg: &McConfig, bits: usize, block: usize, cv: f64) -> Case {
+    let (a, b) = point_operands(cfg);
+    let method = SliceMethod { spec: spec_for_bits(bits), mode: DataMode::Quantize };
+    let mut dpe_cfg = cfg.base.clone();
+    dpe_cfg.array = (block, block);
+    dpe_cfg.device.cv = cv;
+
+    let t0 = Instant::now();
+    let before_res = presplit_cycles(cfg, &dpe_cfg, &a, &b, &method);
+    let before = path_timing(t0.elapsed().as_secs_f64(), cfg.cycles);
+
+    let t0 = Instant::now();
+    let point = run_point(cfg, bits, block, cv, DataMode::Quantize);
+    let after = path_timing(t0.elapsed().as_secs_f64(), cfg.cycles);
+
+    assert_eq!(
+        point.re_mean.to_bits(),
+        mean(&before_res).to_bits(),
+        "cached MC path must be bit-identical to the pre-split loop"
+    );
+    Case { name: "mc_128x128_int8_64x64", before, after, re_mean: point.re_mean }
+}
+
+fn fault_case(cfg: &McConfig, bits: usize, cv: f64) -> Case {
+    let mut ni = NonIdealitySpec::none();
+    ni.faults = FaultSpec::cells(0.02);
+    ni.adc.offset_std_lsb = 0.3;
+    let (a, b) = fault_point_operands(cfg);
+    let method = SliceMethod { spec: spec_for_bits(bits), mode: DataMode::Quantize };
+    let mut dpe_cfg = cfg.base.clone();
+    dpe_cfg.device.cv = cv;
+    dpe_cfg.nonideal = ni.clone();
+
+    let t0 = Instant::now();
+    let before_res = presplit_cycles(cfg, &dpe_cfg, &a, &b, &method);
+    let before = path_timing(t0.elapsed().as_secs_f64(), cfg.cycles);
+
+    let t0 = Instant::now();
+    let point = run_fault_point(cfg, bits, cv, &ni, 0.1);
+    let after = path_timing(t0.elapsed().as_secs_f64(), cfg.cycles);
+
+    assert_eq!(
+        point.re_mean.to_bits(),
+        mean(&before_res).to_bits(),
+        "cached fault-sweep path must be bit-identical to the pre-split loop"
+    );
+    Case { name: "fault_128x128_int8_64x64", before, after, re_mean: point.re_mean }
+}
+
+fn emit_json(cases: &[Case], cfg: &McConfig, smoke: bool, total_s: f64) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"fig12_montecarlo\",\n");
+    out.push_str("  \"pipeline\": \"template-split-cached-mc\",\n");
+    let _ = writeln!(out, "  \"smoke\": {smoke},");
+    let _ = writeln!(out, "  \"size\": {}, \"cycles\": {},", cfg.size, cfg.cycles);
+    let _ = writeln!(out, "  \"total_s\": {total_s:.3},");
+    out.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"name\": \"{}\", \"re_mean\": {:.6}, \"bit_identical\": true,\n     \
+             \"before\": {{\"wall_s\": {:.4}, \"cycles_per_s\": {:.3}, \"per_cycle_us\": {:.1}}},\n     \
+             \"after\": {{\"wall_s\": {:.4}, \"cycles_per_s\": {:.3}, \"per_cycle_us\": {:.1}}},\n     \
+             \"speedup\": {:.3}}}",
+            c.name,
+            c.re_mean,
+            c.before.wall_s,
+            c.before.cycles_per_s,
+            c.before.per_cycle_us,
+            c.after.wall_s,
+            c.after.cycles_per_s,
+            c.after.per_cycle_us,
+            c.speedup(),
+        );
+        out.push_str(if i + 1 < cases.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
 
 fn main() {
-    let cfg = SimConfig::default();
-    let t0 = std::time::Instant::now();
-    run_experiment("fig12_montecarlo", &cfg, Scale::Full).expect("experiment failed");
-    println!("\n[fig12_montecarlo] total {:.1} s", t0.elapsed().as_secs_f64());
+    let smoke = std::env::var("MEMINTELLI_BENCH_SMOKE").is_ok();
+    let t0 = Instant::now();
+    // Headline acceptance point: 128×128, INT8 (spec_for_bits(8) ==
+    // (1,1,2,4)), 64×64 arrays, Table-2 cv. Smoke mode trims cycles only —
+    // the workload shape stays the headline one.
+    let cycles = if smoke { 20 } else { 100 };
+    let cfg = McConfig { size: 128, cycles, ..McConfig::default() };
+
+    let cases = vec![headline_case(&cfg, 8, 64, 0.05), fault_case(&cfg, 8, 0.05)];
+
+    for c in &cases {
+        println!(
+            "[{}] before {:.1} cycles/s ({:.0} µs/cycle) → after {:.1} cycles/s ({:.0} µs/cycle): {:.2}×",
+            c.name,
+            c.before.cycles_per_s,
+            c.before.per_cycle_us,
+            c.after.cycles_per_s,
+            c.after.per_cycle_us,
+            c.speedup(),
+        );
+    }
+
+    // Paper artifact: the Fig-12 sweep tables.
+    let sim_cfg = SimConfig::default();
+    let scale = if smoke { Scale::Quick } else { Scale::Full };
+    run_experiment("fig12_montecarlo", &sim_cfg, scale).expect("experiment failed");
+
+    let json = emit_json(&cases, &cfg, smoke, t0.elapsed().as_secs_f64());
+    std::fs::write("BENCH_mc.json", &json).expect("writing BENCH_mc.json");
+    println!("\nwrote BENCH_mc.json");
+    println!("[fig12_montecarlo] total {:.1} s", t0.elapsed().as_secs_f64());
 }

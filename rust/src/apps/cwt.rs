@@ -85,11 +85,16 @@ impl CwtProcessor {
         // (t_out, n) · (n, scales) for both parts.
         let (re, im) = match hw {
             Some((engine, method)) => {
+                // The window matrix feeds both kernel matmuls: quantize +
+                // slice it once and share the prepared inputs across the
+                // real and imaginary arrays (bit-identical to slicing it
+                // per matmul).
+                let win = engine.prepare_inputs(&windows, method);
                 let wr = engine.prepare_weights(&self.real.transpose(), method, 0);
                 let wi = engine.prepare_weights(&self.imag.transpose(), method, 1);
                 (
-                    engine.matmul_prepared(&windows, &wr, method, 0),
-                    engine.matmul_prepared(&windows, &wi, method, 1),
+                    engine.matmul_prepared_inputs(&win, &wr, 0),
+                    engine.matmul_prepared_inputs(&win, &wi, 1),
                 )
             }
             None => (
@@ -175,6 +180,42 @@ mod tests {
         let expected_scale = 6.0 * period / std::f64::consts::TAU;
         let ratio = scales[argmax] / expected_scale;
         assert!((0.8..1.25).contains(&ratio), "peak scale {} vs expected {expected_scale}", scales[argmax]);
+    }
+
+    #[test]
+    fn shared_window_slicing_bit_identical_to_per_call() {
+        // `power` slices the window matrix once for both kernels — must
+        // match the pre-split behavior of slicing per matmul exactly.
+        let signal: Vec<f64> = (0..150)
+            .map(|t| (std::f64::consts::TAU * t as f64 / 12.0).sin())
+            .collect();
+        let scales = scale_ladder(4.0, 16.0, 2);
+        let proc = CwtProcessor::new(64, scales);
+        let mut cfg = DpeConfig::default();
+        cfg.device.cv = 0.02;
+        let engine = DotProductEngine::new(cfg, 5);
+        let method = int4_method();
+        let cached = proc.power(&signal, Some((&engine, &method)));
+        // Pre-split emulation.
+        let n = proc.real.cols;
+        let t_out = signal.len() - n + 1;
+        let mut windows = Matrix::zeros(t_out, n);
+        for t in 0..t_out {
+            windows.row_mut(t).copy_from_slice(&signal[t..t + n]);
+        }
+        let wr = engine.prepare_weights(&proc.real.transpose(), &method, 0);
+        let wi = engine.prepare_weights(&proc.imag.transpose(), &method, 1);
+        let re = engine.matmul_prepared(&windows, &wr, &method, 0);
+        let im = engine.matmul_prepared(&windows, &wi, &method, 1);
+        let mut want = Matrix::zeros(proc.scales.len(), t_out);
+        for t in 0..t_out {
+            for s in 0..proc.scales.len() {
+                let r = re.at(t, s);
+                let i = im.at(t, s);
+                *want.at_mut(s, t) = r * r + i * i;
+            }
+        }
+        assert_eq!(cached.data, want.data);
     }
 
     #[test]

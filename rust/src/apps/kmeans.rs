@@ -69,6 +69,9 @@ fn augment_centers(centers: &Matrix, tail: usize) -> Matrix {
 }
 
 /// One assignment pass: similarity matmul (on DPE when provided), argmax.
+/// One-shot convenience — the [`kmeans`] loop itself slices the augmented
+/// data once via [`crate::dpe::PreparedInputs`] and reuses it across every
+/// pass instead of re-quantizing here each iteration.
 pub fn assign(
     x: &Matrix,
     centers: &Matrix,
@@ -85,7 +88,12 @@ pub fn assign(
         }
         None => xa.matmul(&ca),
     };
-    (0..x.rows)
+    argmax_rows(&sim)
+}
+
+/// Row-wise argmax of the similarity matrix → cluster ids.
+fn argmax_rows(sim: &Matrix) -> Vec<usize> {
+    (0..sim.rows)
         .map(|i| {
             sim.row(i)
                 .iter()
@@ -120,9 +128,23 @@ pub fn kmeans(
     let mut history = vec![centers.clone()];
     let mut assignments = vec![0usize; x.rows];
     let mut iterations = 0;
+    // The augmented data matrix is fixed for the whole run: build and
+    // (on hardware) quantize + slice it once, then reuse the prepared
+    // inputs across every assignment pass — only the centers (the weight
+    // side) change per iteration. Bit-identical to re-slicing per pass.
+    let xa = augment_data(x, cfg.tail);
+    let xa_prepared = hw.map(|(engine, method)| engine.prepare_inputs(&xa, method));
     for it in 0..cfg.max_iter {
         iterations = it + 1;
-        let new_assign = assign(x, &centers, cfg.tail, hw, it as u64);
+        let ca = augment_centers(&centers, cfg.tail);
+        let sim = match (hw, &xa_prepared) {
+            (Some((engine, method)), Some(ai)) => {
+                let w = engine.prepare_weights(&ca, method, it as u64);
+                engine.matmul_prepared_inputs(ai, &w, it as u64)
+            }
+            _ => xa.matmul(&ca),
+        };
+        let new_assign = argmax_rows(&sim);
         // Update centers (digital averaging, as in the paper's host loop).
         let mut sums = Matrix::zeros(cfg.k, x.cols);
         let mut counts = vec![0usize; cfg.k];
@@ -280,6 +302,63 @@ mod tests {
         // Centers land near each other (best permutation distance).
         let agree = clustering_accuracy(&hw.assignments, &digital.assignments, 3);
         assert!(agree > 0.85, "assignment agreement {agree}");
+    }
+
+    #[test]
+    fn cached_input_loop_bit_identical_to_per_pass_slicing() {
+        // The kmeans loop slices the augmented data once (PreparedInputs)
+        // — it must stay bit-identical to the pre-split behavior of
+        // re-slicing in every `assign` pass.
+        let (x, _) = iris_matrix();
+        let mut dcfg = DpeConfig::default();
+        dcfg.device.cv = 0.02;
+        let engine = DotProductEngine::new(dcfg, 3);
+        let method = int8_method();
+        let cfg = KmeansConfig::default();
+        let res = kmeans(&x, &cfg, Some((&engine, &method)));
+        // Pre-split emulation: identical init, per-pass `assign`.
+        let mut rng = crate::util::rng::Pcg64::new(cfg.seed, 0x4B4D);
+        let mut chosen: Vec<usize> = Vec::new();
+        while chosen.len() < cfg.k {
+            let c = rng.below(x.rows);
+            if !chosen.contains(&c) {
+                chosen.push(c);
+            }
+        }
+        let mut centers = Matrix::zeros(cfg.k, x.cols);
+        for (c, &i) in chosen.iter().enumerate() {
+            centers.row_mut(c).copy_from_slice(x.row(i));
+        }
+        let mut assignments = vec![0usize; x.rows];
+        for it in 0..cfg.max_iter {
+            let new_assign = assign(&x, &centers, cfg.tail, Some((&engine, &method)), it as u64);
+            let mut sums = Matrix::zeros(cfg.k, x.cols);
+            let mut counts = vec![0usize; cfg.k];
+            for (i, &c) in new_assign.iter().enumerate() {
+                counts[c] += 1;
+                for (s, &v) in sums.row_mut(c).iter_mut().zip(x.row(i)) {
+                    *s += v;
+                }
+            }
+            let mut moved = 0.0f64;
+            for c in 0..cfg.k {
+                if counts[c] == 0 {
+                    continue;
+                }
+                for j in 0..x.cols {
+                    let nv = sums.at(c, j) / counts[c] as f64;
+                    moved = moved.max((nv - centers.at(c, j)).abs());
+                    *centers.at_mut(c, j) = nv;
+                }
+            }
+            let stable = new_assign == assignments;
+            assignments = new_assign;
+            if stable || moved < 1e-12 {
+                break;
+            }
+        }
+        assert_eq!(res.assignments, assignments);
+        assert_eq!(res.centers.data, centers.data);
     }
 
     #[test]

@@ -54,6 +54,7 @@ impl SimConfig {
             lgs: doc.f64_or("engine", "lgs", 1e-7),
             g_levels: doc.usize_or("engine", "g_levels", 16),
             cv: doc.f64_or("engine", "var", 0.05),
+            read_cv: doc.f64_or("engine", "read_var", 0.0),
         };
         d.rdac = doc.usize_or("engine", "rdac", 256);
         d.radc = doc.usize_or("engine", "radc", 1024);
@@ -132,11 +133,12 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let doc = Doc::parse(
-            "[engine]\nvar = 0.1\narray_size = [32, 32]\nadc_policy = \"calibrated\"\n[run]\nseed = 7\nmethod = \"fp16\"\n",
+            "[engine]\nvar = 0.1\nread_var = 0.02\narray_size = [32, 32]\nadc_policy = \"calibrated\"\n[run]\nseed = 7\nmethod = \"fp16\"\n",
         )
         .unwrap();
         let cfg = SimConfig::from_doc(&doc);
         assert_eq!(cfg.dpe.device.cv, 0.1);
+        assert_eq!(cfg.dpe.device.read_cv, 0.02);
         assert_eq!(cfg.dpe.array, (32, 32));
         assert_eq!(cfg.dpe.adc_policy, AdcPolicy::Calibrated);
         assert_eq!(cfg.seed, 7);

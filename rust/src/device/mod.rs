@@ -30,11 +30,19 @@ pub struct DeviceSpec {
     pub g_levels: usize,
     /// Coefficient of variation of the programmed conductance. Table 2: 0.05.
     pub cv: f64,
+    /// Coefficient of variation of the per-read conductance fluctuation
+    /// (cycle-to-cycle read noise, the "read noise" knob of CrossSim-style
+    /// simulators). Unlike `cv` — frozen at program time — this is
+    /// re-drawn on every readout, applied multiplicatively to each analog
+    /// partial before the ADC; the `tag` of the prepared-matmul entry
+    /// points decorrelates it between calls. `0.0` (default) disables it
+    /// and draws no random numbers, leaving reads deterministic.
+    pub read_cv: f64,
 }
 
 impl Default for DeviceSpec {
     fn default() -> Self {
-        DeviceSpec { hgs: 1e-5, lgs: 1e-7, g_levels: 16, cv: 0.05 }
+        DeviceSpec { hgs: 1e-5, lgs: 1e-7, g_levels: 16, cv: 0.05, read_cv: 0.0 }
     }
 }
 

@@ -60,8 +60,43 @@
 //! ADC policies, and ragged shapes. The win is purely architectural: one
 //! well-shaped GEMM per (input-slice, block) instead of `S_w` tiny ones,
 //! measured by `benches/table3_throughput.rs` (`BENCH_table3.json`).
+//!
+//! # §Perf — prepared-input caching and the program-template split
+//!
+//! Both halves of the datapath split into a **cached deterministic part**
+//! and a **cheap stochastic tail**:
+//!
+//! - **Weight side**: [`DotProductEngine::weight_template`] runs the
+//!   deterministic steps 1–2 (block grid, per-block quantization, digit
+//!   slicing) once per matrix into a [`WeightTemplate`];
+//!   [`WeightTemplate::program`] then runs only step 3 per programming
+//!   cycle — the programming-noise / fault / ADC-chain draws, written
+//!   **directly into the packed GEMM panels** (the fused `l_m × (S_w·l_n)`
+//!   matrix is never materialized). `prepare_weights` itself fuses the two
+//!   stages per block, so `template.program(&engine, tag)` is bit-identical
+//!   to `engine.prepare_weights(&b, &method, tag)` by construction.
+//! - **Input side**: [`DotProductEngine::prepare_inputs`] promotes the
+//!   per-k-block quantize + slice of the `A` operand to a reusable
+//!   [`PreparedInputs`]; [`DotProductEngine::matmul_prepared_inputs`]
+//!   consumes it. A fixed input sliced once is shared across Monte-Carlo
+//!   cycles (`dpe::montecarlo`), k-means assignment passes
+//!   (`apps::kmeans`), and the CWT's real/imaginary kernels (`apps::cwt`).
+//!
+//! **When to cache**: any loop that re-reads or re-programs the *same*
+//! matrix — Monte-Carlo re-programming, fault-yield sweeps, repeated
+//! evaluation of a fixed batch. **When not to cache**: weights that change
+//! every optimizer step gain nothing from a `WeightTemplate` (the template
+//! would be rebuilt per step — `prepare_weights` already is exactly
+//! template + program), and inputs that never repeat (fresh training
+//! batches) only pay the cache bookkeeping.
+//!
+//! Monte-Carlo hot loops additionally run the per-cycle program + matmul
+//! **serially inside each cycle** (the cycle-level `par_map` already
+//! saturates the worker pool; the pre-split path nested thread scopes
+//! inside every cycle, oversubscribing the machine). The perf trajectory
+//! for this is `benches/fig12_montecarlo.rs` (`BENCH_mc.json`).
 
-use super::blocks::MatmulBlocks;
+use super::blocks::{BlockDim, MatmulBlocks};
 use super::quant::Adc;
 use super::slicing::{quantize_block, slice_digits, DataMode, SliceSpec, SliceTables};
 use crate::circuit::CrossbarCircuit;
@@ -229,12 +264,126 @@ impl PreparedWeights {
     }
 }
 
-/// One k-block of the input, quantized and sliced once per call and shared
-/// across all n-blocks of the weight.
+/// The deterministic half of one weight block: the quantized digit planes
+/// (`S_w` matrices of `l_m × l_n`, plane-major — which is also the RNG
+/// draw order of programming) plus the block's recovery scale. No noise
+/// has been applied yet, so programming one is pure noise-draw + pack.
+#[derive(Debug, Clone)]
+struct TemplateBlock {
+    planes: Vec<Matrix>,
+    scale: f64,
+}
+
+/// The deterministic half of [`DotProductEngine::prepare_weights`]: block
+/// grid, per-block quantized digit planes, and recovery scales —
+/// everything that does **not** depend on the programming-noise / fault /
+/// ADC draws. Build once per weight matrix with
+/// [`DotProductEngine::weight_template`], then call
+/// [`WeightTemplate::program`] per programming cycle: Monte-Carlo sweeps,
+/// fault-yield studies, and any loop that re-programs the same matrix pay
+/// only the stochastic-tail cost per cycle (§Perf).
+///
+/// `template.program(&engine, tag)` is bit-identical to
+/// `engine.prepare_weights(&b, &method, tag)`: both run the same per-block
+/// programming code on the same RNG streams.
+#[derive(Debug, Clone)]
+pub struct WeightTemplate {
+    blocks: Vec<TemplateBlock>, // indexed kb * n_blocks + nb
+    grid: MatmulBlocks,
+    method: SliceMethod,
+    k: usize,
+    n: usize,
+    /// Array geometry the template was blocked for; programming engines
+    /// must match.
+    array: (usize, usize),
+}
+
+impl WeightTemplate {
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    pub fn method(&self) -> &SliceMethod {
+        &self.method
+    }
+
+    /// Program the template onto (noisy) crossbar arrays: draw programming
+    /// noise, fault/retention injection, and the per-column ADC chain for
+    /// every block, packing the result — the cheap stochastic tail of
+    /// [`DotProductEngine::prepare_weights`], bit-identical to it at the
+    /// same engine seed and `tag`.
+    pub fn program(&self, engine: &DotProductEngine, tag: u64) -> PreparedWeights {
+        self.program_with(engine, tag, true)
+    }
+
+    /// `program` with explicit block-level parallelism control: hot loops
+    /// already parallel at an outer level (Monte-Carlo cycles) pass
+    /// `parallel = false` to avoid nested thread scopes (§Perf).
+    pub(crate) fn program_with(
+        &self,
+        engine: &DotProductEngine,
+        tag: u64,
+        parallel: bool,
+    ) -> PreparedWeights {
+        assert_eq!(
+            engine.cfg.array, self.array,
+            "weight template was blocked for {:?} arrays, engine has {:?}",
+            self.array, engine.cfg.array
+        );
+        engine.assert_method_fits(&self.method.spec);
+        let body = |blk: usize| engine.program_block(&self.blocks[blk], blk, tag);
+        let blocks: Vec<PreparedBlock> = if parallel {
+            par_map(self.blocks.len(), body)
+        } else {
+            (0..self.blocks.len()).map(body).collect()
+        };
+        PreparedWeights {
+            blocks,
+            grid: self.grid,
+            method: self.method.clone(),
+            k: self.k,
+            n: self.n,
+        }
+    }
+}
+
+/// One k-block of the input, quantized and sliced once and shared across
+/// all n-blocks of the weight.
+#[derive(Debug, Clone)]
 struct InputBlock {
     /// `S_a` digit planes of `m × l_m`.
     slices: Vec<Matrix>,
     scale: f64,
+}
+
+/// A quantized + sliced input operand (the `A` of `A·B`): the per-k-block
+/// digit planes the matmul pipeline needs, promoted to a reusable value.
+/// Prepare once per input matrix with
+/// [`DotProductEngine::prepare_inputs`] and feed to
+/// [`DotProductEngine::matmul_prepared_inputs`] any number of times —
+/// Monte-Carlo cycles over re-programmed weights, k-means assignment
+/// passes, and the CWT's real/imaginary kernels all share one slicing of
+/// their fixed input (§Perf). Slicing is fully deterministic, so the
+/// cached path is bit-identical to per-call slicing.
+#[derive(Debug, Clone)]
+pub struct PreparedInputs {
+    blocks: Vec<InputBlock>,
+    method: SliceMethod,
+    m: usize,
+    k: usize,
+    /// Array row count the k dimension was blocked by; must match the
+    /// engine (and therefore the weights) at matmul time.
+    l_m: usize,
+}
+
+impl PreparedInputs {
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.k)
+    }
+
+    pub fn method(&self) -> &SliceMethod {
+        &self.method
+    }
 }
 
 /// Per-call precomputed tables shared by the fused, circuit, and (test)
@@ -314,61 +463,105 @@ impl DotProductEngine {
 
     /// Program `b` onto crossbar arrays with `method` (steps 1–3 above):
     /// quantize + slice each block, program every digit plane through the
-    /// device model, column-stack the planes into the fused matrix, and
-    /// pack it once for the GEMM micro-kernel (§Perf).
+    /// device model, and pack for the GEMM micro-kernel (§Perf). This is
+    /// exactly [`DotProductEngine::weight_template`] +
+    /// [`WeightTemplate::program`] fused per block; loops that re-program
+    /// the same matrix should build the template once instead.
     pub fn prepare_weights(&self, b: &Matrix, method: &SliceMethod, tag: u64) -> PreparedWeights {
         let grid = MatmulBlocks::new(b.rows, b.cols, self.cfg.array);
-        let w_tables = method.spec.tables();
+        self.assert_method_fits(&method.spec);
+        let blocks: Vec<PreparedBlock> = par_map(grid.pair_count(), |blk| {
+            let tb = template_block(b, &grid, method, self.cfg.array, blk);
+            self.program_block(&tb, blk, tag)
+        });
+        PreparedWeights { blocks, grid, method: method.clone(), k: b.rows, n: b.cols }
+    }
+
+    /// The deterministic half of [`DotProductEngine::prepare_weights`]:
+    /// block, pad, quantize, and slice `b` once into a reusable
+    /// [`WeightTemplate`] (§Perf). No RNG is consumed.
+    pub fn weight_template(&self, b: &Matrix, method: &SliceMethod) -> WeightTemplate {
+        let grid = MatmulBlocks::new(b.rows, b.cols, self.cfg.array);
+        self.assert_method_fits(&method.spec);
+        let blocks: Vec<TemplateBlock> = par_map(grid.pair_count(), |blk| {
+            template_block(b, &grid, method, self.cfg.array, blk)
+        });
+        WeightTemplate {
+            blocks,
+            grid,
+            method: method.clone(),
+            k: b.rows,
+            n: b.cols,
+            array: self.cfg.array,
+        }
+    }
+
+    /// Every slice digit must be representable by the device's `g_levels`.
+    fn assert_method_fits(&self, spec: &SliceSpec) {
+        let w_tables = spec.tables();
         assert!(
             w_tables.max_digit.iter().all(|&d| d <= self.cfg.device.max_digit() as f64),
             "slice width exceeds device g_levels={}",
             self.cfg.device.g_levels
         );
+    }
+
+    /// The stochastic tail of weight preparation for one block (step 3):
+    /// per-plane lognormal programming noise, optional fault/retention
+    /// injection, and the block's ADC chain. Noisy digits are written
+    /// **directly into the packed panel layout** — the fused
+    /// `l_m × (S_w·l_n)` matrix is never materialized; values and RNG draw
+    /// order are identical to programming each plane densely and packing
+    /// afterwards.
+    ///
+    /// Fault/retention injection is a program-time effect: it runs once
+    /// per prepared-weight lifetime on its own RNG stream (so an all-off
+    /// spec leaves the programming-noise stream — and every bit of the
+    /// result — untouched), and costs nothing per matmul.
+    fn program_block(&self, tb: &TemplateBlock, blk: usize, tag: u64) -> PreparedBlock {
         let (l_m, l_n) = self.cfg.array;
-        let n_slices = method.spec.num_slices();
-        // Fault/retention injection is a program-time effect: it runs once
-        // per prepared-weight lifetime on its own RNG stream (so an all-off
-        // spec leaves the programming-noise stream — and every bit of the
-        // result — untouched), and costs nothing per matmul.
+        let n_slices = tb.planes.len();
+        let dev = &self.cfg.device;
+        let step = dev.step();
+        let mut rng =
+            Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), blk as u64);
         let ni = &self.cfg.nonideal;
         let inject = !self.cfg.noise_free && ni.injects_at_program();
-        let blocks: Vec<PreparedBlock> = par_map(grid.pair_count(), |blk| {
-            let (kb, nb) = grid.pair(blk);
-            let (k0, kl) = grid.k.range(kb);
-            let (n0, nl) = grid.n.range(nb);
-            // Pad short edge blocks to the full array size with zeros.
-            let sub = b.block(k0, n0, kl, nl).pad_to(l_m, l_n);
-            let qb = quantize_block(&sub, &method.spec, method.mode);
-            let digit_planes = slice_digits(&qb.q, &method.spec);
-            let mut rng = Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), blk as u64);
-            let mut fault_rng = inject.then(|| {
-                Pcg64::new(
-                    self.seed ^ ni.seed ^ tag.wrapping_mul(0xD1B5_4A32_D192_ED03),
-                    0x4641_544C ^ blk as u64,
-                )
-            });
-            let mut fused = Matrix::zeros(l_m, n_slices * l_n);
-            for (s, plane) in digit_planes.into_iter().enumerate() {
-                let mut programmed = if self.cfg.noise_free {
-                    plane
-                } else {
-                    self.program_plane(&plane, &mut rng)
-                };
-                if let Some(frng) = fault_rng.as_mut() {
-                    ni.inject_plane(&mut programmed, &self.cfg.device, frng);
-                }
-                for r in 0..l_m {
-                    let dst = r * n_slices * l_n + s * l_n;
-                    fused.data[dst..dst + l_n].copy_from_slice(programmed.row(r));
-                }
-            }
-            PreparedBlock {
-                packed: PackedB::pack(&fused),
-                scale: qb.scale,
-                chain: self.adc_chain_for(blk),
-            }
+        let mut fault_rng = inject.then(|| {
+            Pcg64::new(
+                self.seed ^ ni.seed ^ tag.wrapping_mul(0xD1B5_4A32_D192_ED03),
+                0x4641_544C ^ blk as u64,
+            )
         });
-        PreparedWeights { blocks, grid, method: method.clone(), k: b.rows, n: b.cols }
+        let mut packed = PackedB::zeros(l_m, n_slices * l_n);
+        for (s, plane) in tb.planes.iter().enumerate() {
+            let c0 = s * l_n;
+            if let Some(frng) = fault_rng.as_mut() {
+                // Injection path: materialize the programmed plane so the
+                // fault masks see the same `l_m × l_n` view as the digits.
+                let mut programmed = self.program_plane(plane, &mut rng);
+                ni.inject_plane(&mut programmed, dev, frng);
+                for r in 0..l_m {
+                    for (c, &v) in programmed.row(r).iter().enumerate() {
+                        packed.write(r, c0 + c, v);
+                    }
+                }
+            } else if self.cfg.noise_free {
+                for r in 0..l_m {
+                    for (c, &d) in plane.row(r).iter().enumerate() {
+                        packed.write(r, c0 + c, d);
+                    }
+                }
+            } else {
+                for r in 0..l_m {
+                    for (c, &d) in plane.row(r).iter().enumerate() {
+                        let g = dev.sample_level(d as u32, &mut rng);
+                        packed.write(r, c0 + c, (g - dev.lgs) / step);
+                    }
+                }
+            }
+        }
+        PreparedBlock { packed, scale: tb.scale, chain: self.adc_chain_for(blk) }
     }
 
     /// Program one digit plane through the device model: digit → target
@@ -407,22 +600,30 @@ impl DotProductEngine {
         self.matmul(a, b, &SliceMethod::fp(a_spec.clone()), &SliceMethod::fp(b_spec.clone()))
     }
 
-    /// Quantize + slice each k-block of the input once (shared across all
-    /// n-blocks).
-    fn slice_input(&self, a: &Matrix, grid: &MatmulBlocks, a_med: &SliceMethod) -> Vec<InputBlock> {
+    /// Quantize + slice each k-block of the input once into a reusable
+    /// [`PreparedInputs`] (the deterministic input half of the matmul —
+    /// no RNG is consumed, so the cached path is bit-identical to per-call
+    /// slicing; §Perf).
+    pub fn prepare_inputs(&self, a: &Matrix, method: &SliceMethod) -> PreparedInputs {
         let m = a.rows;
         let l_m = self.cfg.array.0;
-        par_map(grid.k.count(), |kb| {
-            let (k0, kl) = grid.k.range(kb);
+        let kdim = BlockDim::new(a.cols, l_m);
+        let blocks: Vec<InputBlock> = par_map(kdim.count(), |kb| {
+            let (k0, kl) = kdim.range(kb);
             let sub = a.block(0, k0, m, kl).pad_to(m, l_m);
-            let qb = quantize_block(&sub, &a_med.spec, a_med.mode);
-            InputBlock { slices: slice_digits(&qb.q, &a_med.spec), scale: qb.scale }
-        })
+            let qb = quantize_block(&sub, &method.spec, method.mode);
+            InputBlock { slices: slice_digits(&qb.q, &method.spec), scale: qb.scale }
+        });
+        PreparedInputs { blocks, method: method.clone(), m, k: a.cols, l_m }
     }
 
-    /// Matmul against pre-programmed weights (the NN hot path). `tag`
-    /// decorrelates read noise between calls. See module §Perf for the
-    /// fused slice-plane pipeline this dispatches into.
+    /// Matmul against pre-programmed weights (the NN hot path): slices `a`
+    /// per call, then dispatches into the fused slice-plane pipeline (see
+    /// module §Perf). `tag` decorrelates per-read conductance fluctuation
+    /// ([`crate::device::DeviceSpec::read_cv`]) between calls; with the
+    /// default `read_cv = 0` reads are deterministic and the tag is inert.
+    /// Loops that reuse the same `a` should slice it once with
+    /// [`DotProductEngine::prepare_inputs`] instead.
     pub fn matmul_prepared(
         &self,
         a: &Matrix,
@@ -431,13 +632,58 @@ impl DotProductEngine {
         tag: u64,
     ) -> Matrix {
         assert_eq!(a.cols, w.k, "matmul dim mismatch: a is {}x{}, weights are {}x{}", a.rows, a.cols, w.k, w.n);
+        let ai = self.prepare_inputs(a, a_med);
+        self.matmul_prepared_inputs_with(&ai, w, tag, true)
+    }
+
+    /// [`DotProductEngine::matmul_prepared`] with the input already sliced
+    /// — the fully-cached hot path: per call only the GEMMs, ADC, and
+    /// shift-add recombination run (plus read-noise draws when
+    /// `device.read_cv > 0`, decorrelated by `tag`).
+    pub fn matmul_prepared_inputs(
+        &self,
+        a: &PreparedInputs,
+        w: &PreparedWeights,
+        tag: u64,
+    ) -> Matrix {
+        self.matmul_prepared_inputs_with(a, w, tag, true)
+    }
+
+    /// `matmul_prepared_inputs` with explicit parallelism control: hot
+    /// loops already parallel at an outer level (Monte-Carlo cycles) pass
+    /// `parallel = false` so neither the pair loop nor the in-pair GEMM
+    /// bands spawn nested thread scopes (§Perf).
+    pub(crate) fn matmul_prepared_inputs_with(
+        &self,
+        a: &PreparedInputs,
+        w: &PreparedWeights,
+        tag: u64,
+        parallel: bool,
+    ) -> Matrix {
+        assert_eq!(
+            a.k, w.k,
+            "matmul dim mismatch: inputs are {}x{}, weights are {}x{}",
+            a.m, a.k, w.k, w.n
+        );
+        assert_eq!(
+            a.l_m, self.cfg.array.0,
+            "inputs were sliced for array rows {}, engine has {}",
+            a.l_m, self.cfg.array.0
+        );
+        assert_eq!(
+            (w.grid.k.block, w.grid.n.block),
+            self.cfg.array,
+            "weights were prepared for {:?} arrays, engine has {:?}",
+            (w.grid.k.block, w.grid.n.block),
+            self.cfg.array
+        );
         let grid = w.grid;
-        let (m, n) = (a.rows, w.n);
+        let (m, n) = (a.m, w.n);
         let nc = grid.n.count();
         let (l_m, l_n) = self.cfg.array;
         let adc = Adc::new(self.cfg.radc);
-        let plan = SlicePairPlan::new(l_m, &a_med.spec, &w.method.spec);
-        let a_blocks = self.slice_input(a, &grid, a_med);
+        let plan = SlicePairPlan::new(l_m, &a.method.spec, &w.method.spec);
+        let a_blocks = &a.blocks;
 
         // Parallelize across (kb, nb) array pairs when each carries real
         // work; a lone big pair instead band-parallelizes its fused GEMM
@@ -446,35 +692,33 @@ impl DotProductEngine {
         let per_pair_work =
             m * l_m * l_n * plan.a.num_slices() * plan.w.num_slices();
         let tasks = grid.pair_count();
-        let across_pairs = tasks >= 2 && per_pair_work >= (1 << 19);
-        let band_parallel = !across_pairs;
+        let across_pairs = parallel && tasks >= 2 && per_pair_work >= (1 << 19);
+        let band_parallel = parallel && !across_pairs;
 
         // One task per (kb, nb) array pair: returns the scaled block
-        // contribution; per-nb reduction afterwards is cheap.
-        let pair_body = |task: usize| -> Matrix {
+        // contribution, or `None` for zero-scale pairs (all-zero block of
+        // either operand) — no allocation, and `assemble_output` skips
+        // them; per-nb reduction afterwards is cheap.
+        let pair_body = |task: usize| -> Option<Matrix> {
             let (kb, nb) = grid.pair(task);
             let ab = &a_blocks[kb];
             let wb = &w.blocks[kb * nc + nb];
             if ab.scale == 0.0 || wb.scale == 0.0 {
-                return Matrix::zeros(m, l_n);
+                return None;
             }
-            if self.cfg.use_circuit {
-                self.pair_contribution_circuit(ab, wb, &plan, &adc, &wb.chain)
+            Some(if self.cfg.use_circuit {
+                self.pair_contribution_circuit(ab, wb, &plan, &adc, task, tag)
             } else {
-                self.pair_contribution_fused(ab, wb, &plan, &adc, &wb.chain, band_parallel)
-            }
+                self.pair_contribution_fused(ab, wb, &plan, &adc, task, tag, band_parallel)
+            })
         };
-        let pair_results: Vec<Matrix> = if across_pairs {
+        let pair_results: Vec<Option<Matrix>> = if across_pairs {
             par_map(tasks, pair_body)
         } else {
             (0..tasks).map(pair_body).collect()
         };
 
-        let out = assemble_output(&grid, m, n, l_n, &pair_results);
-        // Read-noise decorrelation tag is consumed implicitly by weight
-        // programming; keep the parameter for future per-read noise.
-        let _ = tag;
-        out
+        assemble_output(&grid, m, n, l_n, &pair_results)
     }
 
     /// The per-column ADC chain of one physical array pair (block `blk` =
@@ -496,22 +740,26 @@ impl DotProductEngine {
 
     /// The fused slice-plane contribution of one (k-block, n-block) array
     /// pair: one packed GEMM per input slice producing all `S_w`
-    /// weight-slice partials as column stripes, ADC'd and recombined in
-    /// place. The fused scratch is allocated once and reused across input
-    /// slices (§Perf).
+    /// weight-slice partials as column stripes, read-noised (when
+    /// configured), ADC'd, and recombined in place. The fused scratch is
+    /// allocated once and reused across input slices (§Perf).
+    #[allow(clippy::too_many_arguments)]
     fn pair_contribution_fused(
         &self,
         ab: &InputBlock,
         wb: &PreparedBlock,
         plan: &SlicePairPlan,
         adc: &Adc,
-        chain: &AdcChain,
+        blk: usize,
+        tag: u64,
         band_parallel: bool,
     ) -> Matrix {
         let l_n = self.cfg.array.1;
         let m = ab.slices[0].rows;
         let sw_n = plan.w.num_slices();
         let wide = sw_n * l_n;
+        let chain = &wb.chain;
+        let read_noise = self.read_noise_active();
         let mut block_acc = Matrix::zeros(m, l_n);
         let mut fused_out = vec![0.0f64; m * wide];
         for (sa, a_plane) in ab.slices.iter().enumerate() {
@@ -527,6 +775,9 @@ impl DotProductEngine {
             if !self.cfg.noise_free {
                 for sw in 0..sw_n {
                     let stripe = Stripe { rows: m, stride: wide, c0: sw * l_n, width: l_n };
+                    if read_noise {
+                        self.apply_read_noise(&mut fused_out, stripe, blk, sa, sw, tag);
+                    }
                     self.adc_readout(adc, &mut fused_out, stripe, plan.worst_scale[plan.idx(sa, sw)], chain);
                 }
             }
@@ -561,11 +812,14 @@ impl DotProductEngine {
         wb: &PreparedBlock,
         plan: &SlicePairPlan,
         adc: &Adc,
-        chain: &AdcChain,
+        blk: usize,
+        tag: u64,
     ) -> Matrix {
         let l_n = self.cfg.array.1;
         let m = ab.slices[0].rows;
         let sw_n = plan.w.num_slices();
+        let chain = &wb.chain;
+        let read_noise = self.read_noise_active();
         let mut block_acc = Matrix::zeros(m, l_n);
         // Unpack each weight plane once per pair (not once per slice pair).
         let w_planes: Vec<Matrix> = (0..sw_n).map(|sw| wb.plane(sw, l_n)).collect();
@@ -573,6 +827,16 @@ impl DotProductEngine {
             for (sw, w_plane) in w_planes.iter().enumerate() {
                 let mut partial = self.circuit_mvm(a_plane, w_plane, plan.a.max_digit[sa]);
                 if !self.cfg.noise_free {
+                    if read_noise {
+                        self.apply_read_noise(
+                            &mut partial.data,
+                            Stripe::contiguous(m, l_n),
+                            blk,
+                            sa,
+                            sw,
+                            tag,
+                        );
+                    }
                     self.adc_readout(
                         adc,
                         &mut partial.data,
@@ -592,6 +856,41 @@ impl DotProductEngine {
             *v *= s;
         }
         block_acc
+    }
+
+    /// True iff per-read conductance fluctuation is modeled — then (and
+    /// only then) the `tag` of the prepared matmuls has draws to
+    /// decorrelate.
+    fn read_noise_active(&self) -> bool {
+        !self.cfg.noise_free && self.cfg.device.read_cv > 0.0
+    }
+
+    /// Multiplicative per-read lognormal fluctuation
+    /// ([`crate::device::DeviceSpec::read_cv`]) on one readout stripe,
+    /// applied before the ADC. One RNG stream per (array pair, input
+    /// slice, weight slice), seeded by the call `tag` and drawn row-major
+    /// over the stripe — identical between the fused pipeline, the circuit
+    /// path, and the reference oracle, and independent of pair scheduling.
+    fn apply_read_noise(
+        &self,
+        data: &mut [f64],
+        stripe: Stripe,
+        blk: usize,
+        sa: usize,
+        sw: usize,
+        tag: u64,
+    ) {
+        let cv = self.cfg.device.read_cv;
+        let mut rng = Pcg64::new(
+            self.seed ^ tag.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+            0x5EAD_0000 ^ ((blk as u64) << 16) ^ ((sa as u64) << 8) ^ sw as u64,
+        );
+        for i in 0..stripe.rows {
+            let s = i * stripe.stride + stripe.c0;
+            for v in data[s..s + stripe.width].iter_mut() {
+                *v *= rng.lognormal_cv(1.0, cv);
+            }
+        }
     }
 
     /// Apply the configured ADC policy to one readout stripe in place.
@@ -674,14 +973,16 @@ impl DotProductEngine {
         let (l_m, l_n) = self.cfg.array;
         let adc = Adc::new(self.cfg.radc);
         let plan = SlicePairPlan::new(l_m, &a_med.spec, &w.method.spec);
-        let a_blocks = self.slice_input(a, &grid, a_med);
-        let pair_results: Vec<Matrix> = (0..grid.pair_count())
+        let ai = self.prepare_inputs(a, a_med);
+        let a_blocks = &ai.blocks;
+        let read_noise = self.read_noise_active();
+        let pair_results: Vec<Option<Matrix>> = (0..grid.pair_count())
             .map(|task| {
                 let (kb, nb) = grid.pair(task);
                 let ab = &a_blocks[kb];
                 let wb = &w.blocks[kb * nc + nb];
                 if ab.scale == 0.0 || wb.scale == 0.0 {
-                    return Matrix::zeros(m, l_n);
+                    return None;
                 }
                 let chain = &wb.chain;
                 let mut block_acc = Matrix::zeros(m, l_n);
@@ -694,6 +995,16 @@ impl DotProductEngine {
                             a_plane.matmul(&w_plane)
                         };
                         if !self.cfg.noise_free {
+                            if read_noise {
+                                self.apply_read_noise(
+                                    &mut partial.data,
+                                    Stripe::contiguous(m, l_n),
+                                    task,
+                                    sa,
+                                    sw,
+                                    tag,
+                                );
+                            }
                             self.adc_readout(
                                 &adc,
                                 &mut partial.data,
@@ -712,12 +1023,10 @@ impl DotProductEngine {
                 for v in block_acc.data.iter_mut() {
                     *v *= s;
                 }
-                block_acc
+                Some(block_acc)
             })
             .collect();
-        let out = assemble_output(&grid, m, n, l_n, &pair_results);
-        let _ = tag;
-        out
+        assemble_output(&grid, m, n, l_n, &pair_results)
     }
 
     /// Route one digit-plane MVM through the IR-drop circuit model: inputs
@@ -753,26 +1062,56 @@ impl DotProductEngine {
     }
 }
 
+/// The deterministic per-block half of weight preparation (steps 1–2 of
+/// the module pipeline): extract + pad the block, quantize, and slice into
+/// digit planes. Shared verbatim by `prepare_weights` and
+/// `weight_template`, so the fused and the cached path cannot drift apart.
+fn template_block(
+    b: &Matrix,
+    grid: &MatmulBlocks,
+    method: &SliceMethod,
+    array: (usize, usize),
+    blk: usize,
+) -> TemplateBlock {
+    let (l_m, l_n) = array;
+    let (kb, nb) = grid.pair(blk);
+    let (k0, kl) = grid.k.range(kb);
+    let (n0, nl) = grid.n.range(nb);
+    // Pad short edge blocks to the full array size with zeros.
+    let sub = b.block(k0, n0, kl, nl).pad_to(l_m, l_n);
+    let qb = quantize_block(&sub, &method.spec, method.mode);
+    TemplateBlock { planes: slice_digits(&qb.q, &method.spec), scale: qb.scale }
+}
+
 /// Reduce per-pair block contributions into the `m × n` output: sum over
-/// k-blocks per column block, then un-pad into place.
+/// k-blocks per column block, then un-pad into place. `None` entries are
+/// zero-scale pairs that contributed nothing — they are skipped instead of
+/// being materialized as zero matrices.
 fn assemble_output(
     grid: &MatmulBlocks,
     m: usize,
     n: usize,
     l_n: usize,
-    pair_results: &[Matrix],
+    pair_results: &[Option<Matrix>],
 ) -> Matrix {
     let (kc, nc) = (grid.k.count(), grid.n.count());
     let mut out = Matrix::zeros(m, n);
+    let mut acc = Matrix::zeros(m, l_n);
     for nb in 0..nc {
         let (n0, nl) = grid.n.range(nb);
-        let mut acc = Matrix::zeros(m, l_n);
+        acc.data.fill(0.0);
+        let mut any = false;
         for kb in 0..kc {
-            for (o, &p) in acc.data.iter_mut().zip(&pair_results[kb * nc + nb].data) {
-                *o += p;
+            if let Some(p) = &pair_results[kb * nc + nb] {
+                any = true;
+                for (o, &v) in acc.data.iter_mut().zip(&p.data) {
+                    *o += v;
+                }
             }
         }
-        out.set_block_clipped(0, n0, &acc.block(0, 0, m, nl));
+        if any {
+            out.set_block_clipped(0, n0, &acc.block(0, 0, m, nl));
+        }
     }
     out
 }
@@ -1119,6 +1458,181 @@ mod tests {
             base.matmul_prepared(&a, &wb, &med, 0).data,
             explicit.matmul_prepared(&a, &we, &med, 0).data
         );
+    }
+
+    #[test]
+    fn cached_template_and_inputs_bit_identical_across_injection_matrix() {
+        // Tentpole invariant of the caching split: `weight_template` +
+        // `program` must reproduce `prepare_weights` bit for bit, and the
+        // `PreparedInputs` path must reproduce per-call slicing bit for
+        // bit — across INT/FP methods, every ADC policy, every
+        // fault-injection variant, and ragged shapes.
+        let shapes = [(5usize, 100usize, 37usize), (3, 65, 130), (12, 64, 64)];
+        let methods =
+            [SliceMethod::int(SliceSpec::int8()), SliceMethod::fp(SliceSpec::fp16())];
+        let policies = [AdcPolicy::WorstCase, AdcPolicy::Calibrated, AdcPolicy::IntegerSnap];
+        let mut variants = nonideal_variants();
+        variants.push(("none", NonIdealitySpec::none()));
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            let a = rand_mat(m, k, 900 + si as u64);
+            let b = rand_mat(k, n, 950 + si as u64);
+            for method in &methods {
+                for &adc_policy in &policies {
+                    for (vtag, ni) in &variants {
+                        let cfg = DpeConfig {
+                            array: (64, 64),
+                            adc_policy,
+                            nonideal: ni.clone(),
+                            ..DpeConfig::default()
+                        };
+                        let e = DotProductEngine::new(cfg, 31);
+                        let template = e.weight_template(&b, method);
+                        assert_eq!(template.shape(), (k, n));
+                        let ai = e.prepare_inputs(&a, method);
+                        assert_eq!(ai.shape(), (m, k));
+                        let direct_w = e.prepare_weights(&b, method, 2);
+                        let direct = e.matmul_prepared(&a, &direct_w, method, 5);
+                        let cached =
+                            e.matmul_prepared_inputs(&ai, &template.program(&e, 2), 5);
+                        assert_eq!(
+                            cached.data, direct.data,
+                            "{m}x{k}x{n} widths={:?} policy={adc_policy:?} nonideal={vtag}",
+                            method.spec.widths
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_paths_bit_identical_noise_free_and_serial() {
+        // Noise-free engines and the serial (no nested parallelism) entry
+        // points used by the Monte-Carlo driver must also match exactly.
+        let a = rand_mat(7, 90, 981);
+        let b = rand_mat(90, 70, 982);
+        let med = SliceMethod::int(SliceSpec::int8());
+        for noise_free in [true, false] {
+            let cfg = DpeConfig { noise_free, ..DpeConfig::default() };
+            let e = DotProductEngine::new(cfg, 17);
+            let template = e.weight_template(&b, &med);
+            let ai = e.prepare_inputs(&a, &med);
+            let direct = e.matmul_prepared(&a, &e.prepare_weights(&b, &med, 3), &med, 4);
+            let serial = e.matmul_prepared_inputs_with(
+                &ai,
+                &template.program_with(&e, 3, false),
+                4,
+                false,
+            );
+            assert_eq!(serial.data, direct.data, "noise_free={noise_free}");
+        }
+    }
+
+    #[test]
+    fn zero_scale_blocks_are_skipped_with_exact_zero_output() {
+        // An all-zero n-block of the weights (and an all-zero k-block of
+        // the input) quantizes to scale 0; those pairs must contribute
+        // exactly zero columns without being materialized, and the fused
+        // path must still match the oracle.
+        let mut rng = Pcg64::seeded(877);
+        let a = Matrix::from_fn(9, 130, |_, j| {
+            if (64..128).contains(&j) { 0.0 } else { rng.uniform_range(-1.0, 1.0) }
+        });
+        let b = Matrix::from_fn(130, 100, |_, j| {
+            if j < 64 { 0.0 } else { rng.uniform_range(-1.0, 1.0) }
+        });
+        let e = DotProductEngine::new(DpeConfig::default(), 7);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let w = e.prepare_weights(&b, &med, 0);
+        let out = e.matmul_prepared(&a, &w, &med, 0);
+        let oracle = e.matmul_prepared_reference(&a, &w, &med, 0);
+        assert_eq!(out.data, oracle.data);
+        // Columns of the zero weight block are exactly zero.
+        for i in 0..out.rows {
+            for j in 0..64 {
+                assert_eq!(out.at(i, j), 0.0, "({i},{j})");
+            }
+        }
+        // Non-zero columns still track the ideal product.
+        let ideal = a.matmul(&b);
+        assert!(out.relative_error(&ideal) < 0.15);
+    }
+
+    #[test]
+    fn read_noise_tag_decorrelates_reads() {
+        let mut cfg = DpeConfig::default();
+        cfg.device.read_cv = 0.05;
+        let e = DotProductEngine::new(cfg, 3);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(8, 64, 471);
+        let b = rand_mat(64, 64, 472);
+        let w = e.prepare_weights(&b, &med, 0);
+        let r0 = e.matmul_prepared(&a, &w, &med, 0);
+        let r0b = e.matmul_prepared(&a, &w, &med, 0);
+        assert_eq!(r0.data, r0b.data, "same tag → identical read noise");
+        let r1 = e.matmul_prepared(&a, &w, &med, 1);
+        assert_ne!(r0.data, r1.data, "tag must decorrelate per-read noise");
+        // Read fluctuation is a perturbation, not a blow-up.
+        assert!(r1.relative_error(&a.matmul(&b)) < 0.2);
+    }
+
+    #[test]
+    fn read_noise_fused_matches_reference_oracle() {
+        // The per-(pair, sa, sw) read-noise streams must land on the same
+        // elements in the fused stripes as in the oracle's contiguous
+        // partials, for every ADC policy and on ragged shapes.
+        let policies = [AdcPolicy::WorstCase, AdcPolicy::Calibrated, AdcPolicy::IntegerSnap];
+        for &(m, k, n) in &[(5usize, 100usize, 37usize), (12, 64, 64)] {
+            let a = rand_mat(m, k, 555);
+            let b = rand_mat(k, n, 556);
+            for &adc_policy in &policies {
+                let mut cfg = DpeConfig { adc_policy, ..DpeConfig::default() };
+                cfg.device.read_cv = 0.04;
+                let e = DotProductEngine::new(cfg, 11);
+                let med = SliceMethod::int(SliceSpec::int8());
+                let w = e.prepare_weights(&b, &med, 1);
+                let fused = e.matmul_prepared(&a, &w, &med, 9);
+                let oracle = e.matmul_prepared_reference(&a, &w, &med, 9);
+                assert_eq!(fused.data, oracle.data, "{m}x{k}x{n} policy={adc_policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn read_noise_circuit_path_matches_reference() {
+        let mut cfg =
+            DpeConfig { use_circuit: true, r_wire: 0.5, array: (16, 16), ..DpeConfig::default() };
+        cfg.device.cv = 0.0;
+        cfg.device.read_cv = 0.03;
+        let e = DotProductEngine::new(cfg, 5);
+        let a = rand_mat(4, 20, 403);
+        let b = rand_mat(20, 18, 404);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let w = e.prepare_weights(&b, &med, 0);
+        let fused = e.matmul_prepared(&a, &w, &med, 2);
+        let oracle = e.matmul_prepared_reference(&a, &w, &med, 2);
+        assert_eq!(fused.data, oracle.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "sliced for array rows")]
+    fn prepared_inputs_array_mismatch_panics() {
+        let e32 = DotProductEngine::ideal((32, 32));
+        let e64 = DotProductEngine::ideal((64, 64));
+        let med = SliceMethod::int(SliceSpec::int8());
+        let ai = e32.prepare_inputs(&rand_mat(4, 64, 1), &med);
+        let w = e64.prepare_weights(&rand_mat(64, 8, 2), &med, 0);
+        let _ = e64.matmul_prepared_inputs(&ai, &w, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight template was blocked for")]
+    fn template_array_mismatch_panics() {
+        let e32 = DotProductEngine::ideal((32, 32));
+        let e64 = DotProductEngine::ideal((64, 64));
+        let med = SliceMethod::int(SliceSpec::int8());
+        let template = e32.weight_template(&rand_mat(64, 8, 3), &med);
+        let _ = template.program(&e64, 0);
     }
 
     #[test]

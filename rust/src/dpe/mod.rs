@@ -19,5 +19,7 @@ pub mod montecarlo;
 pub mod quant;
 pub mod slicing;
 
-pub use engine::{DotProductEngine, DpeConfig, PreparedWeights, SliceMethod};
+pub use engine::{
+    DotProductEngine, DpeConfig, PreparedInputs, PreparedWeights, SliceMethod, WeightTemplate,
+};
 pub use slicing::{DataMode, SliceSpec, SliceTables};

@@ -75,6 +75,21 @@ pub fn run_point(cfg: &McConfig, bits: usize, block: usize, cv: f64, mode: DataM
     run_point_with_operands(cfg, bits, block, cv, mode, &mut rng)
 }
 
+/// The operands [`run_point`] draws (fixed per `cfg.seed`) — public so
+/// the perf bench (`benches/fig12_montecarlo.rs`) can drive the identical
+/// workload through the uncached pre-split path and cross-check
+/// bit-identity against the cached one.
+pub fn point_operands(cfg: &McConfig) -> (Matrix, Matrix) {
+    let mut rng = Pcg64::new(cfg.seed, 0x4D43);
+    mc_operands(cfg, &mut rng)
+}
+
+/// The operands [`run_fault_point`] draws (fixed per `cfg.seed`).
+pub fn fault_point_operands(cfg: &McConfig) -> (Matrix, Matrix) {
+    let mut rng = Pcg64::new(cfg.seed, 0x4641);
+    mc_operands(cfg, &mut rng)
+}
+
 /// `(mean, std, min, max)` of a non-empty relative-error sample
 /// (population std, matching the paper's Fig-12 statistics).
 fn re_stats(res: &[f64]) -> (f64, f64, f64, f64) {
@@ -96,6 +111,35 @@ fn mc_operands(cfg: &McConfig, rng: &mut Pcg64) -> (Matrix, Matrix) {
     )
 }
 
+/// The shared Monte-Carlo cycle loop: build the [`crate::dpe::WeightTemplate`]
+/// and the [`crate::dpe::PreparedInputs`] **once**, then run `cfg.cycles`
+/// independent programming cycles that pay only the noise/fault-draw,
+/// pack, and matmul cost (engine §Perf) — bit-identical to the pre-split
+/// per-cycle `prepare_weights` + `matmul_prepared` loop at the same seed.
+/// Per-cycle state derives only from the cycle index, so results are
+/// deterministic regardless of thread count; the per-cycle engine work
+/// runs serially because the cycle-level `par_map` already saturates the
+/// worker pool (no nested thread scopes).
+fn mc_cycles(
+    cfg: &McConfig,
+    dpe_cfg: &DpeConfig,
+    a: &Matrix,
+    b: &Matrix,
+    ideal: &Matrix,
+    method: &SliceMethod,
+) -> Vec<f64> {
+    let setup = DotProductEngine::new(dpe_cfg.clone(), cfg.seed);
+    let template = setup.weight_template(b, method);
+    let inputs = setup.prepare_inputs(a, method);
+    par_map(cfg.cycles, |cycle| {
+        let engine = DotProductEngine::new(dpe_cfg.clone(), cfg.seed.wrapping_add(cycle as u64));
+        let w = template.program_with(&engine, cycle as u64, false);
+        engine
+            .matmul_prepared_inputs_with(&inputs, &w, cycle as u64, false)
+            .relative_error(ideal)
+    })
+}
+
 fn run_point_with_operands(
     cfg: &McConfig,
     bits: usize,
@@ -111,13 +155,7 @@ fn run_point_with_operands(
     let mut dpe_cfg = cfg.base.clone();
     dpe_cfg.array = (block, block);
     dpe_cfg.device.cv = cv;
-    let res: Vec<f64> = par_map(cfg.cycles, |cycle| {
-        let engine = DotProductEngine::new(dpe_cfg.clone(), cfg.seed.wrapping_add(cycle as u64));
-        let w = engine.prepare_weights(&b, &method, cycle as u64);
-        engine
-            .matmul_prepared(&a, &w, &method, cycle as u64)
-            .relative_error(&ideal)
-    });
+    let res = mc_cycles(cfg, &dpe_cfg, &a, &b, &ideal, &method);
     let (re_mean, re_std, re_min, re_max) = re_stats(&res);
     McPoint {
         label: format!("{bits}b/{block}blk/cv{cv}/{mode:?}"),
@@ -155,7 +193,11 @@ pub struct FaultPoint {
 /// the same operands under `ni`, each with a fresh fault pattern (the
 /// engine seed varies per cycle, which reseeds both the programming noise
 /// and the injection streams). Deterministic in `cfg.seed` regardless of
-/// thread count: per-cycle state derives only from the cycle index.
+/// thread count: per-cycle state derives only from the cycle index. The
+/// deterministic quantize/slice work is cached across cycles via the
+/// weight template and prepared inputs (engine §Perf) — only the noise,
+/// fault, and ADC-chain draws differ between cycles, so only they are
+/// re-done.
 pub fn run_fault_point(
     cfg: &McConfig,
     bits: usize,
@@ -170,13 +212,7 @@ pub fn run_fault_point(
     let mut dpe_cfg = cfg.base.clone();
     dpe_cfg.device.cv = cv;
     dpe_cfg.nonideal = ni.clone();
-    let res: Vec<f64> = par_map(cfg.cycles, |cycle| {
-        let engine = DotProductEngine::new(dpe_cfg.clone(), cfg.seed.wrapping_add(cycle as u64));
-        let w = engine.prepare_weights(&b, &method, cycle as u64);
-        engine
-            .matmul_prepared(&a, &w, &method, cycle as u64)
-            .relative_error(&ideal)
-    });
+    let res = mc_cycles(cfg, &dpe_cfg, &a, &b, &ideal, &method);
     let (re_mean, re_std, _, re_max) = re_stats(&res);
     let good = res.iter().filter(|&&r| r <= yield_re).count();
     let fault_rate = ni.faults.cell_rate();
@@ -286,6 +322,59 @@ mod tests {
         let q = run_point(&cfg, 6, 32, 0.01, DataMode::Quantize);
         let p = run_point(&cfg, 6, 32, 0.01, DataMode::PreAlign);
         assert!(q.re_mean < p.re_mean, "q {} vs p {}", q.re_mean, p.re_mean);
+    }
+
+    #[test]
+    fn cached_cycles_bit_identical_to_presplit_loop() {
+        // The acceptance invariant of the template split: `run_point` and
+        // `run_fault_point` must be bit-identical at the same seed to the
+        // pre-split implementation, i.e. a per-cycle
+        // `prepare_weights` + `matmul_prepared` loop over the same
+        // operands.
+        let cfg = McConfig { size: 24, cycles: 5, ..McConfig::default() };
+        let presplit = |dpe_cfg: &DpeConfig, a: &Matrix, b: &Matrix, method: &SliceMethod| {
+            let ideal = a.matmul(b);
+            let res: Vec<f64> = (0..cfg.cycles)
+                .map(|cycle| {
+                    let engine = DotProductEngine::new(
+                        dpe_cfg.clone(),
+                        cfg.seed.wrapping_add(cycle as u64),
+                    );
+                    let w = engine.prepare_weights(b, method, cycle as u64);
+                    engine
+                        .matmul_prepared(a, &w, method, cycle as u64)
+                        .relative_error(&ideal)
+                })
+                .collect();
+            re_stats(&res)
+        };
+        for mode in [DataMode::Quantize, DataMode::PreAlign] {
+            let p = run_point(&cfg, 8, 16, 0.05, mode);
+            let (a, b) = point_operands(&cfg);
+            let method = SliceMethod { spec: spec_for_bits(8), mode };
+            let mut dpe_cfg = cfg.base.clone();
+            dpe_cfg.array = (16, 16);
+            dpe_cfg.device.cv = 0.05;
+            let (mean, std, min, max) = presplit(&dpe_cfg, &a, &b, &method);
+            assert_eq!(p.re_mean.to_bits(), mean.to_bits(), "{mode:?} mean");
+            assert_eq!(p.re_std.to_bits(), std.to_bits(), "{mode:?} std");
+            assert_eq!(p.re_min.to_bits(), min.to_bits(), "{mode:?} min");
+            assert_eq!(p.re_max.to_bits(), max.to_bits(), "{mode:?} max");
+        }
+        // Fault path: stuck-at cells + per-column ADC error active.
+        let mut ni = NonIdealitySpec::none();
+        ni.faults = crate::device::faults::FaultSpec::cells(0.05);
+        ni.adc.offset_std_lsb = 0.3;
+        let fp = run_fault_point(&cfg, 8, 0.05, &ni, 0.1);
+        let (a, b) = fault_point_operands(&cfg);
+        let method = SliceMethod { spec: spec_for_bits(8), mode: DataMode::Quantize };
+        let mut dpe_cfg = cfg.base.clone();
+        dpe_cfg.device.cv = 0.05;
+        dpe_cfg.nonideal = ni;
+        let (mean, std, _, max) = presplit(&dpe_cfg, &a, &b, &method);
+        assert_eq!(fp.re_mean.to_bits(), mean.to_bits(), "fault mean");
+        assert_eq!(fp.re_std.to_bits(), std.to_bits(), "fault std");
+        assert_eq!(fp.re_max.to_bits(), max.to_bits(), "fault max");
     }
 
     #[test]

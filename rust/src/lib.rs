@@ -25,7 +25,12 @@
 //! GEMM per (input slice, array block) covering all weight digit planes at
 //! once; see `dpe::engine` §Perf and `tensor` §Perf for the design and
 //! `benches/table3_throughput.rs` (`BENCH_table3.json`) for the tracked
-//! throughput numbers.
+//! throughput numbers. On top of it, the datapath splits into cached
+//! deterministic halves and a cheap stochastic tail
+//! ([`dpe::WeightTemplate`], [`dpe::PreparedInputs`]): loops that
+//! re-program or re-read the same matrices — Monte-Carlo sweeps, fault
+//! yield studies, k-means passes, the CWT — pay only the noise-draw cost
+//! per cycle (`benches/fig12_montecarlo.rs`, `BENCH_mc.json`).
 //!
 //! Beyond the paper, [`device::faults`] adds a unified fault-injection
 //! subsystem (stuck-at cells, dead lines, retention at read time,

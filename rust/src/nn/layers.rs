@@ -6,7 +6,7 @@
 //! BatchNorm and Flatten are digital layers.
 
 use super::{HwSpec, Layer, Param};
-use crate::dpe::PreparedWeights;
+use crate::dpe::{PreparedInputs, PreparedWeights};
 use crate::tensor::{col2im_accumulate, im2col, Conv2dDims, Matrix, Tensor};
 use crate::util::parallel::par_map;
 use crate::util::rng::Pcg64;
@@ -22,6 +22,13 @@ pub struct LinearMem {
     /// Weight-programming generation (decorrelates programming noise).
     generation: u64,
     cache_x: Option<Matrix>,
+    /// Opt-in cached-input eval path (see [`LinearMem::set_input_caching`]).
+    cache_inputs_enabled: bool,
+    /// `(input data, its prepared slicing)` — valid while the input data
+    /// matches; deliberately NOT cleared by `update_weight` (input slicing
+    /// is weight-independent, which is exactly what makes re-evaluating a
+    /// fixed batch across programming cycles cheap).
+    input_cache: Option<(Vec<f64>, PreparedInputs)>,
 }
 
 impl LinearMem {
@@ -38,9 +45,26 @@ impl LinearMem {
             prepared: None,
             generation: 0,
             cache_x: None,
+            cache_inputs_enabled: false,
+            input_cache: None,
         };
         l.update_weight();
         l
+    }
+
+    /// Opt into caching the quantized + sliced input across forward calls
+    /// (hardware path only): when the same batch is evaluated repeatedly —
+    /// e.g. Monte-Carlo over reprogramming cycles via
+    /// [`Layer::update_weight`] — the DPE then pays only the matmul cost
+    /// per call. Keyed on exact input equality and bit-identical to the
+    /// uncached path. Eval-mode only (training batches differ every step,
+    /// so `forward(_, true)` always takes the uncached path); off by
+    /// default.
+    pub fn set_input_caching(&mut self, on: bool) {
+        self.cache_inputs_enabled = on;
+        if !on {
+            self.input_cache = None;
+        }
     }
 
     fn weight_matrix(&self) -> Matrix {
@@ -53,11 +77,27 @@ impl Layer for LinearMem {
         assert_eq!(x.shape.len(), 2, "LinearMem expects (B, in)");
         assert_eq!(x.shape[1], self.in_features);
         let xm = x.to_matrix();
-        let mut y = match (&self.hw, &self.prepared) {
-            (Some(hw), Some(prep)) => {
-                hw.engine.matmul_prepared(&xm, prep, &hw.input_method, self.generation)
+        let use_hw = self.hw.is_some() && self.prepared.is_some();
+        // The input cache only pays off in eval loops over a repeated
+        // batch; training batches differ every step, so skip the cache
+        // there (same gating as Conv2dMem).
+        let mut y = if use_hw && self.cache_inputs_enabled && !train {
+            let hit = matches!(&self.input_cache, Some((key, _)) if *key == xm.data);
+            if !hit {
+                let hw = self.hw.as_ref().unwrap();
+                let ai = hw.engine.prepare_inputs(&xm, &hw.input_method);
+                self.input_cache = Some((xm.data.clone(), ai));
             }
-            _ => xm.matmul(&self.weight_matrix()),
+            let hw = self.hw.as_ref().unwrap();
+            let prep = self.prepared.as_ref().unwrap();
+            let (_, ai) = self.input_cache.as_ref().unwrap();
+            hw.engine.matmul_prepared_inputs(ai, prep, self.generation)
+        } else if use_hw {
+            let hw = self.hw.as_ref().unwrap();
+            let prep = self.prepared.as_ref().unwrap();
+            hw.engine.matmul_prepared(&xm, prep, &hw.input_method, self.generation)
+        } else {
+            xm.matmul(&self.weight_matrix())
         };
         for i in 0..y.rows {
             for (v, b) in y.row_mut(i).iter_mut().zip(&self.b.value) {
@@ -131,6 +171,12 @@ pub struct Conv2dMem {
     /// stacked-row order so forward stacking and the weight-gradient GEMM
     /// both use them without re-transposing.
     cache: Option<(Vec<Matrix>, Conv2dDims)>,
+    /// Opt-in cached-input eval path (see [`Conv2dMem::set_input_caching`]).
+    cache_inputs_enabled: bool,
+    /// `(input data, prepared slicing of the stacked im2col matrix)` —
+    /// a hit skips im2col, stacking, and quantize/slice entirely. Not
+    /// cleared by `update_weight` (the cache is weight-independent).
+    input_cache: Option<(Vec<f64>, PreparedInputs)>,
 }
 
 impl Conv2dMem {
@@ -161,14 +207,51 @@ impl Conv2dMem {
             prepared: None,
             generation: 0,
             cache: None,
+            cache_inputs_enabled: false,
+            input_cache: None,
         };
         l.update_weight();
         l
     }
 
+    /// Opt into caching the im2col + quantize/slice of the input across
+    /// eval-mode forward calls (hardware path only) — same contract as
+    /// [`LinearMem::set_input_caching`]: keyed on exact input equality,
+    /// bit-identical, survives `update_weight`, off by default.
+    pub fn set_input_caching(&mut self, on: bool) {
+        self.cache_inputs_enabled = on;
+        if !on {
+            self.input_cache = None;
+        }
+    }
+
     fn conv_dims(&self) -> Conv2dDims {
         let (c, h, w) = self.dims_chw;
         Conv2dDims { in_c: c, in_h: h, in_w: w, kh: self.kernel, kw: self.kernel, stride: self.stride, pad: self.pad }
+    }
+
+    /// Per-sample transposed im2col columns plus their stacked
+    /// `(B·OH·OW, patch)` batch matrix.
+    fn im2col_stacked(&self, x: &Tensor) -> (Vec<Matrix>, Matrix) {
+        let (c, h, w) = self.dims_chw;
+        let bsz = x.shape[0];
+        let d = self.conv_dims();
+        let (oh, ow) = (d.out_h(), d.out_w());
+        let sample_len = c * h * w;
+        // Transposed im2col per sample (parallel): `(OH·OW, patch)` is the
+        // stacked-row layout, so building the batch matrix below is one
+        // contiguous copy per sample instead of an element-wise transpose.
+        let cols_t: Vec<Matrix> = par_map(bsz, |i| {
+            im2col(&x.data[i * sample_len..(i + 1) * sample_len], d).transpose()
+        });
+        let patch = self.patch_len();
+        let rows = bsz * oh * ow;
+        let sample_rows = oh * ow * patch;
+        let mut stacked = Matrix::zeros(rows, patch);
+        for (i, colt) in cols_t.iter().enumerate() {
+            stacked.data[i * sample_rows..(i + 1) * sample_rows].copy_from_slice(&colt.data);
+        }
+        (cols_t, stacked)
     }
 
     fn patch_len(&self) -> usize {
@@ -189,27 +272,40 @@ impl Layer for Conv2dMem {
         let bsz = x.shape[0];
         let d = self.conv_dims();
         let (oh, ow) = (d.out_h(), d.out_w());
-        let sample_len = c * h * w;
-        // Transposed im2col per sample (parallel): `(OH·OW, patch)` is the
-        // stacked-row layout, so building the batch matrix below is one
-        // contiguous copy per sample instead of an element-wise transpose.
-        let cols_t: Vec<Matrix> = par_map(bsz, |i| {
-            im2col(&x.data[i * sample_len..(i + 1) * sample_len], d).transpose()
-        });
-        // Stack columns: (B·OH·OW, patch) then one DPE matmul routed
-        // through the fused slice-plane pipeline (`matmul_prepared`).
-        let rows = bsz * oh * ow;
-        let patch = self.patch_len();
-        let sample_rows = oh * ow * patch;
-        let mut stacked = Matrix::zeros(rows, patch);
-        for (i, colt) in cols_t.iter().enumerate() {
-            stacked.data[i * sample_rows..(i + 1) * sample_rows].copy_from_slice(&colt.data);
-        }
-        let y = match (&self.hw, &self.prepared) {
-            (Some(hw), Some(prep)) => {
-                hw.engine.matmul_prepared(&stacked, prep, &hw.input_method, self.generation)
+        // Cached-input eval path: a repeated input skips im2col, stacking,
+        // and quantize/slice entirely (eval only — training needs the
+        // im2col columns for backward anyway).
+        let use_cached = !train
+            && self.cache_inputs_enabled
+            && self.hw.is_some()
+            && self.prepared.is_some();
+        let mut train_cols: Option<Vec<Matrix>> = None;
+        let y = if use_cached {
+            let hit = matches!(&self.input_cache, Some((key, _)) if *key == x.data);
+            if !hit {
+                let (_, stacked) = self.im2col_stacked(x);
+                let hw = self.hw.as_ref().unwrap();
+                let ai = hw.engine.prepare_inputs(&stacked, &hw.input_method);
+                self.input_cache = Some((x.data.clone(), ai));
             }
-            _ => stacked.matmul(&self.weight_t()),
+            let hw = self.hw.as_ref().unwrap();
+            let prep = self.prepared.as_ref().unwrap();
+            let (_, ai) = self.input_cache.as_ref().unwrap();
+            hw.engine.matmul_prepared_inputs(ai, prep, self.generation)
+        } else {
+            // Stack columns: (B·OH·OW, patch) then one DPE matmul routed
+            // through the fused slice-plane pipeline (`matmul_prepared`).
+            let (cols_t, stacked) = self.im2col_stacked(x);
+            let y = match (&self.hw, &self.prepared) {
+                (Some(hw), Some(prep)) => {
+                    hw.engine.matmul_prepared(&stacked, prep, &hw.input_method, self.generation)
+                }
+                _ => stacked.matmul(&self.weight_t()),
+            };
+            if train {
+                train_cols = Some(cols_t);
+            }
+            y
         };
         // (B·OH·OW, out_c) → (B, out_c, OH, OW) + bias.
         let mut out = Tensor::zeros(&[bsz, self.out_c, oh, ow]);
@@ -222,7 +318,7 @@ impl Layer for Conv2dMem {
             }
         }
         if train {
-            self.cache = Some((cols_t, d));
+            self.cache = Some((train_cols.expect("train path computes im2col"), d));
         }
         out
     }
@@ -900,6 +996,58 @@ mod tests {
         assert_eq!(y.shape, vec![2, 12]);
         let back = f.backward(&y);
         assert_eq!(back.shape, x.shape);
+    }
+
+    #[test]
+    fn linear_input_cache_bit_identical_across_reprogramming() {
+        // Twin layers (same weights, same engine seed), one with the
+        // cached-input eval path: outputs must match bit for bit, and the
+        // cache must survive update_weight (slicing is weight-independent)
+        // while still tracking a changed input.
+        let mk = || {
+            let mut rng = Pcg64::seeded(21);
+            let hw = HwSpec::uniform(
+                DotProductEngine::new(Default::default(), 7),
+                SliceMethod::int(SliceSpec::int8()),
+            );
+            LinearMem::new(16, 8, Some(hw), &mut rng)
+        };
+        let mut plain = mk();
+        let mut cached = mk();
+        cached.set_input_caching(true);
+        let x = Tensor::from_vec(&[3, 16], (0..48).map(|i| ((i % 7) as f64) / 3.5 - 1.0).collect());
+        assert_eq!(cached.forward(&x, false).data, plain.forward(&x, false).data);
+        // Repeat (cache hit) and after reprogramming.
+        assert_eq!(cached.forward(&x, false).data, plain.forward(&x, false).data);
+        plain.update_weight();
+        cached.update_weight();
+        assert_eq!(cached.forward(&x, false).data, plain.forward(&x, false).data);
+        // A different input must invalidate the cache, not reuse it.
+        let x2 = Tensor::from_vec(&[3, 16], (0..48).map(|i| ((i % 5) as f64) / 2.5 - 1.0).collect());
+        assert_eq!(cached.forward(&x2, false).data, plain.forward(&x2, false).data);
+    }
+
+    #[test]
+    fn conv_input_cache_bit_identical() {
+        let mk = || {
+            let mut rng = Pcg64::seeded(22);
+            let hw = HwSpec::uniform(
+                DotProductEngine::new(Default::default(), 8),
+                SliceMethod::int(SliceSpec::int8()),
+            );
+            Conv2dMem::new(2, 6, 6, 3, 3, 1, 1, Some(hw), &mut rng)
+        };
+        let mut plain = mk();
+        let mut cached = mk();
+        cached.set_input_caching(true);
+        let x = Tensor::from_vec(
+            &[2, 2, 6, 6],
+            (0..144).map(|i| ((i * 13 % 19) as f64) / 9.0 - 1.0).collect(),
+        );
+        assert_eq!(cached.forward(&x, false).data, plain.forward(&x, false).data);
+        plain.update_weight();
+        cached.update_weight();
+        assert_eq!(cached.forward(&x, false).data, plain.forward(&x, false).data);
     }
 
     #[test]

@@ -308,6 +308,27 @@ impl PackedB {
         PackedB { k, n, data }
     }
 
+    /// An all-zero packed buffer with the exact layout [`PackedB::pack`]
+    /// would produce for a `k × n` matrix. Writers that generate values
+    /// element-by-element ([`PackedB::write`]) can fill the panels
+    /// directly instead of materializing a dense matrix and packing it —
+    /// the DPE programs noisy weight digits straight into panel form this
+    /// way, skipping one full allocation + copy per programmed block.
+    pub fn zeros(k: usize, n: usize) -> PackedB {
+        let panels = n.div_ceil(GEMM_NR).max(1);
+        PackedB { k, n, data: vec![0.0; panels * k * GEMM_NR] }
+    }
+
+    /// Write element `(kk, col)` of the logical `k × n` matrix into its
+    /// packed slot. `PackedB::zeros` followed by `write` over every
+    /// element yields the same buffer as [`PackedB::pack`].
+    #[inline]
+    pub fn write(&mut self, kk: usize, col: usize, v: f64) {
+        debug_assert!(kk < self.k && col < self.n, "write out of packed bounds");
+        let (p, jj) = (col / GEMM_NR, col % GEMM_NR);
+        self.data[p * self.k * GEMM_NR + kk * GEMM_NR + jj] = v;
+    }
+
     /// Materialize columns `c0..c0 + w` as a dense `k × w` matrix — the
     /// exact inverse of [`PackedB::pack`] over that column range. Lets the
     /// packed form be the *only* retained copy of a prepared weight block
@@ -673,6 +694,24 @@ mod tests {
         // Second call over dirty scratch must give the same result.
         matmul_packed_into(&a, &packed, &mut out);
         assert_eq!(out, b.data);
+    }
+
+    #[test]
+    fn packed_zeros_write_matches_pack() {
+        // The DPE's direct-pack programming path depends on zeros + write
+        // reproducing pack() exactly, including ragged edge panels.
+        let mut rng = Pcg64::seeded(15);
+        for &(k, n) in &[(1usize, 1usize), (5, 8), (7, 19), (64, 320), (3, 9)] {
+            let b = Matrix::random_uniform(k, n, -1.0, 1.0, &mut rng);
+            let packed = PackedB::pack(&b);
+            let mut direct = PackedB::zeros(k, n);
+            for kk in 0..k {
+                for j in 0..n {
+                    direct.write(kk, j, b.at(kk, j));
+                }
+            }
+            assert_eq!(direct, packed, "{k}x{n}");
+        }
     }
 
     #[test]

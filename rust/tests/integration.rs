@@ -91,6 +91,27 @@ fn state_transfer_preserves_predictions() {
 }
 
 #[test]
+fn caching_split_end_to_end_bit_identical() {
+    // The WeightTemplate + PreparedInputs caching API must reproduce the
+    // uncached prepare_weights + matmul_prepared path bit for bit across
+    // reprogramming tags — the contract every cached hot loop (Monte-
+    // Carlo, k-means, CWT, layer input caches) relies on.
+    let engine = DotProductEngine::new(Default::default(), 9);
+    let med = SliceMethod::int(SliceSpec::int8());
+    let mut rng = Pcg64::seeded(31);
+    let a = Matrix::random_normal(16, 100, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(100, 48, 0.0, 1.0, &mut rng);
+    let template = engine.weight_template(&b, &med);
+    let inputs = engine.prepare_inputs(&a, &med);
+    for tag in 0..3u64 {
+        let cached = engine.matmul_prepared_inputs(&inputs, &template.program(&engine, tag), tag);
+        let w = engine.prepare_weights(&b, &med, tag);
+        let uncached = engine.matmul_prepared(&a, &w, &med, tag);
+        assert_eq!(cached.data, uncached.data, "tag {tag}");
+    }
+}
+
+#[test]
 fn kmeans_pipeline_from_dataset() {
     let ds = iris::load(50, 21);
     let mut x = Matrix::from_vec(ds.len(), 4, ds.features.clone());
