@@ -1,11 +1,172 @@
-//! Bench: regenerates the paper's fig17_inference artifact at full scale.
-//! Run: `cargo bench --bench fig17_inference`  (all benches: `cargo bench`)
+//! Bench: chip-mapped batched inference throughput **and** the paper's
+//! fig17_inference artifact.
+//!
+//! The headline case maps LeNet-5 (INT8, 64×64 arrays) onto a single-tile
+//! chip via `Sequential::compile` and measures `MappedModel` throughput:
+//!
+//! - **single-stream baseline**: one image per `infer` call (the
+//!   request-at-a-time serving shape);
+//! - **batched**: `infer_batched` over the full image set at several
+//!   micro-batch sizes.
+//!
+//! Before any number is reported, two invariants are hard-asserted:
+//! 1. the single-tile mapping is **bit-identical** to the unmapped
+//!    `Sequential` hardware path (the placement anchor);
+//! 2. results are identical for every micro-batch size (batch-global
+//!    input slicing under the fixed-range ADC).
+//!
+//! Emits the machine-readable `BENCH_fig17.json` (images/sec per
+//! micro-batch size, single-stream baseline, speedup) and asserts the
+//! best batched throughput is at least the single-stream baseline.
+//!
+//! Run: `cargo bench --bench fig17_inference`
+//! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench fig17_inference`
+//! (fewer images, quick-scale artifact regeneration).
 
+use memintelli::arch::ChipSpec;
 use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+use memintelli::data::mnist_like;
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::nn::models::lenet5;
+use memintelli::nn::train::make_batch;
+use memintelli::nn::HwSpec;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+const SEED: u64 = 2024;
+
+fn int8_hw() -> HwSpec {
+    HwSpec::uniform(
+        DotProductEngine::new(DpeConfig::default(), SEED),
+        SliceMethod::int(SliceSpec::int8()),
+    )
+}
+
+struct BatchCase {
+    micro_batch: usize,
+    images_per_s: f64,
+}
 
 fn main() {
+    let smoke = std::env::var("MEMINTELLI_BENCH_SMOKE").is_ok();
+    let t0 = Instant::now();
+    let n_imgs = if smoke { 64 } else { 256 };
+
+    // Headline model: LeNet-5 INT8 on a single-tile chip.
+    let mut unmapped = lenet5(Some(int8_hw()), SEED);
+    let model = lenet5(Some(int8_hw()), SEED);
+    let planes = model.mapped_planes();
+    let chip = ChipSpec::single_tile(planes, (64, 64));
+    let mapped = model.compile(&chip).expect("single-tile compile");
+    println!("{}", mapped.placement().report());
+
+    let data = mnist_like::load(n_imgs, SEED);
+    let idx: Vec<usize> = (0..n_imgs).collect();
+    let (x, _) = make_batch(&data, &idx);
+
+    // Hard invariants (see module docs).
+    let y_seq = unmapped.forward(&x, false);
+    let y_map = mapped.infer(&x);
+    assert_eq!(
+        y_seq.data, y_map.data,
+        "single-tile mapped inference must be bit-identical to the unmapped Sequential path"
+    );
+    for mb in [1usize, 5, 32, n_imgs] {
+        assert_eq!(
+            mapped.infer_batched(&x, mb).data,
+            y_map.data,
+            "micro_batch={mb} changed the results"
+        );
+    }
+    println!("[fig17_inference] bit-identity anchor OK ({planes} arrays, {n_imgs} images)");
+
+    // Single-stream baseline: one image per inference call.
+    let single_iters = if smoke { 16 } else { 64 };
+    let t = Instant::now();
+    for i in 0..single_iters {
+        let (xi, _) = make_batch(&data, &[i % n_imgs]);
+        let _ = mapped.infer(&xi);
+    }
+    let single_ips = single_iters as f64 / t.elapsed().as_secs_f64();
+
+    // Batched inference at several micro-batch sizes.
+    let reps = if smoke { 1 } else { 3 };
+    let mut cases = Vec::new();
+    for &mb in &[4usize, 16, 64] {
+        let t = Instant::now();
+        for _ in 0..reps {
+            let _ = mapped.infer_batched(&x, mb);
+        }
+        let images_per_s = (reps * n_imgs) as f64 / t.elapsed().as_secs_f64();
+        println!(
+            "[fig17_inference] micro_batch={mb:>3}: {images_per_s:>8.1} img/s \
+             ({:.2}x single-stream {single_ips:.1} img/s)",
+            images_per_s / single_ips
+        );
+        cases.push(BatchCase { micro_batch: mb, images_per_s });
+    }
+    let best = cases
+        .iter()
+        .max_by(|a, b| a.images_per_s.total_cmp(&b.images_per_s))
+        .expect("cases non-empty");
+    if smoke {
+        // Smoke mode takes one sample per case on a loaded CI runner —
+        // record the numbers, don't fail the job on a timing hiccup.
+        println!(
+            "[fig17_inference] smoke: best batched {:.1} img/s vs single-stream {single_ips:.1} img/s (not asserted)",
+            best.images_per_s
+        );
+    } else {
+        assert!(
+            best.images_per_s >= single_ips,
+            "batched inference ({:.1} img/s) must not lose to single-stream ({single_ips:.1} img/s)",
+            best.images_per_s
+        );
+    }
+
+    // Machine-readable record.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"fig17_inference\",\n");
+    json.push_str("  \"pipeline\": \"mapped-batched-inference\",\n");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    json.push_str("  \"model\": \"lenet5\", \"method\": \"int8\",\n");
+    let _ = writeln!(
+        json,
+        "  \"chip\": {{\"tiles\": {}, \"arrays_per_tile\": {}, \"array\": [{}, {}]}},",
+        chip.tiles, chip.arrays_per_tile, chip.array.0, chip.array.1
+    );
+    let _ = writeln!(json, "  \"images\": {n_imgs},");
+    json.push_str("  \"bit_identical_single_tile\": true,\n");
+    let _ = writeln!(json, "  \"single_stream_images_per_s\": {single_ips:.3},");
+    json.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"micro_batch\": {}, \"images_per_s\": {:.3}, \"speedup\": {:.3}}}",
+            c.micro_batch,
+            c.images_per_s,
+            c.images_per_s / single_ips
+        );
+        json.push_str(if i + 1 < cases.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n");
+    let _ = writeln!(
+        json,
+        "  \"best\": {{\"micro_batch\": {}, \"images_per_s\": {:.3}, \"speedup\": {:.3}}},",
+        best.micro_batch,
+        best.images_per_s,
+        best.images_per_s / single_ips
+    );
+    let _ = writeln!(json, "  \"total_s\": {:.3}", t0.elapsed().as_secs_f64());
+    json.push_str("}\n");
+    std::fs::write("BENCH_fig17.json", &json).expect("writing BENCH_fig17.json");
+    println!("\nwrote BENCH_fig17.json");
+
+    // Paper artifact: the Fig-17 accuracy tables + chip placement report,
+    // evaluated through the mapped runtime.
     let cfg = SimConfig::default();
-    let t0 = std::time::Instant::now();
-    run_experiment("fig17_inference", &cfg, Scale::Full).expect("experiment failed");
+    let scale = if smoke { Scale::Quick } else { Scale::Full };
+    run_experiment("fig17_inference", &cfg, scale).expect("experiment failed");
     println!("\n[fig17_inference] total {:.1} s", t0.elapsed().as_secs_f64());
 }

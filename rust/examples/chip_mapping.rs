@@ -1,0 +1,75 @@
+//! Chip-level mapping walkthrough: compile LeNet-5 onto a small tiled
+//! chip, print the placement/utilization tables, and run batched
+//! inference through the mapped runtime.
+//!
+//! Run: `cargo run --release --example chip_mapping`
+
+use memintelli::arch::ChipSpec;
+use memintelli::data::mnist_like;
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::nn::models::lenet5;
+use memintelli::nn::train::make_batch;
+use memintelli::nn::HwSpec;
+
+fn main() {
+    let seed = 7;
+    let hw = HwSpec::uniform(
+        DotProductEngine::new(DpeConfig::default(), seed),
+        SliceMethod::int(SliceSpec::int8()),
+    );
+
+    // LeNet-5 with every matmul layer on INT8 hardware. The model's
+    // weight block grids demand `mapped_planes()` physical arrays.
+    let model = lenet5(Some(hw), seed);
+    let planes = model.mapped_planes();
+    println!("LeNet-5 INT8 demands {planes} physical 64x64 arrays\n");
+
+    // A small chip: 4 tiles of 24 arrays. int8 block groups are 4 digit
+    // planes, and a group never straddles tiles, so layers spill across
+    // tile boundaries as the allocator fills the chip.
+    let chip = ChipSpec::new(4, 24, (64, 64));
+    let mapped = model.compile(&chip).expect("lenet5 fits a 4x24 chip");
+
+    // Placement & utilization report, plus the per-layer summary with the
+    // arrays/tiles columns.
+    println!("{}", mapped.placement().report());
+    println!("{}", mapped.summary(vec![1, 1, 28, 28]));
+
+    // Batched inference through the mapped runtime: micro-batches run in
+    // parallel, results are bit-identical for every micro-batch size.
+    let data = mnist_like::load(32, seed);
+    let idx: Vec<usize> = (0..32).collect();
+    let (x, labels) = make_batch(&data, &idx);
+    let logits = mapped.infer_batched(&x, 8);
+    let correct = logits
+        .to_matrix()
+        .data
+        .chunks(10)
+        .zip(&labels)
+        .filter(|(row, &want)| {
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap();
+            argmax == want
+        })
+        .count();
+    println!("batched inference on 32 untrained-model images: {correct}/32 correct (chance ~3)");
+
+    // A chip that is too small produces a capacity report instead of a
+    // mapping.
+    let tiny = ChipSpec::new(1, 16, (64, 64));
+    let model = lenet5(
+        Some(HwSpec::uniform(
+            DotProductEngine::new(DpeConfig::default(), seed),
+            SliceMethod::int(SliceSpec::int8()),
+        )),
+        seed,
+    );
+    match model.compile(&tiny) {
+        Ok(_) => unreachable!("lenet5 needs more than 16 arrays"),
+        Err(e) => println!("\nexpected capacity error on a 1x16 chip:\n{e}"),
+    }
+}

@@ -1,0 +1,219 @@
+//! The compiled inference runtime: a [`crate::nn::Sequential`] whose
+//! hardware cores have been placed on a [`super::ChipSpec`] and programmed
+//! once, exposed as a forward-only executor.
+//!
+//! Produced by [`crate::nn::Sequential::compile`]. Two entry points:
+//!
+//! - [`MappedModel::infer`] — evaluate one batch through the layer
+//!   pipeline (full-batch DPE calls, engine-internal parallelism);
+//! - [`MappedModel::infer_batched`] — split the batch into micro-batches
+//!   and run them through each layer with `par_map` (inference-traffic
+//!   shape: many independent requests). Each DPE layer slices its input
+//!   **once for the full batch** ([`crate::dpe::PreparedInputs`], row
+//!   slices shared across micro-batches), so quantization scales are
+//!   batch-global and the result is bit-identical to [`MappedModel::infer`]
+//!   for every micro-batch size and thread count under the default
+//!   fixed-range (worst-case) ADC with `read_var = 0`. (A calibrated ADC
+//!   ranges on the readout peak of whatever rows it sees, so there — as in
+//!   the unmapped path — batch composition is part of the model.)
+//!
+//! Neither entry point touches training state: no activation caches, no
+//! gradients, no `update_weight`.
+
+use super::Placement;
+use crate::nn::Sequential;
+use crate::tensor::Tensor;
+
+/// A network compiled onto a chip: placement + programmed arrays + the
+/// forward-only executor. See the module docs.
+pub struct MappedModel {
+    model: Sequential,
+    placement: Placement,
+}
+
+impl MappedModel {
+    pub(crate) fn new(model: Sequential, placement: Placement) -> Self {
+        MappedModel { model, placement }
+    }
+
+    /// Evaluate one batch (forward-only, full batch per DPE call).
+    pub fn infer(&self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        for l in &self.model.layers {
+            h = l.forward_eval(&h);
+        }
+        h
+    }
+
+    /// Evaluate a batch in micro-batches of `micro_batch` samples (see the
+    /// module docs for the determinism contract).
+    pub fn infer_batched(&self, x: &Tensor, micro_batch: usize) -> Tensor {
+        let mb = micro_batch.max(1);
+        let mut h = x.clone();
+        for l in &self.model.layers {
+            h = l.forward_batched(&h, mb);
+        }
+        h
+    }
+
+    /// The chip placement this model was compiled with.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Per-layer summary including the arrays/tiles columns (delegates to
+    /// [`Sequential::summary`], which reads each core's placement).
+    pub fn summary(&self, in_shape: Vec<usize>) -> String {
+        self.model.summary(in_shape)
+    }
+
+    /// Borrow the underlying (programmed) model.
+    pub fn model(&self) -> &Sequential {
+        &self.model
+    }
+
+    /// Unwrap back into the [`Sequential`] (arrays stay programmed with
+    /// their mapped streams until the next slot assignment).
+    pub fn into_model(self) -> Sequential {
+        self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipSpec;
+    use crate::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+    use crate::nn::layers::{Conv2dMem, Flatten, LinearMem, Relu};
+    use crate::nn::{HwSpec, Layer};
+    use crate::util::rng::Pcg64;
+
+    fn hw(seed: u64) -> HwSpec {
+        HwSpec::uniform(
+            DotProductEngine::new(DpeConfig::default(), seed),
+            SliceMethod::int(SliceSpec::int8()),
+        )
+    }
+
+    /// A small conv+fc model exercising both DPE layer kinds.
+    fn small_model(seed: u64) -> Sequential {
+        let mut rng = Pcg64::new(seed, 0xA11C);
+        Sequential::new(vec![
+            Box::new(Conv2dMem::new(2, 6, 6, 3, 3, 1, 1, Some(hw(seed)), &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Flatten::new()),
+            Box::new(LinearMem::new(3 * 6 * 6, 10, Some(hw(seed)), &mut rng)),
+        ])
+    }
+
+    fn batch(n: usize) -> Tensor {
+        Tensor::from_vec(
+            &[n, 2, 6, 6],
+            (0..n * 72).map(|i| ((i * 13 % 19) as f64) / 9.0 - 1.0).collect(),
+        )
+    }
+
+    #[test]
+    fn single_tile_mapping_bit_identical_to_unmapped_sequential() {
+        // The bit-identity anchor: one tile large enough for the whole
+        // model, layer-order assignment, reproduces the unmapped hardware
+        // path exactly — noise and all.
+        let mut unmapped = small_model(5);
+        let model = small_model(5);
+        let planes = model.mapped_planes();
+        assert!(planes > 0);
+        let chip = ChipSpec::single_tile(planes, (64, 64));
+        let mapped = model.compile(&chip).expect("single-tile compile");
+        assert_eq!(mapped.placement().total_planes(), planes);
+        let x = batch(3);
+        let y_seq = unmapped.forward(&x, false);
+        let y_map = mapped.infer(&x);
+        assert_eq!(y_seq.data, y_map.data, "anchor: mapped != unmapped");
+    }
+
+    #[test]
+    fn micro_batch_size_does_not_change_results() {
+        let mapped = {
+            let m = small_model(7);
+            let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+            m.compile(&chip).unwrap()
+        };
+        let x = batch(7);
+        let full = mapped.infer(&x);
+        for mb in [1usize, 2, 3, 7, 64] {
+            assert_eq!(mapped.infer_batched(&x, mb).data, full.data, "micro_batch={mb}");
+        }
+    }
+
+    #[test]
+    fn spill_to_second_tile_resamples_noise() {
+        // The same model on a chip whose tiles force a spill lands some
+        // blocks on different global slots → different programming noise.
+        let anchor = {
+            let m = small_model(9);
+            let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+            m.compile(&chip).unwrap()
+        };
+        let spilled = {
+            let m = small_model(9);
+            // Tiles of 10 arrays: int8 groups are 4 planes, so every tile
+            // wastes 2 slots and later layers shift to higher slot ids.
+            let chip = ChipSpec::new(16, 10, (64, 64));
+            m.compile(&chip).unwrap()
+        };
+        assert!(spilled.placement().tiles_used() > 1);
+        let x = batch(2);
+        assert_ne!(
+            anchor.infer(&x).data,
+            spilled.infer(&x).data,
+            "remapped slots must resample programming noise"
+        );
+    }
+
+    #[test]
+    fn two_layers_on_one_tile_draw_independent_streams() {
+        // Two identical LinearMem layers (same weights, same engine seed):
+        // before the chip refactor both drew the layer-local streams and
+        // produced identical outputs on the same input; placed on one chip
+        // they occupy different slots and must differ.
+        let mut rng = Pcg64::new(3, 3);
+        let l0 = LinearMem::new(16, 16, Some(hw(21)), &mut rng);
+        let mut l1 = LinearMem::new(16, 16, Some(hw(21)), &mut rng);
+        l1.w.value.copy_from_slice(&l0.w.value);
+        l1.b.value.copy_from_slice(&l0.b.value);
+        let model = Sequential::new(vec![Box::new(l0), Box::new(l1)]);
+        let x = Tensor::from_vec(&[2, 16], (0..32).map(|i| ((i % 7) as f64) / 3.5 - 1.0).collect());
+        {
+            // Standalone twins (slot base 0 each) still agree…
+            let mut s0 = LinearMem::new(16, 16, Some(hw(21)), &mut rng);
+            let mut s1 = LinearMem::new(16, 16, Some(hw(21)), &mut rng);
+            s1.w.value.copy_from_slice(&s0.w.value);
+            s1.b.value.copy_from_slice(&s0.b.value);
+            s0.update_weight();
+            s1.update_weight();
+            assert_eq!(s0.forward(&x, false).data, s1.forward(&x, false).data);
+        }
+        // …but inside one model (one virtual tile) the streams are per
+        // physical array: same input through either layer differs.
+        let y0 = model.layers[0].forward_eval(&x);
+        let y1 = model.layers[1].forward_eval(&x);
+        assert_ne!(y0.data, y1.data, "co-located layers must not share noise streams");
+    }
+
+    #[test]
+    fn capacity_error_propagates_from_compile() {
+        let m = small_model(11);
+        let planes = m.mapped_planes();
+        let chip = ChipSpec::new(1, planes - 1, (64, 64));
+        let err = m.compile(&chip).unwrap_err().to_string();
+        assert!(err.contains("chip capacity exceeded"), "{err}");
+    }
+
+    #[test]
+    fn array_shape_mismatch_is_an_error() {
+        let m = small_model(13);
+        let chip = ChipSpec::single_tile(1024, (32, 32));
+        let err = m.compile(&chip).unwrap_err().to_string();
+        assert!(err.contains("array"), "{err}");
+    }
+}

@@ -1,0 +1,436 @@
+//! Chip-level architecture: tiles of physical crossbar arrays and the
+//! placement of whole networks onto them.
+//!
+//! The DPE ([`crate::dpe`]) models one array pair at a time; hierarchical
+//! simulators (IMAC-Sim's partitioned banks, per-array noise statistics in
+//! crossbar-emulation work) show why *placement* must be first-class:
+//! which physical array a weight block lands on determines its noise,
+//! fault, and ADC-mismatch streams. This module provides that layer:
+//!
+//! - [`ChipSpec`] — the physical hierarchy: `tiles × arrays_per_tile`
+//!   arrays of a fixed shape (TOML `[chip]` section, see
+//!   [`crate::coordinator::SimConfig`]);
+//! - [`ArraySlot`] — one physical array position `(tile, index)`;
+//! - [`TileAllocator`] — greedy bin-packing of each layer's weight block
+//!   grid onto tiles: every `(k-block, n-block, slice)` digit plane gets a
+//!   concrete slot; a block's `S_w` planes stay within one tile (they
+//!   share input drivers), spilling the whole group to the next tile when
+//!   the current one is full; exhausting the chip is an [`anyhow`] error
+//!   carrying a capacity report;
+//! - [`Placement`] — the allocation result: per-layer slot lists, the
+//!   per-block *stream ids* that key the engine's programming-noise /
+//!   fault / ADC-chain draws to physical arrays
+//!   ([`crate::dpe::DotProductEngine::prepare_weights_mapped`]), and
+//!   per-tile utilization;
+//! - [`MappedModel`] ([`mapped`]) — a compiled, forward-only inference
+//!   runtime produced by [`crate::nn::Sequential::compile`].
+//!
+//! **Stream semantics.** A slot's global id
+//! (`tile · arrays_per_tile + index`) is the RNG stream of the array that
+//! occupies it. An unmapped [`crate::nn::Sequential`] uses the same
+//! derivation on a *virtual* unbounded tile packed in layer order, so a
+//! chip with a single tile large enough for the whole model — where the
+//! greedy allocator reproduces exactly that packing — programs every
+//! array bit-identically to the unmapped path (the bit-identity anchor,
+//! asserted in `benches/fig17_inference.rs`). Any placement that differs
+//! (spill to another tile, different layer order) resamples the affected
+//! arrays' noise.
+
+pub mod mapped;
+
+pub use mapped::MappedModel;
+
+use std::fmt::Write as _;
+
+/// Physical chip geometry: `tiles × arrays_per_tile` crossbar arrays, all
+/// of shape `array` (rows × cols of devices).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChipSpec {
+    pub tiles: usize,
+    pub arrays_per_tile: usize,
+    /// Array shape `(rows, cols)`; every engine bound to mapped layers
+    /// must use the same shape.
+    pub array: (usize, usize),
+}
+
+impl ChipSpec {
+    pub fn new(tiles: usize, arrays_per_tile: usize, array: (usize, usize)) -> Self {
+        assert!(tiles > 0 && arrays_per_tile > 0, "chip needs at least one array");
+        assert!(array.0 > 0 && array.1 > 0, "array shape must be positive");
+        ChipSpec { tiles, arrays_per_tile, array }
+    }
+
+    /// One tile holding `capacity` arrays — the whole-model anchor chip.
+    pub fn single_tile(capacity: usize, array: (usize, usize)) -> Self {
+        ChipSpec::new(1, capacity.max(1), array)
+    }
+
+    /// A chip of `arrays_per_tile`-array tiles sized to hold at least
+    /// `total_planes` arrays.
+    pub fn fit(total_planes: usize, arrays_per_tile: usize, array: (usize, usize)) -> Self {
+        let tiles = total_planes.div_ceil(arrays_per_tile.max(1)).max(1);
+        ChipSpec::new(tiles, arrays_per_tile.max(1), array)
+    }
+
+    pub fn total_arrays(&self) -> usize {
+        self.tiles * self.arrays_per_tile
+    }
+
+    /// Global id of a slot — also the RNG stream of the array occupying it.
+    pub fn slot_id(&self, slot: ArraySlot) -> u64 {
+        (slot.tile * self.arrays_per_tile + slot.index) as u64
+    }
+}
+
+/// One physical array position on the chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArraySlot {
+    pub tile: usize,
+    pub index: usize,
+}
+
+/// One hardware core's placement demand: the layer's weight block grid
+/// (`blocks` array pairs of `slices` digit planes each), in model order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreDemand {
+    pub layer: usize,
+    pub name: &'static str,
+    /// `(k-block, n-block)` pairs in the weight grid.
+    pub blocks: usize,
+    /// Digit planes per block — the weight slice method's slice count.
+    pub slices: usize,
+}
+
+impl CoreDemand {
+    pub fn planes(&self) -> usize {
+        self.blocks * self.slices
+    }
+}
+
+/// One core's resolved placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlacement {
+    pub layer: usize,
+    pub name: &'static str,
+    pub blocks: usize,
+    pub slices: usize,
+    /// Global slot id of each block's first plane — the per-block
+    /// programming streams handed to
+    /// [`crate::dpe::DotProductEngine::prepare_weights_mapped`].
+    pub block_streams: Vec<u64>,
+    /// Every digit plane's slot, block-major then slice-major — the order
+    /// the engine programs them in.
+    pub slots: Vec<ArraySlot>,
+    pub tile_first: usize,
+    pub tile_last: usize,
+}
+
+impl LayerPlacement {
+    pub fn planes(&self) -> usize {
+        self.blocks * self.slices
+    }
+}
+
+/// The full chip allocation: per-core placements (model order) plus
+/// per-tile occupancy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub chip: ChipSpec,
+    pub layers: Vec<LayerPlacement>,
+    /// Arrays allocated per tile (may fall short of `arrays_per_tile` when
+    /// a block group spilled past the tile's tail).
+    pub used_per_tile: Vec<usize>,
+}
+
+impl Placement {
+    pub fn total_planes(&self) -> usize {
+        self.layers.iter().map(LayerPlacement::planes).sum()
+    }
+
+    pub fn tiles_used(&self) -> usize {
+        self.used_per_tile.iter().filter(|&&u| u > 0).count()
+    }
+
+    /// Human-readable placement + utilization report (the CLI/example
+    /// view; experiments emit the same data as `Table`s).
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "chip: {} tiles x {} arrays of {}x{} ({} slots), {} used",
+            self.chip.tiles,
+            self.chip.arrays_per_tile,
+            self.chip.array.0,
+            self.chip.array.1,
+            self.chip.total_arrays(),
+            self.total_planes(),
+        );
+        for (t, &used) in self.used_per_tile.iter().enumerate() {
+            let cap = self.chip.arrays_per_tile;
+            let _ = writeln!(
+                s,
+                "  tile {t:>3}: {used:>4}/{cap} arrays ({:>5.1}%)",
+                100.0 * used as f64 / cap as f64
+            );
+        }
+        for lp in &self.layers {
+            let _ = writeln!(
+                s,
+                "  layer {:>3} {:<12} {:>3} blocks x {} slices = {:>4} arrays  tiles {}..={}",
+                lp.layer,
+                lp.name,
+                lp.blocks,
+                lp.slices,
+                lp.planes(),
+                lp.tile_first,
+                lp.tile_last,
+            );
+        }
+        s
+    }
+}
+
+/// Greedy layer-order tile allocator (see module docs).
+pub struct TileAllocator {
+    chip: ChipSpec,
+    next_tile: usize,
+    next_index: usize,
+    used_per_tile: Vec<usize>,
+}
+
+impl TileAllocator {
+    pub fn new(chip: ChipSpec) -> Self {
+        let used_per_tile = vec![0; chip.tiles];
+        TileAllocator { chip, next_tile: 0, next_index: 0, used_per_tile }
+    }
+
+    /// Allocate one block group of `slices` consecutive planes within a
+    /// single tile, spilling the whole group to the next tile when the
+    /// current one cannot hold it. `Err` carries the failure site; the
+    /// driver ([`TileAllocator::allocate`]) wraps it in a capacity report.
+    fn alloc_group(&mut self, slices: usize) -> Result<Vec<ArraySlot>, String> {
+        assert!(slices > 0, "a block group has at least one plane");
+        if slices > self.chip.arrays_per_tile {
+            return Err(format!(
+                "a block group of {slices} digit planes cannot fit any tile \
+                 (arrays_per_tile = {})",
+                self.chip.arrays_per_tile
+            ));
+        }
+        if self.chip.arrays_per_tile - self.next_index < slices {
+            // Spill: the group does not straddle tiles.
+            self.next_tile += 1;
+            self.next_index = 0;
+        }
+        if self.next_tile >= self.chip.tiles {
+            return Err(format!(
+                "no tile left for a group of {slices} planes (chip has {} tiles x {} arrays)",
+                self.chip.tiles, self.chip.arrays_per_tile
+            ));
+        }
+        let tile = self.next_tile;
+        let group: Vec<ArraySlot> =
+            (0..slices).map(|s| ArraySlot { tile, index: self.next_index + s }).collect();
+        self.next_index += slices;
+        self.used_per_tile[tile] += slices;
+        if self.next_index == self.chip.arrays_per_tile {
+            self.next_tile += 1;
+            self.next_index = 0;
+        }
+        Ok(group)
+    }
+
+    /// Place every demand (model order) onto the chip. Deterministic: the
+    /// same demands on the same chip always yield the same placement.
+    pub fn allocate(chip: &ChipSpec, demands: &[CoreDemand]) -> anyhow::Result<Placement> {
+        let mut alloc = TileAllocator::new(chip.clone());
+        let mut layers = Vec::with_capacity(demands.len());
+        for d in demands {
+            let mut block_streams = Vec::with_capacity(d.blocks);
+            let mut slots = Vec::with_capacity(d.planes());
+            let (mut tile_first, mut tile_last) = (usize::MAX, 0usize);
+            for _ in 0..d.blocks {
+                let group = alloc.alloc_group(d.slices).map_err(|site| {
+                    anyhow::anyhow!(
+                        "chip capacity exceeded at layer {} ({}): {site}\n{}",
+                        d.layer,
+                        d.name,
+                        capacity_report(chip, demands, alloc.used_per_tile.iter().sum())
+                    )
+                })?;
+                tile_first = tile_first.min(group[0].tile);
+                tile_last = tile_last.max(group[group.len() - 1].tile);
+                block_streams.push(chip.slot_id(group[0]));
+                slots.extend(group);
+            }
+            layers.push(LayerPlacement {
+                layer: d.layer,
+                name: d.name,
+                blocks: d.blocks,
+                slices: d.slices,
+                block_streams,
+                slots,
+                tile_first,
+                tile_last,
+            });
+        }
+        Ok(Placement { chip: chip.clone(), layers, used_per_tile: alloc.used_per_tile })
+    }
+}
+
+/// The capacity report attached to allocation failures: total demand vs
+/// chip size, broken down per layer.
+fn capacity_report(chip: &ChipSpec, demands: &[CoreDemand], allocated: usize) -> String {
+    let total: usize = demands.iter().map(CoreDemand::planes).sum();
+    let mut s = format!(
+        "  chip: {} tiles x {} arrays = {} slots; demand {} arrays ({} placed before failing)\n",
+        chip.tiles,
+        chip.arrays_per_tile,
+        chip.total_arrays(),
+        total,
+        allocated,
+    );
+    for d in demands {
+        let _ = writeln!(
+            s,
+            "  layer {:>3} ({}): {} blocks x {} slices = {} arrays",
+            d.layer,
+            d.name,
+            d.blocks,
+            d.slices,
+            d.planes()
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn demand(layer: usize, blocks: usize, slices: usize) -> CoreDemand {
+        CoreDemand { layer, name: "TestCore", blocks, slices }
+    }
+
+    #[test]
+    fn single_tile_packs_contiguously_in_layer_order() {
+        // The anchor property: one sufficient tile yields global slot ids
+        // 0..N in demand order — the virtual packing the unmapped
+        // Sequential path derives its streams from.
+        let chip = ChipSpec::single_tile(64, (64, 64));
+        let demands = vec![demand(0, 3, 4), demand(1, 2, 5), demand(2, 1, 2)];
+        let p = TileAllocator::allocate(&chip, &demands).unwrap();
+        let mut next = 0u64;
+        for lp in &p.layers {
+            for (b, &stream) in lp.block_streams.iter().enumerate() {
+                assert_eq!(stream, next + (b * lp.slices) as u64);
+            }
+            for (i, &slot) in lp.slots.iter().enumerate() {
+                assert_eq!(chip.slot_id(slot), next + i as u64);
+            }
+            next += lp.planes() as u64;
+        }
+        assert_eq!(p.total_planes(), 24);
+        assert_eq!(p.used_per_tile, vec![24]);
+        assert!(p.report().contains("tile   0"));
+    }
+
+    #[test]
+    fn groups_never_straddle_tiles() {
+        // 10-array tiles, 4-plane groups: each tile takes 2 groups (8
+        // slots) and wastes 2.
+        let chip = ChipSpec::new(3, 10, (64, 64));
+        let p = TileAllocator::allocate(&chip, &[demand(0, 5, 4)]).unwrap();
+        for chunk in p.layers[0].slots.chunks(4) {
+            let tile = chunk[0].tile;
+            assert!(chunk.iter().all(|s| s.tile == tile), "group split across tiles");
+        }
+        assert_eq!(p.used_per_tile, vec![8, 8, 4]);
+        assert_eq!(p.layers[0].tile_first, 0);
+        assert_eq!(p.layers[0].tile_last, 2);
+    }
+
+    #[test]
+    fn capacity_error_carries_report() {
+        let chip = ChipSpec::new(1, 6, (64, 64));
+        let err = TileAllocator::allocate(&chip, &[demand(0, 1, 4), demand(1, 1, 4)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chip capacity exceeded"), "{err}");
+        assert!(err.contains("layer 1"), "{err}");
+        let dbg = format!(
+            "{:?}",
+            TileAllocator::allocate(&chip, &[demand(0, 1, 4), demand(1, 1, 4)]).unwrap_err()
+        );
+        assert!(dbg.contains("demand 8 arrays"), "{dbg}");
+    }
+
+    #[test]
+    fn oversized_group_is_an_error() {
+        let chip = ChipSpec::new(4, 3, (64, 64));
+        let err =
+            TileAllocator::allocate(&chip, &[demand(0, 1, 4)]).unwrap_err().to_string();
+        assert!(err.contains("cannot fit any tile"), "{err}");
+    }
+
+    #[test]
+    fn allocator_properties() {
+        prop_check("tile allocation is a bijection planes -> slots", 300, |g| {
+            let apt = g.usize_in(4..=32);
+            let n_layers = g.usize_in(1..=6);
+            let demands: Vec<CoreDemand> = (0..n_layers)
+                .map(|li| demand(li, g.usize_in(1..=5), g.usize_in(1..=apt.min(6))))
+                .collect();
+            let total: usize = demands.iter().map(CoreDemand::planes).sum();
+            // Worst case wastes < slices per group; 2x slack always fits.
+            let chip = ChipSpec::fit(2 * total, apt, (64, 64));
+            let p = TileAllocator::allocate(&chip, &demands)
+                .map_err(|e| format!("unexpected capacity error: {e}"))?;
+            // Every plane got exactly one slot; ids are unique and strictly
+            // increasing (deterministic greedy spill order).
+            let mut ids: Vec<u64> = Vec::new();
+            for (lp, d) in p.layers.iter().zip(&demands) {
+                if lp.planes() != d.planes() || lp.slots.len() != d.planes() {
+                    return Err(format!("layer {} plane/slot count mismatch", d.layer));
+                }
+                for (b, chunk) in lp.slots.chunks(d.slices).enumerate() {
+                    if chunk.iter().any(|s| s.tile != chunk[0].tile) {
+                        return Err("group straddles tiles".into());
+                    }
+                    if p.chip.slot_id(chunk[0]) != lp.block_streams[b] {
+                        return Err("block stream != first plane slot id".into());
+                    }
+                }
+                ids.extend(lp.slots.iter().map(|&s| p.chip.slot_id(s)));
+            }
+            if ids.len() != total {
+                return Err(format!("{} slots for {} planes", ids.len(), total));
+            }
+            if !ids.windows(2).all(|w| w[0] < w[1]) {
+                return Err("slot ids not strictly increasing".into());
+            }
+            // Tile occupancy is consistent and bounded.
+            if p.used_per_tile.iter().sum::<usize>() != total {
+                return Err("per-tile usage does not sum to demand".into());
+            }
+            if p.used_per_tile.iter().any(|&u| u > apt) {
+                return Err("tile over capacity".into());
+            }
+            // Determinism: a second run reproduces the placement exactly.
+            let p2 = TileAllocator::allocate(&chip, &demands).unwrap();
+            if p2 != p {
+                return Err("allocation not deterministic".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fit_sizes_chip_to_demand() {
+        let c = ChipSpec::fit(130, 64, (64, 64));
+        assert_eq!(c.tiles, 3);
+        assert_eq!(c.total_arrays(), 192);
+        assert_eq!(ChipSpec::fit(0, 64, (64, 64)).tiles, 1);
+    }
+}

@@ -5,6 +5,7 @@
 
 use super::SimConfig;
 use crate::apps::{cwt, kmeans, solver};
+use crate::arch::{MappedModel, Placement};
 use crate::circuit::CrossbarCircuit;
 use crate::data::{cifar_like, iris, mnist_like, nino};
 use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
@@ -13,7 +14,7 @@ use crate::dpe::engine::AdcPolicy;
 use crate::dpe::montecarlo::{run_fault_point, sweep, sweep_faults, McConfig};
 use crate::dpe::{DataMode, DotProductEngine, SliceMethod, SliceSpec};
 use crate::nn::models::{lenet5, resnet18_cifar, vgg16_cifar};
-use crate::nn::train::{evaluate, train, TrainConfig};
+use crate::nn::train::{evaluate, evaluate_mapped, train, TrainConfig};
 use crate::nn::{HwSpec, Sequential};
 use crate::tensor::Matrix;
 use crate::util::report::{fmt_duration, fmt_sig, time_it, Table};
@@ -587,12 +588,13 @@ fn trained_cifar_model(
 }
 
 /// Rebuild the model with hardware layers and copy the trained weights in
-/// (the paper's `torch.load_state_dict` + `update_weight()` flow).
+/// (the paper's `torch.load_state_dict` + `update_weight()` flow). The
+/// donor model is only read.
 fn to_hardware(
     arch: &str,
     width: usize,
     seed: u64,
-    digital: &mut Sequential,
+    digital: &Sequential,
     hw: HwSpec,
 ) -> anyhow::Result<Sequential> {
     let mut model = cifar_model(arch, width, Some(hw), seed)?;
@@ -603,11 +605,57 @@ fn to_hardware(
     Ok(model)
 }
 
+/// Compile a hardware model onto the configured `[chip]`, or — when the
+/// config has none — a chip auto-sized to the model's array demand
+/// (64-array tiles). Capacity errors propagate with the allocator's
+/// per-layer report.
+fn map_onto_chip(cfg: &SimConfig, model: Sequential) -> anyhow::Result<MappedModel> {
+    let chip = match &cfg.chip {
+        Some(c) => c.clone(),
+        None => model.auto_chip(64, cfg.dpe.array),
+    };
+    model.compile(&chip)
+}
+
+/// Placement/utilization tables for one mapped model (the coordinator's
+/// chip report): per-tile occupancy and the per-layer placement map.
+fn placement_tables(tag: &str, p: &Placement) -> (Table, Table) {
+    let mut tiles = Table::new(
+        &format!("Fig 17 — per-tile utilization ({tag})"),
+        &["tile", "arrays used", "capacity", "utilization"],
+    );
+    let cap = p.chip.arrays_per_tile;
+    for (t, &used) in p.used_per_tile.iter().enumerate() {
+        tiles.row(&[
+            t.to_string(),
+            used.to_string(),
+            cap.to_string(),
+            format!("{:.1}%", 100.0 * used as f64 / cap as f64),
+        ]);
+    }
+    let mut layers = Table::new(
+        &format!("Fig 17 — per-layer placement ({tag})"),
+        &["layer", "kind", "blocks", "slices/block", "arrays", "tiles"],
+    );
+    for lp in &p.layers {
+        layers.row(&[
+            lp.layer.to_string(),
+            lp.name.to_string(),
+            lp.blocks.to_string(),
+            lp.slices.to_string(),
+            lp.planes().to_string(),
+            format!("{}..={}", lp.tile_first, lp.tile_last),
+        ]);
+    }
+    (tiles, layers)
+}
+
 pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> {
     let width = scale.pick(4, 6);
     let train_imgs = scale.pick(256, 768);
     let steps = scale.pick(40, 120);
     let eval_imgs = scale.pick(64, 128);
+    let micro_batch = 8;
     let mut t1 = Table::new(
         "Fig 17(a) — accuracy vs number of 1-bit slices",
         &["model", "digital acc", "3 bits", "4 bits", "5 bits", "6 bits", "8 bits"],
@@ -616,10 +664,13 @@ pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Tabl
         "Fig 17(b) — accuracy vs conductance variation (INT8)",
         &["model", "cv=0", "cv=0.02", "cv=0.05", "cv=0.1"],
     );
+    // Chip report for the headline mapping (first INT8 resnet18 compile).
+    let mut chip_tables: Option<(Table, Table)> = None;
     for arch in ["resnet18", "vgg16"] {
         let (mut digital, test_set) = trained_cifar_model(arch, width, train_imgs, steps, cfg.seed)?;
         let acc_digital = evaluate(&mut digital, &test_set, 16, eval_imgs);
-        // (a) slice-bit sweep at low noise.
+        // (a) slice-bit sweep at low noise — every evaluation runs through
+        // the chip-mapped batched inference runtime.
         let mut row1 = vec![arch.to_string(), format!("{acc_digital:.3}")];
         for bits in [3usize, 4, 5, 6, 8] {
             let mut dpe_cfg = cfg.dpe.clone();
@@ -628,8 +679,11 @@ pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Tabl
                 DotProductEngine::new(dpe_cfg, cfg.seed),
                 SliceMethod::int(SliceSpec::ones(bits)),
             );
-            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw)?;
-            row1.push(format!("{:.3}", evaluate(&mut model, &test_set, 16, eval_imgs)));
+            let mapped = map_onto_chip(cfg, to_hardware(arch, width, cfg.seed, &digital, hw)?)?;
+            row1.push(format!(
+                "{:.3}",
+                evaluate_mapped(&mapped, &test_set, 16, eval_imgs, micro_batch)
+            ));
         }
         t1.row(&row1);
         // (b) variation sweep at INT8.
@@ -641,12 +695,20 @@ pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Tabl
                 DotProductEngine::new(dpe_cfg, cfg.seed),
                 SliceMethod::int(SliceSpec::int8()),
             );
-            let mut model = to_hardware(arch, width, cfg.seed, &mut digital, hw)?;
-            row2.push(format!("{:.3}", evaluate(&mut model, &test_set, 16, eval_imgs)));
+            let mapped = map_onto_chip(cfg, to_hardware(arch, width, cfg.seed, &digital, hw)?)?;
+            if chip_tables.is_none() {
+                let tag = format!("{arch} int8, w={width}");
+                chip_tables = Some(placement_tables(&tag, mapped.placement()));
+            }
+            row2.push(format!(
+                "{:.3}",
+                evaluate_mapped(&mapped, &test_set, 16, eval_imgs, micro_batch)
+            ));
         }
         t2.row(&row2);
     }
-    Ok(vec![t1, t2])
+    let (t3, t4) = chip_tables.expect("at least one INT8 mapping ran");
+    Ok(vec![t1, t2, t3, t4])
 }
 
 // -------------------------------------------------------------- Table 3

@@ -6,6 +6,7 @@ pub mod experiments;
 
 pub use experiments::{run as run_experiment, Scale, EXPERIMENTS};
 
+use crate::arch::ChipSpec;
 use crate::device::drift::DriftSpec;
 use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec};
 use crate::device::DeviceSpec;
@@ -25,6 +26,11 @@ pub struct SimConfig {
     pub artifacts_dir: String,
     /// Default slice method name for examples (e.g. "int8").
     pub method: String,
+    /// Chip geometry for network mapping (`[chip]` section). `None` means
+    /// experiments auto-size a chip to the model they map
+    /// ([`crate::nn::Sequential::auto_chip`], which reserves slack for
+    /// group-spill fragmentation — plain [`ChipSpec::fit`] does not).
+    pub chip: Option<ChipSpec>,
 }
 
 impl Default for SimConfig {
@@ -35,18 +41,22 @@ impl Default for SimConfig {
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             method: "int8".into(),
+            chip: None,
         }
     }
 }
 
 impl SimConfig {
     /// Load from a TOML-subset file (missing keys keep Table-2 defaults).
+    /// Malformed typed values — e.g. an `array_size` that is not a
+    /// two-element array of non-negative integers — are errors naming the
+    /// offending key, not silently ignored.
     pub fn load(path: &Path) -> anyhow::Result<Self> {
         let doc = Doc::load(path)?;
-        Ok(Self::from_doc(&doc))
+        Self::from_doc(&doc)
     }
 
-    pub fn from_doc(doc: &Doc) -> Self {
+    pub fn from_doc(doc: &Doc) -> anyhow::Result<Self> {
         let mut cfg = SimConfig::default();
         let d = &mut cfg.dpe;
         d.device = DeviceSpec {
@@ -58,10 +68,12 @@ impl SimConfig {
         };
         d.rdac = doc.usize_or("engine", "rdac", 256);
         d.radc = doc.usize_or("engine", "radc", 1024);
-        if let Some(arr) = doc.get("engine", "array_size").and_then(|v| v.as_usize_array()) {
-            if arr.len() == 2 {
-                d.array = (arr[0], arr[1]);
-            }
+        if let Some(arr) = doc.usize_array("engine", "array_size")? {
+            anyhow::ensure!(
+                arr.len() == 2 && arr[0] > 0 && arr[1] > 0,
+                "config key `engine.array_size`: expected two positive integers, got {arr:?}"
+            );
+            d.array = (arr[0], arr[1]);
         }
         d.noise_free = doc.bool_or("engine", "noise_free", false);
         d.use_circuit = doc.bool_or("engine", "use_circuit", false);
@@ -95,11 +107,23 @@ impl SimConfig {
             },
         };
         ni.seed = doc.usize_or("faults", "seed", ni.seed as usize) as u64;
+        // [chip] — tile hierarchy for network mapping (crate::arch). The
+        // array shape is the engine's: a chip hosts arrays of one geometry.
+        if doc.sections().any(|s| s == "chip") {
+            let tiles = doc.usize_or("chip", "tiles", 16);
+            let apt = doc.usize_or("chip", "arrays_per_tile", 64);
+            anyhow::ensure!(
+                tiles > 0 && apt > 0,
+                "config section `[chip]`: tiles and arrays_per_tile must be positive \
+                 (got tiles = {tiles}, arrays_per_tile = {apt})"
+            );
+            cfg.chip = Some(ChipSpec::new(tiles, apt, d.array));
+        }
         cfg.seed = doc.usize_or("run", "seed", 2024) as u64;
         cfg.backend = doc.str_or("run", "backend", "native").to_string();
         cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", "artifacts").to_string();
         cfg.method = doc.str_or("run", "method", "int8").to_string();
-        cfg
+        Ok(cfg)
     }
 
     /// Build an engine from this config.
@@ -136,20 +160,57 @@ mod tests {
             "[engine]\nvar = 0.1\nread_var = 0.02\narray_size = [32, 32]\nadc_policy = \"calibrated\"\n[run]\nseed = 7\nmethod = \"fp16\"\n",
         )
         .unwrap();
-        let cfg = SimConfig::from_doc(&doc);
+        let cfg = SimConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.dpe.device.cv, 0.1);
         assert_eq!(cfg.dpe.device.read_cv, 0.02);
         assert_eq!(cfg.dpe.array, (32, 32));
         assert_eq!(cfg.dpe.adc_policy, AdcPolicy::Calibrated);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.method, "fp16");
+        assert!(cfg.chip.is_none());
         assert!(cfg.hw_spec().is_ok());
+    }
+
+    #[test]
+    fn malformed_array_size_is_an_error_naming_the_key() {
+        for toml in [
+            "[engine]\narray_size = \"64x64\"\n",
+            "[engine]\narray_size = [64]\n",
+            "[engine]\narray_size = [64, 0]\n",
+            "[engine]\narray_size = [64, -64]\n",
+        ] {
+            let doc = Doc::parse(toml).unwrap();
+            let err = SimConfig::from_doc(&doc).unwrap_err().to_string();
+            assert!(err.contains("engine.array_size"), "{toml}: {err}");
+        }
+    }
+
+    #[test]
+    fn chip_section_parses_and_validates() {
+        let doc = Doc::parse(
+            "[engine]\narray_size = [32, 32]\n[chip]\ntiles = 4\narrays_per_tile = 24\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        let chip = cfg.chip.expect("chip section parsed");
+        assert_eq!((chip.tiles, chip.arrays_per_tile), (4, 24));
+        assert_eq!(chip.array, (32, 32));
+        // Defaults when the section is present but empty.
+        let cfg =
+            SimConfig::from_doc(&Doc::parse("[chip]\n").unwrap()).unwrap();
+        let chip = cfg.chip.unwrap();
+        assert_eq!((chip.tiles, chip.arrays_per_tile), (16, 64));
+        // Zero geometry is rejected.
+        let err = SimConfig::from_doc(&Doc::parse("[chip]\ntiles = 0\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[chip]"), "{err}");
     }
 
     #[test]
     fn faults_section_defaults_off_and_overrides_apply() {
         // No [faults] section → the all-off spec (bit-identical engine).
-        let cfg = SimConfig::from_doc(&Doc::parse("[engine]\nvar = 0.05\n").unwrap());
+        let cfg = SimConfig::from_doc(&Doc::parse("[engine]\nvar = 0.05\n").unwrap()).unwrap();
         assert!(cfg.dpe.nonideal.is_none());
         let doc = Doc::parse(
             "[faults]\nsa0 = 0.01\nsa1 = 0.02\ndead_row = 0.005\nt_read = 1e4\n\
@@ -157,7 +218,7 @@ mod tests {
              adc_rounding = \"floor\"\nseed = 99\n",
         )
         .unwrap();
-        let cfg = SimConfig::from_doc(&doc);
+        let cfg = SimConfig::from_doc(&doc).unwrap();
         let ni = &cfg.dpe.nonideal;
         assert_eq!(ni.faults.sa0, 0.01);
         assert_eq!(ni.faults.sa1, 0.02);

@@ -128,4 +128,71 @@ mod tests {
             assert_eq!(kb * b.n.count() + nb, idx);
         }
     }
+
+    #[test]
+    fn blockdim_properties() {
+        use crate::util::prop::prop_check;
+        prop_check("BlockDim ranges tile 0..total exactly, padded is a block multiple", 400, |g| {
+            let total = g.usize_in(1..=600);
+            let block = g.usize_in(1..=130);
+            let d = BlockDim::new(total, block);
+            // Ranges concatenate to exactly 0..total: no gap, no overlap.
+            let mut pos = 0usize;
+            for i in 0..d.count() {
+                let (start, len) = d.range(i);
+                if start != pos {
+                    return Err(format!("block {i} starts at {start}, expected {pos}"));
+                }
+                if len == 0 || len > block {
+                    return Err(format!("block {i} has length {len} (block size {block})"));
+                }
+                if i + 1 < d.count() && len != block {
+                    return Err(format!("only the last block may be short, block {i} is {len}"));
+                }
+                pos += len;
+            }
+            if pos != total {
+                return Err(format!("ranges cover {pos} of {total}"));
+            }
+            // Padded size: smallest block multiple >= total.
+            let padded = d.padded();
+            if padded % block != 0 {
+                return Err(format!("padded {padded} not a multiple of {block}"));
+            }
+            if padded < total || padded - total >= block {
+                return Err(format!("padded {padded} not minimal for total {total}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_blocks_pair_properties() {
+        use crate::util::prop::prop_check;
+        prop_check("MatmulBlocks pair index is a bijection over the grid", 400, |g| {
+            let k = g.usize_in(1..=500);
+            let n = g.usize_in(1..=500);
+            let array = (g.usize_in(1..=96), g.usize_in(1..=96));
+            let b = MatmulBlocks::new(k, n, array);
+            if b.pair_count() != b.k.count() * b.n.count() {
+                return Err("pair_count != k blocks x n blocks".into());
+            }
+            let mut seen = vec![false; b.pair_count()];
+            for idx in 0..b.pair_count() {
+                let (kb, nb) = b.pair(idx);
+                if kb >= b.k.count() || nb >= b.n.count() {
+                    return Err(format!("pair {idx} -> ({kb}, {nb}) out of grid"));
+                }
+                let back = kb * b.n.count() + nb;
+                if back != idx {
+                    return Err(format!("pair {idx} round-trips to {back}"));
+                }
+                if seen[idx] {
+                    return Err(format!("pair index {idx} visited twice"));
+                }
+                seen[idx] = true;
+            }
+            Ok(())
+        });
+    }
 }

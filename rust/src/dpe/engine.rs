@@ -262,6 +262,13 @@ impl PreparedWeights {
     pub fn arrays_used(&self) -> usize {
         self.blocks.len() * self.method.spec.num_slices()
     }
+    /// Number of `(k-block, n-block)` array pairs — the block-group count
+    /// the chip mapper places (each group is `num_slices` digit planes
+    /// that share input drivers, so [`crate::arch::TileAllocator`] keeps a
+    /// group within one tile).
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
 }
 
 /// The deterministic half of one weight block: the quantized digit planes
@@ -331,7 +338,7 @@ impl WeightTemplate {
             self.array, engine.cfg.array
         );
         engine.assert_method_fits(&self.method.spec);
-        let body = |blk: usize| engine.program_block(&self.blocks[blk], blk, tag);
+        let body = |blk: usize| engine.program_block(&self.blocks[blk], blk as u64, tag);
         let blocks: Vec<PreparedBlock> = if parallel {
             par_map(self.blocks.len(), body)
         } else {
@@ -383,6 +390,32 @@ impl PreparedInputs {
 
     pub fn method(&self) -> &SliceMethod {
         &self.method
+    }
+
+    /// The row slice `[r0, r0 + len)` of the prepared input: the same
+    /// per-k-block quantization scales and digit planes, restricted to
+    /// those rows. Because the scales stay batch-global, a matmul over the
+    /// slice reproduces the corresponding rows of the full-batch matmul
+    /// bit for bit under the fixed-range (worst-case) ADC — the invariant
+    /// the micro-batched inference executor ([`crate::arch::MappedModel`])
+    /// relies on. (Re-preparing only those rows would instead re-derive
+    /// the scales from the sub-batch maxima.)
+    pub fn rows(&self, r0: usize, len: usize) -> PreparedInputs {
+        assert!(r0 + len <= self.m, "row slice {r0}+{len} out of {} rows", self.m);
+        PreparedInputs {
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| InputBlock {
+                    slices: b.slices.iter().map(|s| s.block(r0, 0, len, s.cols)).collect(),
+                    scale: b.scale,
+                })
+                .collect(),
+            method: self.method.clone(),
+            m: len,
+            k: self.k,
+            l_m: self.l_m,
+        }
     }
 }
 
@@ -472,7 +505,40 @@ impl DotProductEngine {
         self.assert_method_fits(&method.spec);
         let blocks: Vec<PreparedBlock> = par_map(grid.pair_count(), |blk| {
             let tb = template_block(b, &grid, method, self.cfg.array, blk);
-            self.program_block(&tb, blk, tag)
+            self.program_block(&tb, blk as u64, tag)
+        });
+        PreparedWeights { blocks, grid, method: method.clone(), k: b.rows, n: b.cols }
+    }
+
+    /// [`DotProductEngine::prepare_weights`] with explicit per-block
+    /// physical stream ids — the chip-mapping path. `block_streams[blk]`
+    /// is the global slot id of the block's first digit plane on the chip
+    /// ([`crate::arch`]): programming noise, fault masks, and the
+    /// per-column ADC chain of each block derive from that id instead of
+    /// the layer-local block index, so the draws belong to the *physical
+    /// array* the block landed on — two layers sharing a tile get
+    /// independent streams, and remapping a block to a different slot
+    /// resamples its noise. With `block_streams[blk] == blk` this is
+    /// bit-identical to `prepare_weights`.
+    pub fn prepare_weights_mapped(
+        &self,
+        b: &Matrix,
+        method: &SliceMethod,
+        tag: u64,
+        block_streams: &[u64],
+    ) -> PreparedWeights {
+        let grid = MatmulBlocks::new(b.rows, b.cols, self.cfg.array);
+        self.assert_method_fits(&method.spec);
+        assert_eq!(
+            block_streams.len(),
+            grid.pair_count(),
+            "stream list covers {} blocks, weight grid has {}",
+            block_streams.len(),
+            grid.pair_count()
+        );
+        let blocks: Vec<PreparedBlock> = par_map(grid.pair_count(), |blk| {
+            let tb = template_block(b, &grid, method, self.cfg.array, blk);
+            self.program_block(&tb, block_streams[blk], tag)
         });
         PreparedWeights { blocks, grid, method: method.clone(), k: b.rows, n: b.cols }
     }
@@ -514,23 +580,26 @@ impl DotProductEngine {
     /// order are identical to programming each plane densely and packing
     /// afterwards.
     ///
+    /// `stream` keys every RNG draw of the block: the layer-local block
+    /// index on the unmapped path, the physical array slot id on the
+    /// chip-mapped path (`prepare_weights_mapped`).
+    ///
     /// Fault/retention injection is a program-time effect: it runs once
     /// per prepared-weight lifetime on its own RNG stream (so an all-off
     /// spec leaves the programming-noise stream — and every bit of the
     /// result — untouched), and costs nothing per matmul.
-    fn program_block(&self, tb: &TemplateBlock, blk: usize, tag: u64) -> PreparedBlock {
+    fn program_block(&self, tb: &TemplateBlock, stream: u64, tag: u64) -> PreparedBlock {
         let (l_m, l_n) = self.cfg.array;
         let n_slices = tb.planes.len();
         let dev = &self.cfg.device;
         let step = dev.step();
-        let mut rng =
-            Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), blk as u64);
+        let mut rng = Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), stream);
         let ni = &self.cfg.nonideal;
         let inject = !self.cfg.noise_free && ni.injects_at_program();
         let mut fault_rng = inject.then(|| {
             Pcg64::new(
                 self.seed ^ ni.seed ^ tag.wrapping_mul(0xD1B5_4A32_D192_ED03),
-                0x4641_544C ^ blk as u64,
+                0x4641_544C ^ stream,
             )
         });
         let mut packed = PackedB::zeros(l_m, n_slices * l_n);
@@ -561,7 +630,7 @@ impl DotProductEngine {
                 }
             }
         }
-        PreparedBlock { packed, scale: tb.scale, chain: self.adc_chain_for(blk) }
+        PreparedBlock { packed, scale: tb.scale, chain: self.adc_chain_for(stream) }
     }
 
     /// Program one digit plane through the device model: digit → target
@@ -721,20 +790,21 @@ impl DotProductEngine {
         assemble_output(&grid, m, n, l_n, &pair_results)
     }
 
-    /// The per-column ADC chain of one physical array pair (block `blk` =
-    /// `kb·nc + nb`): ideal (fast readout path) unless the non-ideality
-    /// spec configures gain/offset error or floor rounding. Each block has
-    /// its own periphery, so distinct arrays sample independent mismatch;
-    /// the sampling is deterministic in (engine seed, injection seed,
-    /// block id) and happens once at `prepare_weights` time (the chain is
+    /// The per-column ADC chain of one physical array pair: ideal (fast
+    /// readout path) unless the non-ideality spec configures gain/offset
+    /// error or floor rounding. Each block has its own periphery, so
+    /// distinct arrays sample independent mismatch; the sampling is
+    /// deterministic in (engine seed, injection seed, `stream` — the
+    /// layer-local block id, or the physical slot id on the chip-mapped
+    /// path) and happens once at `prepare_weights` time (the chain is
     /// stored in the [`PreparedBlock`], a static calibration error shared
     /// by every matmul — and by the `#[cfg(test)]` reference oracle).
-    fn adc_chain_for(&self, blk: usize) -> AdcChain {
+    fn adc_chain_for(&self, stream: u64) -> AdcChain {
         let ni = &self.cfg.nonideal;
         if self.cfg.noise_free || ni.adc.is_ideal() {
             return AdcChain::ideal();
         }
-        let mut rng = Pcg64::new(self.seed ^ ni.seed, 0xADC0_0000 ^ blk as u64);
+        let mut rng = Pcg64::new(self.seed ^ ni.seed, 0xADC0_0000 ^ stream);
         AdcChain::sample(&ni.adc, self.cfg.array.1, &mut rng)
     }
 
@@ -1633,6 +1703,63 @@ mod tests {
         let med = SliceMethod::int(SliceSpec::int8());
         let template = e32.weight_template(&rand_mat(64, 8, 3), &med);
         let _ = template.program(&e64, 0);
+    }
+
+    #[test]
+    fn mapped_streams_identity_bit_identical_and_slots_decorrelate() {
+        // `prepare_weights_mapped` with the identity stream list must be
+        // bit-identical to `prepare_weights`; moving the blocks to other
+        // physical slots must resample programming noise (and, when
+        // configured, fault masks and ADC chains).
+        use crate::device::faults::{AdcErrorSpec, FaultSpec};
+        let a = rand_mat(6, 130, 821);
+        let b = rand_mat(130, 70, 822);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let cfg = DpeConfig {
+            nonideal: NonIdealitySpec {
+                faults: FaultSpec::cells(0.02),
+                adc: AdcErrorSpec { gain_std: 0.02, offset_std_lsb: 0.3, ..AdcErrorSpec::none() },
+                ..NonIdealitySpec::none()
+            },
+            ..DpeConfig::default()
+        };
+        let e = DotProductEngine::new(cfg, 13);
+        let w_legacy = e.prepare_weights(&b, &med, 1);
+        let identity: Vec<u64> = (0..w_legacy.num_blocks() as u64).collect();
+        let w_id = e.prepare_weights_mapped(&b, &med, 1, &identity);
+        assert_eq!(
+            e.matmul_prepared(&a, &w_legacy, &med, 0).data,
+            e.matmul_prepared(&a, &w_id, &med, 0).data,
+            "identity stream mapping must be bit-identical"
+        );
+        let shifted: Vec<u64> = identity.iter().map(|s| s + 1000).collect();
+        let w_shift = e.prepare_weights_mapped(&b, &med, 1, &shifted);
+        assert_ne!(
+            e.matmul_prepared(&a, &w_id, &med, 0).data,
+            e.matmul_prepared(&a, &w_shift, &med, 0).data,
+            "different physical slots must draw different noise"
+        );
+    }
+
+    #[test]
+    fn prepared_input_row_slices_match_full_batch_rows() {
+        // The executor invariant: matmul over a row slice of PreparedInputs
+        // equals the corresponding rows of the full-batch matmul, bit for
+        // bit, under the default worst-case ADC.
+        let e = DotProductEngine::new(DpeConfig::default(), 6);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(13, 100, 831);
+        let b = rand_mat(100, 37, 832);
+        let w = e.prepare_weights(&b, &med, 1);
+        let ai = e.prepare_inputs(&a, &med);
+        let full = e.matmul_prepared_inputs(&ai, &w, 0);
+        for (r0, len) in [(0usize, 5usize), (5, 4), (9, 4), (0, 13)] {
+            let part = e.matmul_prepared_inputs(&ai.rows(r0, len), &w, 0);
+            assert_eq!((part.rows, part.cols), (len, 37));
+            for i in 0..len {
+                assert_eq!(part.row(i), full.row(r0 + i), "row {} of slice ({r0},{len})", i);
+            }
+        }
     }
 
     #[test]

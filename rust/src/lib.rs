@@ -38,8 +38,18 @@
 //! cost one mask application per prepared-weight lifetime; the
 //! `fig_faults` experiment and `dpe::montecarlo::sweep_faults` report
 //! accuracy/yield under it.
+//!
+//! The [`arch`] layer makes *placement* first-class: a [`arch::ChipSpec`]
+//! (tiles × arrays-per-tile, TOML `[chip]`) plus a greedy
+//! [`arch::TileAllocator`] map every weight digit plane of a network onto
+//! a concrete physical array, whose global slot id keys the programming
+//! noise / fault / ADC-chain streams. [`nn::Sequential::compile`] programs
+//! the whole chip once and returns a forward-only [`arch::MappedModel`]
+//! with micro-batched inference (`infer_batched`), tracked by
+//! `benches/fig17_inference.rs` (`BENCH_fig17.json`).
 
 pub mod apps;
+pub mod arch;
 pub mod circuit;
 pub mod coordinator;
 pub mod data;

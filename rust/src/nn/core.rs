@@ -1,0 +1,258 @@
+//! [`MemCore`] — the shared hardware state of every DPE-backed layer.
+//!
+//! `LinearMem` and `Conv2dMem` used to each carry their own copy of the
+//! `Option<HwSpec>` + prepared-weight + generation + input-cache plumbing;
+//! this struct owns all of it once, and adds the chip-mapping state: which
+//! physical array slots the layer's weight blocks occupy, and therefore
+//! which RNG streams their programming noise, fault masks, and ADC chains
+//! draw from ([`crate::dpe::DotProductEngine::prepare_weights_mapped`]).
+//!
+//! Stream assignment has two sources:
+//! - [`MemCore::set_contiguous_base`] — the *virtual* layer-order packing
+//!   a [`super::Sequential`] applies at construction (block `b` of a layer
+//!   whose planes start at `base` gets stream `base + b·S_w`);
+//! - [`MemCore::set_block_streams`] — an explicit per-block slot list from
+//!   a chip compile ([`crate::arch::TileAllocator`]), which may be
+//!   non-contiguous when block groups spilled across tiles.
+//!
+//! A single-tile chip packed in layer order produces exactly the virtual
+//! streams, which is what makes the mapped and unmapped paths
+//! bit-identical there (the anchor).
+
+use super::HwSpec;
+use crate::arch::LayerPlacement;
+use crate::dpe::blocks::MatmulBlocks;
+use crate::dpe::{PreparedInputs, PreparedWeights};
+use crate::tensor::Matrix;
+use crate::util::parallel::par_map;
+
+/// Shared hardware-layer state: engine binding, programmed weight copy,
+/// programming generation, physical-slot streams, and the opt-in input
+/// cache. See the module docs.
+pub struct MemCore {
+    hw: Option<HwSpec>,
+    prepared: Option<PreparedWeights>,
+    /// Weight-programming generation (decorrelates programming noise).
+    generation: u64,
+    /// First-plane slot id of the virtual contiguous packing (0 for a
+    /// standalone layer).
+    plane_base: u64,
+    /// Explicit per-block streams from a chip compile; overrides
+    /// `plane_base` when set.
+    assigned_streams: Option<Vec<u64>>,
+    /// Placement record (compiled models only) — surfaced by
+    /// [`super::Sequential::summary`].
+    placement: Option<LayerPlacement>,
+    /// Opt-in cached-input eval path (see [`MemCore::set_input_caching`]).
+    cache_inputs_enabled: bool,
+    /// `(input key, its prepared slicing)` — valid while the key matches;
+    /// deliberately NOT cleared by reprogramming (input slicing is
+    /// weight-independent, which is exactly what makes re-evaluating a
+    /// fixed batch across programming cycles cheap).
+    input_cache: Option<(Vec<f64>, PreparedInputs)>,
+}
+
+impl MemCore {
+    pub fn new(hw: Option<HwSpec>) -> Self {
+        MemCore {
+            hw,
+            prepared: None,
+            generation: 0,
+            plane_base: 0,
+            assigned_streams: None,
+            placement: None,
+            cache_inputs_enabled: false,
+            input_cache: None,
+        }
+    }
+
+    pub fn hw(&self) -> Option<&HwSpec> {
+        self.hw.as_ref()
+    }
+
+    pub fn is_prepared(&self) -> bool {
+        self.prepared.is_some()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Opt into caching the quantized + sliced input across eval-mode
+    /// forward calls (hardware path only): when the same batch is
+    /// evaluated repeatedly — e.g. Monte-Carlo over reprogramming cycles —
+    /// the DPE then pays only the matmul cost per call. Keyed on exact
+    /// input equality and bit-identical to the uncached path. Off by
+    /// default.
+    pub fn set_input_caching(&mut self, on: bool) {
+        self.cache_inputs_enabled = on;
+        if !on {
+            self.input_cache = None;
+        }
+    }
+
+    pub fn input_caching_enabled(&self) -> bool {
+        self.cache_inputs_enabled
+    }
+
+    /// The per-block programming streams for a weight grid of `blocks`
+    /// pairs with `slices` planes each: the compiled slot list when
+    /// assigned, else the virtual contiguous packing.
+    fn block_streams(&self, blocks: usize, slices: usize) -> Vec<u64> {
+        match &self.assigned_streams {
+            Some(v) => {
+                assert_eq!(
+                    v.len(),
+                    blocks,
+                    "chip placement covers {} blocks, weight grid has {blocks}",
+                    v.len()
+                );
+                v.clone()
+            }
+            None => (0..blocks as u64).map(|b| self.plane_base + b * slices as u64).collect(),
+        }
+    }
+
+    /// Program the hardware copy from the full-precision weights,
+    /// advancing the programming generation (the paper's
+    /// `update_weight()`). No-op for digital layers.
+    pub fn program(&mut self, w: &Matrix) {
+        if self.hw.is_some() {
+            self.generation += 1;
+            self.reprogram(w);
+        }
+    }
+
+    /// Re-derive the programmed copy at the **current** generation — used
+    /// after slot (re)assignment, where the noise must change because the
+    /// streams did, not because the weights were rewritten.
+    pub fn reprogram(&mut self, w: &Matrix) {
+        let Some(hw) = &self.hw else { return };
+        if self.generation == 0 {
+            return; // never programmed yet (constructor calls program()).
+        }
+        let grid = MatmulBlocks::new(w.rows, w.cols, hw.engine.cfg.array);
+        let slices = hw.weight_method.spec.num_slices();
+        let streams = self.block_streams(grid.pair_count(), slices);
+        self.prepared = Some(hw.engine.prepare_weights_mapped(
+            w,
+            &hw.weight_method,
+            self.generation,
+            &streams,
+        ));
+    }
+
+    /// Set the virtual contiguous stream base (layer-order packing).
+    /// Returns whether it changed — the caller reprograms if so. Clears
+    /// any compiled per-block assignment.
+    pub fn set_contiguous_base(&mut self, base: u64) -> bool {
+        let changed = self.plane_base != base || self.assigned_streams.is_some();
+        self.plane_base = base;
+        self.assigned_streams = None;
+        self.placement = None;
+        changed
+    }
+
+    /// Adopt a compiled chip placement: per-block physical slot streams.
+    /// Returns whether the effective streams changed — when they match the
+    /// current derivation (e.g. a single-tile layer-order compile
+    /// reproducing the virtual packing), the arrays already hold exactly
+    /// the bits a reprogram would produce and the caller skips it.
+    pub fn set_block_streams(&mut self, placement: LayerPlacement) -> bool {
+        let current = self.block_streams(placement.blocks, placement.slices);
+        let changed = current != placement.block_streams;
+        self.assigned_streams = Some(placement.block_streams.clone());
+        self.placement = Some(placement);
+        changed
+    }
+
+    pub fn placement(&self) -> Option<&LayerPlacement> {
+        self.placement.as_ref()
+    }
+
+    /// `(block pairs, slices per block)` of the programmed weight grid —
+    /// the chip-mapping demand. `None` for digital layers.
+    pub fn demand(&self) -> Option<(usize, usize)> {
+        let hw = self.hw.as_ref()?;
+        let p = self.prepared.as_ref()?;
+        Some((p.num_blocks(), hw.weight_method.spec.num_slices()))
+    }
+
+    /// Physical arrays used by this core (blocks × slices), once
+    /// programmed.
+    pub fn arrays_used(&self) -> Option<usize> {
+        self.prepared.as_ref().map(PreparedWeights::arrays_used)
+    }
+
+    // ------------------------------------------------------ matmul paths
+
+    /// Hardware matmul of the full input (engine-internal parallelism) —
+    /// the eval/training forward path. `None` when the layer is digital.
+    pub fn matmul_eval(&self, x: &Matrix) -> Option<Matrix> {
+        let hw = self.hw.as_ref()?;
+        let prep = self.prepared.as_ref()?;
+        Some(hw.engine.matmul_prepared(x, prep, &hw.input_method, self.generation))
+    }
+
+    /// Whether the input cache currently holds `key`.
+    pub fn input_cache_hit(&self, key: &[f64]) -> bool {
+        matches!(&self.input_cache, Some((k, _)) if k == key)
+    }
+
+    /// Fill the input cache: slice `m` once and file it under `key` (the
+    /// raw layer input for Conv2dMem, the input matrix itself for
+    /// LinearMem — a hit then skips im2col/stacking too).
+    pub fn cache_inputs(&mut self, key: Vec<f64>, m: &Matrix) {
+        let Some(hw) = &self.hw else { return };
+        let ai = hw.engine.prepare_inputs(m, &hw.input_method);
+        self.input_cache = Some((key, ai));
+    }
+
+    /// Hardware matmul against the cached prepared inputs — bit-identical
+    /// to [`MemCore::matmul_eval`] on the matrix the cache was filled
+    /// with. `None` when digital, unprepared, or the cache is empty.
+    pub fn matmul_from_cache(&self) -> Option<Matrix> {
+        let hw = self.hw.as_ref()?;
+        let prep = self.prepared.as_ref()?;
+        let (_, ai) = self.input_cache.as_ref()?;
+        Some(hw.engine.matmul_prepared_inputs(ai, prep, self.generation))
+    }
+
+    /// Micro-batched hardware matmul (the [`crate::arch::MappedModel`]
+    /// executor): the input is sliced **once for the full batch** (batch-
+    /// global quantization scales), then row chunks of `micro_batch`
+    /// samples (`rows_per_sample` matrix rows each) run on the `par_map`
+    /// pool with engine-internal parallelism off. Bit-identical to
+    /// [`MemCore::matmul_eval`] for every micro-batch size and thread
+    /// count under the fixed-range ADC (see `arch::mapped` docs).
+    pub fn matmul_batched(
+        &self,
+        x: &Matrix,
+        micro_batch: usize,
+        rows_per_sample: usize,
+    ) -> Option<Matrix> {
+        let hw = self.hw.as_ref()?;
+        let prep = self.prepared.as_ref()?;
+        let rps = rows_per_sample.max(1);
+        let chunk_rows = micro_batch.max(1).saturating_mul(rps);
+        if x.rows <= chunk_rows {
+            return Some(hw.engine.matmul_prepared(x, prep, &hw.input_method, self.generation));
+        }
+        let ai = hw.engine.prepare_inputs(x, &hw.input_method);
+        let n_chunks = x.rows.div_ceil(chunk_rows);
+        let gen = self.generation;
+        let outs: Vec<Matrix> = par_map(n_chunks, |ci| {
+            let r0 = ci * chunk_rows;
+            let len = chunk_rows.min(x.rows - r0);
+            hw.engine.matmul_prepared_inputs_with(&ai.rows(r0, len), prep, gen, false)
+        });
+        let n = prep.shape().1;
+        let mut out = Matrix::zeros(x.rows, n);
+        let mut r = 0usize;
+        for o in &outs {
+            out.data[r * n..(r + o.rows) * n].copy_from_slice(&o.data);
+            r += o.rows;
+        }
+        Some(out)
+    }
+}

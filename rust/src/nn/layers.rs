@@ -1,12 +1,19 @@
 //! Hardware and digital layers (paper §3.4, Fig 8).
 //!
 //! `LinearMem` / `Conv2dMem` run their forward dot products on the bound
-//! DPE ([`HwSpec`]) when one is attached, or in full precision otherwise;
-//! backward is always full-precision straight-through. Pooling, ReLU,
-//! BatchNorm and Flatten are digital layers.
+//! DPE when one is attached, or in full precision otherwise; backward is
+//! always full-precision straight-through. All hardware state (engine
+//! binding, programmed weights, programming generation, physical-slot
+//! streams, and the opt-in input cache) lives in one shared
+//! [`MemCore`] embedded in each layer. Pooling, ReLU, BatchNorm and
+//! Flatten are digital layers.
+//!
+//! Every layer also implements the immutable eval entry points
+//! (`forward_eval`, `forward_batched`) used by the mapped inference
+//! executor ([`crate::arch::MappedModel`]); they are bit-identical to
+//! `forward(x, false)`.
 
-use super::{HwSpec, Layer, Param};
-use crate::dpe::{PreparedInputs, PreparedWeights};
+use super::{HwSpec, Layer, MemCore, Param};
 use crate::tensor::{col2im_accumulate, im2col, Conv2dDims, Matrix, Tensor};
 use crate::util::parallel::par_map;
 use crate::util::rng::Pcg64;
@@ -17,18 +24,10 @@ pub struct LinearMem {
     pub out_features: usize,
     pub w: Param,
     pub b: Param,
-    pub hw: Option<HwSpec>,
-    prepared: Option<PreparedWeights>,
-    /// Weight-programming generation (decorrelates programming noise).
-    generation: u64,
+    /// Shared hardware state (engine binding, programmed weights, slot
+    /// streams, input cache).
+    pub core: MemCore,
     cache_x: Option<Matrix>,
-    /// Opt-in cached-input eval path (see [`LinearMem::set_input_caching`]).
-    cache_inputs_enabled: bool,
-    /// `(input data, its prepared slicing)` — valid while the input data
-    /// matches; deliberately NOT cleared by `update_weight` (input slicing
-    /// is weight-independent, which is exactly what makes re-evaluating a
-    /// fixed batch across programming cycles cheap).
-    input_cache: Option<(Vec<f64>, PreparedInputs)>,
 }
 
 impl LinearMem {
@@ -41,72 +40,83 @@ impl LinearMem {
             out_features: outf,
             w: Param::new(w),
             b: Param::new(vec![0.0; outf]),
-            hw,
-            prepared: None,
-            generation: 0,
+            core: MemCore::new(hw),
             cache_x: None,
-            cache_inputs_enabled: false,
-            input_cache: None,
         };
         l.update_weight();
         l
     }
 
-    /// Opt into caching the quantized + sliced input across forward calls
-    /// (hardware path only): when the same batch is evaluated repeatedly —
-    /// e.g. Monte-Carlo over reprogramming cycles via
-    /// [`Layer::update_weight`] — the DPE then pays only the matmul cost
-    /// per call. Keyed on exact input equality and bit-identical to the
-    /// uncached path. Eval-mode only (training batches differ every step,
-    /// so `forward(_, true)` always takes the uncached path); off by
-    /// default.
+    /// Opt into caching the quantized + sliced input across eval-mode
+    /// forward calls (see [`MemCore::set_input_caching`]).
     pub fn set_input_caching(&mut self, on: bool) {
-        self.cache_inputs_enabled = on;
-        if !on {
-            self.input_cache = None;
-        }
+        self.core.set_input_caching(on);
     }
 
     fn weight_matrix(&self) -> Matrix {
         Matrix::from_vec(self.in_features, self.out_features, self.w.value.clone())
     }
-}
 
-impl Layer for LinearMem {
-    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
-        assert_eq!(x.shape.len(), 2, "LinearMem expects (B, in)");
-        assert_eq!(x.shape[1], self.in_features);
-        let xm = x.to_matrix();
-        let use_hw = self.hw.is_some() && self.prepared.is_some();
-        // The input cache only pays off in eval loops over a repeated
-        // batch; training batches differ every step, so skip the cache
-        // there (same gating as Conv2dMem).
-        let mut y = if use_hw && self.cache_inputs_enabled && !train {
-            let hit = matches!(&self.input_cache, Some((key, _)) if *key == xm.data);
-            if !hit {
-                let hw = self.hw.as_ref().unwrap();
-                let ai = hw.engine.prepare_inputs(&xm, &hw.input_method);
-                self.input_cache = Some((xm.data.clone(), ai));
-            }
-            let hw = self.hw.as_ref().unwrap();
-            let prep = self.prepared.as_ref().unwrap();
-            let (_, ai) = self.input_cache.as_ref().unwrap();
-            hw.engine.matmul_prepared_inputs(ai, prep, self.generation)
-        } else if use_hw {
-            let hw = self.hw.as_ref().unwrap();
-            let prep = self.prepared.as_ref().unwrap();
-            hw.engine.matmul_prepared(&xm, prep, &hw.input_method, self.generation)
-        } else {
-            xm.matmul(&self.weight_matrix())
-        };
+    /// The linear map (no bias): hardware when bound, digital otherwise.
+    fn eval_y(&self, xm: &Matrix) -> Matrix {
+        match self.core.matmul_eval(xm) {
+            Some(y) => y,
+            None => xm.matmul(&self.weight_matrix()),
+        }
+    }
+
+    fn add_bias(&self, y: &mut Matrix) {
         for i in 0..y.rows {
             for (v, b) in y.row_mut(i).iter_mut().zip(&self.b.value) {
                 *v += b;
             }
         }
+    }
+
+    fn check_shape(&self, x: &Tensor) {
+        assert_eq!(x.shape.len(), 2, "LinearMem expects (B, in)");
+        assert_eq!(x.shape[1], self.in_features);
+    }
+}
+
+impl Layer for LinearMem {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        self.check_shape(x);
+        let xm = x.to_matrix();
+        // The input cache only pays off in eval loops over a repeated
+        // batch; training batches differ every step, so skip the cache
+        // there (same gating as Conv2dMem).
+        let mut y = if !train && self.core.input_caching_enabled() && self.core.is_prepared() {
+            if !self.core.input_cache_hit(&xm.data) {
+                self.core.cache_inputs(xm.data.clone(), &xm);
+            }
+            self.core.matmul_from_cache().expect("cache filled above")
+        } else {
+            self.eval_y(&xm)
+        };
+        self.add_bias(&mut y);
         if train {
             self.cache_x = Some(xm);
         }
+        Tensor::from_matrix(&y)
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
+        self.check_shape(x);
+        let xm = x.to_matrix();
+        let mut y = self.eval_y(&xm);
+        self.add_bias(&mut y);
+        Tensor::from_matrix(&y)
+    }
+
+    fn forward_batched(&self, x: &Tensor, micro_batch: usize) -> Tensor {
+        self.check_shape(x);
+        let xm = x.to_matrix();
+        let mut y = match self.core.matmul_batched(&xm, micro_batch, 1) {
+            Some(y) => y,
+            None => xm.matmul(&self.weight_matrix()),
+        };
+        self.add_bias(&mut y);
         Tensor::from_matrix(&y)
     }
 
@@ -134,15 +144,25 @@ impl Layer for LinearMem {
         f(&mut self.b);
     }
 
+    fn for_each_param(&self, f: &mut dyn FnMut(&Param)) {
+        f(&self.w);
+        f(&self.b);
+    }
+
     fn update_weight(&mut self) {
-        if let Some(hw) = &self.hw {
-            self.generation += 1;
-            self.prepared = Some(hw.engine.prepare_weights(
-                &self.weight_matrix(),
-                &hw.weight_method,
-                self.generation,
-            ));
-        }
+        self.core.program(&self.weight_matrix());
+    }
+
+    fn reprogram(&mut self) {
+        self.core.reprogram(&self.weight_matrix());
+    }
+
+    fn visit_cores(&mut self, f: &mut dyn FnMut(&mut MemCore)) {
+        f(&mut self.core);
+    }
+
+    fn cores(&self) -> Vec<&MemCore> {
+        vec![&self.core]
     }
 
     fn name(&self) -> &'static str {
@@ -163,20 +183,13 @@ pub struct Conv2dMem {
     pub pad: usize,
     pub w: Param,
     pub b: Param,
-    pub hw: Option<HwSpec>,
-    /// Prepared transposed weights `(patch, out_c)` for the DPE.
-    prepared: Option<PreparedWeights>,
-    generation: u64,
+    /// Shared hardware state; the prepared copy holds the transposed
+    /// weights `(patch, out_c)`.
+    pub core: MemCore,
     /// Per-sample **transposed** im2col columns `(OH·OW, patch)` — kept in
     /// stacked-row order so forward stacking and the weight-gradient GEMM
     /// both use them without re-transposing.
     cache: Option<(Vec<Matrix>, Conv2dDims)>,
-    /// Opt-in cached-input eval path (see [`Conv2dMem::set_input_caching`]).
-    cache_inputs_enabled: bool,
-    /// `(input data, prepared slicing of the stacked im2col matrix)` —
-    /// a hit skips im2col, stacking, and quantize/slice entirely. Not
-    /// cleared by `update_weight` (the cache is weight-independent).
-    input_cache: Option<(Vec<f64>, PreparedInputs)>,
 }
 
 impl Conv2dMem {
@@ -203,26 +216,18 @@ impl Conv2dMem {
             pad,
             w: Param::new(w),
             b: Param::new(vec![0.0; out_c]),
-            hw,
-            prepared: None,
-            generation: 0,
+            core: MemCore::new(hw),
             cache: None,
-            cache_inputs_enabled: false,
-            input_cache: None,
         };
         l.update_weight();
         l
     }
 
     /// Opt into caching the im2col + quantize/slice of the input across
-    /// eval-mode forward calls (hardware path only) — same contract as
-    /// [`LinearMem::set_input_caching`]: keyed on exact input equality,
-    /// bit-identical, survives `update_weight`, off by default.
+    /// eval-mode forward calls — a hit skips im2col, stacking, and
+    /// quantize/slice entirely (see [`MemCore::set_input_caching`]).
     pub fn set_input_caching(&mut self, on: bool) {
-        self.cache_inputs_enabled = on;
-        if !on {
-            self.input_cache = None;
-        }
+        self.core.set_input_caching(on);
     }
 
     fn conv_dims(&self) -> Conv2dDims {
@@ -263,51 +268,14 @@ impl Conv2dMem {
     fn weight_t(&self) -> Matrix {
         Matrix::from_vec(self.out_c, self.patch_len(), self.w.value.clone()).transpose()
     }
-}
 
-impl Layer for Conv2dMem {
-    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+    fn check_shape(&self, x: &Tensor) {
         let (c, h, w) = self.dims_chw;
         assert_eq!(x.shape, vec![x.shape[0], c, h, w], "Conv2dMem input shape");
-        let bsz = x.shape[0];
-        let d = self.conv_dims();
-        let (oh, ow) = (d.out_h(), d.out_w());
-        // Cached-input eval path: a repeated input skips im2col, stacking,
-        // and quantize/slice entirely (eval only — training needs the
-        // im2col columns for backward anyway).
-        let use_cached = !train
-            && self.cache_inputs_enabled
-            && self.hw.is_some()
-            && self.prepared.is_some();
-        let mut train_cols: Option<Vec<Matrix>> = None;
-        let y = if use_cached {
-            let hit = matches!(&self.input_cache, Some((key, _)) if *key == x.data);
-            if !hit {
-                let (_, stacked) = self.im2col_stacked(x);
-                let hw = self.hw.as_ref().unwrap();
-                let ai = hw.engine.prepare_inputs(&stacked, &hw.input_method);
-                self.input_cache = Some((x.data.clone(), ai));
-            }
-            let hw = self.hw.as_ref().unwrap();
-            let prep = self.prepared.as_ref().unwrap();
-            let (_, ai) = self.input_cache.as_ref().unwrap();
-            hw.engine.matmul_prepared_inputs(ai, prep, self.generation)
-        } else {
-            // Stack columns: (B·OH·OW, patch) then one DPE matmul routed
-            // through the fused slice-plane pipeline (`matmul_prepared`).
-            let (cols_t, stacked) = self.im2col_stacked(x);
-            let y = match (&self.hw, &self.prepared) {
-                (Some(hw), Some(prep)) => {
-                    hw.engine.matmul_prepared(&stacked, prep, &hw.input_method, self.generation)
-                }
-                _ => stacked.matmul(&self.weight_t()),
-            };
-            if train {
-                train_cols = Some(cols_t);
-            }
-            y
-        };
-        // (B·OH·OW, out_c) → (B, out_c, OH, OW) + bias.
+    }
+
+    /// `(B·OH·OW, out_c)` → `(B, out_c, OH, OW)` + bias.
+    fn reshape_bias(&self, y: &Matrix, bsz: usize, oh: usize, ow: usize) -> Tensor {
         let mut out = Tensor::zeros(&[bsz, self.out_c, oh, ow]);
         for i in 0..bsz {
             for q in 0..oh * ow {
@@ -317,10 +285,65 @@ impl Layer for Conv2dMem {
                 }
             }
         }
+        out
+    }
+}
+
+impl Layer for Conv2dMem {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        self.check_shape(x);
+        let bsz = x.shape[0];
+        let d = self.conv_dims();
+        let (oh, ow) = (d.out_h(), d.out_w());
+        // Cached-input eval path: a repeated input skips im2col, stacking,
+        // and quantize/slice entirely (eval only — training needs the
+        // im2col columns for backward anyway).
+        let use_cached =
+            !train && self.core.input_caching_enabled() && self.core.is_prepared();
+        let mut train_cols: Option<Vec<Matrix>> = None;
+        let y = if use_cached {
+            if !self.core.input_cache_hit(&x.data) {
+                let (_, stacked) = self.im2col_stacked(x);
+                self.core.cache_inputs(x.data.clone(), &stacked);
+            }
+            self.core.matmul_from_cache().expect("cache filled above")
+        } else {
+            // Stack columns: (B·OH·OW, patch) then one DPE matmul routed
+            // through the fused slice-plane pipeline.
+            let (cols_t, stacked) = self.im2col_stacked(x);
+            let y = match self.core.matmul_eval(&stacked) {
+                Some(y) => y,
+                None => stacked.matmul(&self.weight_t()),
+            };
+            if train {
+                train_cols = Some(cols_t);
+            }
+            y
+        };
+        let out = self.reshape_bias(&y, bsz, oh, ow);
         if train {
             self.cache = Some((train_cols.expect("train path computes im2col"), d));
         }
         out
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
+        // A single full-batch chunk — identical to the uncached eval
+        // branch of `forward`.
+        self.forward_batched(x, usize::MAX)
+    }
+
+    fn forward_batched(&self, x: &Tensor, micro_batch: usize) -> Tensor {
+        self.check_shape(x);
+        let bsz = x.shape[0];
+        let d = self.conv_dims();
+        let (oh, ow) = (d.out_h(), d.out_w());
+        let (_, stacked) = self.im2col_stacked(x);
+        let y = match self.core.matmul_batched(&stacked, micro_batch, oh * ow) {
+            Some(y) => y,
+            None => stacked.matmul(&self.weight_t()),
+        };
+        self.reshape_bias(&y, bsz, oh, ow)
     }
 
     fn backward(&mut self, grad_out: &Tensor) -> Tensor {
@@ -364,12 +387,25 @@ impl Layer for Conv2dMem {
         f(&mut self.b);
     }
 
+    fn for_each_param(&self, f: &mut dyn FnMut(&Param)) {
+        f(&self.w);
+        f(&self.b);
+    }
+
     fn update_weight(&mut self) {
-        if let Some(hw) = &self.hw {
-            self.generation += 1;
-            self.prepared =
-                Some(hw.engine.prepare_weights(&self.weight_t(), &hw.weight_method, self.generation));
-        }
+        self.core.program(&self.weight_t());
+    }
+
+    fn reprogram(&mut self) {
+        self.core.reprogram(&self.weight_t());
+    }
+
+    fn visit_cores(&mut self, f: &mut dyn FnMut(&mut MemCore)) {
+        f(&mut self.core);
+    }
+
+    fn cores(&self) -> Vec<&MemCore> {
+        vec![&self.core]
     }
 
     fn name(&self) -> &'static str {
@@ -401,10 +437,14 @@ impl Default for Relu {
 
 impl Layer for Relu {
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
-        let mut out = x.clone();
         if train {
             self.mask = Some(x.data.iter().map(|&v| v > 0.0).collect());
         }
+        self.forward_eval(x)
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
+        let mut out = x.clone();
         for v in out.data.iter_mut() {
             if *v < 0.0 {
                 *v = 0.0;
@@ -452,6 +492,13 @@ impl Default for AvgPool2 {
 
 impl Layer for AvgPool2 {
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        if train {
+            self.cache_shape = Some(x.shape.clone());
+        }
+        self.forward_eval(x)
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
         let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         assert!(h % 2 == 0 && w % 2 == 0, "AvgPool2 needs even dims");
         let (oh, ow) = (h / 2, w / 2);
@@ -468,9 +515,6 @@ impl Layer for AvgPool2 {
                             + src[(2 * i + 1) * w + 2 * j + 1]);
                 }
             }
-        }
-        if train {
-            self.cache_shape = Some(x.shape.clone());
         }
         out
     }
@@ -514,21 +558,15 @@ impl MaxPool2 {
     pub fn new() -> Self {
         MaxPool2 { cache: None }
     }
-}
 
-impl Default for MaxPool2 {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Layer for MaxPool2 {
-    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+    /// The pooled output plus (optionally) the argmax indices backward
+    /// needs — one code path so train and eval stay bit-identical.
+    fn pool(x: &Tensor, want_argmax: bool) -> (Tensor, Vec<usize>) {
         let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         assert!(h % 2 == 0 && w % 2 == 0, "MaxPool2 needs even dims");
         let (oh, ow) = (h / 2, w / 2);
         let mut out = Tensor::zeros(&[b, c, oh, ow]);
-        let mut argmax = vec![0usize; b * c * oh * ow];
+        let mut argmax = if want_argmax { vec![0usize; b * c * oh * ow] } else { Vec::new() };
         for bc in 0..b * c {
             let src = &x.data[bc * h * w..(bc + 1) * h * w];
             for i in 0..oh {
@@ -545,14 +583,33 @@ impl Layer for MaxPool2 {
                         .max_by(|a, b| a.1.total_cmp(b.1))
                         .unwrap();
                     out.data[bc * oh * ow + i * ow + j] = val;
-                    argmax[bc * oh * ow + i * ow + j] = bc * h * w + best;
+                    if want_argmax {
+                        argmax[bc * oh * ow + i * ow + j] = bc * h * w + best;
+                    }
                 }
             }
         }
+        (out, argmax)
+    }
+}
+
+impl Default for MaxPool2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for MaxPool2 {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (out, argmax) = Self::pool(x, train);
         if train {
             self.cache = Some((x.shape.clone(), argmax));
         }
         out
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
+        Self::pool(x, false).0
     }
 
     fn backward(&mut self, grad_out: &Tensor) -> Tensor {
@@ -592,14 +649,18 @@ impl Default for GlobalAvgPool {
 
 impl Layer for GlobalAvgPool {
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        if train {
+            self.cache_shape = Some(x.shape.clone());
+        }
+        self.forward_eval(x)
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
         let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         let mut out = Tensor::zeros(&[b, c]);
         for bc in 0..b * c {
             out.data[bc] =
                 x.data[bc * h * w..(bc + 1) * h * w].iter().sum::<f64>() / (h * w) as f64;
-        }
-        if train {
-            self.cache_shape = Some(x.shape.clone());
         }
         out
     }
@@ -648,6 +709,10 @@ impl Layer for Flatten {
         if train {
             self.cache_shape = Some(x.shape.clone());
         }
+        self.forward_eval(x)
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
         let b = x.shape[0];
         let d: usize = x.shape[1..].iter().product();
         Tensor::from_vec(&[b, d], x.data.clone())
@@ -694,49 +759,13 @@ impl BatchNorm2d {
             cache: None,
         }
     }
-}
 
-impl Layer for BatchNorm2d {
-    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+    /// Normalize with the given statistics; returns `(out, x_hat)` — the
+    /// single code path shared by train-mode forward (batch stats) and
+    /// eval (running stats), keeping both bit-identical per statistic set.
+    fn normalize(&self, x: &Tensor, mean: &[f64], var: &[f64]) -> (Tensor, Tensor) {
         let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-        assert_eq!(c, self.channels);
-        let n = (b * h * w) as f64;
         let mut out = x.clone();
-        let (mean, var) = if train {
-            let mut mean = vec![0.0; c];
-            let mut var = vec![0.0; c];
-            for bi in 0..b {
-                for ci in 0..c {
-                    let base = (bi * c + ci) * h * w;
-                    for &v in &x.data[base..base + h * w] {
-                        mean[ci] += v;
-                    }
-                }
-            }
-            for m in mean.iter_mut() {
-                *m /= n;
-            }
-            for bi in 0..b {
-                for ci in 0..c {
-                    let base = (bi * c + ci) * h * w;
-                    for &v in &x.data[base..base + h * w] {
-                        var[ci] += (v - mean[ci]) * (v - mean[ci]);
-                    }
-                }
-            }
-            for v in var.iter_mut() {
-                *v /= n;
-            }
-            for ci in 0..c {
-                self.running_mean[ci] =
-                    (1.0 - self.momentum) * self.running_mean[ci] + self.momentum * mean[ci];
-                self.running_var[ci] =
-                    (1.0 - self.momentum) * self.running_var[ci] + self.momentum * var[ci];
-            }
-            (mean, var)
-        } else {
-            (self.running_mean.clone(), self.running_var.clone())
-        };
         let mut x_hat = Tensor::zeros(&x.shape);
         for bi in 0..b {
             for ci in 0..c {
@@ -749,10 +778,56 @@ impl Layer for BatchNorm2d {
                 }
             }
         }
-        if train {
-            self.cache = Some((x_hat, mean, var));
+        (out, x_hat)
+    }
+}
+
+impl Layer for BatchNorm2d {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        assert_eq!(c, self.channels);
+        if !train {
+            return self.forward_eval(x);
         }
+        let n = (b * h * w) as f64;
+        let mut mean = vec![0.0; c];
+        let mut var = vec![0.0; c];
+        for bi in 0..b {
+            for ci in 0..c {
+                let base = (bi * c + ci) * h * w;
+                for &v in &x.data[base..base + h * w] {
+                    mean[ci] += v;
+                }
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        for bi in 0..b {
+            for ci in 0..c {
+                let base = (bi * c + ci) * h * w;
+                for &v in &x.data[base..base + h * w] {
+                    var[ci] += (v - mean[ci]) * (v - mean[ci]);
+                }
+            }
+        }
+        for v in var.iter_mut() {
+            *v /= n;
+        }
+        for ci in 0..c {
+            self.running_mean[ci] =
+                (1.0 - self.momentum) * self.running_mean[ci] + self.momentum * mean[ci];
+            self.running_var[ci] =
+                (1.0 - self.momentum) * self.running_var[ci] + self.momentum * var[ci];
+        }
+        let (out, x_hat) = self.normalize(x, &mean, &var);
+        self.cache = Some((x_hat, mean, var));
         out
+    }
+
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[1], self.channels);
+        self.normalize(x, &self.running_mean, &self.running_var).0
     }
 
     fn backward(&mut self, grad_out: &Tensor) -> Tensor {
@@ -797,9 +872,19 @@ impl Layer for BatchNorm2d {
         f(&mut self.beta);
     }
 
+    fn for_each_param(&self, f: &mut dyn FnMut(&Param)) {
+        f(&self.gamma);
+        f(&self.beta);
+    }
+
     fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
         f(&mut self.running_mean);
         f(&mut self.running_var);
+    }
+
+    fn for_each_buffer(&self, f: &mut dyn FnMut(&Vec<f64>)) {
+        f(&self.running_mean);
+        f(&self.running_var);
     }
 
     fn name(&self) -> &'static str {
@@ -1065,5 +1150,38 @@ mod tests {
         l.update_weight();
         let y2 = l.forward(&x, false);
         assert_ne!(y1.data, y2.data, "reprogramming must resample noise");
+    }
+
+    #[test]
+    fn forward_eval_bit_identical_to_forward() {
+        // The executor contract: forward_eval == forward(x, false), for
+        // both hardware layer kinds and the digital fallbacks.
+        let mut rng = Pcg64::seeded(33);
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(Default::default(), 12),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut lin = LinearMem::new(20, 6, Some(hw.clone()), &mut rng);
+        let x = Tensor::from_vec(&[5, 20], (0..100).map(|i| ((i % 11) as f64) / 5.5 - 1.0).collect());
+        assert_eq!(lin.forward_eval(&x).data, lin.forward(&x, false).data);
+        // Micro-batched path: batch-global slicing keeps it bit-identical.
+        for mb in [1usize, 2, 5, 100] {
+            assert_eq!(lin.forward_batched(&x, mb).data, lin.forward(&x, false).data, "mb={mb}");
+        }
+        let mut conv = Conv2dMem::new(2, 6, 6, 3, 3, 1, 1, Some(hw), &mut rng);
+        let xc = Tensor::from_vec(
+            &[3, 2, 6, 6],
+            (0..216).map(|i| ((i * 7 % 23) as f64) / 11.5 - 1.0).collect(),
+        );
+        assert_eq!(conv.forward_eval(&xc).data, conv.forward(&xc, false).data);
+        for mb in [1usize, 2, 3] {
+            assert_eq!(conv.forward_batched(&xc, mb).data, conv.forward(&xc, false).data, "mb={mb}");
+        }
+        let mut bn = BatchNorm2d::new(2);
+        // Push some training stats into the running buffers first.
+        let _ = bn.forward(&xc, true);
+        assert_eq!(bn.forward_eval(&xc).data, bn.forward(&xc, false).data);
+        let mut mp = MaxPool2::new();
+        assert_eq!(mp.forward_eval(&xc).data, mp.forward(&xc, false).data);
     }
 }

@@ -7,9 +7,14 @@
 //! straight-through scheme. This module reproduces that design natively:
 //!
 //! - [`Layer`] — forward/backward/param plumbing (explicit backprop;
-//!   activations cached per layer exactly like autograd saved tensors);
+//!   activations cached per layer exactly like autograd saved tensors),
+//!   plus the immutable eval entry points (`forward_eval` /
+//!   `forward_batched`) the mapped inference executor uses;
 //! - [`layers`] — `LinearMem`, `Conv2dMem` (im2col), pooling, ReLU,
 //!   `BatchNorm2d` (digital), flatten;
+//! - [`core`] — [`MemCore`], the shared hardware state (engine binding,
+//!   programmed weights, physical-slot streams, input cache) every
+//!   DPE-backed layer embeds;
 //! - [`HwSpec`] — per-layer hardware binding: each layer owns its engine
 //!   configuration and slice methods (ultra-flexible layer-wise
 //!   mixed-precision, Fig 9(a)), or `None` for a full-precision digital
@@ -21,13 +26,30 @@
 //! Weights are kept in full precision; `update_weight()` refreshes the
 //! sliced+programmed hardware copy (the paper's `update_weight()`), which
 //! layers reuse across forward passes until the next optimizer step.
+//!
+//! # Chip mapping
+//!
+//! Every hardware core draws its programming noise, fault masks, and ADC
+//! chains from the RNG streams of the **physical arrays** its weight
+//! blocks occupy (see [`crate::arch`]). A [`Sequential`] assigns those
+//! slots at construction from a *virtual* layer-order packing — so two
+//! co-located layers never share streams — and
+//! [`Sequential::compile`] re-places them on a concrete
+//! [`crate::arch::ChipSpec`], programs the whole chip once, and returns a
+//! forward-only [`crate::arch::MappedModel`] with micro-batched inference.
+//! A single-tile chip large enough for the whole model reproduces the
+//! virtual packing and is therefore bit-identical to the unmapped path.
 
+pub mod core;
 pub mod layers;
 pub mod loss;
 pub mod models;
 pub mod optim;
 pub mod train;
 
+pub use self::core::MemCore;
+
+use crate::arch::{ChipSpec, CoreDemand, MappedModel, TileAllocator};
 use crate::dpe::{DotProductEngine, SliceMethod};
 use crate::tensor::Tensor;
 use std::sync::Arc;
@@ -75,12 +97,31 @@ impl Param {
 
 /// A differentiable layer. `forward` caches whatever `backward` needs;
 /// `backward` consumes the cache, accumulates parameter gradients, and
-/// returns the input gradient.
-pub trait Layer {
+/// returns the input gradient. `forward_eval` is the immutable inference
+/// path (no caches touched) used by the mapped executor — it must be
+/// bit-identical to `forward(x, false)` absent the opt-in input cache.
+///
+/// `Send + Sync` so boxed layers can be shared across the inference
+/// worker pool ([`crate::arch::MappedModel::infer_batched`]).
+pub trait Layer: Send + Sync {
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor;
     fn backward(&mut self, grad_out: &Tensor) -> Tensor;
-    /// Visit parameters (for the optimizer).
+    /// Immutable eval-mode forward (inference executor path).
+    fn forward_eval(&self, x: &Tensor) -> Tensor;
+    /// Eval forward over a batch, splitting DPE work into micro-batches of
+    /// `micro_batch` samples. Sample-wise digital layers just evaluate the
+    /// whole batch.
+    fn forward_batched(&self, x: &Tensor, micro_batch: usize) -> Tensor {
+        let _ = micro_batch;
+        self.forward_eval(x)
+    }
+    /// Visit parameters mutably (for the optimizer).
     fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        let _ = f;
+    }
+    /// Visit parameters read-only (state export — e.g. the donor side of
+    /// [`Sequential::load_state_from`]). Must mirror `visit_params`' order.
+    fn for_each_param(&self, f: &mut dyn FnMut(&Param)) {
         let _ = f;
     }
     /// Visit non-parameter state buffers (e.g. BatchNorm running stats),
@@ -88,9 +129,27 @@ pub trait Layer {
     fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
         let _ = f;
     }
+    /// Read-only buffer visitor mirroring `visit_buffers`' order.
+    fn for_each_buffer(&self, f: &mut dyn FnMut(&Vec<f64>)) {
+        let _ = f;
+    }
     /// Refresh the hardware (sliced/programmed) weight copy from the
     /// full-precision weights — the paper's `update_weight()`.
     fn update_weight(&mut self) {}
+    /// Re-derive the hardware copies at the **current** programming
+    /// generation — called after the layer's cores were moved to different
+    /// physical slots (their RNG streams changed, the weights did not).
+    fn reprogram(&mut self) {}
+    /// Visit the layer's hardware cores mutably (slot assignment). Digital
+    /// layers have none.
+    fn visit_cores(&mut self, f: &mut dyn FnMut(&mut MemCore)) {
+        let _ = f;
+    }
+    /// Read-only view of the layer's hardware cores (demand collection,
+    /// summaries).
+    fn cores(&self) -> Vec<&MemCore> {
+        Vec::new()
+    }
     fn name(&self) -> &'static str;
     /// Output shape for a given input shape (sanity checks / model summary).
     fn out_shape(&self, in_shape: &[usize]) -> Vec<usize>;
@@ -102,8 +161,120 @@ pub struct Sequential {
 }
 
 impl Sequential {
+    /// Build the model and assign every hardware core its physical-stream
+    /// slots from the virtual layer-order packing (one unbounded tile):
+    /// co-located layers draw from disjoint per-array RNG streams, and a
+    /// later [`Sequential::compile`] onto a single sufficient tile
+    /// reproduces these streams exactly (the bit-identity anchor).
     pub fn new(layers: Vec<Box<dyn Layer>>) -> Self {
-        Sequential { layers }
+        let mut s = Sequential { layers };
+        s.assign_virtual_slots();
+        s
+    }
+
+    fn assign_virtual_slots(&mut self) {
+        let mut next = 0u64;
+        for l in self.layers.iter_mut() {
+            let mut changed = false;
+            l.visit_cores(&mut |c| {
+                if let Some((blocks, slices)) = c.demand() {
+                    changed |= c.set_contiguous_base(next);
+                    next += (blocks * slices) as u64;
+                }
+            });
+            if changed {
+                l.reprogram();
+            }
+        }
+    }
+
+    /// Total physical arrays the model's hardware cores demand (digit
+    /// planes across all weight blocks) — the chip capacity needed to map
+    /// it.
+    pub fn mapped_planes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.cores())
+            .filter_map(|c| c.arrays_used())
+            .sum()
+    }
+
+    /// A chip guaranteed to fit this model: tiles of `arrays_per_tile`
+    /// arrays (grown to the largest block group if needed), with enough
+    /// tiles to absorb group-spill fragmentation — a tile only spills when
+    /// the incoming group does not fit, so every spilled-past tile holds at
+    /// least `arrays_per_tile − (max_group − 1)` planes.
+    pub fn auto_chip(&self, arrays_per_tile: usize, array: (usize, usize)) -> ChipSpec {
+        let total = self.mapped_planes();
+        let s_max = self
+            .layers
+            .iter()
+            .flat_map(|l| l.cores())
+            .filter_map(|c| c.demand())
+            .map(|(_, slices)| slices)
+            .max()
+            .unwrap_or(1);
+        let apt = arrays_per_tile.max(s_max).max(1);
+        let effective = apt - (s_max - 1);
+        ChipSpec::new(total.div_ceil(effective).max(1), apt, array)
+    }
+
+    /// Compile the model onto a chip: bin-pack every hardware core's
+    /// weight block grid onto physical tiles ([`TileAllocator`]), key each
+    /// block's programming streams to its slots, program the whole chip
+    /// once (at the current generation — the weights are unchanged), and
+    /// return the forward-only [`MappedModel`] runtime.
+    ///
+    /// Errors when an engine's array shape differs from the chip's or the
+    /// chip is too small (capacity report attached).
+    pub fn compile(mut self, chip: &ChipSpec) -> anyhow::Result<MappedModel> {
+        // 1. Collect demands in model order (the same traversal assigns
+        //    the placements below).
+        let mut demands: Vec<CoreDemand> = Vec::new();
+        let mut mismatch: Option<String> = None;
+        for (li, l) in self.layers.iter_mut().enumerate() {
+            let name = l.name();
+            l.visit_cores(&mut |c| {
+                if let Some((blocks, slices)) = c.demand() {
+                    if let Some(hw) = c.hw() {
+                        if hw.engine.cfg.array != chip.array && mismatch.is_none() {
+                            mismatch = Some(format!(
+                                "layer {li} ({name}) engine array {:?} != chip array {:?}",
+                                hw.engine.cfg.array, chip.array
+                            ));
+                        }
+                    }
+                    demands.push(CoreDemand { layer: li, name, blocks, slices });
+                }
+            });
+        }
+        if let Some(m) = mismatch {
+            anyhow::bail!("cannot map model onto chip: {m}");
+        }
+        let placement = TileAllocator::allocate(chip, &demands)?;
+
+        // 2. Adopt the slot streams and program the whole chip once.
+        //    Cores whose effective streams are unchanged (the single-tile
+        //    layer-order anchor reproduces the virtual packing exactly)
+        //    already hold the right bits and are not re-programmed.
+        {
+            let mut next_core = 0usize;
+            let placed = &placement.layers;
+            for l in self.layers.iter_mut() {
+                let mut any_changed = false;
+                l.visit_cores(&mut |c| {
+                    if c.demand().is_some() {
+                        any_changed |= c.set_block_streams(placed[next_core].clone());
+                        next_core += 1;
+                    }
+                });
+                if any_changed {
+                    l.reprogram();
+                }
+            }
+            assert_eq!(next_core, placed.len(), "placement/core count mismatch");
+        }
+        Ok(MappedModel::new(self, placement))
     }
 
     pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
@@ -128,18 +299,33 @@ impl Sequential {
         }
     }
 
+    /// Read-only parameter traversal (same order as `visit_params`).
+    pub fn for_each_param(&self, f: &mut dyn FnMut(&Param)) {
+        for l in &self.layers {
+            l.for_each_param(f);
+        }
+    }
+
     pub fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
         for l in self.layers.iter_mut() {
             l.visit_buffers(f);
         }
     }
 
+    /// Read-only buffer traversal (same order as `visit_buffers`).
+    pub fn for_each_buffer(&self, f: &mut dyn FnMut(&Vec<f64>)) {
+        for l in &self.layers {
+            l.for_each_buffer(f);
+        }
+    }
+
     /// Copy all parameters and buffers from another model with identical
     /// topology (the paper's `load_state_dict` flow); call
-    /// `update_weight()` afterwards to program the arrays.
-    pub fn load_state_from(&mut self, src: &mut Sequential) {
+    /// `update_weight()` afterwards to program the arrays. The donor is
+    /// only read — loading state cannot perturb it.
+    pub fn load_state_from(&mut self, src: &Sequential) {
         let mut params: Vec<Vec<f64>> = Vec::new();
-        src.visit_params(&mut |p| params.push(p.value.clone()));
+        src.for_each_param(&mut |p| params.push(p.value.clone()));
         let mut i = 0;
         self.visit_params(&mut |p| {
             assert_eq!(p.value.len(), params[i].len(), "param shape mismatch");
@@ -148,7 +334,7 @@ impl Sequential {
         });
         assert_eq!(i, params.len(), "param count mismatch");
         let mut bufs: Vec<Vec<f64>> = Vec::new();
-        src.visit_buffers(&mut |b| bufs.push(b.clone()));
+        src.for_each_buffer(&mut |b| bufs.push(b.clone()));
         let mut j = 0;
         self.visit_buffers(&mut |b| {
             b.copy_from_slice(&bufs[j]);
@@ -173,12 +359,30 @@ impl Sequential {
         n
     }
 
-    /// Model summary line per layer.
+    /// Model summary line per layer; hardware layers get an arrays column,
+    /// and — once compiled onto a chip — their assigned tile range.
     pub fn summary(&self, mut in_shape: Vec<usize>) -> String {
         let mut s = String::new();
         for l in &self.layers {
             let out = l.out_shape(&in_shape);
-            s.push_str(&format!("{:<12} {:?} -> {:?}\n", l.name(), in_shape, out));
+            s.push_str(&format!("{:<12} {:?} -> {:?}", l.name(), in_shape, out));
+            let cores = l.cores();
+            let arrays: usize = cores.iter().filter_map(|c| c.arrays_used()).sum();
+            if arrays > 0 {
+                s.push_str(&format!("  arrays={arrays}"));
+                let tiles: Vec<(usize, usize)> = cores
+                    .iter()
+                    .filter_map(|c| c.placement())
+                    .map(|p| (p.tile_first, p.tile_last))
+                    .collect();
+                if let (Some(first), Some(last)) = (
+                    tiles.iter().map(|t| t.0).min(),
+                    tiles.iter().map(|t| t.1).max(),
+                ) {
+                    s.push_str(&format!(" tiles={first}..={last}"));
+                }
+            }
+            s.push('\n');
             in_shape = out;
         }
         s
@@ -189,6 +393,8 @@ impl Sequential {
 mod tests {
     use super::layers::{Flatten, LinearMem, Relu};
     use super::*;
+    use crate::arch::ChipSpec;
+    use crate::dpe::{DpeConfig, SliceSpec};
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -206,5 +412,59 @@ mod tests {
         assert_eq!(m.num_params(), 12 * 5 + 5 + 5 * 3 + 3);
         let summary = m.summary(vec![2, 3, 4]);
         assert!(summary.contains("LinearMem"));
+    }
+
+    #[test]
+    fn load_state_from_reads_donor_immutably() {
+        let mut rng = Pcg64::seeded(2);
+        let src = Sequential::new(vec![Box::new(LinearMem::new(6, 4, None, &mut rng))]);
+        let mut dst = Sequential::new(vec![Box::new(LinearMem::new(6, 4, None, &mut rng))]);
+        let mut before: Vec<Vec<f64>> = Vec::new();
+        src.for_each_param(&mut |p| before.push(p.value.clone()));
+        dst.load_state_from(&src);
+        let mut after: Vec<Vec<f64>> = Vec::new();
+        src.for_each_param(&mut |p| after.push(p.value.clone()));
+        assert_eq!(before, after, "donor must be untouched");
+        let mut dst_params: Vec<Vec<f64>> = Vec::new();
+        dst.for_each_param(&mut |p| dst_params.push(p.value.clone()));
+        assert_eq!(dst_params, before, "receiver must match donor");
+    }
+
+    #[test]
+    fn auto_chip_absorbs_group_fragmentation() {
+        // ones(3) groups in 4-slot tiles waste one slot per tile; a naive
+        // exact-capacity chip would run out mid-allocation.
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(DpeConfig::default(), 6),
+            SliceMethod::parse("ones3").unwrap(),
+        );
+        let mut rng = Pcg64::seeded(6);
+        let m = Sequential::new(vec![Box::new(LinearMem::new(80, 8, Some(hw), &mut rng))]);
+        assert_eq!(m.mapped_planes(), 6); // 2 k-blocks x 1 n-block x 3 slices
+        let chip = m.auto_chip(4, (64, 64));
+        assert!(chip.tiles * chip.arrays_per_tile >= 8, "chip must include spill slack");
+        m.compile(&chip).expect("auto-sized chip fits");
+    }
+
+    #[test]
+    fn summary_shows_arrays_and_tiles_when_compiled() {
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(DpeConfig::default(), 4),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut rng = Pcg64::seeded(4);
+        let m = Sequential::new(vec![
+            Box::new(Flatten::new()),
+            Box::new(LinearMem::new(80, 8, Some(hw), &mut rng)),
+        ]);
+        let plain = m.summary(vec![1, 80]);
+        assert!(plain.contains("arrays="), "{plain}");
+        assert!(!plain.contains("tiles="), "{plain}");
+        let planes = m.mapped_planes();
+        assert_eq!(planes, 2 * 4); // 2 k-blocks x 1 n-block x 4 slices
+        let mapped = m.compile(&ChipSpec::single_tile(planes, (64, 64))).unwrap();
+        let s = mapped.summary(vec![1, 80]);
+        assert!(s.contains("arrays=8"), "{s}");
+        assert!(s.contains("tiles=0..=0"), "{s}");
     }
 }

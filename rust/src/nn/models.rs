@@ -11,7 +11,7 @@
 use super::layers::{
     AvgPool2, BatchNorm2d, Conv2dMem, Flatten, GlobalAvgPool, LinearMem, MaxPool2, Relu,
 };
-use super::{HwSpec, Layer, Param, Sequential};
+use super::{HwSpec, Layer, MemCore, Param, Sequential};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -86,6 +86,30 @@ impl Layer for ResidualBlock {
         self.relu_out.forward(&sum, train)
     }
 
+    fn forward_eval(&self, x: &Tensor) -> Tensor {
+        self.forward_batched(x, usize::MAX)
+    }
+
+    fn forward_batched(&self, x: &Tensor, micro_batch: usize) -> Tensor {
+        // Same op order as `forward(x, false)`: conv/bn/relu main path,
+        // projection (or identity) skip, sum, output relu. The DPE convs
+        // take the micro-batch split; the digital layers are sample-wise.
+        let mut h = self.conv1.forward_batched(x, micro_batch);
+        h = self.bn1.forward_eval(&h);
+        h = self.relu1.forward_eval(&h);
+        h = self.conv2.forward_batched(&h, micro_batch);
+        h = self.bn2.forward_eval(&h);
+        let skip = match &self.proj {
+            Some((conv, bn)) => bn.forward_eval(&conv.forward_batched(x, micro_batch)),
+            None => x.clone(),
+        };
+        let mut sum = h;
+        for (a, b) in sum.data.iter_mut().zip(&skip.data) {
+            *a += b;
+        }
+        self.relu_out.forward_eval(&sum)
+    }
+
     fn backward(&mut self, grad_out: &Tensor) -> Tensor {
         let _ = self.cache_x.take();
         let g_sum = self.relu_out.backward(grad_out);
@@ -121,11 +145,30 @@ impl Layer for ResidualBlock {
         }
     }
 
+    fn for_each_param(&self, f: &mut dyn FnMut(&Param)) {
+        self.conv1.for_each_param(f);
+        self.bn1.for_each_param(f);
+        self.conv2.for_each_param(f);
+        self.bn2.for_each_param(f);
+        if let Some((conv, bn)) = &self.proj {
+            conv.for_each_param(f);
+            bn.for_each_param(f);
+        }
+    }
+
     fn visit_buffers(&mut self, f: &mut dyn FnMut(&mut Vec<f64>)) {
         self.bn1.visit_buffers(f);
         self.bn2.visit_buffers(f);
         if let Some((_, bn)) = &mut self.proj {
             bn.visit_buffers(f);
+        }
+    }
+
+    fn for_each_buffer(&self, f: &mut dyn FnMut(&Vec<f64>)) {
+        self.bn1.for_each_buffer(f);
+        self.bn2.for_each_buffer(f);
+        if let Some((_, bn)) = &self.proj {
+            bn.for_each_buffer(f);
         }
     }
 
@@ -135,6 +178,31 @@ impl Layer for ResidualBlock {
         if let Some((conv, _)) = &mut self.proj {
             conv.update_weight();
         }
+    }
+
+    fn reprogram(&mut self) {
+        self.conv1.reprogram();
+        self.conv2.reprogram();
+        if let Some((conv, _)) = &mut self.proj {
+            conv.reprogram();
+        }
+    }
+
+    fn visit_cores(&mut self, f: &mut dyn FnMut(&mut MemCore)) {
+        self.conv1.visit_cores(f);
+        self.conv2.visit_cores(f);
+        if let Some((conv, _)) = &mut self.proj {
+            conv.visit_cores(f);
+        }
+    }
+
+    fn cores(&self) -> Vec<&MemCore> {
+        let mut cs = self.conv1.cores();
+        cs.extend(self.conv2.cores());
+        if let Some((conv, _)) = &self.proj {
+            cs.extend(conv.cores());
+        }
+        cs
     }
 
     fn name(&self) -> &'static str {

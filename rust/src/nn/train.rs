@@ -5,6 +5,7 @@
 use super::loss::{accuracy, softmax_cross_entropy};
 use super::optim::Sgd;
 use super::Sequential;
+use crate::arch::MappedModel;
 use crate::data::Dataset;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -83,8 +84,15 @@ pub fn train(model: &mut Sequential, data: &Dataset, cfg: &TrainConfig) -> Vec<S
     logs
 }
 
-/// Evaluate classification accuracy over (a prefix of) a dataset.
-pub fn evaluate(model: &mut Sequential, data: &Dataset, batch: usize, limit: usize) -> f64 {
+/// Accuracy over (a prefix of) a dataset for any forward function — the
+/// one batching/accumulation loop behind [`evaluate`] and
+/// [`evaluate_mapped`].
+fn accuracy_over(
+    data: &Dataset,
+    batch: usize,
+    limit: usize,
+    mut forward: impl FnMut(&Tensor) -> Tensor,
+) -> f64 {
     let n = data.len().min(limit);
     let mut correct = 0.0;
     let mut seen = 0usize;
@@ -93,12 +101,30 @@ pub fn evaluate(model: &mut Sequential, data: &Dataset, batch: usize, limit: usi
         let hi = (i + batch).min(n);
         let idx: Vec<usize> = (i..hi).collect();
         let (x, labels) = make_batch(data, &idx);
-        let logits = model.forward(&x, false);
+        let logits = forward(&x);
         correct += accuracy(&logits, &labels) * idx.len() as f64;
         seen += idx.len();
         i = hi;
     }
     correct / seen as f64
+}
+
+/// Evaluate classification accuracy over (a prefix of) a dataset.
+pub fn evaluate(model: &mut Sequential, data: &Dataset, batch: usize, limit: usize) -> f64 {
+    accuracy_over(data, batch, limit, |x| model.forward(x, false))
+}
+
+/// Evaluate classification accuracy of a chip-compiled model over (a
+/// prefix of) a dataset, running each evaluation batch through the
+/// micro-batched inference executor ([`MappedModel::infer_batched`]).
+pub fn evaluate_mapped(
+    model: &MappedModel,
+    data: &Dataset,
+    batch: usize,
+    limit: usize,
+    micro_batch: usize,
+) -> f64 {
+    accuracy_over(data, batch, limit, |x| model.infer_batched(x, micro_batch))
 }
 
 /// Mean loss over a dataset prefix (for test-loss curves).

@@ -130,6 +130,25 @@ impl Doc {
         self.sections.keys()
     }
 
+    /// The `section.key` value as an array of non-negative integers:
+    /// `Ok(None)` when the key is absent (defaults apply), an error naming
+    /// the offending key path when it is present but malformed — typed
+    /// config loaders ([`SimConfig::load`]) propagate it instead of
+    /// panicking or silently ignoring the key.
+    ///
+    /// [`SimConfig::load`]: crate::coordinator::SimConfig::load
+    pub fn usize_array(&self, section: &str, key: &str) -> anyhow::Result<Option<Vec<usize>>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => match v.as_usize_array() {
+                Some(xs) => Ok(Some(xs)),
+                None => Err(anyhow::anyhow!(
+                    "config key `{section}.{key}`: expected an array of non-negative integers, got {v:?}"
+                )),
+            },
+        }
+    }
+
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
     }
@@ -282,12 +301,27 @@ slices = [1, 1, 2, 4]
     #[test]
     fn nested_arrays() {
         let doc = Doc::parse("[s]\nblocks = [[32, 32], [64, 64]]\n").unwrap();
-        if let Some(Value::Array(items)) = doc.get("s", "blocks") {
-            assert_eq!(items.len(), 2);
-            assert_eq!(items[0].as_usize_array().unwrap(), vec![32, 32]);
-        } else {
-            panic!("expected array");
-        }
+        let items = match doc.get("s", "blocks") {
+            Some(Value::Array(items)) => items,
+            other => unreachable!("parser must yield an array for `blocks`, got {other:?}"),
+        };
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].as_usize_array().unwrap(), vec![32, 32]);
+    }
+
+    #[test]
+    fn typed_array_accessor_reports_key_path() {
+        let doc = Doc::parse("[engine]\narray_size = \"nope\"\nok = [1, 2]\n").unwrap();
+        let err = doc.usize_array("engine", "array_size").unwrap_err().to_string();
+        assert!(err.contains("engine.array_size"), "{err}");
+        assert!(err.contains("expected an array"), "{err}");
+        // Negative entries are malformed too (usize semantics).
+        let doc = Doc::parse("[engine]\narray_size = [64, -64]\n").unwrap();
+        assert!(doc.usize_array("engine", "array_size").is_err());
+        // Present-and-valid and absent keys succeed.
+        let doc = Doc::parse("[engine]\narray_size = [32, 16]\n").unwrap();
+        assert_eq!(doc.usize_array("engine", "array_size").unwrap(), Some(vec![32, 16]));
+        assert_eq!(doc.usize_array("engine", "missing").unwrap(), None);
     }
 
     #[test]

@@ -19,7 +19,7 @@ fn config_to_engine_to_matmul() {
         "[engine]\nvar = 0.0\nnoise_free = true\narray_size = [32, 32]\n[run]\nseed = 5\nmethod = \"fp32\"\n",
     )
     .unwrap();
-    let cfg = SimConfig::from_doc(&doc);
+    let cfg = SimConfig::from_doc(&doc).unwrap();
     let engine = cfg.engine();
     let method = SliceMethod::parse(&cfg.method).unwrap();
     let mut rng = Pcg64::seeded(5);
@@ -81,7 +81,7 @@ fn state_transfer_preserves_predictions() {
         SliceMethod::fp(SliceSpec::fp32()),
     );
     let mut hw_model = mlp(784, 16, 10, Some(hw), 99); // different init seed
-    hw_model.load_state_from(&mut digital);
+    hw_model.load_state_from(&digital); // donor is read-only
     hw_model.update_weight();
     let idx: Vec<usize> = (0..16).collect();
     let (x, _) = memintelli::nn::train::make_batch(&data, &idx);

@@ -1,15 +1,20 @@
-//! Monte-Carlo thread-count determinism, isolated in its own test binary:
-//! proving that the same seed yields bit-identical `FaultPoint` stats at
-//! any worker count requires mutating the process-global
-//! `MEMINTELLI_THREADS` env var, and concurrent `setenv`/`getenv` from
-//! parallel sibling tests would be undefined behavior on glibc. As the
-//! only test in this binary, every `set_var` here happens while no other
-//! thread is running: the `par_map` workers spawned inside
-//! `run_fault_point` are scoped, so they start after the write completes
-//! and join before the next one.
+//! Thread-count determinism (Monte-Carlo stats AND chip-mapped batched
+//! inference), isolated in its own test binary: proving that the same
+//! seed yields bit-identical results at any worker count requires
+//! mutating the process-global `MEMINTELLI_THREADS` env var, and
+//! concurrent `setenv`/`getenv` from parallel sibling tests would be
+//! undefined behavior on glibc. As the only test in this binary, every
+//! `set_var` here happens while no other thread is running: the `par_map`
+//! workers spawned inside `run_fault_point` / `infer_batched` are scoped,
+//! so they start after the write completes and join before the next one.
 
+use memintelli::arch::ChipSpec;
 use memintelli::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
 use memintelli::dpe::montecarlo::{run_fault_point, FaultPoint, McConfig};
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::nn::models::mlp;
+use memintelli::nn::HwSpec;
+use memintelli::tensor::Tensor;
 
 fn assert_points_identical(p: &FaultPoint, q: &FaultPoint) {
     assert_eq!(p.re_mean.to_bits(), q.re_mean.to_bits(), "re_mean differs");
@@ -30,9 +35,22 @@ fn montecarlo_stats_identical_across_thread_counts() {
     // Per-cycle state derives only from the cycle index, so the stats
     // must not depend on how par_map schedules cycles across workers.
     let mut points = Vec::new();
+    let mut infer_outputs: Vec<Vec<f64>> = Vec::new();
+    let x = Tensor::from_vec(&[6, 48], (0..288).map(|i| ((i % 13) as f64) / 6.5 - 1.0).collect());
     for workers in ["1", "2", "7"] {
         std::env::set_var("MEMINTELLI_THREADS", workers);
         points.push(run_fault_point(&cfg, 8, 0.05, &ni, 0.1));
+        // Chip-mapped micro-batched inference must be thread-count
+        // invariant too: programming streams come from the placement and
+        // micro-batch results from index-derived chunks.
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(DpeConfig::default(), 11),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let model = mlp(48, 12, 4, Some(hw), 5);
+        let planes = model.mapped_planes();
+        let mapped = model.compile(&ChipSpec::single_tile(planes, (64, 64))).unwrap();
+        infer_outputs.push(mapped.infer_batched(&x, 2).data);
     }
     match prev {
         Some(v) => std::env::set_var("MEMINTELLI_THREADS", v),
@@ -40,4 +58,6 @@ fn montecarlo_stats_identical_across_thread_counts() {
     }
     assert_points_identical(&points[0], &points[1]);
     assert_points_identical(&points[0], &points[2]);
+    assert_eq!(infer_outputs[0], infer_outputs[1], "mapped inference differs at 2 workers");
+    assert_eq!(infer_outputs[0], infer_outputs[2], "mapped inference differs at 7 workers");
 }
