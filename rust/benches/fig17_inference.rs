@@ -5,7 +5,11 @@
 //! chip via `Sequential::compile` and measures `MappedModel` throughput:
 //!
 //! - **single-stream baseline**: one image per `infer` call (the
-//!   request-at-a-time serving shape);
+//!   request-at-a-time serving shape — since the digit-domain datapath
+//!   compression, these m = 1 DPE calls parallelize over (kb, nb) array
+//!   pairs by total grid work, with lone big pairs 2-D-scheduled over
+//!   (row-band × panel-group) items instead of starving on one row band;
+//!   see `dpe::engine` §Perf);
 //! - **batched**: `infer_batched` over the full image set at several
 //!   micro-batch sizes.
 //!

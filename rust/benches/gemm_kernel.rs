@@ -1,0 +1,229 @@
+//! Bench: the digit-domain GEMM kernels head to head, emitting
+//! `BENCH_gemm.json` — the perf-trajectory record for the byte-packed /
+//! slice-stacked datapath compression (`tensor` §Perf, `dpe::engine`
+//! §Perf).
+//!
+//! Two levels are measured:
+//!
+//! - **Kernel level** (`kernel_cases`): all `S_a = 4` INT8 input digit
+//!   planes of one k-block against one packed weight block
+//!   (`k = 256`, `n = S_w·l_n = 256`), comparing the pre-stacking datapath
+//!   — f64 digit planes, one [`matmul_packed_into`] pass per slice, B
+//!   streamed `S_a` times — against the stacked kernel — byte-packed
+//!   [`DigitPlanes`], one [`matmul_packed_stacked_into`] pass, B streamed
+//!   once. `m ∈ {1, 8, 128}` covers single-sample inference through the
+//!   table3 batch shape. Each case reports GFLOP/s-equiv, nominal
+//!   operand/output bytes moved (cache reuse ignored), and the stacked
+//!   speedup. The two kernels' outputs are hard-asserted **bit-identical**
+//!   before any number is recorded.
+//! - **Engine level** (`engine_cases`): `matmul_prepared` on the table3
+//!   headline config (INT8, 64×64 arrays, noisy device, 512×512 weights,
+//!   reused `PreparedWeights`) at `m = 1` (the 2-D-scheduling target
+//!   shape) and `m = 128` (the table3 headline batch), hard-asserted
+//!   bit-identical to the per-slice-pair oracle
+//!   (`matmul_prepared_reference`) — if that assert trips, the stacked
+//!   pipeline regressed and the job must fail.
+//!
+//! Run: `cargo bench --bench gemm_kernel`
+//! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench gemm_kernel`
+//! (fewer iterations; every bit-identity assert still runs).
+
+use memintelli::dpe::slicing::quantize_slice_block;
+use memintelli::dpe::{DataMode, DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::tensor::{matmul_packed_into, matmul_packed_stacked_into, Matrix, PackedB};
+use memintelli::util::report::{time_it, Timing};
+use memintelli::util::rng::Pcg64;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// One kernel-level comparison point.
+struct KernelCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    s_a: usize,
+    per_slice: Timing,
+    stacked: Timing,
+    /// Nominal bytes moved per call (operands + output, no cache model).
+    per_slice_bytes: usize,
+    stacked_bytes: usize,
+}
+
+fn kernel_case(m: usize, k: usize, n: usize, iters: usize, seed: u64) -> KernelCase {
+    let spec = SliceSpec::int8();
+    let s_a = spec.num_slices();
+    assert_eq!(s_a, 4, "headline kernel case is S_a = 4 (INT8)");
+    let mut rng = Pcg64::seeded(seed);
+    let x = Matrix::random_normal(m, k, 0.0, 1.0, &mut rng);
+    let planes = quantize_slice_block(&x, &spec, DataMode::Quantize).planes;
+    // f64 materializations of the same digits — the pre-stacking operand.
+    let f64_planes: Vec<Matrix> = (0..s_a).map(|s| planes.plane(s)).collect();
+    let b = Matrix::random_normal(k, n, 0.0, 1.0, &mut rng);
+    let packed = PackedB::pack(&b);
+
+    let mut per_slice_out = vec![0.0f64; s_a * m * n];
+    let mut stacked_out = vec![0.0f64; s_a * m * n];
+
+    // Bit-identity first: the stacked kernel must reproduce the per-slice
+    // kernel exactly on every plane.
+    for (s, plane) in f64_planes.iter().enumerate() {
+        matmul_packed_into(plane, &packed, &mut per_slice_out[s * m * n..(s + 1) * m * n]);
+    }
+    matmul_packed_stacked_into(&planes, &packed, &mut stacked_out);
+    assert_eq!(
+        per_slice_out, stacked_out,
+        "stacked kernel diverged from the per-slice kernel at {m}x{k}x{n}"
+    );
+
+    let per_slice = time_it(1, iters, || {
+        for (s, plane) in f64_planes.iter().enumerate() {
+            matmul_packed_into(plane, &packed, &mut per_slice_out[s * m * n..(s + 1) * m * n]);
+        }
+    });
+    let stacked = time_it(1, iters, || {
+        matmul_packed_stacked_into(&planes, &packed, &mut stacked_out);
+    });
+
+    // Nominal traffic: the per-slice path reads f64 planes and streams the
+    // packed block once per slice; the stacked path reads u8 planes and
+    // streams the block once. Both write S_a·m·n f64 partials.
+    let per_slice_bytes = s_a * m * k * 8 + s_a * k * n * 8 + s_a * m * n * 8;
+    let stacked_bytes = s_a * m * k + k * n * 8 + s_a * m * n * 8;
+    KernelCase { m, k, n, s_a, per_slice, stacked, per_slice_bytes, stacked_bytes }
+}
+
+/// One engine-level trajectory point (stacked pipeline, reused weights).
+struct EngineCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    timing: Timing,
+}
+
+fn engine_case(m: usize, k: usize, n: usize, iters: usize) -> EngineCase {
+    let engine = DotProductEngine::new(DpeConfig::default(), 2024);
+    let med = SliceMethod::int(SliceSpec::int8());
+    let mut rng = Pcg64::seeded(99 + m as u64);
+    let a = Matrix::random_normal(m, k, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(k, n, 0.0, 1.0, &mut rng);
+    let w = engine.prepare_weights(&b, &med, 0);
+    // The tentpole contract, asserted in the bench itself: the stacked
+    // pipeline is bit-identical to the per-slice-pair reference oracle.
+    let stacked = engine.matmul_prepared(&a, &w, &med, 0);
+    let oracle = engine.matmul_prepared_reference(&a, &w, &med, 0);
+    assert_eq!(
+        stacked.data, oracle.data,
+        "stacked matmul_prepared diverged from the per-slice-pair oracle at {m}x{k}x{n}"
+    );
+    let timing = time_it(1, iters, || {
+        let _ = engine.matmul_prepared(&a, &w, &med, 0);
+    });
+    EngineCase { m, k, n, timing }
+}
+
+fn main() {
+    let smoke = std::env::var("MEMINTELLI_BENCH_SMOKE").is_ok();
+    let t0 = Instant::now();
+    let (k, n, s_w_iters) = (256usize, 256usize, if smoke { 10 } else { 60 });
+
+    let kernel_cases: Vec<KernelCase> = [1usize, 8, 128]
+        .iter()
+        .map(|&m| {
+            // Scale iteration counts so each case takes comparable time.
+            let iters = (s_w_iters * 128 / m.max(1)).clamp(s_w_iters, 2000);
+            kernel_case(m, k, n, iters, 7 + m as u64)
+        })
+        .collect();
+
+    for c in &kernel_cases {
+        let flops = 2.0 * (c.s_a * c.m * c.k * c.n) as f64;
+        println!(
+            "[gemm_kernel] m={:>3} k={} n={} S_a={}: per-slice {:.3} ms ({:.2} GF/s), \
+             stacked {:.3} ms ({:.2} GF/s), speedup {:.2}x, bytes {} -> {}",
+            c.m,
+            c.k,
+            c.n,
+            c.s_a,
+            c.per_slice.mean_s * 1e3,
+            flops / c.per_slice.mean_s / 1e9,
+            c.stacked.mean_s * 1e3,
+            flops / c.stacked.mean_s / 1e9,
+            c.per_slice.mean_s / c.stacked.mean_s,
+            c.per_slice_bytes,
+            c.stacked_bytes,
+        );
+    }
+
+    let engine_iters = if smoke { 3 } else { 15 };
+    let engine_cases =
+        vec![engine_case(1, 512, 512, engine_iters), engine_case(128, 512, 512, engine_iters)];
+    for c in &engine_cases {
+        println!(
+            "[gemm_kernel] matmul_prepared int8 {}x{}x{}: mean {:.3} ms ({:.1}/s), oracle bit-identical",
+            c.m,
+            c.k,
+            c.n,
+            c.timing.mean_s * 1e3,
+            1.0 / c.timing.mean_s,
+        );
+    }
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"gemm_kernel\",\n");
+    json.push_str("  \"pipeline\": \"stacked-slice-plane-gemm\",\n");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    json.push_str("  \"bit_identical_to_per_slice_kernel\": true,\n");
+    json.push_str("  \"bit_identical_to_reference_oracle\": true,\n");
+    json.push_str("  \"kernel_cases\": [\n");
+    for (i, c) in kernel_cases.iter().enumerate() {
+        let flops = 2.0 * (c.s_a * c.m * c.k * c.n) as f64;
+        let _ = write!(
+            json,
+            "    {{\"m\": {}, \"k\": {}, \"n\": {}, \"s_a\": {}, \"iters\": {}, \
+             \"per_slice_s_mean\": {:.9}, \"stacked_s_mean\": {:.9}, \
+             \"per_slice_gflops_equiv\": {:.4}, \"stacked_gflops_equiv\": {:.4}, \
+             \"per_slice_bytes_moved\": {}, \"stacked_bytes_moved\": {}, \
+             \"speedup\": {:.4}}}",
+            c.m,
+            c.k,
+            c.n,
+            c.s_a,
+            c.per_slice.iters,
+            c.per_slice.mean_s,
+            c.stacked.mean_s,
+            flops / c.per_slice.mean_s / 1e9,
+            flops / c.stacked.mean_s / 1e9,
+            c.per_slice_bytes,
+            c.stacked_bytes,
+            c.per_slice.mean_s / c.stacked.mean_s,
+        );
+        json.push_str(if i + 1 < kernel_cases.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"engine_cases\": [\n");
+    for (i, c) in engine_cases.iter().enumerate() {
+        let flops = 2.0 * (c.m * c.k * c.n) as f64;
+        let _ = write!(
+            json,
+            "    {{\"name\": \"matmul_prepared_int8_64x64_b{}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+             \"iters\": {}, \"wall_s_mean\": {:.9}, \"matmuls_per_s\": {:.3}, \
+             \"gflops_equiv\": {:.4}}}",
+            c.m,
+            c.m,
+            c.k,
+            c.n,
+            c.timing.iters,
+            c.timing.mean_s,
+            1.0 / c.timing.mean_s,
+            flops / c.timing.mean_s / 1e9,
+        );
+        json.push_str(if i + 1 < engine_cases.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n");
+    let _ = writeln!(json, "  \"total_s\": {:.3}", t0.elapsed().as_secs_f64());
+    json.push_str("}\n");
+    std::fs::write("BENCH_gemm.json", &json).expect("writing BENCH_gemm.json");
+    println!("\nwrote BENCH_gemm.json");
+    println!("[gemm_kernel] total {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,10 +1,13 @@
 //! Bench: regenerates the paper's table3_throughput artifact at full scale
 //! **and** emits `BENCH_table3.json`, the machine-readable perf-trajectory
-//! record for the DPE hot path (the fused slice-plane GEMM pipeline in
-//! `dpe::engine`). Compare the JSON across commits to track the
-//! `matmul_prepared` throughput: the headline case is INT8 on 64×64 arrays
-//! with batch 128 and a reused `PreparedWeights` (prepared-weight reuse is
-//! exactly the NN training/inference hot loop).
+//! record for the DPE hot path (the stacked slice-plane GEMM pipeline over
+//! byte-packed digit planes in `dpe::engine`). Compare the JSON across
+//! commits to track the `matmul_prepared` throughput: the headline case is
+//! INT8 on 64×64 arrays with batch 128 and a reused `PreparedWeights`
+//! (prepared-weight reuse is exactly the NN training/inference hot loop);
+//! the `b1` case is the single-sample serving shape that the 2-D
+//! (row-band × panel-group) dispatch targets. Kernel-level per-slice vs
+//! stacked numbers live in `benches/gemm_kernel.rs` (`BENCH_gemm.json`).
 //!
 //! Run: `cargo bench --bench table3_throughput`
 //! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench table3_throughput`
@@ -55,7 +58,7 @@ fn emit_json(cases: &[Case], smoke: bool, total_s: f64) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"table3_throughput\",\n");
-    out.push_str("  \"pipeline\": \"fused-slice-plane-gemm\",\n");
+    out.push_str("  \"pipeline\": \"stacked-slice-plane-gemm\",\n");
     let _ = writeln!(out, "  \"smoke\": {smoke},");
     let _ = writeln!(out, "  \"total_s\": {total_s:.3},");
     out.push_str("  \"cases\": [\n");
@@ -117,6 +120,16 @@ fn main() {
             SliceMethod::int(SliceSpec::int8()),
             (32, 256, 120),
             iters,
+        ),
+        // Single-sample serving shape: one input row over a wide layer —
+        // the case the total-work pair dispatch + 2-D grid scheduling
+        // keeps parallel (a row-band-only split has exactly one band).
+        bench_prepared(
+            "matmul_prepared_int8_64x64_b1",
+            "int8",
+            SliceMethod::int(SliceSpec::int8()),
+            (1, 512, 512),
+            iters * 8,
         ),
     ];
 

@@ -19,6 +19,13 @@
 //!
 //! Neither entry point touches training state: no activation caches, no
 //! gradients, no `update_weight`.
+//!
+//! Single-sample `infer` calls (the request-at-a-time serving shape) no
+//! longer serialize on one GEMM row band: the DPE parallelizes over
+//! (k-block, n-block) array pairs by *total* grid work, and a lone big
+//! pair 2-D-schedules its stacked GEMM over (row-band × panel-group)
+//! items — so an m = 1 forward through a wide layer still fills the
+//! worker pool (see `dpe::engine` §Perf and `examples/README.md`).
 
 use super::Placement;
 use crate::nn::Sequential;

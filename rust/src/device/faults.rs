@@ -34,7 +34,7 @@
 //! error is a **read-time** effect sampled per physical column of each
 //! array block, deterministically in (engine seed, injection seed, block
 //! id) ([`AdcChain`]); the engine applies it inside `adc_readout` so the
-//! fused pipeline and the per-slice-pair reference oracle stay
+//! stacked pipeline and the per-slice-pair reference oracle stay
 //! bit-identical under every injection.
 //!
 //! Everything is gated so that a zero-rate spec draws **no** random

@@ -9,7 +9,7 @@
 //!    the device model — lognormal conductance variation, `g_levels`
 //!    discrete states;
 //! 4. for each input slice run the analog MVM against **all** weight digit
-//!    planes at once (fused slice-plane GEMM, see §Perf) — or the full
+//!    planes at once (stacked slice-plane GEMM, see §Perf) — or the full
 //!    IR-drop circuit solve per plane when `use_circuit` is set — and
 //!    quantize each plane's readout with the ADC;
 //! 5. recombine partials with signed shift-and-add weights and the block
@@ -20,7 +20,7 @@
 //! batches, matching the paper's "sliced copy of the weight saved as an
 //! attribute in the computing graph".
 //!
-//! # §Perf — the fused slice-plane GEMM pipeline
+//! # §Perf — the stacked slice-plane GEMM pipeline
 //!
 //! The hot path of every workload (NN training/inference, the solver, CWT,
 //! k-means) bottoms out in [`DotProductEngine::matmul_prepared`]. The
@@ -30,7 +30,7 @@
 //! which for int8/fp16 specs (4–5 slices per operand) meant 16–25 dispatches
 //! where one suffices.
 //!
-//! The fused pipeline restructures this:
+//! The stacked pipeline restructures this:
 //!
 //! - **Prepare time** ([`DotProductEngine::prepare_weights`]): each block's
 //!   `S_w` programmed digit planes are column-stacked into one contiguous
@@ -38,28 +38,38 @@
 //!   ([`crate::tensor::PackedB`]) **once per prepared-weight lifetime** —
 //!   the packing is amortized over every batch/epoch that reuses the
 //!   weights, and only the packed form is retained (cold paths unpack the
-//!   stripe they need).
-//! - **Matmul time**: each input slice needs a single packed GEMM
-//!   ([`crate::tensor::matmul_packed_into`]) producing the partials of all
-//!   `S_w` weight slices as column stripes of one fused output buffer. ADC
-//!   quantization and signed shift-add recombination then operate on those
-//!   stripes in place. The fused output scratch is allocated once per
-//!   (k-block, n-block) task and reused across input slices, eliminating
-//!   the per-pair `Matrix::zeros` churn.
-//! - **Scheduling**: when there are several array pairs with real work the
-//!   pairs run on the lock-free `par_map` pool (GEMMs serial inside); a
-//!   single big pair instead row-band-parallelizes its fused GEMM via
-//!   `par_chunks_mut` — one level of parallelism either way, no nested
-//!   spawn.
+//!   stripe they need). On the input side, each k-block's `S_a` digit
+//!   planes are quantized + sliced in one pass straight into byte-packed
+//!   [`crate::tensor::DigitPlanes`] (u8 digits, slice-major — 8× less
+//!   memory than the old f64 planes, which are never materialized).
+//! - **Matmul time**: **one** stacked GEMM per (k-block, n-block) pair
+//!   ([`crate::tensor::matmul_packed_stacked_into`]) multiplies all `S_a`
+//!   input planes against the packed block, producing every `(sa, sw)`
+//!   partial as a (plane-row-block × column-stripe) region of one stacked
+//!   output buffer — each B panel is loaded once per block instead of once
+//!   per (input slice, block). u8 → f64 conversion happens in-register and
+//!   is exact, and each logical output row still accumulates along
+//!   ascending `k`, so nothing about the arithmetic changes. ADC
+//!   quantization and signed shift-add recombination then consume the
+//!   stripes exactly as before, in the same (sa, sw) order.
+//! - **Scheduling**: when the block grid has ≥ 2 array pairs carrying
+//!   enough total work, the pairs are the work items on the lock-free
+//!   `par_map` pool (GEMMs serial inside). Otherwise a big lone pair 2-D
+//!   schedules its stacked GEMM over (row-band × panel-group) items
+//!   ([`crate::tensor::matmul_packed_stacked_2d`]) — row bands alone
+//!   starve the pool when `m` is small (an m = 1 single-sample inference
+//!   has one band), while the 2-D grid still has `S_a × panel-groups`
+//!   items. One level of parallelism either way, no nested spawn.
 //!
 //! The retained per-slice-pair implementation
-//! (`matmul_prepared_reference`, compiled under `#[cfg(test)]`) is the
-//! correctness oracle: both paths accumulate every output element along
-//! ascending `k` in the same (sa, sw) order with the same ADC arithmetic,
-//! so the fused pipeline is asserted **bit-identical** across slice specs,
-//! ADC policies, and ragged shapes. The win is purely architectural: one
-//! well-shaped GEMM per (input-slice, block) instead of `S_w` tiny ones,
-//! measured by `benches/table3_throughput.rs` (`BENCH_table3.json`).
+//! (`matmul_prepared_reference`, `#[doc(hidden)]` so the gemm-kernel bench
+//! can call it too) is the correctness oracle: both paths accumulate every
+//! output element along ascending `k` in the same (sa, sw) order with the
+//! same ADC arithmetic, so the stacked pipeline is asserted
+//! **bit-identical** across slice specs, ADC policies, and ragged shapes.
+//! The win is purely architectural: one well-shaped GEMM per block instead
+//! of `S_a · S_w` tiny ones, measured by `benches/table3_throughput.rs`
+//! (`BENCH_table3.json`) and `benches/gemm_kernel.rs` (`BENCH_gemm.json`).
 //!
 //! # §Perf — prepared-input caching and the program-template split
 //!
@@ -98,12 +108,16 @@
 
 use super::blocks::{BlockDim, MatmulBlocks};
 use super::quant::Adc;
-use super::slicing::{quantize_block, slice_digits, DataMode, SliceSpec, SliceTables};
+use super::slicing::{
+    quantize_block, quantize_slice_block, slice_digits, DataMode, SliceSpec, SliceTables,
+};
 use crate::circuit::CrossbarCircuit;
 use crate::device::faults::{AdcChain, NonIdealitySpec};
 use crate::device::DeviceSpec;
-use crate::tensor::{matmul_packed_into, matmul_packed_rows_into, Matrix, PackedB};
-use crate::util::parallel::{par_chunks_mut, par_map};
+use crate::tensor::{
+    matmul_packed_stacked_2d, matmul_packed_stacked_into, DigitPlanes, Matrix, PackedB,
+};
+use crate::util::parallel::par_map;
 use crate::util::rng::Pcg64;
 
 /// A slice method: spec + how continuous data becomes integers.
@@ -358,8 +372,10 @@ impl WeightTemplate {
 /// all n-blocks of the weight.
 #[derive(Debug, Clone)]
 struct InputBlock {
-    /// `S_a` digit planes of `m × l_m`.
-    slices: Vec<Matrix>,
+    /// All `S_a` digit planes of `m × l_m`, byte-packed slice-major — the
+    /// **only** retained copy of the input digits (no f64 planes; cold
+    /// paths materialize a plane on demand via [`DigitPlanes::plane`]).
+    planes: DigitPlanes,
     scale: f64,
 }
 
@@ -406,10 +422,7 @@ impl PreparedInputs {
             blocks: self
                 .blocks
                 .iter()
-                .map(|b| InputBlock {
-                    slices: b.slices.iter().map(|s| s.block(r0, 0, len, s.cols)).collect(),
-                    scale: b.scale,
-                })
+                .map(|b| InputBlock { planes: b.planes.row_slice(r0, len), scale: b.scale })
                 .collect(),
             method: self.method.clone(),
             m: len,
@@ -672,7 +685,10 @@ impl DotProductEngine {
     /// Quantize + slice each k-block of the input once into a reusable
     /// [`PreparedInputs`] (the deterministic input half of the matmul —
     /// no RNG is consumed, so the cached path is bit-identical to per-call
-    /// slicing; §Perf).
+    /// slicing; §Perf). The fused single-pass
+    /// [`crate::dpe::slicing::quantize_slice_block`] writes the digits
+    /// straight into byte-packed [`DigitPlanes`] — no intermediate integer
+    /// matrix and no f64 digit planes.
     pub fn prepare_inputs(&self, a: &Matrix, method: &SliceMethod) -> PreparedInputs {
         let m = a.rows;
         let l_m = self.cfg.array.0;
@@ -680,14 +696,14 @@ impl DotProductEngine {
         let blocks: Vec<InputBlock> = par_map(kdim.count(), |kb| {
             let (k0, kl) = kdim.range(kb);
             let sub = a.block(0, k0, m, kl).pad_to(m, l_m);
-            let qb = quantize_block(&sub, &method.spec, method.mode);
-            InputBlock { slices: slice_digits(&qb.q, &method.spec), scale: qb.scale }
+            let sb = quantize_slice_block(&sub, &method.spec, method.mode);
+            InputBlock { planes: sb.planes, scale: sb.scale }
         });
         PreparedInputs { blocks, method: method.clone(), m, k: a.cols, l_m }
     }
 
     /// Matmul against pre-programmed weights (the NN hot path): slices `a`
-    /// per call, then dispatches into the fused slice-plane pipeline (see
+    /// per call, then dispatches into the stacked slice-plane pipeline (see
     /// module §Perf). `tag` decorrelates per-read conductance fluctuation
     /// ([`crate::device::DeviceSpec::read_cv`]) between calls; with the
     /// default `read_cv = 0` reads are deterministic and the tag is inert.
@@ -720,8 +736,8 @@ impl DotProductEngine {
 
     /// `matmul_prepared_inputs` with explicit parallelism control: hot
     /// loops already parallel at an outer level (Monte-Carlo cycles) pass
-    /// `parallel = false` so neither the pair loop nor the in-pair GEMM
-    /// bands spawn nested thread scopes (§Perf).
+    /// `parallel = false` so neither the pair loop nor the in-pair 2-D
+    /// GEMM grid spawns nested thread scopes (§Perf).
     pub(crate) fn matmul_prepared_inputs_with(
         &self,
         a: &PreparedInputs,
@@ -754,15 +770,19 @@ impl DotProductEngine {
         let plan = SlicePairPlan::new(l_m, &a.method.spec, &w.method.spec);
         let a_blocks = &a.blocks;
 
-        // Parallelize across (kb, nb) array pairs when each carries real
-        // work; a lone big pair instead band-parallelizes its fused GEMM
-        // inside `pair_contribution_fused` — one level of parallelism
-        // either way, no nested spawn (§Perf).
+        // Parallelize across (kb, nb) array pairs when the grid carries
+        // enough *total* work (the old per-pair threshold starved the pool
+        // on small-m grids: an m = 1 matmul over many blocks has lots of
+        // cheap pairs); a lone/tiny grid instead 2-D-schedules each pair's
+        // stacked GEMM over (row-band × panel-group) items inside
+        // `pair_contribution_stacked` — one level of parallelism either
+        // way, no nested spawn (§Perf).
         let per_pair_work =
             m * l_m * l_n * plan.a.num_slices() * plan.w.num_slices();
         let tasks = grid.pair_count();
-        let across_pairs = parallel && tasks >= 2 && per_pair_work >= (1 << 19);
-        let band_parallel = parallel && !across_pairs;
+        let across_pairs =
+            parallel && tasks >= 2 && per_pair_work.saturating_mul(tasks) >= (1 << 19);
+        let grid_parallel = parallel && !across_pairs;
 
         // One task per (kb, nb) array pair: returns the scaled block
         // contribution, or `None` for zero-scale pairs (all-zero block of
@@ -778,7 +798,7 @@ impl DotProductEngine {
             Some(if self.cfg.use_circuit {
                 self.pair_contribution_circuit(ab, wb, &plan, &adc, task, tag)
             } else {
-                self.pair_contribution_fused(ab, wb, &plan, &adc, task, tag, band_parallel)
+                self.pair_contribution_stacked(ab, wb, &plan, &adc, task, tag, grid_parallel)
             })
         };
         let pair_results: Vec<Option<Matrix>> = if across_pairs {
@@ -808,13 +828,17 @@ impl DotProductEngine {
         AdcChain::sample(&ni.adc, self.cfg.array.1, &mut rng)
     }
 
-    /// The fused slice-plane contribution of one (k-block, n-block) array
-    /// pair: one packed GEMM per input slice producing all `S_w`
-    /// weight-slice partials as column stripes, read-noised (when
-    /// configured), ADC'd, and recombined in place. The fused scratch is
-    /// allocated once and reused across input slices (§Perf).
+    /// The stacked slice-plane contribution of one (k-block, n-block)
+    /// array pair: **one** stacked GEMM over the byte-packed input planes
+    /// produces every `(sa, sw)` partial — input slice `sa`'s row block of
+    /// the stacked output, column stripe `sw` within it — then each stripe
+    /// is read-noised (when configured), ADC'd, and recombined in the same
+    /// ascending (sa, sw) order as the per-pair reference, so the
+    /// accumulation is bit-identical (§Perf). When `grid_parallel` is set
+    /// and the GEMM is big enough, it runs as 2-D (row-band ×
+    /// panel-group) work items on the atomic-counter scheduler.
     #[allow(clippy::too_many_arguments)]
-    fn pair_contribution_fused(
+    fn pair_contribution_stacked(
         &self,
         ab: &InputBlock,
         wb: &PreparedBlock,
@@ -822,33 +846,39 @@ impl DotProductEngine {
         adc: &Adc,
         blk: usize,
         tag: u64,
-        band_parallel: bool,
+        grid_parallel: bool,
     ) -> Matrix {
         let l_n = self.cfg.array.1;
-        let m = ab.slices[0].rows;
+        let m = ab.planes.rows;
+        let l_m = ab.planes.cols;
+        let sa_n = plan.a.num_slices();
         let sw_n = plan.w.num_slices();
         let wide = sw_n * l_n;
         let chain = &wb.chain;
         let read_noise = self.read_noise_active();
         let mut block_acc = Matrix::zeros(m, l_n);
-        let mut fused_out = vec![0.0f64; m * wide];
-        for (sa, a_plane) in ab.slices.iter().enumerate() {
-            let l_m = a_plane.cols;
-            if band_parallel && m * l_m * wide >= (1 << 21) {
-                const BAND: usize = 32;
-                par_chunks_mut(&mut fused_out, BAND * wide, |bi, chunk| {
-                    matmul_packed_rows_into(a_plane, bi * BAND, chunk.len() / wide, &wb.packed, chunk);
-                });
-            } else {
-                matmul_packed_into(a_plane, &wb.packed, &mut fused_out);
-            }
+        let mut stacked_out = vec![0.0f64; sa_n * m * wide];
+        if grid_parallel && sa_n * m * l_m * wide >= (1 << 21) {
+            matmul_packed_stacked_2d(&ab.planes, &wb.packed, &mut stacked_out);
+        } else {
+            matmul_packed_stacked_into(&ab.planes, &wb.packed, &mut stacked_out);
+        }
+        for sa in 0..sa_n {
+            // Input slice sa's rows of the stacked output (slice-major).
+            let sa_out = &mut stacked_out[sa * m * wide..(sa + 1) * m * wide];
             if !self.cfg.noise_free {
                 for sw in 0..sw_n {
                     let stripe = Stripe { rows: m, stride: wide, c0: sw * l_n, width: l_n };
                     if read_noise {
-                        self.apply_read_noise(&mut fused_out, stripe, blk, sa, sw, tag);
+                        self.apply_read_noise(sa_out, stripe, blk, sa, sw, tag);
                     }
-                    self.adc_readout(adc, &mut fused_out, stripe, plan.worst_scale[plan.idx(sa, sw)], chain);
+                    self.adc_readout(
+                        adc,
+                        sa_out,
+                        stripe,
+                        plan.worst_scale[plan.idx(sa, sw)],
+                        chain,
+                    );
                 }
             }
             // Shift-add recombination over the stripes, in the same
@@ -857,7 +887,7 @@ impl DotProductEngine {
             for sw in 0..sw_n {
                 let wgt = plan.pair_weight[plan.idx(sa, sw)];
                 for i in 0..m {
-                    let src = &fused_out[i * wide + sw * l_n..i * wide + (sw + 1) * l_n];
+                    let src = &sa_out[i * wide + sw * l_n..i * wide + (sw + 1) * l_n];
                     let dst = &mut block_acc.data[i * l_n..(i + 1) * l_n];
                     for (o, &p) in dst.iter_mut().zip(src) {
                         *o += wgt * p;
@@ -886,16 +916,19 @@ impl DotProductEngine {
         tag: u64,
     ) -> Matrix {
         let l_n = self.cfg.array.1;
-        let m = ab.slices[0].rows;
+        let m = ab.planes.rows;
         let sw_n = plan.w.num_slices();
         let chain = &wb.chain;
         let read_noise = self.read_noise_active();
         let mut block_acc = Matrix::zeros(m, l_n);
-        // Unpack each weight plane once per pair (not once per slice pair).
+        // Unpack each weight plane once per pair (not once per slice pair);
+        // input planes materialize f64 on demand (the circuit solve is the
+        // bottleneck here, not the conversion).
         let w_planes: Vec<Matrix> = (0..sw_n).map(|sw| wb.plane(sw, l_n)).collect();
-        for (sa, a_plane) in ab.slices.iter().enumerate() {
+        for sa in 0..ab.planes.num_planes() {
+            let a_plane = ab.planes.plane(sa);
             for (sw, w_plane) in w_planes.iter().enumerate() {
-                let mut partial = self.circuit_mvm(a_plane, w_plane, plan.a.max_digit[sa]);
+                let mut partial = self.circuit_mvm(&a_plane, w_plane, plan.a.max_digit[sa]);
                 if !self.cfg.noise_free {
                     if read_noise {
                         self.apply_read_noise(
@@ -939,7 +972,7 @@ impl DotProductEngine {
     /// ([`crate::device::DeviceSpec::read_cv`]) on one readout stripe,
     /// applied before the ADC. One RNG stream per (array pair, input
     /// slice, weight slice), seeded by the call `tag` and drawn row-major
-    /// over the stripe — identical between the fused pipeline, the circuit
+    /// over the stripe — identical between the stacked pipeline, the circuit
     /// path, and the reference oracle, and independent of pair scheduling.
     fn apply_read_noise(
         &self,
@@ -1026,10 +1059,13 @@ impl DotProductEngine {
     }
 
     /// Reference per-slice-pair implementation — the pre-fusion pipeline,
-    /// retained as the correctness oracle: the fused path must be
-    /// bit-identical to this for every spec/policy/shape.
-    #[cfg(test)]
-    pub(crate) fn matmul_prepared_reference(
+    /// retained as the correctness oracle: the stacked path must be
+    /// bit-identical to this for every spec/policy/shape. Hidden rather
+    /// than `#[cfg(test)]` so `benches/gemm_kernel.rs` can hard-assert the
+    /// bit-identity contract outside the test harness; not part of the
+    /// public API.
+    #[doc(hidden)]
+    pub fn matmul_prepared_reference(
         &self,
         a: &Matrix,
         w: &PreparedWeights,
@@ -1056,11 +1092,15 @@ impl DotProductEngine {
                 }
                 let chain = &wb.chain;
                 let mut block_acc = Matrix::zeros(m, l_n);
-                for (sa, a_plane) in ab.slices.iter().enumerate() {
+                for sa in 0..ab.planes.num_planes() {
+                    // The oracle runs on f64 materializations of the byte
+                    // planes — `d as f64` is exact, so this is the same
+                    // operand the stacked kernel sees.
+                    let a_plane = ab.planes.plane(sa);
                     for sw in 0..plan.w.num_slices() {
                         let w_plane = wb.plane(sw, l_n);
                         let mut partial = if self.cfg.use_circuit {
-                            self.circuit_mvm(a_plane, &w_plane, plan.a.max_digit[sa])
+                            self.circuit_mvm(&a_plane, &w_plane, plan.a.max_digit[sa])
                         } else {
                             a_plane.matmul(&w_plane)
                         };
@@ -1365,7 +1405,7 @@ mod tests {
     #[test]
     fn fused_band_parallel_matches_reference() {
         // m large enough (with a single (kb, nb) task) to trip the in-pair
-        // row-band parallel GEMM: results must stay bit-identical.
+        // 2-D grid-scheduled GEMM: results must stay bit-identical.
         let e = DotProductEngine::new(DpeConfig::default(), 9);
         let med = SliceMethod::int(SliceSpec::int8());
         let a = rand_mat(300, 64, 501);
@@ -1374,6 +1414,62 @@ mod tests {
         let fused = e.matmul_prepared(&a, &w, &med, 0);
         let oracle = e.matmul_prepared_reference(&a, &w, &med, 0);
         assert_eq!(fused.data, oracle.data);
+    }
+
+    #[test]
+    fn single_sample_wide_layer_matches_reference() {
+        // The 2-D scheduling target shape: m = 1 over a wide layer (many
+        // (kb, nb) pairs, each with trivial per-pair work). The total-work
+        // dispatch must still be bit-identical to the serial oracle.
+        let e = DotProductEngine::new(DpeConfig::default(), 15);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(1, 512, 511);
+        let b = rand_mat(512, 512, 512);
+        let w = e.prepare_weights(&b, &med, 0);
+        let fused = e.matmul_prepared(&a, &w, &med, 0);
+        let oracle = e.matmul_prepared_reference(&a, &w, &med, 0);
+        assert_eq!(fused.data, oracle.data);
+    }
+
+    #[test]
+    fn prop_stacked_pipeline_matches_oracle_across_matrix() {
+        // Satellite sweep: the stacked GEMM path must be bit-identical to
+        // the per-slice-pair oracle across int4/int8/fp16 × all three ADC
+        // policies × read-noise on/off × m ∈ {1, MR−1, MR, 33}, on random
+        // ragged (k, n).
+        use crate::tensor::GEMM_MR;
+        let methods = [
+            SliceMethod::int(SliceSpec::int4()),
+            SliceMethod::int(SliceSpec::int8()),
+            SliceMethod::fp(SliceSpec::fp16()),
+        ];
+        let policies = [AdcPolicy::WorstCase, AdcPolicy::Calibrated, AdcPolicy::IntegerSnap];
+        let ms = [1usize, GEMM_MR - 1, GEMM_MR, 33];
+        crate::util::prop::prop_check("stacked pipeline == per-slice oracle", 40, |g| {
+            let method = g.choose(&methods).clone();
+            let adc_policy = *g.choose(&policies);
+            let read_noise = g.bool();
+            let m = *g.choose(&ms);
+            let k = g.usize_in(1..=100);
+            let n = g.usize_in(1..=100);
+            let mut cfg = DpeConfig { adc_policy, ..DpeConfig::default() };
+            if read_noise {
+                cfg.device.read_cv = 0.03;
+            }
+            let e = DotProductEngine::new(cfg, 41 + g.case as u64);
+            let a = Matrix::from_vec(m, k, g.vec_f64(m * k, -1.0..1.0));
+            let b = Matrix::from_vec(k, n, g.vec_f64(k * n, -1.0..1.0));
+            let w = e.prepare_weights(&b, &method, 1);
+            let fused = e.matmul_prepared(&a, &w, &method, 3);
+            let oracle = e.matmul_prepared_reference(&a, &w, &method, 3);
+            if fused.data != oracle.data {
+                return Err(format!(
+                    "{m}x{k}x{n} widths={:?} policy={adc_policy:?} read_noise={read_noise}",
+                    method.spec.widths
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

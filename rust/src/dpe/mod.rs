@@ -6,8 +6,9 @@
 //!   FP shared-exponent pre-alignment;
 //! - [`blocks`] — block matrix mapping onto fixed-size arrays;
 //! - [`engine`] — the DPE itself ([`DotProductEngine`]), with weight
-//!   preparation for reuse across calls and the fused slice-plane GEMM
-//!   pipeline on the matmul hot path (see `engine` §Perf);
+//!   preparation for reuse across calls and the stacked slice-plane GEMM
+//!   pipeline over byte-packed digit planes on the matmul hot path (see
+//!   `engine` §Perf);
 //! - [`montecarlo`] — the Monte-Carlo nonideality analysis driver (Fig 12)
 //!   plus the fault-injection accuracy/yield sweep
 //!   ([`montecarlo::sweep_faults`], backing the `fig_faults` experiment;
@@ -22,4 +23,4 @@ pub mod slicing;
 pub use engine::{
     DotProductEngine, DpeConfig, PreparedInputs, PreparedWeights, SliceMethod, WeightTemplate,
 };
-pub use slicing::{DataMode, SliceSpec, SliceTables};
+pub use slicing::{quantize_slice_block, DataMode, SliceSpec, SliceTables, SlicedBlock};

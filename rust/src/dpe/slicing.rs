@@ -16,7 +16,7 @@
 //!   (`s = 2^e / (2^(B−1))`) — cheaper hardware, up to one bit worse, which
 //!   is precisely the quantization-vs-pre-alignment gap of Fig 12.
 
-use crate::tensor::Matrix;
+use crate::tensor::{DigitPlanes, Matrix};
 
 /// How continuous values map to integers before slicing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,7 +66,9 @@ impl SliceSpec {
     }
 
     /// Signed weight of slice `k` in the recombination:
-    /// sign slice → `−2^shift`, others → `+2^shift`.
+    /// sign slice → `−2^shift`, others → `+2^shift`. Rebuilds the shift
+    /// list per call — loops over every slice should use
+    /// [`SliceSpec::tables`] instead.
     pub fn weight(&self, k: usize) -> f64 {
         let shift = self.shifts()[k];
         let w = (shift as f64).exp2();
@@ -134,17 +136,27 @@ impl SliceSpec {
 
     /// Precompute the per-slice lookup tables the matmul hot paths need
     /// (signed shift-add weights and per-slice digit maxima), instead of
-    /// re-deriving them per call site.
+    /// re-deriving them per call site. The shift list is computed **once**
+    /// here — per-slice [`SliceSpec::weight`] calls would rebuild it per
+    /// slice, making every table O(S²) allocations.
     pub fn tables(&self) -> SliceTables {
+        let shifts = self.shifts();
         SliceTables {
-            weights: (0..self.num_slices()).map(|k| self.weight(k)).collect(),
+            weights: shifts
+                .iter()
+                .enumerate()
+                .map(|(k, &sh)| {
+                    let w = (sh as f64).exp2();
+                    if self.signed && k == 0 { -w } else { w }
+                })
+                .collect(),
             max_digit: self.widths.iter().map(|&w| ((1u64 << w) - 1) as f64).collect(),
         }
     }
 }
 
 /// Precomputed per-slice tables shared by the DPE matmul entry points
-/// (fused pipeline, circuit path, and weight preparation): the signed
+/// (stacked pipeline, circuit path, and weight preparation): the signed
 /// recombination weight and the largest digit value of each slice.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SliceTables {
@@ -168,14 +180,11 @@ pub struct QuantizedBlock {
     pub scale: f64,
 }
 
-/// Quantize a block to the spec's integer range using `mode`.
-pub fn quantize_block(x: &Matrix, spec: &SliceSpec, mode: DataMode) -> QuantizedBlock {
-    let max_abs = x.abs_max();
-    if max_abs == 0.0 {
-        return QuantizedBlock { q: Matrix::zeros(x.rows, x.cols), scale: 0.0 };
-    }
-    let max_int = spec.max_int() as f64;
-    let scale = match mode {
+/// The per-block scale for `mode` given the block's abs-max — the single
+/// source of truth shared by [`quantize_block`] and
+/// [`quantize_slice_block`]. `max_abs` must be nonzero.
+fn block_scale(max_abs: f64, max_int: f64, mode: DataMode) -> f64 {
+    match mode {
         DataMode::Quantize => max_abs / max_int,
         DataMode::PreAlign => {
             // Shared exponent: smallest power of two ≥ max_abs, then the
@@ -183,18 +192,38 @@ pub fn quantize_block(x: &Matrix, spec: &SliceSpec, mode: DataMode) -> Quantized
             let e = max_abs.log2().ceil();
             e.exp2() / (max_int + 1.0)
         }
-    };
+    }
+}
+
+/// Map one continuous value to its block integer (round, then clamp to the
+/// spec range) — shared by both quantize paths so they cannot drift.
+#[inline]
+fn quantize_value(v: f64, scale: f64, min_int: f64, max_int: f64) -> f64 {
+    (v / scale).round().clamp(min_int, max_int)
+}
+
+/// Quantize a block to the spec's integer range using `mode`.
+pub fn quantize_block(x: &Matrix, spec: &SliceSpec, mode: DataMode) -> QuantizedBlock {
+    let max_abs = x.abs_max();
+    if max_abs == 0.0 {
+        return QuantizedBlock { q: Matrix::zeros(x.rows, x.cols), scale: 0.0 };
+    }
+    let max_int = spec.max_int() as f64;
+    let scale = block_scale(max_abs, max_int, mode);
     let min_int = spec.min_int() as f64;
-    let q = x.map(|v| (v / scale).round().clamp(min_int, max_int));
+    let q = x.map(|v| quantize_value(v, scale, min_int, max_int));
     QuantizedBlock { q, scale }
 }
 
 /// Slice an integer matrix (two's complement) into per-slice digit
-/// matrices, MSB first. Every digit is in `[0, 2^width_k)`.
+/// matrices, MSB first. Every digit is in `[0, 2^width_k)`. Cold-path /
+/// test form — the matmul pipeline uses [`quantize_slice_block`], which
+/// fills byte-packed [`DigitPlanes`] in the same pass as quantization.
 pub fn slice_digits(q: &Matrix, spec: &SliceSpec) -> Vec<Matrix> {
     let total = spec.total_bits() as u32;
     let modulus = 1i64 << total;
     let shifts = spec.shifts();
+    let masks: Vec<u64> = spec.widths.iter().map(|&w| (1u64 << w) - 1).collect();
     let mut out: Vec<Matrix> =
         spec.widths.iter().map(|_| Matrix::zeros(q.rows, q.cols)).collect();
     for (idx, &v) in q.data.iter().enumerate() {
@@ -205,22 +234,65 @@ pub fn slice_digits(q: &Matrix, spec: &SliceSpec) -> Vec<Matrix> {
         );
         // Two's complement representation.
         let u = vi.rem_euclid(modulus) as u64;
-        for (k, &w) in spec.widths.iter().enumerate() {
-            let mask = (1u64 << w) - 1;
-            let digit = (u >> shifts[k]) & mask;
-            out[k].data[idx] = digit as f64;
+        for (k, plane) in out.iter_mut().enumerate() {
+            plane.data[idx] = ((u >> shifts[k]) & masks[k]) as f64;
         }
     }
     out
+}
+
+/// A quantized block already sliced into byte-packed digit planes plus the
+/// scale recovering the original data — the fused output of
+/// [`quantize_slice_block`].
+#[derive(Debug, Clone)]
+pub struct SlicedBlock {
+    pub planes: DigitPlanes,
+    pub scale: f64,
+}
+
+/// Fused quantize + slice: one pass over the data maps each element to its
+/// integer value and writes all of its digits straight into byte-packed
+/// [`DigitPlanes`] — no intermediate integer matrix, no per-element
+/// re-derivation of shifts and masks. Digit-for-digit (and
+/// scale-for-scale) identical to
+/// `slice_digits(&quantize_block(x, spec, mode).q, spec)`: the per-element
+/// arithmetic is the same `round → clamp → two's complement → shift/mask`
+/// sequence. The standalone functions remain for cold paths and tests.
+pub fn quantize_slice_block(x: &Matrix, spec: &SliceSpec, mode: DataMode) -> SlicedBlock {
+    let n_slices = spec.num_slices();
+    let max_abs = x.abs_max();
+    if max_abs == 0.0 {
+        return SlicedBlock { planes: DigitPlanes::zeroed(n_slices, x.rows, x.cols), scale: 0.0 };
+    }
+    let max_int = spec.max_int() as f64;
+    let scale = block_scale(max_abs, max_int, mode);
+    let min_int = spec.min_int() as f64;
+    let total = spec.total_bits() as u32;
+    let modulus = 1i64 << total;
+    let shifts = spec.shifts();
+    let masks: Vec<u64> = spec.widths.iter().map(|&w| (1u64 << w) - 1).collect();
+    let mut planes = DigitPlanes::zeroed(n_slices, x.rows, x.cols);
+    for i in 0..x.rows {
+        for (kk, &v) in x.row(i).iter().enumerate() {
+            let q = quantize_value(v, scale, min_int, max_int);
+            let u = (q as i64).rem_euclid(modulus) as u64;
+            for s in 0..n_slices {
+                // Slice widths are 1..=8 bits, so every digit fits a u8.
+                planes.set(s, i, kk, ((u >> shifts[s]) & masks[s]) as u8);
+            }
+        }
+    }
+    SlicedBlock { planes, scale }
 }
 
 /// Recombine digit matrices back to the integer matrix (shift-and-add with
 /// the sign-slice weight). Inverse of [`slice_digits`].
 pub fn reconstruct(digits: &[Matrix], spec: &SliceSpec) -> Matrix {
     assert_eq!(digits.len(), spec.num_slices());
+    let tables = spec.tables();
     let mut out = Matrix::zeros(digits[0].rows, digits[0].cols);
     for (k, d) in digits.iter().enumerate() {
-        let w = spec.weight(k);
+        let w = tables.weights[k];
         for (o, &v) in out.data.iter_mut().zip(&d.data) {
             *o += w * v;
         }
@@ -382,6 +454,86 @@ mod tests {
     #[should_panic(expected = "sign slice")]
     fn signed_spec_requires_sign_slice() {
         SliceSpec::new(&[2, 2], true);
+    }
+
+    /// A random slice spec: signed (1-bit sign slice first) or unsigned,
+    /// 1–5 further slices of 1..=8 bits.
+    fn random_spec(g: &mut crate::util::prop::Gen) -> SliceSpec {
+        let signed = g.bool();
+        let mut widths = vec![if signed { 1 } else { g.usize_in(1..=8) }];
+        for _ in 0..g.usize_in(1..=4) {
+            widths.push(g.usize_in(1..=8));
+        }
+        SliceSpec::new(&widths, signed)
+    }
+
+    #[test]
+    fn prop_digit_planes_roundtrip_against_slice_digits() {
+        // Byte-packed DigitPlanes must reproduce the f64 slice_digits
+        // planes exactly for random specs × ragged shapes, and the sign
+        // mask must mirror plane-0 nonzeros exactly (write-once build).
+        prop_check("DigitPlanes round-trips slice_digits", 120, |g| {
+            let spec = random_spec(g);
+            let rows = g.usize_in(1..=9);
+            let cols = g.usize_in(1..=130);
+            let vals: Vec<f64> = (0..rows * cols)
+                .map(|_| g.i64_in(spec.min_int()..=spec.max_int()) as f64)
+                .collect();
+            let q = Matrix::from_vec(rows, cols, vals);
+            let slices = slice_digits(&q, &spec);
+            let dp = DigitPlanes::from_slices(&slices);
+            for (s, sl) in slices.iter().enumerate() {
+                if &dp.plane(s) != sl {
+                    return Err(format!("widths {:?}: plane {s} differs", spec.widths));
+                }
+            }
+            // The sign mask must mirror plane-0 nonzeros exactly (the
+            // kernel's zero-skip correctness bound: no missing bits).
+            for i in 0..rows {
+                let mrow = dp.sign_row_mask(i);
+                for kk in 0..cols {
+                    let bit = (mrow[kk >> 6] >> (kk & 63)) & 1 == 1;
+                    if bit != (slices[0].at(i, kk) != 0.0) {
+                        return Err(format!("widths {:?}: mask bit ({i},{kk})", spec.widths));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fused_quantize_slice_matches_two_pass() {
+        // The fused single-pass quantize+slice must be scale- and
+        // digit-identical to quantize_block followed by slice_digits, for
+        // both data modes and random specs × ragged shapes.
+        prop_check("quantize_slice_block == quantize_block + slice_digits", 120, |g| {
+            let spec = random_spec(g);
+            let mode = *g.choose(&[DataMode::Quantize, DataMode::PreAlign]);
+            let rows = g.usize_in(1..=8);
+            let cols = g.usize_in(1..=90);
+            // Mix in an occasional all-zero block (scale-0 path).
+            let x = if g.usize_in(0..=19) == 0 {
+                Matrix::zeros(rows, cols)
+            } else {
+                Matrix::from_vec(rows, cols, g.vec_f64_multiscale(rows * cols))
+            };
+            let fused = quantize_slice_block(&x, &spec, mode);
+            let qb = quantize_block(&x, &spec, mode);
+            if fused.scale.to_bits() != qb.scale.to_bits() {
+                return Err(format!(
+                    "widths {:?} {mode:?}: scale {} vs {}",
+                    spec.widths, fused.scale, qb.scale
+                ));
+            }
+            let slices = slice_digits(&qb.q, &spec);
+            for (s, sl) in slices.iter().enumerate() {
+                if &fused.planes.plane(s) != sl {
+                    return Err(format!("widths {:?} {mode:?}: plane {s} differs", spec.widths));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

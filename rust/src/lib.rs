@@ -21,10 +21,13 @@
 //!   builds); without it the runtime compiles as a stub and everything
 //!   routes through the native engine.
 //!
-//! The DPE hot path uses the fused slice-plane GEMM pipeline — one packed
-//! GEMM per (input slice, array block) covering all weight digit planes at
-//! once; see `dpe::engine` §Perf and `tensor` §Perf for the design and
-//! `benches/table3_throughput.rs` (`BENCH_table3.json`) for the tracked
+//! The DPE hot path uses the stacked slice-plane GEMM pipeline — input
+//! digits live in byte-packed [`tensor::DigitPlanes`] and **one** packed
+//! GEMM per array block covers every (input slice, weight slice) pair,
+//! 2-D (row-band × panel-group) scheduled when a single block must fill
+//! the pool; see `dpe::engine` §Perf and `tensor` §Perf for the design
+//! and `benches/table3_throughput.rs` (`BENCH_table3.json`) plus
+//! `benches/gemm_kernel.rs` (`BENCH_gemm.json`) for the tracked
 //! throughput numbers. On top of it, the datapath splits into cached
 //! deterministic halves and a cheap stochastic tail
 //! ([`dpe::WeightTemplate`], [`dpe::PreparedInputs`]): loops that

@@ -188,6 +188,10 @@ impl MemCore {
 
     /// Hardware matmul of the full input (engine-internal parallelism) —
     /// the eval/training forward path. `None` when the layer is digital.
+    /// Small-`m` calls (single-sample [`crate::arch::MappedModel::infer`])
+    /// still fill the worker pool: the DPE dispatches over (kb, nb) array
+    /// pairs by total work, and a lone big pair 2-D-schedules its stacked
+    /// GEMM over (row-band × panel-group) items (`dpe::engine` §Perf).
     pub fn matmul_eval(&self, x: &Matrix) -> Option<Matrix> {
         let hw = self.hw.as_ref()?;
         let prep = self.prepared.as_ref()?;

@@ -309,7 +309,7 @@ impl Layer for Conv2dMem {
             self.core.matmul_from_cache().expect("cache filled above")
         } else {
             // Stack columns: (B·OH·OW, patch) then one DPE matmul routed
-            // through the fused slice-plane pipeline.
+            // through the stacked slice-plane pipeline.
             let (cols_t, stacked) = self.im2col_stacked(x);
             let y = match self.core.matmul_eval(&stacked) {
                 Some(y) => y,

@@ -1,42 +1,64 @@
 //! Dense linear-algebra substrate: a row-major `f64` matrix with the
 //! operations the simulator needs (blocked matmul, transpose, padding,
-//! block views, norms), a packed-panel GEMM micro-kernel for the DPE's
-//! fused slice-plane pipeline, plus an N-d `Tensor` used by the NN layers.
+//! block views, norms), byte-packed digit planes + a packed-panel GEMM
+//! micro-kernel for the DPE's stacked slice-plane pipeline, plus an N-d
+//! `Tensor` used by the NN layers.
 //!
 //! Built from scratch — the offline registry has no ndarray/nalgebra.
 //!
 //! # §Perf
 //!
-//! Two GEMM paths coexist:
+//! Three GEMM paths coexist:
 //!
 //! - [`Matrix::matmul`] — the general-purpose i-k-j kernel (unit-stride
 //!   inner loops over both B and C rows), parallel over row bands only
 //!   when the work amortizes thread spawn (nested sub-millisecond
 //!   parallelism was a 1.7× end-to-end regression).
-//! - [`PackedB`] + [`matmul_packed_into`] — the DPE hot path. B is packed
-//!   **once per prepared-weight lifetime** into column panels of
-//!   [`GEMM_NR`] (k-major inside each panel, zero-padded edge panel), and
-//!   the kernel computes register tiles of `GEMM_MR × GEMM_NR`
+//! - [`PackedB`] + [`matmul_packed_into`] — the packed-panel micro-kernel.
+//!   B is packed **once per prepared-weight lifetime** into column panels
+//!   of [`GEMM_NR`] (k-major inside each panel, zero-padded edge panel),
+//!   and the kernel computes register tiles of `GEMM_MR × GEMM_NR`
 //!   accumulators with the packed panel streamed contiguously. Because a
 //!   prepared weight block is reused across every batch/epoch, the packing
 //!   cost is paid once while every `matmul_prepared` call gets the
 //!   cache-friendly layout for free. The caller supplies the output
 //!   buffer, so repeated calls reuse one scratch allocation instead of a
-//!   `Matrix::zeros` per partial (the old per-slice-pair path's dominant
-//!   overhead, see `dpe::engine` §Perf).
+//!   `Matrix::zeros` per partial.
+//! - [`DigitPlanes`] + [`matmul_packed_stacked_into`] — the DPE hot path.
+//!   All `S_a` input digit planes of one k-block live in a single
+//!   byte-packed buffer (slice-major u8 rows — digits are `< 2^8` by
+//!   construction, so the f64 planes were an 8× memory tax), and one call
+//!   multiplies **every** plane against the packed weight block: the loop
+//!   order is panel-outer / slice-inner, so each B panel is loaded once
+//!   per block instead of once per (slice, block) — the `S_a`× cache-reuse
+//!   win of the stacked layout. Digits convert u8 → f64 in-register,
+//!   which is exact (every integer `< 2^8` is representable in f64), so
+//!   stacking changes nothing about the arithmetic. Plane 0 — the 1-bit,
+//!   mostly-zero sign slice of signed specs — additionally carries a
+//!   per-row nonzero bitmask; its zero-skip is a set-bit iteration over
+//!   mask words instead of per-digit compares. For large or wide
+//!   operands, [`matmul_packed_stacked_2d`] runs the same kernel as 2-D
+//!   (row-band × panel-group) work items on the lock-free atomic-counter
+//!   scheduler: a band-only split starves the pool when `m` is small
+//!   (single-sample inference has exactly one band), while the 2-D grid
+//!   still has `S_a × panel-groups` items at `m = 1`.
 //!
-//! Both kernels accumulate each output element along ascending `k` with
+//! All kernels accumulate each output element along ascending `k` with
 //! one multiply-add per step and no FMA contraction, so their results are
-//! bit-identical to each other — the property the DPE's fused-vs-reference
-//! oracle tests rely on. (The `a == 0.0` skips differ between the two
-//! kernels, but adding `±0.0` to an accumulator that is never `-0.0`
-//! cannot change its bits.)
+//! bit-identical to each other — the property the DPE's stacked-vs-
+//! reference oracle tests rely on. (The zero-skips differ between the
+//! kernels — all-zero tile columns, per-digit skips, mask-driven skips —
+//! but a skipped term contributes `a·b` with `a = 0`, i.e. `±0.0`, and
+//! adding `±0.0` to an accumulator that is never `-0.0` cannot change its
+//! bits. Accumulators start at `+0.0` and IEEE round-to-nearest never
+//! produces `-0.0` from a sum of a finite value and its negation, so the
+//! accumulator indeed never holds `-0.0`.)
 
 mod conv;
 
 pub use conv::{col2im_accumulate, conv2d_direct, im2col, Conv2dDims};
 
-use crate::util::parallel::par_chunks_mut;
+use crate::util::parallel::{par_chunks_mut, par_for};
 use crate::util::rng::Pcg64;
 use std::fmt;
 
@@ -434,6 +456,348 @@ pub fn matmul_packed_rows_into(
     }
 }
 
+/// All digit planes of one quantized operand block in byte-packed,
+/// slice-major form: digit `(s, i, kk)` of plane `s` lives at
+/// `data[(s·rows + i)·cols + kk]` as a `u8` (slice digits are `< 2^8` by
+/// construction — slice widths are 1..=8 bits). This is the only retained
+/// form of a prepared input's digit planes: the old `Vec<Matrix>` of f64
+/// planes cost 8× the memory bandwidth on the GEMM hot path (§Perf).
+///
+/// Plane 0 — the 1-bit sign slice of signed specs — additionally carries a
+/// per-row nonzero bitmask so the stacked kernel's zero-skip over the
+/// mostly-zero sign plane is a set-bit iteration instead of per-digit
+/// compares. The mask may over-approximate (a set bit for a zero digit
+/// only adds an exact `±0.0` term) but never under-approximates: builders
+/// start from [`DigitPlanes::zeroed`] and [`DigitPlanes::set`] only sets
+/// bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DigitPlanes {
+    /// Logical rows per plane (the batch dimension `m`).
+    pub rows: usize,
+    /// Columns per plane (the padded contraction width of the k-block).
+    pub cols: usize,
+    /// Number of slice planes (`S_a`).
+    n_planes: usize,
+    data: Vec<u8>,
+    /// Bit `kk & 63` of word `mask[i·mask_words + (kk >> 6)]` is set iff
+    /// digit `(0, i, kk)` was written nonzero.
+    mask: Vec<u64>,
+    mask_words: usize,
+}
+
+impl DigitPlanes {
+    /// An all-zero plane set (every digit 0, every mask bit clear).
+    pub fn zeroed(n_planes: usize, rows: usize, cols: usize) -> Self {
+        assert!(n_planes > 0, "need at least one digit plane");
+        let mask_words = cols.div_ceil(64).max(1);
+        DigitPlanes {
+            rows,
+            cols,
+            n_planes,
+            data: vec![0; n_planes * rows * cols],
+            mask: vec![0; rows * mask_words],
+            mask_words,
+        }
+    }
+
+    pub fn num_planes(&self) -> usize {
+        self.n_planes
+    }
+
+    /// Write digit `(s, i, kk)`. Builders write each position at most
+    /// once starting from [`DigitPlanes::zeroed`]; rewriting a nonzero
+    /// position to zero would leave a stale (but harmless, see the type
+    /// docs) mask bit.
+    #[inline]
+    pub fn set(&mut self, s: usize, i: usize, kk: usize, d: u8) {
+        debug_assert!(s < self.n_planes && i < self.rows && kk < self.cols);
+        self.data[(s * self.rows + i) * self.cols + kk] = d;
+        if s == 0 && d != 0 {
+            self.mask[i * self.mask_words + (kk >> 6)] |= 1u64 << (kk & 63);
+        }
+    }
+
+    #[inline]
+    pub fn digit(&self, s: usize, i: usize, kk: usize) -> u8 {
+        debug_assert!(s < self.n_planes && i < self.rows && kk < self.cols);
+        self.data[(s * self.rows + i) * self.cols + kk]
+    }
+
+    /// Row `i` of plane `s` as raw digits.
+    #[inline]
+    pub fn plane_row(&self, s: usize, i: usize) -> &[u8] {
+        let base = (s * self.rows + i) * self.cols;
+        &self.data[base..base + self.cols]
+    }
+
+    /// The nonzero bitmask of row `i` of plane 0 (`cols.div_ceil(64)`
+    /// words, ascending-`kk` bit order).
+    #[inline]
+    pub(crate) fn sign_row_mask(&self, i: usize) -> &[u64] {
+        &self.mask[i * self.mask_words..(i + 1) * self.mask_words]
+    }
+
+    /// Build from f64 digit planes (the `slice_digits` layout) — tests and
+    /// conversion cold paths. Every value must be an integer in `[0, 256)`.
+    pub fn from_slices(slices: &[Matrix]) -> Self {
+        assert!(!slices.is_empty(), "need at least one digit plane");
+        let (rows, cols) = (slices[0].rows, slices[0].cols);
+        assert!(
+            slices.iter().all(|p| p.rows == rows && p.cols == cols),
+            "digit planes must share one shape"
+        );
+        let mut out = DigitPlanes::zeroed(slices.len(), rows, cols);
+        for (s, plane) in slices.iter().enumerate() {
+            for i in 0..rows {
+                for (kk, &v) in plane.row(i).iter().enumerate() {
+                    debug_assert!(
+                        v >= 0.0 && v < 256.0 && v.fract() == 0.0,
+                        "digit {v} not a byte"
+                    );
+                    out.set(s, i, kk, v as u8);
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize plane `s` as an f64 matrix — cold paths only (the
+    /// circuit solver and the reference oracle). `d as f64` is exact for
+    /// every byte value.
+    pub fn plane(&self, s: usize) -> Matrix {
+        assert!(s < self.n_planes, "plane index out of range");
+        let base = s * self.rows * self.cols;
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data[base..base + self.rows * self.cols]
+                .iter()
+                .map(|&d| d as f64)
+                .collect(),
+        }
+    }
+
+    /// Rows `[r0, r0 + len)` of every plane (digits and sign masks copied
+    /// verbatim) — the batched-inference row slice.
+    pub fn row_slice(&self, r0: usize, len: usize) -> DigitPlanes {
+        assert!(r0 + len <= self.rows, "row slice {r0}+{len} out of {} rows", self.rows);
+        let mut data = Vec::with_capacity(self.n_planes * len * self.cols);
+        for s in 0..self.n_planes {
+            let base = (s * self.rows + r0) * self.cols;
+            data.extend_from_slice(&self.data[base..base + len * self.cols]);
+        }
+        let mask = self.mask[r0 * self.mask_words..(r0 + len) * self.mask_words].to_vec();
+        DigitPlanes {
+            rows: len,
+            cols: self.cols,
+            n_planes: self.n_planes,
+            data,
+            mask,
+            mask_words: self.mask_words,
+        }
+    }
+}
+
+/// Row-band height of one 2-D stacked-GEMM work item (a multiple of
+/// [`GEMM_MR`] so bands never split a register tile).
+const STACK_BAND: usize = 32;
+/// Packed panels per 2-D stacked-GEMM work item.
+const STACK_PANEL_GROUP: usize = 8;
+
+/// `out = [plane 0; plane 1; …] · B` for every digit plane of `a` in one
+/// pass: output row `s·a.rows + i` is plane `s` row `i` times `B`. `out`
+/// must hold exactly `a.num_planes() · a.rows · packed.n` elements and is
+/// fully overwritten. The loop is panel-outer / slice-inner, so each
+/// packed panel is consumed by every plane's row tiles while L1-hot
+/// (§Perf). Bit-identical to `a.plane(s).matmul_packed(&packed)` per
+/// plane.
+pub fn matmul_packed_stacked_into(a: &DigitPlanes, packed: &PackedB, out: &mut [f64]) {
+    stacked_dims_check(a, packed, out);
+    let panels = packed.n.div_ceil(GEMM_NR);
+    let base = out.as_mut_ptr();
+    for p in 0..panels {
+        for s in 0..a.num_planes() {
+            // SAFETY: out sizing checked above; (s, p) regions are
+            // pairwise disjoint and visited once, serially.
+            unsafe { stacked_region(a, packed, s, 0, a.rows, p, p + 1, base) };
+        }
+    }
+}
+
+/// 2-D scheduled variant of [`matmul_packed_stacked_into`]: the same
+/// kernel, dispatched as (slice × row-band × panel-group) work items on
+/// the lock-free atomic-counter scheduler (`util::parallel::par_for`).
+/// Every output element is computed by exactly one item with the same
+/// ascending-`k` kernel, so the result is bit-identical to the serial
+/// variant regardless of thread count or claim order.
+pub fn matmul_packed_stacked_2d(a: &DigitPlanes, packed: &PackedB, out: &mut [f64]) {
+    stacked_dims_check(a, packed, out);
+    let panels = packed.n.div_ceil(GEMM_NR).max(1);
+    let bands = a.rows.div_ceil(STACK_BAND).max(1);
+    let pgroups = panels.div_ceil(STACK_PANEL_GROUP);
+    let items = a.num_planes() * bands * pgroups;
+    let base = SendPtr(out.as_mut_ptr());
+    par_for(items, |it| {
+        let s = it / (bands * pgroups);
+        let rem = it % (bands * pgroups);
+        let i0 = (rem / pgroups) * STACK_BAND;
+        let p0 = (rem % pgroups) * STACK_PANEL_GROUP;
+        let rh = STACK_BAND.min(a.rows.saturating_sub(i0));
+        let p1 = panels.min(p0 + STACK_PANEL_GROUP);
+        // SAFETY: out sizing checked above; distinct items cover pairwise
+        // disjoint (plane-row-band × panel-group) regions, and par_for
+        // hands each item index to exactly one worker.
+        unsafe { stacked_region(a, packed, s, i0, rh, p0, p1, base.0) };
+    });
+}
+
+fn stacked_dims_check(a: &DigitPlanes, packed: &PackedB, out: &[f64]) {
+    assert_eq!(
+        a.cols, packed.k,
+        "stacked matmul dim mismatch: planes are {}x{}, packed b is {}x{}",
+        a.rows, a.cols, packed.k, packed.n
+    );
+    assert_eq!(
+        out.len(),
+        a.num_planes() * a.rows * packed.n,
+        "stacked matmul output buffer size mismatch"
+    );
+}
+
+/// Raw-pointer wrapper for the disjoint-region writes of the 2-D stacked
+/// GEMM (same pattern as `util::parallel`'s internal scheduler).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Micro-kernel of the stacked digit-plane GEMM: plane `s`, rows
+/// `[i0, i0 + rh)` of that plane, packed panels `[p0, p1)`, written into
+/// the full `(num_planes·rows) × n` row-major output at `out` (plane `s`
+/// row `i` is output row `s·rows + i`). Digits convert u8 → f64
+/// in-register (exact), and each accumulator runs ascending `k` with one
+/// multiply-add per step and no FMA — the bit-identity contract with
+/// [`matmul_packed_rows_into`]. Plane 0 iterates the set bits of the
+/// per-row nonzero masks (still ascending `k`; skipped terms are `±0.0`,
+/// see module §Perf); other planes skip all-zero tile columns like the
+/// f64 kernel.
+///
+/// # Safety
+/// `out` must point to a buffer of `a.num_planes() · a.rows · packed.n`
+/// f64s, and no other thread may concurrently touch the (row, panel)
+/// region this call writes.
+#[allow(clippy::too_many_arguments)]
+unsafe fn stacked_region(
+    a: &DigitPlanes,
+    packed: &PackedB,
+    s: usize,
+    i0: usize,
+    rh: usize,
+    p0: usize,
+    p1: usize,
+    out: *mut f64,
+) {
+    let (k, n) = (packed.k, packed.n);
+    let row_base = s * a.rows;
+    for p in p0..p1 {
+        let j0 = p * GEMM_NR;
+        let w = GEMM_NR.min(n - j0);
+        let bp = &packed.data[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+        let mut i = 0usize;
+        while i + GEMM_MR <= rh {
+            let a0 = a.plane_row(s, i0 + i);
+            let a1 = a.plane_row(s, i0 + i + 1);
+            let a2 = a.plane_row(s, i0 + i + 2);
+            let a3 = a.plane_row(s, i0 + i + 3);
+            let mut c0 = [0.0f64; GEMM_NR];
+            let mut c1 = [0.0f64; GEMM_NR];
+            let mut c2 = [0.0f64; GEMM_NR];
+            let mut c3 = [0.0f64; GEMM_NR];
+            if s == 0 {
+                // Sign plane: walk each tile row's own set bits (ascending
+                // kk — trailing_zeros order), so a row contributes nothing
+                // at its zero digits instead of a `±0.0` add per lane. The
+                // mostly-zero sign plane drops most of its multiply-adds
+                // this way; each output element still accumulates its
+                // nonzero terms along ascending `k`, so bits don't change.
+                for (r, (ar, c)) in
+                    [(a0, &mut c0), (a1, &mut c1), (a2, &mut c2), (a3, &mut c3)]
+                        .into_iter()
+                        .enumerate()
+                {
+                    let mrow = a.sign_row_mask(i0 + i + r);
+                    for (wi, &wd) in mrow.iter().enumerate() {
+                        let mut word = wd;
+                        while word != 0 {
+                            let kk = (wi << 6) + word.trailing_zeros() as usize;
+                            word &= word - 1;
+                            let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                            let x = ar[kk] as f64;
+                            for jj in 0..GEMM_NR {
+                                c[jj] += x * brow[jj];
+                            }
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    let (d0, d1, d2, d3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                    if (d0 | d1 | d2 | d3) == 0 {
+                        continue;
+                    }
+                    let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                    let (x0, x1, x2, x3) = (d0 as f64, d1 as f64, d2 as f64, d3 as f64);
+                    for jj in 0..GEMM_NR {
+                        let bv = brow[jj];
+                        c0[jj] += x0 * bv;
+                        c1[jj] += x1 * bv;
+                        c2[jj] += x2 * bv;
+                        c3[jj] += x3 * bv;
+                    }
+                }
+            }
+            for (r, c) in [(0usize, &c0), (1, &c1), (2, &c2), (3, &c3)] {
+                let dst = out.add((row_base + i0 + i + r) * n + j0);
+                std::ptr::copy_nonoverlapping(c.as_ptr(), dst, w);
+            }
+            i += GEMM_MR;
+        }
+        // Remainder rows one at a time (same ascending-k accumulation).
+        while i < rh {
+            let ar = a.plane_row(s, i0 + i);
+            let mut c = [0.0f64; GEMM_NR];
+            if s == 0 {
+                let mrow = a.sign_row_mask(i0 + i);
+                for (wi, &wd) in mrow.iter().enumerate() {
+                    let mut word = wd;
+                    while word != 0 {
+                        let kk = (wi << 6) + word.trailing_zeros() as usize;
+                        word &= word - 1;
+                        let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                        let x = ar[kk] as f64;
+                        for jj in 0..GEMM_NR {
+                            c[jj] += x * brow[jj];
+                        }
+                    }
+                }
+            } else {
+                for (kk, &d) in ar.iter().enumerate() {
+                    if d == 0 {
+                        continue;
+                    }
+                    let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                    let x = d as f64;
+                    for jj in 0..GEMM_NR {
+                        c[jj] += x * brow[jj];
+                    }
+                }
+            }
+            let dst = out.add((row_base + i0 + i) * n + j0);
+            std::ptr::copy_nonoverlapping(c.as_ptr(), dst, w);
+            i += 1;
+        }
+    }
+}
+
 /// N-d tensor (row-major) for NN activations; thin wrapper sharing the
 /// `Matrix` storage conventions.
 #[derive(Clone, Debug)]
@@ -736,5 +1100,141 @@ mod tests {
         let packed = PackedB::pack(&Matrix::zeros(4, 2));
         let mut out = vec![0.0; 4];
         matmul_packed_into(&a, &packed, &mut out);
+    }
+
+    /// Digit-plane-shaped random planes: plane 0 is a sparse 0/1 sign
+    /// plane, later planes hold small digits with many zeros.
+    fn random_digit_planes(
+        n_planes: usize,
+        rows: usize,
+        cols: usize,
+        rng: &mut Pcg64,
+    ) -> Vec<Matrix> {
+        (0..n_planes)
+            .map(|s| {
+                Matrix::from_fn(rows, cols, |_, _| {
+                    if s == 0 {
+                        if rng.uniform_range(0.0, 1.0) < 0.4 { 1.0 } else { 0.0 }
+                    } else if rng.uniform_range(0.0, 1.0) < 0.5 {
+                        0.0
+                    } else {
+                        rng.below(256) as f64
+                    }
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn digit_planes_roundtrip_and_row_slice() {
+        let mut rng = Pcg64::seeded(21);
+        // cols > 64 exercises multi-word sign masks.
+        for &(n_planes, rows, cols) in &[(1usize, 1usize, 1usize), (4, 7, 64), (5, 9, 130)] {
+            let slices = random_digit_planes(n_planes, rows, cols, &mut rng);
+            let dp = DigitPlanes::from_slices(&slices);
+            assert_eq!((dp.num_planes(), dp.rows, dp.cols), (n_planes, rows, cols));
+            for (s, sl) in slices.iter().enumerate() {
+                assert_eq!(&dp.plane(s), sl, "plane {s}");
+            }
+            // Sign mask exactly mirrors plane-0 nonzeros (write-once build).
+            for i in 0..rows {
+                let mrow = dp.sign_row_mask(i);
+                for kk in 0..cols {
+                    let bit = (mrow[kk >> 6] >> (kk & 63)) & 1 == 1;
+                    assert_eq!(bit, slices[0].at(i, kk) != 0.0, "mask ({i},{kk})");
+                }
+            }
+            if rows >= 3 {
+                let (r0, len) = (1, rows - 2);
+                let sub = dp.row_slice(r0, len);
+                for (s, sl) in slices.iter().enumerate() {
+                    assert_eq!(sub.plane(s), sl.block(r0, 0, len, cols), "row_slice plane {s}");
+                }
+                assert_eq!(sub.sign_row_mask(0), dp.sign_row_mask(r0));
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_gemm_bit_identical_to_per_slice_kernel() {
+        // The tentpole contract at the kernel level: one stacked pass over
+        // byte planes == S_a separate packed GEMMs over the f64 planes,
+        // bit for bit — ragged shapes, multi-word masks, remainder rows.
+        let mut rng = Pcg64::seeded(22);
+        for &(n_planes, m, k, n) in &[
+            (4usize, 1usize, 64usize, 256usize),
+            (4, 3, 70, 33),
+            (5, 33, 130, 64),
+            (1, 4, 64, 8),
+            (2, 9, 1, 1),
+        ] {
+            let slices = random_digit_planes(n_planes, m, k, &mut rng);
+            let dp = DigitPlanes::from_slices(&slices);
+            let b = Matrix::random_uniform(k, n, -3.0, 3.0, &mut rng);
+            let packed = PackedB::pack(&b);
+            let mut stacked = vec![f64::NAN; n_planes * m * n];
+            matmul_packed_stacked_into(&dp, &packed, &mut stacked);
+            for (s, sl) in slices.iter().enumerate() {
+                let per_slice = sl.matmul_packed(&packed);
+                assert_eq!(
+                    &stacked[s * m * n..(s + 1) * m * n],
+                    &per_slice.data[..],
+                    "{n_planes} planes {m}x{k}x{n}, plane {s}"
+                );
+            }
+            // The 2-D scheduled variant must agree exactly, dirty scratch
+            // and all.
+            let mut grid = vec![123.0; n_planes * m * n];
+            matmul_packed_stacked_2d(&dp, &packed, &mut grid);
+            assert_eq!(grid, stacked, "{n_planes} planes {m}x{k}x{n} 2-D grid");
+        }
+    }
+
+    #[test]
+    fn prop_stacked_gemm_matches_per_slice_on_random_shapes() {
+        prop_check("stacked GEMM == per-slice packed GEMM", 60, |g| {
+            let n_planes = g.usize_in(1..=5);
+            let m = *g.choose(&[1usize, GEMM_MR - 1, GEMM_MR, 9, 33]);
+            let k = g.usize_in(1..=140);
+            let n = g.usize_in(1..=100);
+            let slices: Vec<Matrix> = (0..n_planes)
+                .map(|s| {
+                    Matrix::from_fn(m, k, |_, _| {
+                        if g.bool() {
+                            0.0
+                        } else if s == 0 {
+                            1.0
+                        } else {
+                            g.usize_in(0..=255) as f64
+                        }
+                    })
+                })
+                .collect();
+            let dp = DigitPlanes::from_slices(&slices);
+            let b = Matrix::from_vec(k, n, g.vec_f64(k * n, -4.0..4.0));
+            let packed = PackedB::pack(&b);
+            let mut stacked = vec![0.0; n_planes * m * n];
+            matmul_packed_stacked_into(&dp, &packed, &mut stacked);
+            for (s, sl) in slices.iter().enumerate() {
+                if stacked[s * m * n..(s + 1) * m * n] != sl.matmul_packed(&packed).data[..] {
+                    return Err(format!("{n_planes}p {m}x{k}x{n}: plane {s} diverged"));
+                }
+            }
+            let mut grid = vec![7.0; n_planes * m * n];
+            matmul_packed_stacked_2d(&dp, &packed, &mut grid);
+            if grid != stacked {
+                return Err(format!("{n_planes}p {m}x{k}x{n}: 2-D grid diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "stacked matmul dim mismatch")]
+    fn stacked_gemm_rejects_mismatch() {
+        let dp = DigitPlanes::zeroed(2, 3, 5);
+        let packed = PackedB::pack(&Matrix::zeros(4, 2));
+        let mut out = vec![0.0; 2 * 3 * 2];
+        matmul_packed_stacked_into(&dp, &packed, &mut out);
     }
 }

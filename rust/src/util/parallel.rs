@@ -60,6 +60,40 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+/// Parallel for-each over `0..n` without collecting results: the same
+/// lock-free atomic-counter claim loop as [`par_map`], for callers whose
+/// work items write their own (pairwise disjoint) output regions — e.g.
+/// the 2-D (row-band × panel-group) grid of the stacked digit-plane GEMM
+/// in `tensor`, where items of one matmul target interleaved row/column
+/// regions of a shared buffer that no chunking scheme can hand out as
+/// contiguous `&mut` chunks.
+pub fn par_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = worker_count().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
 /// Parallel for-each over mutable chunks of a slice. Work distribution
 /// uses the same lock-free atomic-counter scheme as [`par_map`]: each
 /// worker claims the next chunk index with one `fetch_add`, so there is no
@@ -138,6 +172,17 @@ mod tests {
             c[0] = i * 3 + 1;
         });
         assert!(data.iter().enumerate().all(|(i, &v)| v == i * 3 + 1));
+    }
+
+    #[test]
+    fn par_for_runs_every_index_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        par_for(500, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        par_for(0, |_| panic!("no items"));
     }
 
     #[test]
