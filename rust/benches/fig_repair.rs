@@ -1,0 +1,189 @@
+//! Bench: self-healing chip runtime **and** the paper-style fig_repair
+//! artifact (robustness PR tentpole).
+//!
+//! Sweeps stuck-at cell rate × spare budget over repeated deploy cycles of
+//! a LinearMem(128→64) INT8 layer on a one-tile chip, measuring relative
+//! error vs the digital twin before and after one `MappedModel::self_heal`
+//! round (program-and-verify → ABFT column probes → remap-to-spare).
+//!
+//! Before any number is reported, two invariants are hard-asserted:
+//! 1. on a fault-free chip the repair loop is a **no-op**: zero retries,
+//!    zero migrations, and bit-identical per-cycle RE before/after;
+//! 2. there **exists** a swept stuck-at rate at which the unrepaired chip
+//!    falls below the yield bound and one repair round strictly improves
+//!    yield@RE-bound. If the primary grid happens to miss the window the
+//!    bench escalates through extra rates before failing.
+//!
+//! Emits the machine-readable `BENCH_repair.json` (yield@RE-bound before/
+//! after repair per point, probe/verify overhead, retries-per-block
+//! histogram).
+//!
+//! Run: `cargo bench --bench fig_repair`
+//! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench fig_repair`
+//! (fewer cycles, quick-scale artifact regeneration).
+
+use memintelli::coordinator::experiments::{repair_sweep, RepairPoint};
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+const SEED: u64 = 2024;
+
+/// Fraction of cycles whose RE meets the bound.
+fn yield_at(res: &[f64], bound: f64) -> f64 {
+    let ok = res.iter().filter(|&&re| re <= bound).count();
+    ok as f64 / res.len().max(1) as f64
+}
+
+/// First point (by sweep order) where repair strictly improved yield at a
+/// rate where the unrepaired chip misses the bound on some cycle.
+fn improvement_at(pts: &[RepairPoint], bound: f64) -> Option<(f64, usize, f64, f64)> {
+    pts.iter()
+        .filter(|p| p.rate > 0.0 && p.spares > 0)
+        .map(|p| (p.rate, p.spares, yield_at(&p.re_before, bound), yield_at(&p.re_after, bound)))
+        .find(|&(_, _, yb, ya)| yb < 1.0 && ya > yb)
+}
+
+fn main() {
+    let smoke = std::env::var("MEMINTELLI_BENCH_SMOKE").is_ok();
+    let t0 = Instant::now();
+
+    let cfg = SimConfig { seed: SEED, ..SimConfig::default() };
+
+    let cycles = if smoke { 8 } else { 24 };
+    let rates: Vec<f64> = if smoke {
+        vec![0.0, 2e-5, 5e-5, 1e-4]
+    } else {
+        vec![0.0, 2e-5, 5e-5, 1e-4, 2e-4, 1e-3]
+    };
+    let spares_list = [0usize, 8];
+    // Provisional bound; the assert below uses an adaptive bound derived
+    // from the fault-free points so it tracks pure-quantization RE.
+    let yield_re = 0.1;
+
+    let mut pts = repair_sweep(&cfg, cycles, &rates, &spares_list, yield_re)
+        .expect("repair_sweep failed");
+
+    // Invariant 1: fault-free chip ⇒ the whole repair loop is a no-op.
+    let clean: Vec<&RepairPoint> = pts.iter().filter(|p| p.rate == 0.0).collect();
+    assert!(!clean.is_empty(), "sweep must include the fault-free anchor point");
+    let mut clean_max = 0.0f64;
+    for p in &clean {
+        assert_eq!(p.moves, 0, "fault-free chip must not migrate blocks (spares={})", p.spares);
+        assert_eq!(p.unplaced, 0, "fault-free chip must not strand groups");
+        assert_eq!(p.retries, 0, "fault-free programming must verify on the first pass");
+        assert_eq!(p.degraded_cycles, 0, "fault-free chip must never degrade");
+        assert!(p.probe_matmuls > 0, "probes must actually run on the healthy chip");
+        assert_eq!(
+            p.re_before, p.re_after,
+            "no-op repair must leave inference bit-identical (spares={})",
+            p.spares
+        );
+        clean_max = p.re_before.iter().fold(clean_max, |m, &re| m.max(re));
+    }
+    let bound = (3.0 * clean_max).max(yield_re);
+    println!(
+        "[fig_repair] no-op anchor OK: clean RE max {clean_max:.4}, yield bound {bound:.4}"
+    );
+
+    // Invariant 2: repair strictly improves yield at some swept rate. If
+    // the primary grid misses the window (all cycles clean, or every spare
+    // drew its own fault), escalate through intermediate rates first.
+    for &r in &[3e-5, 8e-5, 1.5e-4] {
+        if improvement_at(&pts, bound).is_some() {
+            break;
+        }
+        println!("[fig_repair] no improvement yet — escalating to rate {r:.1e}");
+        let more = repair_sweep(&cfg, 2 * cycles, &[r], &[8], yield_re)
+            .expect("repair_sweep (escalation) failed");
+        pts.extend(more);
+    }
+    let improved = improvement_at(&pts, bound);
+    let (imp_rate, imp_spares, imp_yb, imp_ya) = improved.expect(
+        "no swept stuck-at rate showed yield_before < 1.0 with yield_after > yield_before",
+    );
+    println!(
+        "[fig_repair] repair wins at rate {imp_rate:.1e} with {imp_spares} spares: \
+         yield {imp_yb:.2} -> {imp_ya:.2} @ RE <= {bound:.3}"
+    );
+
+    let total_cycles: usize = pts.iter().map(|p| p.cycles).sum();
+    let total_probes: usize = pts.iter().map(|p| p.probe_matmuls).sum();
+    for p in &pts {
+        println!(
+            "[fig_repair] rate {:>7.1e} spares {}: RE {:.4} -> {:.4}, yield {:.2} -> {:.2}, \
+             moves {}, unplaced {}, retries {}, probes {}, degraded {}/{}",
+            p.rate,
+            p.spares,
+            p.re_before_mean(),
+            p.re_after_mean(),
+            yield_at(&p.re_before, bound),
+            yield_at(&p.re_after, bound),
+            p.moves,
+            p.unplaced,
+            p.retries,
+            p.probe_matmuls,
+            p.degraded_cycles,
+            p.cycles
+        );
+    }
+
+    // Machine-readable record.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"fig_repair\",\n");
+    json.push_str("  \"pipeline\": \"program-verify -> probe -> remap-to-spare\",\n");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    json.push_str("  \"workload\": \"linear_128x64_int8\",\n");
+    let _ = writeln!(json, "  \"cycles_per_point\": {cycles},");
+    let _ = writeln!(json, "  \"yield_re_bound\": {bound:.6},");
+    json.push_str("  \"noop_on_clean_chip\": true,\n");
+    json.push_str("  \"points\": [\n");
+    for (i, p) in pts.iter().enumerate() {
+        let hist: Vec<String> = p.retry_hist.iter().map(|c| c.to_string()).collect();
+        let _ = write!(
+            json,
+            "    {{\"rate\": {:e}, \"spares\": {}, \"cycles\": {}, \
+             \"re_before_mean\": {:.6}, \"re_after_mean\": {:.6}, \
+             \"yield_before\": {:.4}, \"yield_after\": {:.4}, \
+             \"moves\": {}, \"unplaced\": {}, \"retries\": {}, \
+             \"probe_matmuls\": {}, \"degraded_cycles\": {}, \
+             \"retry_hist\": [{}]}}",
+            p.rate,
+            p.spares,
+            p.cycles,
+            p.re_before_mean(),
+            p.re_after_mean(),
+            yield_at(&p.re_before, bound),
+            yield_at(&p.re_after, bound),
+            p.moves,
+            p.unplaced,
+            p.retries,
+            p.probe_matmuls,
+            p.degraded_cycles,
+            hist.join(", ")
+        );
+        json.push_str(if i + 1 < pts.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n");
+    let _ = writeln!(
+        json,
+        "  \"improved_at\": {{\"rate\": {imp_rate:e}, \"spares\": {imp_spares}, \
+         \"yield_before\": {imp_yb:.4}, \"yield_after\": {imp_ya:.4}}},"
+    );
+    let _ = writeln!(
+        json,
+        "  \"probe_overhead\": {{\"total_probe_matmuls\": {total_probes}, \
+         \"probe_matmuls_per_cycle\": {:.3}}},",
+        total_probes as f64 / total_cycles.max(1) as f64
+    );
+    let _ = writeln!(json, "  \"total_s\": {:.3}", t0.elapsed().as_secs_f64());
+    json.push_str("}\n");
+    std::fs::write("BENCH_repair.json", &json).expect("writing BENCH_repair.json");
+    println!("\nwrote BENCH_repair.json");
+
+    // Paper-style artifact: the fig_repair sweep tables.
+    let scale = if smoke { Scale::Quick } else { Scale::Full };
+    run_experiment("fig_repair", &cfg, scale).expect("experiment failed");
+    println!("\n[fig_repair] total {:.1} s", t0.elapsed().as_secs_f64());
+}

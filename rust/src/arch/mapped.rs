@@ -27,7 +27,9 @@
 //! items — so an m = 1 forward through a wide layer still fills the
 //! worker pool (see `dpe::engine` §Perf and `examples/README.md`).
 
-use super::Placement;
+use super::repair::{DegradedReport, HealthReport, RepairOutcome, RepairPlan, SlotHealth};
+use super::{BlockMove, Placement};
+use crate::dpe::RepairSpec;
 use crate::nn::Sequential;
 use crate::tensor::Tensor;
 
@@ -36,11 +38,14 @@ use crate::tensor::Tensor;
 pub struct MappedModel {
     model: Sequential,
     placement: Placement,
+    /// Set by [`MappedModel::self_heal`] when condemned block groups could
+    /// not be remapped (spares exhausted) — the chip keeps serving.
+    degraded: Option<DegradedReport>,
 }
 
 impl MappedModel {
     pub(crate) fn new(model: Sequential, placement: Placement) -> Self {
-        MappedModel { model, placement }
+        MappedModel { model, placement, degraded: None }
     }
 
     /// Evaluate one batch (forward-only, full batch per DPE call).
@@ -66,6 +71,111 @@ impl MappedModel {
     /// The chip placement this model was compiled with.
     pub fn placement(&self) -> &Placement {
         &self.placement
+    }
+
+    /// The graceful-degradation record of the last [`MappedModel::self_heal`]
+    /// round, if any condemned groups could not be repaired.
+    pub fn degraded(&self) -> Option<&DegradedReport> {
+        self.degraded.as_ref()
+    }
+
+    /// One closed-loop repair round over the whole chip (see
+    /// [`super::repair`]):
+    ///
+    /// 1. **program-and-verify** every placed core at its current streams
+    ///    (when `spec.verify` is on), collecting per-block retry counts —
+    ///    block groups with unconverged planes are condemned;
+    /// 2. **probe** every placed block group with checksum vectors through
+    ///    the real GEMM path and condemn groups whose relative error
+    ///    exceeds `spec.probe_re_bound`;
+    /// 3. **remap** condemned groups onto spare arrays
+    ///    ([`RepairPlan::plan`]) and reprogram only the moved blocks at
+    ///    their new physical streams; groups that found no spare are
+    ///    recorded in a [`DegradedReport`] — inference keeps serving.
+    ///
+    /// Deterministic for a fixed engine seed and spec. Errors only on
+    /// internal inconsistency (a placed core without programmed state).
+    pub fn self_heal(&mut self, spec: &RepairSpec) -> anyhow::Result<RepairOutcome> {
+        let mut outcome = RepairOutcome::default();
+
+        // Stage 1: program-and-verify. Unconverged block groups are
+        // condemned even if their probe later sneaks under the bound.
+        let mut condemned: Vec<(usize, usize)> = Vec::new();
+        if spec.verify {
+            let mut ci = 0usize;
+            for l in &mut self.model.layers {
+                l.visit_cores(&mut |core| {
+                    if core.placement().is_none() {
+                        return;
+                    }
+                    if let Some(rep) = core.program_verified(spec) {
+                        condemned.extend(rep.unconverged_blocks().into_iter().map(|b| (ci, b)));
+                        outcome.program_reports.push(rep);
+                    }
+                    ci += 1;
+                });
+            }
+        }
+
+        // Stage 2: online health probes, scored per placed block group.
+        let mut health = HealthReport::default();
+        let mut missing: Option<usize> = None;
+        let mut ci = 0usize;
+        for l in &mut self.model.layers {
+            l.visit_cores(&mut |core| {
+                let Some(lp) = core.placement() else { return };
+                let (slices, slots) = (lp.slices, lp.slots.clone());
+                match core.probe_block_scores(spec) {
+                    Some((scores, calls)) => {
+                        health.probe_matmuls += calls;
+                        for (b, &score) in scores.iter().enumerate() {
+                            health.slots.push(SlotHealth {
+                                slot: slots[b * slices],
+                                layer: ci,
+                                block: b,
+                                score,
+                                healthy: score <= spec.probe_re_bound,
+                            });
+                        }
+                    }
+                    None => missing = missing.or(Some(ci)),
+                }
+                ci += 1;
+            });
+        }
+        if let Some(ci) = missing {
+            anyhow::bail!("self_heal: placed core {ci} has no programmed state to probe");
+        }
+
+        // Stage 3: condemn (verify ∪ probe), plan, remap, degrade.
+        condemned.extend(health.condemned());
+        condemned.sort_unstable();
+        condemned.dedup();
+        let plan = RepairPlan::plan(&self.placement, &condemned);
+        let mut ci = 0usize;
+        for l in &mut self.model.layers {
+            l.visit_cores(&mut |core| {
+                if core.placement().is_none() {
+                    return;
+                }
+                let mine: Vec<&BlockMove> =
+                    plan.moves.iter().filter(|m| m.layer == ci).collect();
+                core.remap_blocks(&mine);
+                ci += 1;
+            });
+        }
+        for m in &plan.moves {
+            let lp = &mut self.placement.layers[m.layer];
+            lp.block_streams[m.block] = m.new_stream;
+            lp.slots[m.block * lp.slices..(m.block + 1) * lp.slices].copy_from_slice(&m.to);
+            lp.tile_first = lp.tile_first.min(m.to[0].tile);
+            lp.tile_last = lp.tile_last.max(m.to[0].tile);
+        }
+        self.degraded = DegradedReport::from_unplaced(&self.placement, &health, &plan);
+        outcome.health = health;
+        outcome.plan = plan;
+        outcome.degraded = self.degraded.clone();
+        Ok(outcome)
     }
 
     /// Per-layer summary including the arrays/tiles columns (delegates to
@@ -205,6 +315,121 @@ mod tests {
         let y0 = model.layers[0].forward_eval(&x);
         let y1 = model.layers[1].forward_eval(&x);
         assert_ne!(y0.data, y1.data, "co-located layers must not share noise streams");
+    }
+
+    /// Engine with stuck cells on every slot's fault stream (both
+    /// polarities) — SA1 pins digits to the device max, so verify-mode
+    /// programming reliably condemns every hit block group.
+    fn faulty_hw(seed: u64, rate: f64) -> HwSpec {
+        use crate::device::faults::{FaultSpec, NonIdealitySpec};
+        HwSpec::uniform(
+            DotProductEngine::new(
+                DpeConfig {
+                    nonideal: NonIdealitySpec {
+                        faults: FaultSpec::cells(rate),
+                        ..NonIdealitySpec::none()
+                    },
+                    ..DpeConfig::default()
+                },
+                seed,
+            ),
+            SliceMethod::int(SliceSpec::int8()),
+        )
+    }
+
+    /// One LinearMem(128, 64): a 2-block × 4-slice grid (8 digit planes).
+    fn linear_model(hw: HwSpec, seed: u64) -> Sequential {
+        let mut rng = Pcg64::new(seed, 0xF00D);
+        Sequential::new(vec![Box::new(LinearMem::new(128, 64, Some(hw), &mut rng))])
+    }
+
+    fn lin_batch(n: usize) -> Tensor {
+        Tensor::from_vec(
+            &[n, 128],
+            (0..n * 128).map(|i| ((i * 7 % 23) as f64) / 11.0 - 1.0).collect(),
+        )
+    }
+
+    #[test]
+    fn self_heal_on_healthy_chip_is_a_no_op() {
+        let m = small_model(17);
+        let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+        let mut mapped = m.compile(&chip).unwrap();
+        let x = batch(2);
+        let before = mapped.infer(&x);
+        let out = mapped.self_heal(&crate::dpe::RepairSpec::enabled()).unwrap();
+        assert!(out.plan.moves.is_empty(), "healthy chip must not move blocks");
+        assert!(out.plan.unplaced.is_empty());
+        assert!(out.degraded.is_none());
+        assert!(mapped.degraded().is_none());
+        assert_eq!(out.total_retries(), 0, "clean default engine must converge first try");
+        assert!(out.health.probe_matmuls > 0, "probes must have run");
+        assert!(!out.health.slots.is_empty());
+        for s in &out.health.slots {
+            assert!(s.healthy, "healthy group flagged: {s:?}");
+        }
+        assert_eq!(
+            mapped.infer(&x).data,
+            before.data,
+            "a no-op heal must leave the programmed bits untouched"
+        );
+    }
+
+    #[test]
+    fn self_heal_remaps_condemned_groups_onto_spares() {
+        // 1 tile x (8 data + 8 spare): both 4-plane groups fit the data
+        // region exactly, with two whole spare groups in reserve. A 5%
+        // stuck-cell rate guarantees unconverged planes in every group, so
+        // verification condemns both; the probe bound is +inf to pin the
+        // condemnation path under test.
+        let spec = crate::dpe::RepairSpec {
+            probe_re_bound: f64::INFINITY,
+            ..crate::dpe::RepairSpec::enabled()
+        };
+        let chip = ChipSpec::new(1, 16, (64, 64)).with_spares(8);
+        let mut mapped = linear_model(faulty_hw(41, 0.05), 41).compile(&chip).unwrap();
+        let x = lin_batch(3);
+        let before = mapped.infer(&x);
+        let out = mapped.self_heal(&spec).unwrap();
+        assert!(out.total_retries() > 0, "stuck cells must trigger verify retries");
+        assert_eq!(out.plan.moves.len(), 2, "both condemned groups must move");
+        assert!(out.plan.unplaced.is_empty());
+        assert!(out.degraded.is_none());
+        let lp = &mapped.placement().layers[0];
+        assert_eq!(lp.block_streams, vec![8, 12], "groups must land on the spare tail");
+        assert!(lp.slots.iter().all(|s| s.index >= 8), "all planes must sit on spares now");
+        assert_ne!(
+            mapped.infer(&x).data,
+            before.data,
+            "remapped blocks draw from new physical streams"
+        );
+        // The whole loop is deterministic: an identically-built chip heals
+        // to bit-identical state.
+        let mut twin = linear_model(faulty_hw(41, 0.05), 41).compile(&chip).unwrap();
+        let out2 = twin.self_heal(&spec).unwrap();
+        assert_eq!(out2.plan, out.plan);
+        assert_eq!(twin.infer(&x).data, mapped.infer(&x).data);
+    }
+
+    #[test]
+    fn exhausted_spares_keep_serving_with_degraded_report() {
+        // Same model, but only one spare group: the second condemned group
+        // has nowhere to go — inference must keep working and the model
+        // must carry a DegradedReport instead of erroring.
+        let spec = crate::dpe::RepairSpec {
+            probe_re_bound: f64::INFINITY,
+            ..crate::dpe::RepairSpec::enabled()
+        };
+        let chip = ChipSpec::new(1, 12, (64, 64)).with_spares(4);
+        let mut mapped = linear_model(faulty_hw(43, 0.05), 43).compile(&chip).unwrap();
+        let out = mapped.self_heal(&spec).unwrap();
+        assert_eq!(out.plan.moves.len(), 1);
+        assert_eq!(out.plan.unplaced.len(), 1);
+        let deg = mapped.degraded().expect("spare exhaustion must degrade, not error");
+        assert_eq!(deg.condemned, out.plan.unplaced);
+        assert_eq!(out.degraded.as_ref(), Some(deg));
+        let y = mapped.infer(&lin_batch(2));
+        assert_eq!(y.shape, vec![2, 64], "degraded chip must keep serving");
     }
 
     #[test]

@@ -37,8 +37,10 @@
 //! arrays' noise.
 
 pub mod mapped;
+pub mod repair;
 
 pub use mapped::MappedModel;
+pub use repair::{BlockMove, DegradedReport, HealthReport, RepairOutcome, RepairPlan, SlotHealth};
 
 use std::fmt::Write as _;
 
@@ -51,13 +53,31 @@ pub struct ChipSpec {
     /// Array shape `(rows, cols)`; every engine bound to mapped layers
     /// must use the same shape.
     pub array: (usize, usize),
+    /// Arrays at the *tail* of each tile reserved as repair spares (TOML
+    /// `[chip] spares_per_tile`): the allocator never places data planes
+    /// there, so slot ids of data placements are unchanged by the spare
+    /// budget, and [`repair::RepairPlan`] can migrate condemned block
+    /// groups into them. 0 (the default) reproduces the pre-spare chip
+    /// bit-identically.
+    pub spares_per_tile: usize,
 }
 
 impl ChipSpec {
     pub fn new(tiles: usize, arrays_per_tile: usize, array: (usize, usize)) -> Self {
         assert!(tiles > 0 && arrays_per_tile > 0, "chip needs at least one array");
         assert!(array.0 > 0 && array.1 > 0, "array shape must be positive");
-        ChipSpec { tiles, arrays_per_tile, array }
+        ChipSpec { tiles, arrays_per_tile, array, spares_per_tile: 0 }
+    }
+
+    /// Reserve `spares` tail arrays per tile as repair spares.
+    pub fn with_spares(mut self, spares: usize) -> Self {
+        assert!(
+            spares < self.arrays_per_tile,
+            "spares_per_tile = {spares} leaves no data arrays in a {}-array tile",
+            self.arrays_per_tile
+        );
+        self.spares_per_tile = spares;
+        self
     }
 
     /// One tile holding `capacity` arrays — the whole-model anchor chip.
@@ -74,6 +94,19 @@ impl ChipSpec {
 
     pub fn total_arrays(&self) -> usize {
         self.tiles * self.arrays_per_tile
+    }
+
+    /// Arrays per tile available to data placements (capacity minus the
+    /// spare reservation).
+    pub fn data_arrays_per_tile(&self) -> usize {
+        self.arrays_per_tile - self.spares_per_tile
+    }
+
+    /// The spare slots of one tile: the reserved tail indices
+    /// `[data_arrays_per_tile, arrays_per_tile)`.
+    pub fn spare_slots(&self, tile: usize) -> impl Iterator<Item = ArraySlot> + '_ {
+        (self.data_arrays_per_tile()..self.arrays_per_tile)
+            .map(move |index| ArraySlot { tile, index })
     }
 
     /// Global id of a slot — also the RNG stream of the array occupying it.
@@ -210,14 +243,17 @@ impl TileAllocator {
     /// driver ([`TileAllocator::allocate`]) wraps it in a capacity report.
     fn alloc_group(&mut self, slices: usize) -> Result<Vec<ArraySlot>, String> {
         assert!(slices > 0, "a block group has at least one plane");
-        if slices > self.chip.arrays_per_tile {
+        // Data placements only see the tile capacity left after the spare
+        // reservation; the reserved tail indices belong to `arch::repair`.
+        let data_cap = self.chip.data_arrays_per_tile();
+        if slices > data_cap {
             return Err(format!(
                 "a block group of {slices} digit planes cannot fit any tile \
-                 (arrays_per_tile = {})",
-                self.chip.arrays_per_tile
+                 (arrays_per_tile = {}, spares_per_tile = {})",
+                self.chip.arrays_per_tile, self.chip.spares_per_tile
             ));
         }
-        if self.chip.arrays_per_tile - self.next_index < slices {
+        if data_cap - self.next_index < slices {
             // Spill: the group does not straddle tiles.
             self.next_tile += 1;
             self.next_index = 0;
@@ -233,7 +269,7 @@ impl TileAllocator {
             (0..slices).map(|s| ArraySlot { tile, index: self.next_index + s }).collect();
         self.next_index += slices;
         self.used_per_tile[tile] += slices;
-        if self.next_index == self.chip.arrays_per_tile {
+        if self.next_index == data_cap {
             self.next_tile += 1;
             self.next_index = 0;
         }
@@ -432,5 +468,51 @@ mod tests {
         assert_eq!(c.tiles, 3);
         assert_eq!(c.total_arrays(), 192);
         assert_eq!(ChipSpec::fit(0, 64, (64, 64)).tiles, 1);
+    }
+
+    #[test]
+    fn spares_reserve_tail_slots_and_keep_data_ids_stable() {
+        // 10-array tiles with 2 spares: data placements only use indices
+        // 0..8 of each tile; the same demands on a spare-free chip land on
+        // identical slots (so enabling spares never perturbs placements
+        // that fit either way), and the reserved tail is enumerable.
+        let base = ChipSpec::new(3, 10, (64, 64));
+        let spared = base.clone().with_spares(2);
+        assert_eq!(spared.data_arrays_per_tile(), 8);
+        let demands = [demand(0, 3, 4), demand(1, 2, 4)];
+        let p = TileAllocator::allocate(&spared, &demands).unwrap();
+        for lp in &p.layers {
+            for slot in &lp.slots {
+                assert!(slot.index < 8, "data plane placed on a spare slot: {slot:?}");
+            }
+        }
+        let p_base = TileAllocator::allocate(&base, &demands).unwrap();
+        for (lp, lp_base) in p.layers.iter().zip(&p_base.layers) {
+            assert_eq!(lp.slots, lp_base.slots, "spare budget perturbed data placement");
+            assert_eq!(lp.block_streams, lp_base.block_streams);
+        }
+        let tail: Vec<ArraySlot> = spared.spare_slots(1).collect();
+        assert_eq!(tail, vec![ArraySlot { tile: 1, index: 8 }, ArraySlot { tile: 1, index: 9 }]);
+        assert_eq!(spared.slot_id(tail[0]), 18);
+    }
+
+    #[test]
+    fn spares_shrink_effective_capacity() {
+        // 6-array tile, 3 spares: a 4-plane group no longer fits any tile.
+        let chip = ChipSpec::new(2, 6, (64, 64)).with_spares(3);
+        let err =
+            TileAllocator::allocate(&chip, &[demand(0, 1, 4)]).unwrap_err().to_string();
+        assert!(err.contains("cannot fit any tile"), "{err}");
+        assert!(err.contains("spares_per_tile = 3"), "{err}");
+        // 3-plane groups fit exactly, one per tile.
+        let p = TileAllocator::allocate(&chip, &[demand(0, 2, 3)]).unwrap();
+        assert_eq!(p.used_per_tile, vec![3, 3]);
+        assert_eq!(p.layers[0].slots[3].tile, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "leaves no data arrays")]
+    fn all_spare_tile_panics() {
+        let _ = ChipSpec::new(1, 4, (64, 64)).with_spares(4);
     }
 }

@@ -1,0 +1,326 @@
+//! Closed-loop chip repair: health scoring, remap-to-spare planning, and
+//! graceful degradation (the runtime response to the fault fragility
+//! `fig_faults` measures).
+//!
+//! The loop has three stages, spanning the whole stack:
+//!
+//! 1. **Program-and-verify** ([`crate::dpe::WeightTemplate::program_verified`],
+//!    `[repair]` TOML section → [`crate::dpe::RepairSpec`]): each digit
+//!    plane is read back after programming and re-drawn while it exceeds
+//!    the digit-error tolerance. Stuck cells never converge, so a block
+//!    group whose planes exhaust their retries condemns its physical
+//!    slots.
+//! 2. **Online probes** ([`crate::nn::MemCore::probe_block_scores`]):
+//!    column-checksum test vectors — zero outside one k-block, so every
+//!    other k-block quantizes to scale 0 and contributes *exactly* zero —
+//!    run through the genuine fused GEMM path and are compared against
+//!    the digitally-computed expectation. This localizes faulty arrays at
+//!    `(k-block, n-block)` group granularity at runtime, without ground
+//!    truth activations, and is scored into a [`HealthReport`].
+//! 3. **Remap-to-spare** ([`RepairPlan::plan`]): condemned groups migrate
+//!    whole into the spare tail arrays reserved by
+//!    [`super::ChipSpec::with_spares`], preserving the allocator's
+//!    group-within-one-tile invariant and drawing all programming noise /
+//!    fault masks / ADC chains from the *new* physical slot's streams
+//!    ([`crate::dpe::DotProductEngine::reprogram_prepared_blocks`]). When
+//!    spares run out the chip **keeps serving**: the unrepairable groups
+//!    are recorded in a [`DegradedReport`] instead of erroring.
+//!
+//! [`crate::arch::MappedModel::self_heal`] drives all three stages.
+
+use super::{ArraySlot, Placement};
+use crate::dpe::ProgramReport;
+
+/// Probe health of one placed block group (its `slices` digit planes
+/// share fate — they sit on consecutive slots of one tile and are read
+/// out together).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotHealth {
+    /// First physical slot of the group.
+    pub slot: ArraySlot,
+    /// Model layer (core index in compile order).
+    pub layer: usize,
+    /// Block index within the layer's weight grid.
+    pub block: usize,
+    /// Probe relative error of the group's checksum readout.
+    pub score: f64,
+    /// `score <= probe_re_bound` — healthy groups are left in place.
+    pub healthy: bool,
+}
+
+/// Chip-wide probe results plus the overhead accounting the yield bench
+/// reports (`BENCH_repair.json`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HealthReport {
+    pub slots: Vec<SlotHealth>,
+    /// Probe matmuls executed (probe vectors × k-blocks, summed over
+    /// cores) — the probe overhead relative to real inference work.
+    pub probe_matmuls: usize,
+}
+
+impl HealthReport {
+    /// `(layer, block)` of every group failing its probe bound.
+    pub fn condemned(&self) -> Vec<(usize, usize)> {
+        self.slots.iter().filter(|s| !s.healthy).map(|s| (s.layer, s.block)).collect()
+    }
+
+    /// Probe score of one group, if it was probed.
+    pub fn score_of(&self, layer: usize, block: usize) -> Option<f64> {
+        self.slots.iter().find(|s| s.layer == layer && s.block == block).map(|s| s.score)
+    }
+}
+
+/// One planned migration: a condemned block group leaves its `from` slots
+/// for `to` (spare slots within one tile) and reprograms at `new_stream`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockMove {
+    pub layer: usize,
+    pub block: usize,
+    pub from: Vec<ArraySlot>,
+    pub to: Vec<ArraySlot>,
+    /// Global slot id of `to[0]` — the block's new programming stream.
+    pub new_stream: u64,
+}
+
+/// The remap plan for one repair round: which groups move where, and
+/// which condemned groups found no spare capacity (they stay in place and
+/// degrade the chip instead).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RepairPlan {
+    pub moves: Vec<BlockMove>,
+    /// Condemned `(layer, block)` groups with no spare group left.
+    pub unplaced: Vec<(usize, usize)>,
+}
+
+impl RepairPlan {
+    /// Plan spare allocations for `condemned` `(layer, block)` groups of
+    /// `placement`. Deterministic and never double-booking: each tile's
+    /// spare tail is handed out in index order, whole groups only (the
+    /// allocator invariant — a group's planes share input drivers), with
+    /// the group's home tile preferred so a repair stays local when it
+    /// can. Groups that fit nowhere land in `unplaced`.
+    pub fn plan(placement: &Placement, condemned: &[(usize, usize)]) -> RepairPlan {
+        let chip = &placement.chip;
+        let mut spare_used = vec![0usize; chip.tiles];
+        let mut plan = RepairPlan::default();
+        for &(layer, block) in condemned {
+            let lp = &placement.layers[layer];
+            assert!(block < lp.blocks, "block {block} out of layer {layer}'s {}", lp.blocks);
+            let slices = lp.slices;
+            let from = lp.slots[block * slices..(block + 1) * slices].to_vec();
+            let home = from[0].tile;
+            // Prefer the home tile, then scan the chip in tile order.
+            let tile = std::iter::once(home)
+                .chain(0..chip.tiles)
+                .find(|&t| chip.spares_per_tile - spare_used[t] >= slices);
+            let Some(tile) = tile else {
+                plan.unplaced.push((layer, block));
+                continue;
+            };
+            let base = chip.data_arrays_per_tile() + spare_used[tile];
+            let to: Vec<ArraySlot> =
+                (0..slices).map(|s| ArraySlot { tile, index: base + s }).collect();
+            spare_used[tile] += slices;
+            plan.moves.push(BlockMove {
+                layer,
+                block,
+                new_stream: chip.slot_id(to[0]),
+                from,
+                to,
+            });
+        }
+        plan
+    }
+}
+
+/// Structured graceful-degradation record: the chip keeps serving, but
+/// these condemned groups could not be repaired and still sit on faulty
+/// arrays. Attached to [`crate::arch::MappedModel`] instead of erroring.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DegradedReport {
+    /// Unrepaired `(layer, block)` groups.
+    pub condemned: Vec<(usize, usize)>,
+    /// Their physical slots (first slot per group).
+    pub slots: Vec<ArraySlot>,
+    /// Worst probe relative error among the unrepaired groups — the
+    /// estimated RE impact of continuing to serve degraded.
+    pub estimated_re_impact: f64,
+}
+
+impl DegradedReport {
+    /// Build from the groups a [`RepairPlan`] could not place, scoring
+    /// the impact with their probe results.
+    pub fn from_unplaced(
+        placement: &Placement,
+        health: &HealthReport,
+        plan: &RepairPlan,
+    ) -> Option<DegradedReport> {
+        if plan.unplaced.is_empty() {
+            return None;
+        }
+        let mut rep = DegradedReport::default();
+        for &(layer, block) in &plan.unplaced {
+            let lp = &placement.layers[layer];
+            rep.condemned.push((layer, block));
+            rep.slots.push(lp.slots[block * lp.slices]);
+            if let Some(score) = health.score_of(layer, block) {
+                rep.estimated_re_impact = rep.estimated_re_impact.max(score);
+            }
+        }
+        Some(rep)
+    }
+}
+
+/// The result of one [`crate::arch::MappedModel::self_heal`] round.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RepairOutcome {
+    /// Per-core program-and-verify accounting (empty when the spec
+    /// disables verification).
+    pub program_reports: Vec<ProgramReport>,
+    /// Probe scores of every placed block group.
+    pub health: HealthReport,
+    /// The migrations applied (and the groups left behind).
+    pub plan: RepairPlan,
+    /// Present iff some condemned groups could not be repaired.
+    pub degraded: Option<DegradedReport>,
+}
+
+impl RepairOutcome {
+    /// Total verify retries across all cores.
+    pub fn total_retries(&self) -> usize {
+        self.program_reports.iter().map(ProgramReport::total_retries).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipSpec, CoreDemand, TileAllocator};
+    use crate::util::prop::prop_check;
+
+    fn demand(layer: usize, blocks: usize, slices: usize) -> CoreDemand {
+        CoreDemand { layer, name: "TestCore", blocks, slices }
+    }
+
+    #[test]
+    fn plan_prefers_home_tile_and_spills_to_others() {
+        // 2 tiles x (8 data + 4 spare), 4-slice groups: tile 0 holds
+        // layer-0 groups 0..2, tile 1 groups 2..4. Condemning two groups
+        // of tile 0 uses tile 0's one spare group, then tile 1's.
+        let chip = ChipSpec::new(2, 12, (64, 64)).with_spares(4);
+        let p = TileAllocator::allocate(&chip, &[demand(0, 4, 4)]).unwrap();
+        let plan = RepairPlan::plan(&p, &[(0, 0), (0, 1)]);
+        assert_eq!(plan.moves.len(), 2);
+        assert!(plan.unplaced.is_empty());
+        assert_eq!(plan.moves[0].to[0], ArraySlot { tile: 0, index: 8 });
+        assert_eq!(plan.moves[0].new_stream, 8);
+        assert_eq!(plan.moves[1].to[0], ArraySlot { tile: 1, index: 8 });
+        assert_eq!(plan.moves[1].new_stream, 20);
+        assert_eq!(plan.moves[0].from, p.layers[0].slots[0..4].to_vec());
+    }
+
+    #[test]
+    fn exhausted_spares_degrade_instead_of_erroring() {
+        let chip = ChipSpec::new(1, 12, (64, 64)).with_spares(4);
+        let p = TileAllocator::allocate(&chip, &[demand(0, 2, 4)]).unwrap();
+        let plan = RepairPlan::plan(&p, &[(0, 0), (0, 1)]);
+        assert_eq!(plan.moves.len(), 1, "one spare group available");
+        assert_eq!(plan.unplaced, vec![(0, 1)]);
+        let health = HealthReport {
+            slots: vec![
+                SlotHealth {
+                    slot: p.layers[0].slots[0],
+                    layer: 0,
+                    block: 0,
+                    score: 0.9,
+                    healthy: false,
+                },
+                SlotHealth {
+                    slot: p.layers[0].slots[4],
+                    layer: 0,
+                    block: 1,
+                    score: 0.7,
+                    healthy: false,
+                },
+            ],
+            probe_matmuls: 4,
+        };
+        assert_eq!(health.condemned(), vec![(0, 0), (0, 1)]);
+        let deg = DegradedReport::from_unplaced(&p, &health, &plan).unwrap();
+        assert_eq!(deg.condemned, vec![(0, 1)]);
+        assert_eq!(deg.estimated_re_impact, 0.7);
+        // A fully-placed plan reports no degradation.
+        let ok = RepairPlan::plan(&p, &[(0, 0)]);
+        assert!(DegradedReport::from_unplaced(&p, &health, &ok).is_none());
+    }
+
+    #[test]
+    fn prop_remap_preserves_bijection_and_never_double_books() {
+        // Satellite property: over random chips, demands, and condemned
+        // subsets — every move targets whole spare groups within one
+        // tile, no spare slot is booked twice, no move targets a data
+        // slot, and moves + unplaced partition the condemned set.
+        prop_check("repair plan slot bijection", 200, |g| {
+            let apt = g.usize_in(6..=24);
+            let spares = g.usize_in(0..=apt - 2);
+            let slices = g.usize_in(1..=4.min(apt - spares));
+            let n_layers = g.usize_in(1..=3);
+            let demands: Vec<CoreDemand> =
+                (0..n_layers).map(|li| demand(li, g.usize_in(1..=4), slices)).collect();
+            let total: usize = demands.iter().map(CoreDemand::planes).sum();
+            let chip = ChipSpec::fit(2 * total + apt, apt, (64, 64)).with_spares(spares);
+            let p = TileAllocator::allocate(&chip, &demands)
+                .map_err(|e| format!("unexpected capacity error: {e}"))?;
+            // Condemn a random subset of groups.
+            let mut condemned = Vec::new();
+            for (li, d) in demands.iter().enumerate() {
+                for b in 0..d.blocks {
+                    if g.bool() {
+                        condemned.push((li, b));
+                    }
+                }
+            }
+            let plan = RepairPlan::plan(&p, &condemned);
+            if plan.moves.len() + plan.unplaced.len() != condemned.len() {
+                return Err("moves + unplaced do not partition the condemned set".into());
+            }
+            let data_cap = chip.data_arrays_per_tile();
+            let mut booked = std::collections::HashSet::new();
+            for m in &plan.moves {
+                if m.to.len() != slices {
+                    return Err("move does not carry the whole group".into());
+                }
+                if m.to.iter().any(|s| s.tile != m.to[0].tile) {
+                    return Err("moved group straddles tiles".into());
+                }
+                for s in &m.to {
+                    if s.index < data_cap || s.index >= apt {
+                        return Err(format!("move target {s:?} is not a spare slot"));
+                    }
+                    if !booked.insert(chip.slot_id(*s)) {
+                        return Err(format!("spare slot {s:?} double-booked"));
+                    }
+                }
+                if m.new_stream != chip.slot_id(m.to[0]) {
+                    return Err("new_stream is not the first target slot's id".into());
+                }
+                let lp = &p.layers[m.layer];
+                if m.from != lp.slots[m.block * slices..(m.block + 1) * slices] {
+                    return Err("move.from does not match the placement".into());
+                }
+            }
+            // Unplaced groups really had no capacity: with a uniform
+            // group size, a group is only left behind once every tile's
+            // spare tail holds fewer than `slices` free arrays — i.e. all
+            // whole spare groups are booked.
+            if !plan.unplaced.is_empty() && plan.moves.len() != chip.tiles * (spares / slices) {
+                return Err("group unplaced while spare capacity remained".into());
+            }
+            // Determinism.
+            if RepairPlan::plan(&p, &condemned) != plan {
+                return Err("plan not deterministic".into());
+            }
+            Ok(())
+        });
+    }
+}

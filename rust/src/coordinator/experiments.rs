@@ -5,18 +5,18 @@
 
 use super::SimConfig;
 use crate::apps::{cwt, kmeans, solver};
-use crate::arch::{MappedModel, Placement};
+use crate::arch::{ChipSpec, MappedModel, Placement};
 use crate::circuit::CrossbarCircuit;
 use crate::data::{cifar_like, iris, mnist_like, nino};
 use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
 use crate::device::{conductance_clouds, DeviceSpec};
 use crate::dpe::engine::AdcPolicy;
 use crate::dpe::montecarlo::{run_fault_point, sweep, sweep_faults, McConfig};
-use crate::dpe::{DataMode, DotProductEngine, SliceMethod, SliceSpec};
+use crate::dpe::{DataMode, DotProductEngine, RepairSpec, SliceMethod, SliceSpec};
 use crate::nn::models::{lenet5, resnet18_cifar, vgg16_cifar};
 use crate::nn::train::{evaluate, evaluate_mapped, train, TrainConfig};
 use crate::nn::{HwSpec, Sequential};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Tensor};
 use crate::util::report::{fmt_duration, fmt_sig, time_it, Table};
 use crate::util::rng::Pcg64;
 
@@ -43,6 +43,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig11_precision", "Variable-precision 128x128 matmul: INT8/FP32/BF16/FlexPoint16"),
     ("fig12_montecarlo", "Monte-Carlo: RE vs bits, block size, variation; quant vs prealign"),
     ("fig_faults", "Fault injection: accuracy/yield vs stuck-at rate x cv x bits; lines, retention, ADC error"),
+    ("fig_repair", "Self-healing chip: program-and-verify, probe localization, remap-to-spare yield recovery"),
     ("fig13_solver", "Linear equation solving: software vs hardware CG"),
     ("fig14_cwt", "Morlet CWT of the ENSO-like series with INT4 kernels"),
     ("fig15_kmeans", "K-means on IRIS with the dot-product distance trick"),
@@ -59,13 +60,17 @@ pub fn run(id: &str, cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>
         "fig11_precision" => fig11_precision(cfg, scale),
         "fig12_montecarlo" => fig12_montecarlo(cfg, scale),
         "fig_faults" => fig_faults(cfg, scale),
+        "fig_repair" => fig_repair(cfg, scale)?,
         "fig13_solver" => fig13_solver(cfg, scale),
         "fig14_cwt" => fig14_cwt(cfg, scale),
         "fig15_kmeans" => fig15_kmeans(cfg, scale),
         "fig16_training" => fig16_training(cfg, scale),
         "fig17_inference" => fig17_inference(cfg, scale)?,
         "table3_throughput" => table3_throughput(cfg, scale),
-        _ => anyhow::bail!("unknown experiment '{id}' (see `memintelli list`)"),
+        _ => anyhow::bail!(
+            "unknown experiment '{id}' — did you mean '{}'? (see `memintelli list`)",
+            closest_experiment(id)
+        ),
     };
     for t in &tables {
         t.emit(&format!("{id}_{}", sanitize(&t.title)));
@@ -75,6 +80,39 @@ pub fn run(id: &str, cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>
 
 fn sanitize(s: &str) -> String {
     s.chars().map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' }).collect()
+}
+
+/// The registered experiment id closest to `id` — the CLI's "did you
+/// mean" hint for typos. An id that extends (or abbreviates) a registered
+/// one wins outright; otherwise smallest edit distance.
+pub fn closest_experiment(id: &str) -> &'static str {
+    if !id.is_empty() {
+        let by_prefix =
+            EXPERIMENTS.iter().find(|(eid, _)| eid.starts_with(id) || id.starts_with(eid));
+        if let Some(&(eid, _)) = by_prefix {
+            return eid;
+        }
+    }
+    EXPERIMENTS
+        .iter()
+        .map(|(eid, _)| *eid)
+        .min_by_key(|eid| levenshtein(id, eid))
+        .expect("registry is non-empty")
+}
+
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 // ---------------------------------------------------------------- Fig 3
@@ -370,6 +408,200 @@ pub fn fig_faults(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
         ]);
     }
     vec![t1, t2, t3]
+}
+
+// ------------------------------------------------------------ fig_repair
+
+/// One stuck-at-rate × spare-budget operating point of the self-healing
+/// sweep ([`repair_sweep`]): per-cycle relative errors against the
+/// digital twin before and after [`crate::arch::MappedModel::self_heal`],
+/// plus the repair-loop accounting the bench serializes.
+#[derive(Debug, Clone, Default)]
+pub struct RepairPoint {
+    pub rate: f64,
+    pub spares: usize,
+    pub cycles: usize,
+    /// Per-cycle RE vs the digital twin, before any repair.
+    pub re_before: Vec<f64>,
+    /// Per-cycle RE after one `self_heal` round.
+    pub re_after: Vec<f64>,
+    /// Fraction of cycles meeting `RE <= yield_re` before / after repair.
+    pub yield_before: f64,
+    pub yield_after: f64,
+    pub yield_re: f64,
+    /// Block-group migrations applied, summed over cycles.
+    pub moves: usize,
+    /// Condemned groups with no spare left, summed over cycles.
+    pub unplaced: usize,
+    /// Verify-loop retries, summed over cycles.
+    pub retries: usize,
+    /// Health-probe matmuls executed, summed over cycles (the probe
+    /// overhead relative to `cycles` real inference batches).
+    pub probe_matmuls: usize,
+    /// Cycles that ended degraded (spares exhausted).
+    pub degraded_cycles: usize,
+    /// Retries-per-block histogram over all cycles (`hist[r]` = blocks
+    /// that took `r` retries; the last bin absorbs `>= max_retries`).
+    pub retry_hist: Vec<usize>,
+}
+
+impl RepairPoint {
+    pub fn re_before_mean(&self) -> f64 {
+        self.re_before.iter().sum::<f64>() / self.re_before.len().max(1) as f64
+    }
+
+    pub fn re_after_mean(&self) -> f64 {
+        self.re_after.iter().sum::<f64>() / self.re_after.len().max(1) as f64
+    }
+}
+
+fn relative_err(got: &[f64], want: &[f64]) -> f64 {
+    let num: f64 = got.iter().zip(want).map(|(a, b)| (a - b) * (a - b)).sum();
+    let den: f64 = want.iter().map(|v| v * v).sum();
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Shared driver for the `fig_repair` experiment and `benches/fig_repair`:
+/// for each stuck-at rate × spare budget, `cycles` independently-seeded
+/// chips (fresh engine per cycle, fixed weights and input) run through
+/// compile → infer → [`crate::arch::MappedModel::self_heal`] → infer, and
+/// yield is scored as the fraction of cycles whose relative error against
+/// the digital twin stays within `yield_re`.
+///
+/// The workload is one `LinearMem(128, 64)` on 64×64 arrays (two int8
+/// block groups of four digit planes) mapped onto a single tile with
+/// exactly the data capacity it needs plus `spares` spare arrays — so at
+/// `spares = 0` every condemned group degrades, and each spare-group pair
+/// added lets one more condemned group move.
+pub fn repair_sweep(
+    cfg: &SimConfig,
+    cycles: usize,
+    rates: &[f64],
+    spares_list: &[usize],
+    yield_re: f64,
+) -> anyhow::Result<Vec<RepairPoint>> {
+    use crate::nn::layers::LinearMem;
+    let (k, n, m) = (128usize, 64usize, 8usize);
+    let planes = 2 * 4;
+    let weight_rng = || Pcg64::new(cfg.seed, 0x4EA1);
+    let x = Tensor::from_vec(
+        &[m, k],
+        (0..m * k).map(|i| ((i * 31 % 97) as f64) / 48.0 - 1.0).collect(),
+    );
+    let mut digital =
+        Sequential::new(vec![Box::new(LinearMem::new(k, n, None, &mut weight_rng()))]);
+    let y_ref = digital.forward(&x, false);
+    // Honor a configured [repair] policy; default to the enabled one —
+    // a sweep with verification off would never condemn via retries.
+    let spec = if cfg.repair.verify { cfg.repair.clone() } else { RepairSpec::enabled() };
+    let mut points = Vec::new();
+    for &rate in rates {
+        for &spares in spares_list {
+            let chip = ChipSpec::new(1, planes + spares, (64, 64)).with_spares(spares);
+            let mut pt = RepairPoint {
+                rate,
+                spares,
+                cycles,
+                yield_re,
+                retry_hist: vec![0; spec.max_retries + 1],
+                ..RepairPoint::default()
+            };
+            for c in 0..cycles {
+                let mut dpe = cfg.dpe.clone();
+                dpe.array = (64, 64);
+                dpe.nonideal.faults = FaultSpec {
+                    sa0: rate / 2.0,
+                    sa1: rate / 2.0,
+                    ..cfg.dpe.nonideal.faults
+                };
+                let hw = HwSpec::uniform(
+                    DotProductEngine::new(dpe, cfg.seed.wrapping_add(c as u64)),
+                    SliceMethod::int(SliceSpec::int8()),
+                );
+                let model = Sequential::new(vec![Box::new(LinearMem::new(
+                    k,
+                    n,
+                    Some(hw),
+                    &mut weight_rng(),
+                ))]);
+                let mut mapped = model.compile(&chip)?;
+                let re_b = relative_err(&mapped.infer(&x).data, &y_ref.data);
+                let out = mapped.self_heal(&spec)?;
+                let re_a = relative_err(&mapped.infer(&x).data, &y_ref.data);
+                pt.re_before.push(re_b);
+                pt.re_after.push(re_a);
+                pt.yield_before += f64::from(u8::from(re_b <= yield_re));
+                pt.yield_after += f64::from(u8::from(re_a <= yield_re));
+                pt.moves += out.plan.moves.len();
+                pt.unplaced += out.plan.unplaced.len();
+                pt.retries += out.total_retries();
+                pt.probe_matmuls += out.health.probe_matmuls;
+                pt.degraded_cycles += usize::from(out.degraded.is_some());
+                for rep in &out.program_reports {
+                    for (r, cnt) in rep.retry_histogram(spec.max_retries).iter().enumerate() {
+                        pt.retry_hist[r] += cnt;
+                    }
+                }
+            }
+            pt.yield_before /= cycles as f64;
+            pt.yield_after /= cycles as f64;
+            points.push(pt);
+        }
+    }
+    Ok(points)
+}
+
+/// Self-healing chip study (tentpole of the robustness PR; see
+/// `arch::repair`): yield@RE-bound before/after one closed-loop repair
+/// round, across stuck-at rate × spare budget, with the probe/verify
+/// overhead that pays for it.
+pub fn fig_repair(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> {
+    let cycles = scale.pick(4, 24);
+    let rates: Vec<f64> = match scale {
+        Scale::Quick => vec![0.0, 1e-4, 1e-3],
+        Scale::Full => vec![0.0, 2e-5, 1e-4, 5e-4, 2e-3],
+    };
+    let spares_list: Vec<usize> = match scale {
+        Scale::Quick => vec![0, 8],
+        Scale::Full => vec![0, 4, 8],
+    };
+    let yield_re = 0.1;
+    let pts = repair_sweep(cfg, cycles, &rates, &spares_list, yield_re)?;
+    let mut t = Table::new(
+        &format!(
+            "fig_repair — self-healing yield@RE<={yield_re} \
+             ({cycles} cycles, LinearMem 128x64 int8, 1 tile + spares)"
+        ),
+        &[
+            "stuck rate",
+            "spares",
+            "RE before",
+            "RE after",
+            "yield before",
+            "yield after",
+            "moves",
+            "unplaced",
+            "retries",
+            "probe matmuls",
+            "degraded cycles",
+        ],
+    );
+    for p in &pts {
+        t.row(&[
+            format!("{}", p.rate),
+            p.spares.to_string(),
+            fmt_sig(p.re_before_mean()),
+            fmt_sig(p.re_after_mean()),
+            format!("{:.2}", p.yield_before),
+            format!("{:.2}", p.yield_after),
+            p.moves.to_string(),
+            p.unplaced.to_string(),
+            p.retries.to_string(),
+            p.probe_matmuls.to_string(),
+            p.degraded_cycles.to_string(),
+        ]);
+    }
+    Ok(vec![t])
 }
 
 // --------------------------------------------------------------- Fig 13
@@ -809,14 +1041,21 @@ mod tests {
 
     #[test]
     fn registry_lists_all_paper_artifacts() {
-        assert_eq!(EXPERIMENTS.len(), 11);
+        assert_eq!(EXPERIMENTS.len(), 12);
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "table3_throughput"));
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_faults"));
+        assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_repair"));
     }
 
     #[test]
-    fn unknown_experiment_is_error() {
-        assert!(run("nope", &quick_cfg(), Scale::Quick).is_err());
+    fn unknown_experiment_is_error_with_suggestion() {
+        let err = run("nope", &quick_cfg(), Scale::Quick).unwrap_err().to_string();
+        assert!(err.contains("did you mean"), "{err}");
+        // A near-miss suggests the experiment the user meant.
+        let err = run("fig_repar", &quick_cfg(), Scale::Quick).unwrap_err().to_string();
+        assert!(err.contains("fig_repair"), "{err}");
+        assert_eq!(closest_experiment("fig_fautls"), "fig_faults");
+        assert_eq!(closest_experiment("table3"), "table3_throughput");
     }
 
     #[test]
@@ -850,5 +1089,30 @@ mod tests {
         }
         assert_eq!(tables[1].rows.len(), 5);
         assert_eq!(tables[2].rows.len(), 5);
+    }
+
+    #[test]
+    fn fig_repair_quick_runs_and_clean_point_needs_no_repair() {
+        let cycles = 2;
+        let pts = repair_sweep(&quick_cfg(), cycles, &[0.0], &[0, 4], 0.5).unwrap();
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert_eq!(p.re_before.len(), cycles);
+            assert_eq!(p.moves, 0, "clean chip must not move blocks");
+            assert_eq!(p.unplaced, 0);
+            assert_eq!(p.retries, 0, "clean programming must converge first try");
+            assert_eq!(p.degraded_cycles, 0);
+            assert!(p.probe_matmuls > 0, "probes must run even on a clean chip");
+            assert_eq!(
+                p.re_before, p.re_after,
+                "a repair round that moves nothing must leave the bits untouched"
+            );
+        }
+        // Heavy stuck-at with zero spares: everything condemned degrades
+        // gracefully (the sweep completes instead of erroring).
+        let pts = repair_sweep(&quick_cfg(), 1, &[0.05], &[0], 0.5).unwrap();
+        assert!(pts[0].unplaced > 0, "zero spares must leave condemned groups behind");
+        assert_eq!(pts[0].degraded_cycles, 1);
+        assert!(pts[0].retries > 0);
     }
 }

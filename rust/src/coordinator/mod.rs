@@ -4,14 +4,14 @@
 
 pub mod experiments;
 
-pub use experiments::{run as run_experiment, Scale, EXPERIMENTS};
+pub use experiments::{closest_experiment, run as run_experiment, Scale, EXPERIMENTS};
 
 use crate::arch::ChipSpec;
 use crate::device::drift::DriftSpec;
 use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec};
 use crate::device::DeviceSpec;
 use crate::dpe::engine::AdcPolicy;
-use crate::dpe::{DotProductEngine, DpeConfig, SliceMethod};
+use crate::dpe::{DotProductEngine, DpeConfig, RepairSpec, SliceMethod};
 use crate::nn::HwSpec;
 use crate::util::config::Doc;
 use std::path::Path;
@@ -31,6 +31,11 @@ pub struct SimConfig {
     /// ([`crate::nn::Sequential::auto_chip`], which reserves slack for
     /// group-spill fragmentation — plain [`ChipSpec::fit`] does not).
     pub chip: Option<ChipSpec>,
+    /// Closed-loop repair policy (`[repair]` section). The default all-off
+    /// spec keeps every path bit-identical to unverified programming; a
+    /// bare `[repair]` section enables verification with the
+    /// [`RepairSpec::enabled`] defaults.
+    pub repair: RepairSpec,
 }
 
 impl Default for SimConfig {
@@ -42,8 +47,22 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".into(),
             method: "int8".into(),
             chip: None,
+            repair: RepairSpec::none(),
         }
     }
+}
+
+/// Reject keys in `section` that no typed loader reads — a typo'd knob is
+/// an error naming the offending path, not a silently-ignored setting.
+fn reject_unknown_keys(doc: &Doc, section: &str, known: &[&str]) -> anyhow::Result<()> {
+    for key in doc.keys(section) {
+        anyhow::ensure!(
+            known.contains(&key.as_str()),
+            "config key `{section}.{key}` is not recognized (known `[{section}]` keys: {})",
+            known.join(", ")
+        );
+    }
+    Ok(())
 }
 
 impl SimConfig {
@@ -85,6 +104,14 @@ impl SimConfig {
         };
         // [faults] — unified non-ideality injection (all-off by default;
         // see `device::faults` for knob semantics and sources).
+        reject_unknown_keys(
+            doc,
+            "faults",
+            &[
+                "sa0", "sa1", "dead_row", "dead_col", "t_read", "drift_nu", "drift_nu_std",
+                "drift_t0", "adc_gain_std", "adc_offset_lsb", "adc_rounding", "seed",
+            ],
+        )?;
         let ni = &mut d.nonideal;
         ni.faults = FaultSpec {
             sa0: doc.f64_or("faults", "sa0", 0.0),
@@ -109,6 +136,7 @@ impl SimConfig {
         ni.seed = doc.usize_or("faults", "seed", ni.seed as usize) as u64;
         // [chip] — tile hierarchy for network mapping (crate::arch). The
         // array shape is the engine's: a chip hosts arrays of one geometry.
+        reject_unknown_keys(doc, "chip", &["tiles", "arrays_per_tile", "spares_per_tile"])?;
         if doc.sections().any(|s| s == "chip") {
             let tiles = doc.usize_or("chip", "tiles", 16);
             let apt = doc.usize_or("chip", "arrays_per_tile", 64);
@@ -117,7 +145,41 @@ impl SimConfig {
                 "config section `[chip]`: tiles and arrays_per_tile must be positive \
                  (got tiles = {tiles}, arrays_per_tile = {apt})"
             );
-            cfg.chip = Some(ChipSpec::new(tiles, apt, d.array));
+            let spares = doc.usize_or("chip", "spares_per_tile", 0);
+            anyhow::ensure!(
+                spares < apt,
+                "config key `chip.spares_per_tile`: {spares} spares leave no data arrays \
+                 in a {apt}-array tile"
+            );
+            cfg.chip = Some(ChipSpec::new(tiles, apt, d.array).with_spares(spares));
+        }
+        // [repair] — closed-loop program-and-verify / probe / remap policy
+        // (crate::arch::repair). Absent section → all-off (bit-identical
+        // programming); a bare section enables verification.
+        reject_unknown_keys(
+            doc,
+            "repair",
+            &["verify", "tolerance", "max_retries", "probe_re_bound", "probe_vectors"],
+        )?;
+        if doc.sections().any(|s| s == "repair") {
+            let def = RepairSpec::enabled();
+            cfg.repair = RepairSpec {
+                verify: doc.bool_or("repair", "verify", def.verify),
+                tolerance: doc.f64_or("repair", "tolerance", def.tolerance),
+                max_retries: doc.usize_or("repair", "max_retries", def.max_retries),
+                probe_re_bound: doc.f64_or("repair", "probe_re_bound", def.probe_re_bound),
+                probe_vectors: doc.usize_or("repair", "probe_vectors", def.probe_vectors),
+            };
+            anyhow::ensure!(
+                cfg.repair.tolerance >= 0.0,
+                "config key `repair.tolerance`: must be non-negative, got {}",
+                cfg.repair.tolerance
+            );
+            anyhow::ensure!(
+                (1..=2).contains(&cfg.repair.probe_vectors),
+                "config key `repair.probe_vectors`: expected 1 or 2, got {}",
+                cfg.repair.probe_vectors
+            );
         }
         cfg.seed = doc.usize_or("run", "seed", 2024) as u64;
         cfg.backend = doc.str_or("run", "backend", "native").to_string();
@@ -230,6 +292,50 @@ mod tests {
         assert_eq!(ni.adc.rounding, AdcRounding::Floor);
         assert_eq!(ni.seed, 99);
         assert!(ni.drift_enabled() && !ni.is_none());
+    }
+
+    #[test]
+    fn repair_section_parses_and_spares_apply() {
+        let cfg = SimConfig::from_doc(&Doc::parse("[engine]\n").unwrap()).unwrap();
+        assert!(!cfg.repair.verify, "absent [repair] must stay all-off");
+        let doc = Doc::parse(
+            "[chip]\ntiles = 2\narrays_per_tile = 16\nspares_per_tile = 4\n\
+             [repair]\ntolerance = 2.5\nmax_retries = 5\nprobe_re_bound = 0.1\n\
+             probe_vectors = 1\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        let chip = cfg.chip.unwrap();
+        assert_eq!(chip.spares_per_tile, 4);
+        assert_eq!(chip.data_arrays_per_tile(), 12);
+        assert!(cfg.repair.verify, "a [repair] section enables verification");
+        assert_eq!(cfg.repair.tolerance, 2.5);
+        assert_eq!(cfg.repair.max_retries, 5);
+        assert_eq!(cfg.repair.probe_re_bound, 0.1);
+        assert_eq!(cfg.repair.probe_vectors, 1);
+        // Degenerate values are errors naming the key.
+        let doc = Doc::parse("[chip]\narrays_per_tile = 4\nspares_per_tile = 4\n").unwrap();
+        let err = SimConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("chip.spares_per_tile"), "{err}");
+        let doc = Doc::parse("[repair]\nprobe_vectors = 3\n").unwrap();
+        let err = SimConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("repair.probe_vectors"), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_in_validated_sections_are_errors_naming_the_path() {
+        for (toml, path) in [
+            ("[faults]\nsa2 = 0.1\n", "faults.sa2"),
+            ("[chip]\nspare = 1\n", "chip.spare"),
+            ("[repair]\ntollerance = 1.0\n", "repair.tollerance"),
+        ] {
+            let err = SimConfig::from_doc(&Doc::parse(toml).unwrap()).unwrap_err().to_string();
+            assert!(err.contains(path), "{toml}: {err}");
+        }
+        // [engine] and [run] stay lenient: sample configs carry
+        // backend-specific keys the native loader does not read.
+        let doc = Doc::parse("[engine]\nbackend = \"native\"\n").unwrap();
+        assert!(SimConfig::from_doc(&doc).is_ok());
     }
 
     #[test]

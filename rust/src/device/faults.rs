@@ -319,6 +319,22 @@ impl NonIdealitySpec {
     /// the documented order: drift to `t_read`, then stuck-at cells, then
     /// dead lines. Deterministic in `rng`.
     pub fn inject_plane(&self, plane: &mut Matrix, dev: &DeviceSpec, rng: &mut Pcg64) {
+        let _ = self.inject_plane_masked(plane, dev, rng);
+    }
+
+    /// [`NonIdealitySpec::inject_plane`], additionally returning the
+    /// sampled [`FaultMask`] (clean and draw-free when no fault rate is
+    /// set). Program-and-verify retries re-apply this captured mask to
+    /// each redraw — faults are a property of the physical array, so a
+    /// reprogramming attempt on the same slot must see the *same* stuck
+    /// cells, which is what makes them unconvergeable (the detection
+    /// signal). Draw order and values are identical to `inject_plane`.
+    pub fn inject_plane_masked(
+        &self,
+        plane: &mut Matrix,
+        dev: &DeviceSpec,
+        rng: &mut Pcg64,
+    ) -> FaultMask {
         if self.drift_enabled() {
             let step = dev.step();
             for v in plane.data.iter_mut() {
@@ -327,10 +343,11 @@ impl NonIdealitySpec {
                 *v = (self.drift.apply_one(g, nu, self.t_read) - dev.lgs) / step;
             }
         }
-        if !self.faults.is_none() {
-            let mask = FaultMask::sample(&self.faults, plane.rows, plane.cols, rng);
+        let mask = FaultMask::sample(&self.faults, plane.rows, plane.cols, rng);
+        if !mask.is_clean() {
             mask.apply(plane, dev.max_digit() as f64);
         }
+        mask
     }
 }
 
@@ -519,6 +536,50 @@ mod tests {
         // Codes clamp to [0, max_code].
         assert_eq!(chain.convert(-3.0, 0, 1.0, 100.0), 0.0);
         assert_eq!(chain.convert(500.0, 0, 1.0, 100.0), 100.0);
+    }
+
+    #[test]
+    fn prop_inject_plane_masked_matches_inject_plane() {
+        // The mask-returning variant must consume the same draws and
+        // produce the same bits as the original entry point, and the
+        // returned mask must reproduce the pinning when re-applied.
+        prop_check("inject_plane_masked == inject_plane", 60, |g| {
+            let rows = g.usize_in(1..=32);
+            let cols = g.usize_in(1..=32);
+            let ni = NonIdealitySpec {
+                faults: FaultSpec {
+                    sa0: g.f64_in(0.0..0.2),
+                    sa1: g.f64_in(0.0..0.2),
+                    dead_row: g.f64_in(0.0..0.05),
+                    dead_col: g.f64_in(0.0..0.05),
+                },
+                drift: DriftSpec { nu: g.f64_in(0.0..0.1), nu_std: 0.01, t0: 1.0 },
+                t_read: if g.bool() { 1e4 } else { 0.0 },
+                ..NonIdealitySpec::none()
+            };
+            let dev = DeviceSpec::default();
+            let vals = g.vec_f64(rows * cols, 0.0..15.0);
+            let seed = g.rng().next_u64();
+            let mut p1 = Matrix::from_vec(rows, cols, vals.clone());
+            let mut p2 = Matrix::from_vec(rows, cols, vals);
+            let mut rng1 = Pcg64::new(seed, 3);
+            let mut rng2 = Pcg64::new(seed, 3);
+            ni.inject_plane(&mut p1, &dev, &mut rng1);
+            let mask = ni.inject_plane_masked(&mut p2, &dev, &mut rng2);
+            if p1.data != p2.data {
+                return Err("masked variant changed the injected bits".into());
+            }
+            if rng1.next_u64() != rng2.next_u64() {
+                return Err("masked variant consumed different draws".into());
+            }
+            // Re-applying the captured mask is a fixed point.
+            let before = p2.clone();
+            mask.apply(&mut p2, dev.max_digit() as f64);
+            if p2.data != before.data {
+                return Err("captured mask re-application not idempotent".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

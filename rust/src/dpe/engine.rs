@@ -112,7 +112,7 @@ use super::slicing::{
     quantize_block, quantize_slice_block, slice_digits, DataMode, SliceSpec, SliceTables,
 };
 use crate::circuit::CrossbarCircuit;
-use crate::device::faults::{AdcChain, NonIdealitySpec};
+use crate::device::faults::{AdcChain, FaultSpec, NonIdealitySpec};
 use crate::device::DeviceSpec;
 use crate::tensor::{
     matmul_packed_stacked_2d, matmul_packed_stacked_into, DigitPlanes, Matrix, PackedB,
@@ -365,6 +365,188 @@ impl WeightTemplate {
             k: self.k,
             n: self.n,
         }
+    }
+
+    /// Program-and-verify at the layer-local identity streams: like
+    /// [`WeightTemplate::program`], but each digit plane is read back
+    /// through the read-noise model and re-drawn while its worst per-cell
+    /// digit error exceeds `spec.tolerance` (bounded by
+    /// `spec.max_retries`). Returns the per-block retry/convergence
+    /// accounting alongside the weights. With `spec.verify == false` this
+    /// is the plain single-shot path, bit-identical to `program`.
+    pub fn program_verified(
+        &self,
+        engine: &DotProductEngine,
+        tag: u64,
+        spec: &RepairSpec,
+    ) -> (PreparedWeights, ProgramReport) {
+        let identity: Vec<u64> = (0..self.blocks.len() as u64).collect();
+        self.program_verified_mapped(engine, tag, spec, &identity)
+    }
+
+    /// [`WeightTemplate::program_verified`] with explicit per-block
+    /// physical stream ids (the chip-mapped path, mirroring
+    /// [`DotProductEngine::prepare_weights_mapped`]): every draw — the
+    /// programming redraws of the verify loop included — keys off the
+    /// physical slot id, and the stuck cells pinned on each retry are the
+    /// *slot's* fault mask, so a plane that never converges condemns a
+    /// physical array, not a logical block index.
+    pub fn program_verified_mapped(
+        &self,
+        engine: &DotProductEngine,
+        tag: u64,
+        spec: &RepairSpec,
+        block_streams: &[u64],
+    ) -> (PreparedWeights, ProgramReport) {
+        assert_eq!(
+            engine.cfg.array, self.array,
+            "weight template was blocked for {:?} arrays, engine has {:?}",
+            self.array, engine.cfg.array
+        );
+        engine.assert_method_fits(&self.method.spec);
+        assert_eq!(
+            block_streams.len(),
+            self.blocks.len(),
+            "stream list covers {} blocks, weight grid has {}",
+            block_streams.len(),
+            self.blocks.len()
+        );
+        if !spec.verify {
+            // Single-shot path: literally `program_block` per block, so a
+            // disabled [repair] spec cannot drift from the existing
+            // programming path by construction.
+            let blocks: Vec<PreparedBlock> = par_map(self.blocks.len(), |blk| {
+                engine.program_block(&self.blocks[blk], block_streams[blk], tag)
+            });
+            let w = PreparedWeights {
+                blocks,
+                grid: self.grid,
+                method: self.method.clone(),
+                k: self.k,
+                n: self.n,
+            };
+            return (w, ProgramReport::default());
+        }
+        let results: Vec<(PreparedBlock, BlockProgramStats)> =
+            par_map(self.blocks.len(), |blk| {
+                let (pb, mut st) = engine.program_block_verified(
+                    &self.blocks[blk],
+                    block_streams[blk],
+                    tag,
+                    spec,
+                );
+                st.block = blk;
+                (pb, st)
+            });
+        let (blocks, stats): (Vec<_>, Vec<_>) = results.into_iter().unzip();
+        let w = PreparedWeights {
+            blocks,
+            grid: self.grid,
+            method: self.method.clone(),
+            k: self.k,
+            n: self.n,
+        };
+        (w, ProgramReport { blocks: stats })
+    }
+}
+
+/// Closed-loop reliability policy (the TOML `[repair]` section): the
+/// program-and-verify loop of [`WeightTemplate::program_verified`] plus
+/// the health-probe thresholds consumed by [`crate::arch::repair`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepairSpec {
+    /// Master switch. When false every programming path is the plain
+    /// single-shot one (hard-asserted bit-identical to it).
+    pub verify: bool,
+    /// Per-plane acceptance bound on the worst per-cell digit error of
+    /// the read-back (digit units; a 4-bit device spans 0..=15). Healthy
+    /// planes under Table-2 programming noise stay well below ~5 digits;
+    /// a stuck cell contributes up to `max_digit` and never improves.
+    pub tolerance: f64,
+    /// Extra programming attempts per plane before it counts as
+    /// unconverged (the condemnation signal).
+    pub max_retries: usize,
+    /// Relative-error bound on a block group's checksum probe readout
+    /// before the group's slots are condemned (see
+    /// [`crate::arch::repair::HealthReport`]).
+    pub probe_re_bound: f64,
+    /// Deterministic probe vectors per k-block: 1 = the all-ones column
+    /// checksum, 2 = additionally the alternating ±1 vector (catches
+    /// sign-symmetric fault patterns the plain sum misses).
+    pub probe_vectors: usize,
+}
+
+impl Default for RepairSpec {
+    fn default() -> Self {
+        RepairSpec {
+            verify: false,
+            tolerance: 6.0,
+            max_retries: 3,
+            probe_re_bound: 0.25,
+            probe_vectors: 2,
+        }
+    }
+}
+
+impl RepairSpec {
+    /// The all-off policy: no verify loop, no probes.
+    pub fn none() -> Self {
+        RepairSpec::default()
+    }
+
+    /// An enabled policy with the default thresholds.
+    pub fn enabled() -> Self {
+        RepairSpec { verify: true, ..RepairSpec::default() }
+    }
+}
+
+/// Per-block accounting of one verified programming pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockProgramStats {
+    /// Block index within the layer's weight grid (`kb * n_blocks + nb`).
+    pub block: usize,
+    /// Physical stream the block was programmed on (slot id when mapped).
+    pub stream: u64,
+    /// Total extra programming attempts across the block's digit planes.
+    pub retries: usize,
+    /// Planes still failing the tolerance after `max_retries` — stuck
+    /// cells by construction never converge, so this is the per-slot
+    /// fault detection signal.
+    pub unconverged_planes: usize,
+    /// Worst final per-cell digit error over the block's planes.
+    pub worst_err: f64,
+}
+
+/// The per-block stats of one [`WeightTemplate::program_verified`] run
+/// (empty when the spec disables verification).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProgramReport {
+    pub blocks: Vec<BlockProgramStats>,
+}
+
+impl ProgramReport {
+    /// Total retries across all blocks.
+    pub fn total_retries(&self) -> usize {
+        self.blocks.iter().map(|b| b.retries).sum()
+    }
+
+    /// Indices of blocks with at least one unconverged plane.
+    pub fn unconverged_blocks(&self) -> Vec<usize> {
+        self.blocks
+            .iter()
+            .filter(|b| b.unconverged_planes > 0)
+            .map(|b| b.block)
+            .collect()
+    }
+
+    /// Retries-per-block histogram: `hist[r]` counts blocks that took
+    /// exactly `r` retries, with the last bin absorbing `>= cap`.
+    pub fn retry_histogram(&self, cap: usize) -> Vec<usize> {
+        let mut hist = vec![0usize; cap + 1];
+        for b in &self.blocks {
+            hist[b.retries.min(cap)] += 1;
+        }
+        hist
     }
 }
 
@@ -644,6 +826,137 @@ impl DotProductEngine {
             }
         }
         PreparedBlock { packed, scale: tb.scale, chain: self.adc_chain_for(stream) }
+    }
+
+    /// [`DotProductEngine::program_block`] with the closed verify loop
+    /// (paper-adjacent iterative program-and-verify): after each plane is
+    /// programmed, it is read back through the read-noise model on a
+    /// dedicated RNG stream and re-drawn while its worst per-cell digit
+    /// error exceeds `spec.tolerance`, up to `spec.max_retries` extra
+    /// attempts.
+    ///
+    /// Invariants that keep the disabled/clean cases bit-identical to the
+    /// plain path:
+    /// - the programming and fault streams are the same generators in the
+    ///   same order as `program_block`; a plane that passes on its first
+    ///   attempt consumes exactly the plain path's draws;
+    /// - read-back uses its **own** stream (never the programming or
+    ///   fault generators), and is draw-free when `read_cv == 0`;
+    /// - retries re-apply the plane's *captured* fault mask — stuck cells
+    ///   belong to the physical array, so they are pinned identically on
+    ///   every attempt and a plane hosting one above tolerance never
+    ///   converges (the detection signal) — while drift is re-drawn from
+    ///   the continuing fault stream (a reprogram decays afresh).
+    fn program_block_verified(
+        &self,
+        tb: &TemplateBlock,
+        stream: u64,
+        tag: u64,
+        spec: &RepairSpec,
+    ) -> (PreparedBlock, BlockProgramStats) {
+        let (l_m, l_n) = self.cfg.array;
+        let n_slices = tb.planes.len();
+        let dev = &self.cfg.device;
+        let max_digit = dev.max_digit() as f64;
+        let mut rng = Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), stream);
+        let ni = &self.cfg.nonideal;
+        let inject = !self.cfg.noise_free && ni.injects_at_program();
+        let mut fault_rng = inject.then(|| {
+            Pcg64::new(
+                self.seed ^ ni.seed ^ tag.wrapping_mul(0xD1B5_4A32_D192_ED03),
+                0x4641_544C ^ stream,
+            )
+        });
+        let mut verify_rng =
+            Pcg64::new(self.seed ^ tag.wrapping_mul(0x94D0_49BB_1331_11EB), 0x7E81_0000 ^ stream);
+        let read_cv = if self.cfg.noise_free { 0.0 } else { dev.read_cv };
+        let mut packed = PackedB::zeros(l_m, n_slices * l_n);
+        let mut stats = BlockProgramStats {
+            block: 0,
+            stream,
+            retries: 0,
+            unconverged_planes: 0,
+            worst_err: 0.0,
+        };
+        for (s, plane) in tb.planes.iter().enumerate() {
+            let c0 = s * l_n;
+            // First attempt: identical draws to `program_block`.
+            let (mut programmed, mask) = if let Some(frng) = fault_rng.as_mut() {
+                let mut p = self.program_plane(plane, &mut rng);
+                let m = ni.inject_plane_masked(&mut p, dev, frng);
+                (p, Some(m))
+            } else if self.cfg.noise_free {
+                (plane.clone(), None)
+            } else {
+                (self.program_plane(plane, &mut rng), None)
+            };
+            let mut err = plane_readback_error(&programmed, plane, read_cv, &mut verify_rng);
+            let mut attempts = 0usize;
+            while err > spec.tolerance && attempts < spec.max_retries {
+                attempts += 1;
+                programmed = self.program_plane(plane, &mut rng);
+                if let Some(frng) = fault_rng.as_mut() {
+                    // Drift decays afresh on a reprogram (new per-cell
+                    // exponents from the continuing fault stream); the
+                    // captured stuck-cell mask is then pinned unchanged.
+                    let drift_only = NonIdealitySpec { faults: FaultSpec::none(), ..ni.clone() };
+                    drift_only.inject_plane(&mut programmed, dev, frng);
+                    if let Some(m) = mask.as_ref() {
+                        m.apply(&mut programmed, max_digit);
+                    }
+                }
+                err = plane_readback_error(&programmed, plane, read_cv, &mut verify_rng);
+            }
+            stats.retries += attempts;
+            if err > spec.tolerance {
+                stats.unconverged_planes += 1;
+            }
+            stats.worst_err = stats.worst_err.max(err);
+            for r in 0..l_m {
+                for (c, &v) in programmed.row(r).iter().enumerate() {
+                    packed.write(r, c0 + c, v);
+                }
+            }
+        }
+        (PreparedBlock { packed, scale: tb.scale, chain: self.adc_chain_for(stream) }, stats)
+    }
+
+    /// Reprogram only the listed `(block, new_stream)` pairs of an
+    /// existing [`PreparedWeights`] in place — the remap-to-spare path
+    /// ([`crate::arch::repair::RepairPlan`]). Each moved block re-derives
+    /// its template slice deterministically and programs it at the *new*
+    /// physical stream, so its programming noise, fault mask, and ADC
+    /// chain all belong to the destination slot; untouched blocks keep
+    /// their bits. `b` must be the matrix the weights were prepared from.
+    pub fn reprogram_prepared_blocks(
+        &self,
+        w: &mut PreparedWeights,
+        b: &Matrix,
+        moves: &[(usize, u64)],
+        tag: u64,
+    ) {
+        assert_eq!(
+            (b.rows, b.cols),
+            (w.k, w.n),
+            "weight matrix is {}x{}, prepared weights are {}x{}",
+            b.rows,
+            b.cols,
+            w.k,
+            w.n
+        );
+        assert_eq!(
+            (w.grid.k.block, w.grid.n.block),
+            self.cfg.array,
+            "weights were prepared for {:?} arrays, engine has {:?}",
+            (w.grid.k.block, w.grid.n.block),
+            self.cfg.array
+        );
+        let method = w.method.clone();
+        for &(blk, stream) in moves {
+            assert!(blk < w.blocks.len(), "block {blk} out of {} blocks", w.blocks.len());
+            let tb = template_block(b, &w.grid, &method, self.cfg.array, blk);
+            w.blocks[blk] = self.program_block(&tb, stream, tag);
+        }
     }
 
     /// Program one digit plane through the device model: digit → target
@@ -1191,6 +1504,26 @@ fn template_block(
     let sub = b.block(k0, n0, kl, nl).pad_to(l_m, l_n);
     let qb = quantize_block(&sub, &method.spec, method.mode);
     TemplateBlock { planes: slice_digits(&qb.q, &method.spec), scale: qb.scale }
+}
+
+/// Worst per-cell digit error of one programmed plane read back through
+/// multiplicative per-read fluctuation (`read_cv`) against the template's
+/// target digits — the verify metric of
+/// [`DotProductEngine::program_block_verified`]. Draw-free when
+/// `read_cv == 0` ([`Pcg64::lognormal_cv`] early-returns), so a
+/// deterministic read-back costs no RNG state.
+fn plane_readback_error(
+    programmed: &Matrix,
+    target: &Matrix,
+    read_cv: f64,
+    rng: &mut Pcg64,
+) -> f64 {
+    let mut worst = 0.0f64;
+    for (&got, &want) in programmed.data.iter().zip(&target.data) {
+        let read = got * rng.lognormal_cv(1.0, read_cv);
+        worst = worst.max((read - want).abs());
+    }
+    worst
 }
 
 /// Reduce per-pair block contributions into the `m × n` output: sum over
@@ -1881,6 +2214,260 @@ mod tests {
         assert!(
             re_faulty > re_clean,
             "10% stuck cells must degrade accuracy: {re_faulty} vs {re_clean}"
+        );
+    }
+
+    /// Engine with programming noise, stuck-at faults, and ADC error all
+    /// active — the adversarial setting for repair bit-identity tests.
+    fn faulty_engine(seed: u64, cell_rate: f64) -> DotProductEngine {
+        use crate::device::faults::AdcErrorSpec;
+        DotProductEngine::new(
+            DpeConfig {
+                nonideal: NonIdealitySpec {
+                    faults: FaultSpec::cells(cell_rate),
+                    adc: AdcErrorSpec {
+                        gain_std: 0.02,
+                        offset_std_lsb: 0.3,
+                        ..AdcErrorSpec::none()
+                    },
+                    ..NonIdealitySpec::none()
+                },
+                ..DpeConfig::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn disabled_repair_spec_bit_identical_to_plain_program() {
+        // Acceptance criterion: an all-off [repair] spec must be
+        // hard-bit-identical to the existing program path, under active
+        // noise + faults + ADC error, on both the identity and a mapped
+        // stream list.
+        let e = faulty_engine(19, 0.05);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(5, 130, 841);
+        let b = rand_mat(130, 70, 842);
+        let t = e.weight_template(&b, &med);
+        let plain = t.program(&e, 3);
+        let (verified, report) = t.program_verified(&e, 3, &RepairSpec::none());
+        assert!(report.blocks.is_empty(), "disabled spec must not report");
+        assert_eq!(
+            e.matmul_prepared(&a, &plain, &med, 0).data,
+            e.matmul_prepared(&a, &verified, &med, 0).data,
+            "disabled repair spec drifted from the plain program path"
+        );
+        let streams: Vec<u64> = (0..t.blocks.len() as u64).map(|s| 77 + 3 * s).collect();
+        let plain_m = e.prepare_weights_mapped(&b, &med, 3, &streams);
+        let (verified_m, _) = t.program_verified_mapped(&e, 3, &RepairSpec::none(), &streams);
+        assert_eq!(
+            e.matmul_prepared(&a, &plain_m, &med, 0).data,
+            e.matmul_prepared(&a, &verified_m, &med, 0).data,
+            "disabled repair spec drifted from the mapped program path"
+        );
+    }
+
+    #[test]
+    fn prop_repair_verify_pass_is_fixed_point_and_deterministic() {
+        // Satellite properties: a verify pass on clean planes is a fixed
+        // point (no plane reprograms, bits identical to the non-verified
+        // path), and the whole report is deterministic per seed.
+        crate::util::prop::prop_check("repair verify pass fixed point", 15, |g| {
+            let k = g.usize_in(1..=100);
+            let n = g.usize_in(1..=100);
+            let mut cfg = DpeConfig::default();
+            if g.bool() {
+                cfg.device.read_cv = 0.02;
+            }
+            let e = DotProductEngine::new(cfg, 500 + g.case as u64);
+            let med = SliceMethod::int(SliceSpec::int8());
+            let b = Matrix::from_vec(k, n, g.vec_f64(k * n, -1.0..1.0));
+            let a = Matrix::from_vec(4, k, g.vec_f64(4 * k, -1.0..1.0));
+            // No faults and a tolerance above any noise excursion: every
+            // plane passes its first read-back.
+            let spec = RepairSpec { verify: true, tolerance: 1e9, ..RepairSpec::default() };
+            let t = e.weight_template(&b, &med);
+            let plain = t.program(&e, 1);
+            let (v1, r1) = t.program_verified(&e, 1, &spec);
+            let (v2, r2) = t.program_verified(&e, 1, &spec);
+            if r1 != r2 {
+                return Err("verified report not deterministic per seed".into());
+            }
+            if r1.total_retries() != 0 {
+                return Err(format!("clean planes reprogrammed: {} retries", r1.total_retries()));
+            }
+            if !r1.unconverged_blocks().is_empty() {
+                return Err("clean planes reported unconverged".into());
+            }
+            let want = e.matmul_prepared(&a, &plain, &med, 0).data;
+            if e.matmul_prepared(&a, &v1, &med, 0).data != want
+                || e.matmul_prepared(&a, &v2, &med, 0).data != want
+            {
+                return Err("clean verify pass is not a fixed point".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_repair_retry_count_deterministic_per_seed() {
+        // With stuck cells the verify loop retries and condemns; both the
+        // accounting and the programmed bits must be reproducible.
+        crate::util::prop::prop_check("repair retry count deterministic", 10, |g| {
+            let k = g.usize_in(32..=100);
+            let n = g.usize_in(32..=100);
+            let e = faulty_engine(900 + g.case as u64, 0.08);
+            let med = SliceMethod::int(SliceSpec::int8());
+            let b = Matrix::from_vec(k, n, g.vec_f64(k * n, -1.0..1.0));
+            let a = Matrix::from_vec(3, k, g.vec_f64(3 * k, -1.0..1.0));
+            let spec = RepairSpec { verify: true, max_retries: 2, ..RepairSpec::enabled() };
+            let t = e.weight_template(&b, &med);
+            let (v1, r1) = t.program_verified(&e, 2, &spec);
+            let (v2, r2) = t.program_verified(&e, 2, &spec);
+            if r1 != r2 {
+                return Err("retry accounting differs across identical runs".into());
+            }
+            let o1 = e.matmul_prepared(&a, &v1, &med, 0);
+            if o1.data != e.matmul_prepared(&a, &v2, &med, 0).data {
+                return Err("verified programming not reproducible per seed".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_repair_zero_tolerance_noiseless_bit_identical() {
+        // Satellite property: a zero-tolerance spec with no faults is
+        // bit-identical to the non-verified path — exactly (with zero
+        // retries) on a noise-free engine, and bit-for-bit on a cv = 0
+        // engine too (programming is draw-free there, so even a paranoid
+        // tolerance cannot change the programmed values).
+        crate::util::prop::prop_check("zero tolerance + no faults bit-identical", 15, |g| {
+            let k = g.usize_in(1..=80);
+            let n = g.usize_in(1..=80);
+            let med = SliceMethod::int(SliceSpec::int8());
+            let b = Matrix::from_vec(k, n, g.vec_f64(k * n, -1.0..1.0));
+            let a = Matrix::from_vec(3, k, g.vec_f64(3 * k, -1.0..1.0));
+            let spec = RepairSpec {
+                verify: true,
+                tolerance: 0.0,
+                max_retries: 2,
+                ..RepairSpec::default()
+            };
+            let mut nf = DpeConfig { noise_free: true, ..DpeConfig::default() };
+            nf.device.read_cv = 0.0;
+            let e = DotProductEngine::new(nf, 40 + g.case as u64);
+            let t = e.weight_template(&b, &med);
+            let (v, r) = t.program_verified(&e, 1, &spec);
+            if r.total_retries() != 0 || !r.unconverged_blocks().is_empty() {
+                return Err("noise-free zero-tolerance pass retried".into());
+            }
+            let want = e.matmul_prepared(&a, &t.program(&e, 1), &med, 0).data;
+            if e.matmul_prepared(&a, &v, &med, 0).data != want {
+                return Err("noise-free zero-tolerance path not bit-identical".into());
+            }
+            let mut cv0 = DpeConfig::default();
+            cv0.device.cv = 0.0;
+            cv0.device.read_cv = 0.0;
+            let e = DotProductEngine::new(cv0, 40 + g.case as u64);
+            let t = e.weight_template(&b, &med);
+            let (v, _) = t.program_verified(&e, 1, &spec);
+            let want = e.matmul_prepared(&a, &t.program(&e, 1), &med, 0).data;
+            if e.matmul_prepared(&a, &v, &med, 0).data != want {
+                return Err("cv=0 zero-tolerance path not bit-identical".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn verified_program_flags_stuck_cells_as_unconverged() {
+        // The detection signal: stuck cells are pinned identically on
+        // every retry, so planes hosting a large-error one burn all
+        // retries and report unconverged.
+        let e = faulty_engine(23, 0.1);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let b = rand_mat(128, 64, 851);
+        let spec = RepairSpec { max_retries: 2, ..RepairSpec::enabled() };
+        let t = e.weight_template(&b, &med);
+        let (_, report) = t.program_verified(&e, 1, &spec);
+        assert_eq!(report.blocks.len(), 2, "2 k-blocks × 1 n-block");
+        assert!(report.total_retries() > 0, "10% stuck cells must trigger retries");
+        assert!(
+            !report.unconverged_blocks().is_empty(),
+            "stuck cells must never converge: {report:?}"
+        );
+        let hist = report.retry_histogram(4);
+        assert_eq!(hist.iter().sum::<usize>(), report.blocks.len());
+        // A clean engine under the same spec converges without retries.
+        let clean = DotProductEngine::new(DpeConfig::default(), 23);
+        let t = clean.weight_template(&b, &med);
+        let (_, report) = t.program_verified(&clean, 1, &spec);
+        assert_eq!(report.total_retries(), 0, "clean arrays must pass first try: {report:?}");
+        assert!(report.unconverged_blocks().is_empty());
+    }
+
+    #[test]
+    fn reprogram_moved_blocks_bit_identical_to_full_remap() {
+        // Remap-to-spare correctness (bugfix-sweep satellite): moving a
+        // block to a new physical stream via the partial reprogram must
+        // equal a full prepare at the updated stream list — i.e. the
+        // moved block draws programming noise, fault masks, AND its ADC
+        // chain from the *new* slot's streams, untouched blocks keep
+        // their bits.
+        let e = faulty_engine(13, 0.04);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(6, 130, 861);
+        let b = rand_mat(130, 70, 862);
+        let streams: Vec<u64> = (0..4u64).collect(); // 2×2 block grid
+        let w_orig = e.prepare_weights_mapped(&b, &med, 1, &streams);
+        let mut w_moved = w_orig.clone();
+        e.reprogram_prepared_blocks(&mut w_moved, &b, &[(1, 500), (2, 600)], 1);
+        let mut full_streams = streams.clone();
+        full_streams[1] = 500;
+        full_streams[2] = 600;
+        let w_full = e.prepare_weights_mapped(&b, &med, 1, &full_streams);
+        assert_eq!(
+            e.matmul_prepared(&a, &w_moved, &med, 0).data,
+            e.matmul_prepared(&a, &w_full, &med, 0).data,
+            "partial reprogram must equal full remap at the new streams"
+        );
+        assert_ne!(
+            e.matmul_prepared(&a, &w_moved, &med, 0).data,
+            e.matmul_prepared(&a, &w_orig, &med, 0).data,
+            "moving blocks must resample their noise/faults/ADC"
+        );
+    }
+
+    #[test]
+    fn two_placements_of_same_layer_differ_in_fault_masks() {
+        // Regression (bugfix-sweep satellite): with programming noise and
+        // ADC error silenced (cv = 0, ideal ADC), the ONLY stream-keyed
+        // draws left are the fault masks — two placements of the same
+        // layer must still produce different programmed bits, proving
+        // masks are drawn from the physical slot's stream and not from
+        // the layer-local block index.
+        let mut cfg = DpeConfig {
+            nonideal: NonIdealitySpec {
+                faults: FaultSpec::cells(0.05),
+                ..NonIdealitySpec::none()
+            },
+            ..DpeConfig::default()
+        };
+        cfg.device.cv = 0.0;
+        cfg.device.read_cv = 0.0;
+        let e = DotProductEngine::new(cfg, 29);
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(6, 128, 871);
+        let b = rand_mat(128, 64, 872);
+        let placement_a: Vec<u64> = vec![0, 4];
+        let placement_b: Vec<u64> = vec![64, 68];
+        let wa = e.prepare_weights_mapped(&b, &med, 1, &placement_a);
+        let wb2 = e.prepare_weights_mapped(&b, &med, 1, &placement_b);
+        assert_ne!(
+            e.matmul_prepared(&a, &wa, &med, 0).data,
+            e.matmul_prepared(&a, &wb2, &med, 0).data,
+            "fault masks must be keyed by physical slot, not layer-local index"
         );
     }
 }

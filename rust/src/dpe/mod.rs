@@ -21,6 +21,7 @@ pub mod quant;
 pub mod slicing;
 
 pub use engine::{
-    DotProductEngine, DpeConfig, PreparedInputs, PreparedWeights, SliceMethod, WeightTemplate,
+    BlockProgramStats, DotProductEngine, DpeConfig, PreparedInputs, PreparedWeights,
+    ProgramReport, RepairSpec, SliceMethod, WeightTemplate,
 };
 pub use slicing::{quantize_slice_block, DataMode, SliceSpec, SliceTables, SlicedBlock};

@@ -1,7 +1,7 @@
 //! memintelli — CLI for the MemIntelli-RS simulation framework.
 //!
 //! ```text
-//! memintelli list                         list experiments (paper figures/tables)
+//! memintelli list | --list                list experiments (paper figures/tables)
 //! memintelli run <id> [--full] [--config memintelli.toml]
 //! memintelli run all [--full]
 //! memintelli <id> [--quick|--full]        shortcut: run one experiment directly
@@ -23,7 +23,7 @@ fn usage() -> ! {
         "usage: memintelli <command>\n\
          \n\
          commands:\n\
-         \x20 list                         list all experiments\n\
+         \x20 list | --list                list all experiments\n\
          \x20 run <id>|all [--full] [--config FILE]   run experiment(s)\n\
          \x20 <id> [--quick|--full]        shortcut for `run <id>` (quick is the default)\n\
          \x20 info                         show environment + artifacts\n\
@@ -83,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     let cmd = argv[0].as_str();
     let args = parse_args(&argv[1..]);
     match cmd {
-        "list" => {
+        "list" | "--list" => {
             println!("experiments (paper artifact → id):\n");
             for (id, desc) in EXPERIMENTS {
                 println!("  {id:<20} {desc}");
@@ -152,6 +152,14 @@ fn main() -> anyhow::Result<()> {
             let cfg = load_config(&args)?;
             let scale = if args.flags.contains_key("full") { Scale::Full } else { Scale::Quick };
             run_experiment(id, &cfg, scale)?;
+        }
+        other if !other.starts_with("--") => {
+            eprintln!(
+                "unknown command or experiment '{other}' — did you mean '{}'? \
+                 (see `memintelli list`)",
+                memintelli::coordinator::closest_experiment(other)
+            );
+            std::process::exit(2);
         }
         _ => usage(),
     }

@@ -20,9 +20,9 @@
 //! bit-identical there (the anchor).
 
 use super::HwSpec;
-use crate::arch::LayerPlacement;
+use crate::arch::{BlockMove, LayerPlacement};
 use crate::dpe::blocks::MatmulBlocks;
-use crate::dpe::{PreparedInputs, PreparedWeights};
+use crate::dpe::{PreparedInputs, PreparedWeights, ProgramReport, RepairSpec};
 use crate::tensor::Matrix;
 use crate::util::parallel::par_map;
 
@@ -50,6 +50,12 @@ pub struct MemCore {
     /// weight-independent, which is exactly what makes re-evaluating a
     /// fixed batch across programming cycles cheap).
     input_cache: Option<(Vec<f64>, PreparedInputs)>,
+    /// The full-precision weight matrix last programmed — the ground
+    /// truth the repair loop needs: verified reprogramming re-derives the
+    /// template from it, health probes compute their checksum
+    /// expectations from it, and remap-to-spare reprograms moved blocks
+    /// from it ([`crate::arch::repair`]).
+    last_w: Option<Matrix>,
 }
 
 impl MemCore {
@@ -63,6 +69,7 @@ impl MemCore {
             placement: None,
             cache_inputs_enabled: false,
             input_cache: None,
+            last_w: None,
         }
     }
 
@@ -140,6 +147,110 @@ impl MemCore {
             self.generation,
             &streams,
         ));
+        self.last_w = Some(w.clone());
+    }
+
+    /// Re-program the hardware copy through the program-and-verify loop
+    /// ([`crate::dpe::WeightTemplate::program_verified_mapped`]) at the
+    /// current generation and streams, returning the per-block
+    /// retry/convergence accounting. `None` for digital or never-programmed
+    /// cores. With `spec.verify == false` the programmed bits are
+    /// identical to [`MemCore::reprogram`]'s.
+    pub fn program_verified(&mut self, spec: &RepairSpec) -> Option<ProgramReport> {
+        let hw = self.hw.as_ref()?;
+        let w = self.last_w.as_ref()?;
+        if self.generation == 0 {
+            return None;
+        }
+        let template = hw.engine.weight_template(w, &hw.weight_method);
+        let grid = MatmulBlocks::new(w.rows, w.cols, hw.engine.cfg.array);
+        let slices = hw.weight_method.spec.num_slices();
+        let streams = self.block_streams(grid.pair_count(), slices);
+        let (prep, report) =
+            template.program_verified_mapped(&hw.engine, self.generation, spec, &streams);
+        self.prepared = Some(prep);
+        Some(report)
+    }
+
+    /// Health-probe every placed block group through the genuine fused
+    /// GEMM path, without ground-truth activations: for each k-block, a
+    /// deterministic checksum input (all-ones; optionally alternating ±1)
+    /// that is zero outside that k-range — every other k-block quantizes
+    /// to scale 0 and contributes *exactly* zero — is run through
+    /// [`crate::dpe::DotProductEngine::matmul_prepared`] and compared
+    /// against the digitally-computed expectation. Returns per-block
+    /// relative-error scores (indexed `kb * n_blocks + nb`, matching the
+    /// placement's block order) and the number of probe matmuls executed.
+    pub fn probe_block_scores(&self, spec: &RepairSpec) -> Option<(Vec<f64>, usize)> {
+        let hw = self.hw.as_ref()?;
+        let prep = self.prepared.as_ref()?;
+        let w = self.last_w.as_ref()?;
+        let grid = MatmulBlocks::new(w.rows, w.cols, hw.engine.cfg.array);
+        let nc = grid.n.count();
+        let nv = spec.probe_vectors.clamp(1, 2);
+        let mut scores = vec![0.0f64; grid.pair_count()];
+        for kb in 0..grid.k.count() {
+            let (k0, kl) = grid.k.range(kb);
+            let probe = Matrix::from_fn(nv, w.rows, |v, j| {
+                if j < k0 || j >= k0 + kl {
+                    0.0
+                } else if v == 0 || j % 2 == 0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            });
+            let got = hw.engine.matmul_prepared(&probe, prep, &hw.input_method, self.generation);
+            let want = probe.matmul(w);
+            for nb in 0..nc {
+                let (n0, nl) = grid.n.range(nb);
+                let (mut num, mut den) = (0.0f64, 0.0f64);
+                for v in 0..nv {
+                    for j in n0..n0 + nl {
+                        let d = got.at(v, j) - want.at(v, j);
+                        num += d * d;
+                        den += want.at(v, j) * want.at(v, j);
+                    }
+                }
+                scores[kb * nc + nb] = if den > 0.0 { (num / den).sqrt() } else { num.sqrt() };
+            }
+        }
+        Some((scores, grid.k.count() * nv))
+    }
+
+    /// Apply remap-to-spare moves: reprogram the listed blocks at their
+    /// new physical streams
+    /// ([`crate::dpe::DotProductEngine::reprogram_prepared_blocks`] — the
+    /// moved blocks' programming noise, fault masks, and ADC chains all
+    /// come from the destination slots) and update the stream list and
+    /// placement record to match. Returns whether anything moved.
+    pub fn remap_blocks(&mut self, moves: &[&BlockMove]) -> bool {
+        if moves.is_empty() {
+            return false;
+        }
+        let Some(hw) = &self.hw else { return false };
+        let Some(w) = &self.last_w else { return false };
+        let Some(prep) = self.prepared.as_mut() else { return false };
+        let slices = hw.weight_method.spec.num_slices();
+        let base = self.plane_base;
+        let mut streams = match &self.assigned_streams {
+            Some(v) => v.clone(),
+            None => {
+                (0..prep.num_blocks() as u64).map(|b| base + b * slices as u64).collect()
+            }
+        };
+        let pairs: Vec<(usize, u64)> = moves.iter().map(|m| (m.block, m.new_stream)).collect();
+        hw.engine.reprogram_prepared_blocks(prep, w, &pairs, self.generation);
+        for m in moves {
+            streams[m.block] = m.new_stream;
+            if let Some(lp) = self.placement.as_mut() {
+                assert_eq!(m.to.len(), slices, "move slot count != group slice count");
+                lp.block_streams[m.block] = m.new_stream;
+                lp.slots[m.block * slices..(m.block + 1) * slices].copy_from_slice(&m.to);
+            }
+        }
+        self.assigned_streams = Some(streams);
+        true
     }
 
     /// Set the virtual contiguous stream base (layer-order packing).

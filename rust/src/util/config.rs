@@ -130,6 +130,14 @@ impl Doc {
         self.sections.keys()
     }
 
+    /// All keys present in `section`, in sorted order (empty when the
+    /// section is absent). Typed loaders use this to reject unknown keys
+    /// with an error naming the offending path instead of silently
+    /// ignoring a typo'd knob.
+    pub fn keys(&self, section: &str) -> impl Iterator<Item = &String> {
+        self.sections.get(section).into_iter().flat_map(|s| s.keys())
+    }
+
     /// The `section.key` value as an array of non-negative integers:
     /// `Ok(None)` when the key is absent (defaults apply), an error naming
     /// the offending key path when it is present but malformed — typed
@@ -322,6 +330,15 @@ slices = [1, 1, 2, 4]
         let doc = Doc::parse("[engine]\narray_size = [32, 16]\n").unwrap();
         assert_eq!(doc.usize_array("engine", "array_size").unwrap(), Some(vec![32, 16]));
         assert_eq!(doc.usize_array("engine", "missing").unwrap(), None);
+    }
+
+    #[test]
+    fn keys_enumerates_section_contents() {
+        let doc = Doc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        let ks: Vec<&String> = doc.keys("a").collect();
+        assert_eq!(ks, ["x", "y"]);
+        assert_eq!(doc.keys("b").count(), 1);
+        assert_eq!(doc.keys("missing").count(), 0);
     }
 
     #[test]
