@@ -7,21 +7,26 @@
 //!
 //! - **Kernel level** (`kernel_cases`): all `S_a = 4` INT8 input digit
 //!   planes of one k-block against one packed weight block
-//!   (`k = 256`, `n = S_w·l_n = 256`), comparing the pre-stacking datapath
-//!   — f64 digit planes, one [`matmul_packed_into`] pass per slice, B
-//!   streamed `S_a` times — against the stacked kernel — byte-packed
-//!   [`DigitPlanes`], one [`matmul_packed_stacked_into`] pass, B streamed
-//!   once. `m ∈ {1, 8, 128}` covers single-sample inference through the
-//!   table3 batch shape. Each case reports GFLOP/s-equiv, nominal
-//!   operand/output bytes moved (cache reuse ignored), and the stacked
-//!   speedup. The two kernels' outputs are hard-asserted **bit-identical**
-//!   before any number is recorded.
+//!   (`k = 256`, `n = S_w·l_n = 256`, integer weight digits), comparing
+//!   three kernels: the pre-stacking datapath — f64 digit planes, one
+//!   [`matmul_packed_into`] pass per slice, B streamed `S_a` times — the
+//!   stacked f64 kernel — byte-packed [`DigitPlanes`], one
+//!   [`matmul_packed_stacked_into`] pass, B streamed once — and the
+//!   integer stacked kernel — u8 weight panels ([`PackedU8`]), i32
+//!   accumulation via [`matmul_packed_stacked_int_into`], B streamed once
+//!   as bytes. `m ∈ {1, 8, 128}` covers single-sample inference through
+//!   the table3 batch shape. Each case reports GFLOP/s-equiv, nominal
+//!   operand/output bytes moved (cache reuse ignored), and both speedups.
+//!   All three kernels' outputs are hard-asserted **bit-identical** before
+//!   any number is recorded.
 //! - **Engine level** (`engine_cases`): `matmul_prepared` on the table3
-//!   headline config (INT8, 64×64 arrays, noisy device, 512×512 weights,
-//!   reused `PreparedWeights`) at `m = 1` (the 2-D-scheduling target
-//!   shape) and `m = 128` (the table3 headline batch), hard-asserted
-//!   bit-identical to the per-slice-pair oracle
-//!   (`matmul_prepared_reference`) — if that assert trips, the stacked
+//!   headline config (INT8, 64×64 arrays, 512×512 weights, reused
+//!   `PreparedWeights`) at `m = 1` (the 2-D-scheduling target shape) and
+//!   `m = 128` (the table3 headline batch) — on the noisy device (f64
+//!   kernel, analog conductances) AND the noise-free engine (integer
+//!   kernel; `int_panel_blocks` is hard-asserted to cover every block).
+//!   Every case is hard-asserted bit-identical to the per-slice-pair
+//!   oracle (`matmul_prepared_reference`) — if any assert trips, the
 //!   pipeline regressed and the job must fail.
 //!
 //! Run: `cargo bench --bench gemm_kernel`
@@ -30,7 +35,10 @@
 
 use memintelli::dpe::slicing::quantize_slice_block;
 use memintelli::dpe::{DataMode, DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
-use memintelli::tensor::{matmul_packed_into, matmul_packed_stacked_into, Matrix, PackedB};
+use memintelli::tensor::{
+    int_accum_for, matmul_packed_into, matmul_packed_stacked_int_into, matmul_packed_stacked_into,
+    Matrix, PackedB, PackedU8,
+};
 use memintelli::util::report::{time_it, Timing};
 use memintelli::util::rng::Pcg64;
 use std::fmt::Write as _;
@@ -44,9 +52,11 @@ struct KernelCase {
     s_a: usize,
     per_slice: Timing,
     stacked: Timing,
+    stacked_int: Timing,
     /// Nominal bytes moved per call (operands + output, no cache model).
     per_slice_bytes: usize,
     stacked_bytes: usize,
+    stacked_int_bytes: usize,
 }
 
 fn kernel_case(m: usize, k: usize, n: usize, iters: usize, seed: u64) -> KernelCase {
@@ -58,14 +68,22 @@ fn kernel_case(m: usize, k: usize, n: usize, iters: usize, seed: u64) -> KernelC
     let planes = quantize_slice_block(&x, &spec, DataMode::Quantize).planes;
     // f64 materializations of the same digits — the pre-stacking operand.
     let f64_planes: Vec<Matrix> = (0..s_a).map(|s| planes.plane(s)).collect();
-    let b = Matrix::random_normal(k, n, 0.0, 1.0, &mut rng);
+    // Weight digits as the engine programs them noise-free: integers in
+    // the device's level range — the operand shape on which the integer
+    // kernel engages.
+    let b = Matrix::from_fn(k, n, |_, _| rng.below(16) as f64);
     let packed = PackedB::pack(&b);
+    let packed_int = PackedU8::from_packed(&packed).expect("integer weight digits must mirror");
+    let acc = int_accum_for(k, 255, packed_int.max_digit() as u64)
+        .expect("kernel-case bound must fit an integer accumulator");
 
     let mut per_slice_out = vec![0.0f64; s_a * m * n];
     let mut stacked_out = vec![0.0f64; s_a * m * n];
+    let mut int_out = vec![0.0f64; s_a * m * n];
 
     // Bit-identity first: the stacked kernel must reproduce the per-slice
-    // kernel exactly on every plane.
+    // kernel exactly on every plane, and the integer kernel must reproduce
+    // the stacked kernel exactly.
     for (s, plane) in f64_planes.iter().enumerate() {
         matmul_packed_into(plane, &packed, &mut per_slice_out[s * m * n..(s + 1) * m * n]);
     }
@@ -73,6 +91,11 @@ fn kernel_case(m: usize, k: usize, n: usize, iters: usize, seed: u64) -> KernelC
     assert_eq!(
         per_slice_out, stacked_out,
         "stacked kernel diverged from the per-slice kernel at {m}x{k}x{n}"
+    );
+    matmul_packed_stacked_int_into(&planes, &packed_int, acc, &mut int_out);
+    assert_eq!(
+        int_out, stacked_out,
+        "integer kernel diverged from the stacked f64 kernel at {m}x{k}x{n}"
     );
 
     let per_slice = time_it(1, iters, || {
@@ -83,13 +106,29 @@ fn kernel_case(m: usize, k: usize, n: usize, iters: usize, seed: u64) -> KernelC
     let stacked = time_it(1, iters, || {
         matmul_packed_stacked_into(&planes, &packed, &mut stacked_out);
     });
+    let stacked_int = time_it(1, iters, || {
+        matmul_packed_stacked_int_into(&planes, &packed_int, acc, &mut int_out);
+    });
 
     // Nominal traffic: the per-slice path reads f64 planes and streams the
     // packed block once per slice; the stacked path reads u8 planes and
-    // streams the block once. Both write S_a·m·n f64 partials.
+    // streams the f64 block once; the integer path streams the block as
+    // bytes. All write S_a·m·n f64 partials.
     let per_slice_bytes = s_a * m * k * 8 + s_a * k * n * 8 + s_a * m * n * 8;
     let stacked_bytes = s_a * m * k + k * n * 8 + s_a * m * n * 8;
-    KernelCase { m, k, n, s_a, per_slice, stacked, per_slice_bytes, stacked_bytes }
+    let stacked_int_bytes = s_a * m * k + k * n + s_a * m * n * 8;
+    KernelCase {
+        m,
+        k,
+        n,
+        s_a,
+        per_slice,
+        stacked,
+        stacked_int,
+        per_slice_bytes,
+        stacked_bytes,
+        stacked_int_bytes,
+    }
 }
 
 /// One engine-level trajectory point (stacked pipeline, reused weights).
@@ -97,28 +136,41 @@ struct EngineCase {
     m: usize,
     k: usize,
     n: usize,
+    noise_free: bool,
     timing: Timing,
 }
 
-fn engine_case(m: usize, k: usize, n: usize, iters: usize) -> EngineCase {
-    let engine = DotProductEngine::new(DpeConfig::default(), 2024);
+fn engine_case(m: usize, k: usize, n: usize, iters: usize, noise_free: bool) -> EngineCase {
+    let cfg = DpeConfig { noise_free, ..DpeConfig::default() };
+    let engine = DotProductEngine::new(cfg, 2024);
     let med = SliceMethod::int(SliceSpec::int8());
     let mut rng = Pcg64::seeded(99 + m as u64);
     let a = Matrix::random_normal(m, k, 0.0, 1.0, &mut rng);
     let b = Matrix::random_normal(k, n, 0.0, 1.0, &mut rng);
     let w = engine.prepare_weights(&b, &med, 0);
+    if noise_free {
+        // The integer kernel must actually serve this case: noise-free
+        // programming leaves every block's digits exact.
+        assert_eq!(
+            w.int_panel_blocks(),
+            w.num_blocks(),
+            "noise-free blocks must all carry the byte mirror at {m}x{k}x{n}"
+        );
+    }
     // The tentpole contract, asserted in the bench itself: the stacked
-    // pipeline is bit-identical to the per-slice-pair reference oracle.
+    // pipeline (f64 or integer kernel alike) is bit-identical to the
+    // per-slice-pair reference oracle.
     let stacked = engine.matmul_prepared(&a, &w, &med, 0);
     let oracle = engine.matmul_prepared_reference(&a, &w, &med, 0);
     assert_eq!(
         stacked.data, oracle.data,
-        "stacked matmul_prepared diverged from the per-slice-pair oracle at {m}x{k}x{n}"
+        "stacked matmul_prepared diverged from the per-slice-pair oracle at {m}x{k}x{n} \
+         (noise_free={noise_free})"
     );
     let timing = time_it(1, iters, || {
         let _ = engine.matmul_prepared(&a, &w, &med, 0);
     });
-    EngineCase { m, k, n, timing }
+    EngineCase { m, k, n, noise_free, timing }
 }
 
 fn main() {
@@ -139,7 +191,8 @@ fn main() {
         let flops = 2.0 * (c.s_a * c.m * c.k * c.n) as f64;
         println!(
             "[gemm_kernel] m={:>3} k={} n={} S_a={}: per-slice {:.3} ms ({:.2} GF/s), \
-             stacked {:.3} ms ({:.2} GF/s), speedup {:.2}x, bytes {} -> {}",
+             stacked {:.3} ms ({:.2} GF/s), int {:.3} ms ({:.2} GF/s), \
+             int speedup vs stacked {:.2}x, bytes {} -> {} -> {}",
             c.m,
             c.k,
             c.n,
@@ -148,21 +201,30 @@ fn main() {
             flops / c.per_slice.mean_s / 1e9,
             c.stacked.mean_s * 1e3,
             flops / c.stacked.mean_s / 1e9,
-            c.per_slice.mean_s / c.stacked.mean_s,
+            c.stacked_int.mean_s * 1e3,
+            flops / c.stacked_int.mean_s / 1e9,
+            c.stacked.mean_s / c.stacked_int.mean_s,
             c.per_slice_bytes,
             c.stacked_bytes,
+            c.stacked_int_bytes,
         );
     }
 
     let engine_iters = if smoke { 3 } else { 15 };
-    let engine_cases =
-        vec![engine_case(1, 512, 512, engine_iters), engine_case(128, 512, 512, engine_iters)];
+    let engine_cases = vec![
+        engine_case(1, 512, 512, engine_iters, false),
+        engine_case(128, 512, 512, engine_iters, false),
+        engine_case(1, 512, 512, engine_iters, true),
+        engine_case(128, 512, 512, engine_iters, true),
+    ];
     for c in &engine_cases {
         println!(
-            "[gemm_kernel] matmul_prepared int8 {}x{}x{}: mean {:.3} ms ({:.1}/s), oracle bit-identical",
+            "[gemm_kernel] matmul_prepared int8 {}x{}x{} ({}): mean {:.3} ms ({:.1}/s), \
+             oracle bit-identical",
             c.m,
             c.k,
             c.n,
+            if c.noise_free { "noise-free, int kernel" } else { "noisy, f64 kernel" },
             c.timing.mean_s * 1e3,
             1.0 / c.timing.mean_s,
         );
@@ -174,6 +236,7 @@ fn main() {
     json.push_str("  \"pipeline\": \"stacked-slice-plane-gemm\",\n");
     let _ = writeln!(json, "  \"smoke\": {smoke},");
     json.push_str("  \"bit_identical_to_per_slice_kernel\": true,\n");
+    json.push_str("  \"int_kernel_bit_identical_to_stacked\": true,\n");
     json.push_str("  \"bit_identical_to_reference_oracle\": true,\n");
     json.push_str("  \"kernel_cases\": [\n");
     for (i, c) in kernel_cases.iter().enumerate() {
@@ -182,9 +245,12 @@ fn main() {
             json,
             "    {{\"m\": {}, \"k\": {}, \"n\": {}, \"s_a\": {}, \"iters\": {}, \
              \"per_slice_s_mean\": {:.9}, \"stacked_s_mean\": {:.9}, \
+             \"stacked_int_s_mean\": {:.9}, \
              \"per_slice_gflops_equiv\": {:.4}, \"stacked_gflops_equiv\": {:.4}, \
+             \"stacked_int_gflops_equiv\": {:.4}, \
              \"per_slice_bytes_moved\": {}, \"stacked_bytes_moved\": {}, \
-             \"speedup\": {:.4}}}",
+             \"stacked_int_bytes_moved\": {}, \
+             \"speedup\": {:.4}, \"int_speedup_vs_stacked\": {:.4}}}",
             c.m,
             c.k,
             c.n,
@@ -192,11 +258,15 @@ fn main() {
             c.per_slice.iters,
             c.per_slice.mean_s,
             c.stacked.mean_s,
+            c.stacked_int.mean_s,
             flops / c.per_slice.mean_s / 1e9,
             flops / c.stacked.mean_s / 1e9,
+            flops / c.stacked_int.mean_s / 1e9,
             c.per_slice_bytes,
             c.stacked_bytes,
+            c.stacked_int_bytes,
             c.per_slice.mean_s / c.stacked.mean_s,
+            c.stacked.mean_s / c.stacked_int.mean_s,
         );
         json.push_str(if i + 1 < kernel_cases.len() { ",\n" } else { "\n" });
     }
@@ -204,15 +274,20 @@ fn main() {
     json.push_str("  \"engine_cases\": [\n");
     for (i, c) in engine_cases.iter().enumerate() {
         let flops = 2.0 * (c.m * c.k * c.n) as f64;
+        let variant = if c.noise_free { "noisefree_intkernel" } else { "noisy" };
         let _ = write!(
             json,
-            "    {{\"name\": \"matmul_prepared_int8_64x64_b{}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+            "    {{\"name\": \"matmul_prepared_int8_64x64_{}_b{}\", \"m\": {}, \"k\": {}, \
+             \"n\": {}, \"noise_free\": {}, \"int_kernel\": {}, \
              \"iters\": {}, \"wall_s_mean\": {:.9}, \"matmuls_per_s\": {:.3}, \
              \"gflops_equiv\": {:.4}}}",
+            variant,
             c.m,
             c.m,
             c.k,
             c.n,
+            c.noise_free,
+            c.noise_free,
             c.timing.iters,
             c.timing.mean_s,
             1.0 / c.timing.mean_s,

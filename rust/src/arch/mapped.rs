@@ -26,6 +26,10 @@
 //! pair 2-D-schedules its stacked GEMM over (row-band × panel-group)
 //! items — so an m = 1 forward through a wide layer still fills the
 //! worker pool (see `dpe::engine` §Perf and `examples/README.md`).
+//! On noise-free hardware the same forwards additionally ride the exact
+//! integer-domain kernel (byte weight panels, `i32`/`i64` accumulators) —
+//! bit-identical to the f64 path, so mapping, micro-batching, and the
+//! kernel choice are all invisible in the output.
 
 use super::repair::{DegradedReport, HealthReport, RepairOutcome, RepairPlan, SlotHealth};
 use super::{BlockMove, Placement};

@@ -60,6 +60,21 @@
 //!   starve the pool when `m` is small (an m = 1 single-sample inference
 //!   has one band), while the 2-D grid still has `S_a × panel-groups`
 //!   items. One level of parallelism either way, no nested spawn.
+//! - **Integer kernel**: when programming leaves digits exact (noise-free
+//!   engines — programming noise and fault injection both produce
+//!   non-integer or out-of-spec analog values otherwise), each prepared
+//!   block additionally keeps a byte mirror of its packed panels
+//!   ([`crate::tensor::PackedU8`], detected value-wise at program time),
+//!   and the matmul dispatches the integer stacked kernel
+//!   ([`crate::tensor::matmul_packed_stacked_int_into`] / `_int_2d`
+//!   under the same 2-D threshold): u8×u8 digit products in an i32/i64
+//!   accumulator proved safe from the slice tables at plan time
+//!   ([`crate::tensor::int_accum_for`], re-checked against each block's
+//!   *programmed* max digit), converted to f64 once per output element.
+//!   Every digit partial sum stays below 2^53, so the integer kernel is
+//!   **bit-identical** to the f64 stacked kernel (`tensor` §Perf) — the
+//!   dispatch is invisible to results and asserted against the oracle in
+//!   tests and benches, while moving 8× fewer weight-side bytes.
 //!
 //! The retained per-slice-pair implementation
 //! (`matmul_prepared_reference`, `#[doc(hidden)]` so the gemm-kernel bench
@@ -115,7 +130,9 @@ use crate::circuit::CrossbarCircuit;
 use crate::device::faults::{AdcChain, FaultSpec, NonIdealitySpec};
 use crate::device::DeviceSpec;
 use crate::tensor::{
-    matmul_packed_stacked_2d, matmul_packed_stacked_into, DigitPlanes, Matrix, PackedB,
+    int_accum_for, matmul_packed_stacked_2d, matmul_packed_stacked_int_2d,
+    matmul_packed_stacked_int_into, matmul_packed_stacked_into, DigitPlanes, IntAccum, Matrix,
+    PackedB, PackedU8,
 };
 use crate::util::parallel::par_map;
 use crate::util::rng::Pcg64;
@@ -147,7 +164,9 @@ impl SliceMethod {
             "flex16" | "flexpoint16" => Self::fp(SliceSpec::flex16()),
             _ => {
                 if let Some(n) = lower.strip_prefix("ones") {
-                    Self::int(SliceSpec::ones(n.parse()?))
+                    // try_new (not the panicking `ones`) so a bad count —
+                    // e.g. "ones0" — surfaces as a parse error.
+                    Self::int(SliceSpec::try_new(&vec![1; n.parse()?], true)?)
                 } else {
                     anyhow::bail!("unknown slice method '{name}'")
                 }
@@ -237,6 +256,11 @@ struct PreparedBlock {
     /// `[s·l_n, (s+1)·l_n)` hold weight slice `s`), built once per
     /// programming and reused by every `matmul_prepared` call.
     packed: PackedB,
+    /// Byte mirror of `packed`, present iff every programmed value is an
+    /// exact integer digit (noise-free programming) — lets the matmul
+    /// dispatch the integer stacked kernel (§Perf). `None` for noisy
+    /// analog values, which keep the f64 kernel.
+    packed_int: Option<PackedU8>,
     scale: f64,
     /// This array's per-column ADC chain (ideal unless the non-ideality
     /// spec configures gain/offset error or floor rounding) — sampled
@@ -282,6 +306,13 @@ impl PreparedWeights {
     /// group within one tile).
     pub fn num_blocks(&self) -> usize {
         self.blocks.len()
+    }
+    /// Number of blocks carrying an exact-integer byte mirror — how many
+    /// the integer stacked GEMM can serve (§Perf). Equals
+    /// [`PreparedWeights::num_blocks`] for noise-free engines, 0 for noisy
+    /// analog programming.
+    pub fn int_panel_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.packed_int.is_some()).count()
     }
 }
 
@@ -625,6 +656,15 @@ struct SlicePairPlan {
     pair_weight: Vec<f64>,
     /// `worst_scale[sa·S_w + sw] = rows · a_max[sa] · w_max[sw]`.
     worst_scale: Vec<f64>,
+    /// Accumulator the integer stacked kernel may use, proved from the
+    /// spec tables (`rows · max_a · max_w`, see
+    /// [`crate::tensor::int_accum_for`]); `None` keeps the f64 kernel.
+    int_acc: Option<IntAccum>,
+    /// Largest weight digit the proof above assumed. The dispatcher
+    /// re-checks each block's *programmed* max digit against it — fault
+    /// injection can pin a cell to the device maximum, above a narrow
+    /// slice's spec bound.
+    max_w_digit: f64,
 }
 
 impl SlicePairPlan {
@@ -640,7 +680,10 @@ impl SlicePairPlan {
                 worst_scale.push(rows as f64 * a.max_digit[sa] * w.max_digit[sw]);
             }
         }
-        SlicePairPlan { a, w, pair_weight, worst_scale }
+        let max_a = a.max_digit.iter().cloned().fold(0.0, f64::max);
+        let max_w = w.max_digit.iter().cloned().fold(0.0, f64::max);
+        let int_acc = int_accum_for(rows, max_a as u64, max_w as u64);
+        SlicePairPlan { a, w, pair_weight, worst_scale, int_acc, max_w_digit: max_w }
     }
 
     #[inline]
@@ -825,7 +868,8 @@ impl DotProductEngine {
                 }
             }
         }
-        PreparedBlock { packed, scale: tb.scale, chain: self.adc_chain_for(stream) }
+        let packed_int = PackedU8::from_packed(&packed);
+        PreparedBlock { packed, packed_int, scale: tb.scale, chain: self.adc_chain_for(stream) }
     }
 
     /// [`DotProductEngine::program_block`] with the closed verify loop
@@ -918,7 +962,9 @@ impl DotProductEngine {
                 }
             }
         }
-        (PreparedBlock { packed, scale: tb.scale, chain: self.adc_chain_for(stream) }, stats)
+        let packed_int = PackedU8::from_packed(&packed);
+        let chain = self.adc_chain_for(stream);
+        (PreparedBlock { packed, packed_int, scale: tb.scale, chain }, stats)
     }
 
     /// Reprogram only the listed `(block, new_stream)` pairs of an
@@ -1171,10 +1217,26 @@ impl DotProductEngine {
         let read_noise = self.read_noise_active();
         let mut block_acc = Matrix::zeros(m, l_n);
         let mut stacked_out = vec![0.0f64; sa_n * m * wide];
-        if grid_parallel && sa_n * m * l_m * wide >= (1 << 21) {
-            matmul_packed_stacked_2d(&ab.planes, &wb.packed, &mut stacked_out);
-        } else {
-            matmul_packed_stacked_into(&ab.planes, &wb.packed, &mut stacked_out);
+        // Integer kernel: engages when the plan proved the accumulator
+        // bound AND this block's programmed digits are exact integers no
+        // wider than the proof assumed — bit-identical to the f64 kernel
+        // either way (§Perf), so the dispatch is invisible to results.
+        let int_panels = plan.int_acc.and_then(|acc| {
+            wb.packed_int
+                .as_ref()
+                .filter(|ip| ip.max_digit() as f64 <= plan.max_w_digit)
+                .map(|ip| (ip, acc))
+        });
+        let grid_2d = grid_parallel && sa_n * m * l_m * wide >= (1 << 21);
+        match (int_panels, grid_2d) {
+            (Some((ip, acc)), true) => {
+                matmul_packed_stacked_int_2d(&ab.planes, ip, acc, &mut stacked_out)
+            }
+            (Some((ip, acc)), false) => {
+                matmul_packed_stacked_int_into(&ab.planes, ip, acc, &mut stacked_out)
+            }
+            (None, true) => matmul_packed_stacked_2d(&ab.planes, &wb.packed, &mut stacked_out),
+            (None, false) => matmul_packed_stacked_into(&ab.planes, &wb.packed, &mut stacked_out),
         }
         for sa in 0..sa_n {
             // Input slice sa's rows of the stacked output (slice-major).
@@ -1800,6 +1862,76 @@ mod tests {
                     "{m}x{k}x{n} widths={:?} policy={adc_policy:?} read_noise={read_noise}",
                     method.spec.widths
                 ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int_kernel_engages_noise_free_and_matches_oracle() {
+        // Noise-free programming writes digits verbatim, so every block
+        // gets an exact-integer byte mirror and the integer kernel serves
+        // the whole matmul; analog programming (default noisy config)
+        // yields no mirror and keeps the f64 kernel. Both must be
+        // bit-identical to the per-slice-pair oracle — the dispatch is
+        // invisible to results.
+        let med = SliceMethod::int(SliceSpec::int8());
+        let a = rand_mat(9, 100, 601);
+        let b = rand_mat(100, 70, 602);
+        let ideal = DotProductEngine::ideal((64, 64));
+        let w = ideal.prepare_weights(&b, &med, 0);
+        assert_eq!(w.int_panel_blocks(), w.num_blocks(), "noise-free blocks must all mirror");
+        let fused = ideal.matmul_prepared(&a, &w, &med, 0);
+        assert_eq!(fused.data, ideal.matmul_prepared_reference(&a, &w, &med, 0).data);
+        // Big single-block shape: trips the in-pair 2-D grid, so this
+        // exercises the *parallel* integer kernel against the oracle.
+        let a_big = rand_mat(300, 64, 603);
+        let b_big = rand_mat(64, 64, 604);
+        let wb = ideal.prepare_weights(&b_big, &med, 0);
+        assert_eq!(wb.int_panel_blocks(), 1);
+        let fused_big = ideal.matmul_prepared(&a_big, &wb, &med, 0);
+        assert_eq!(fused_big.data, ideal.matmul_prepared_reference(&a_big, &wb, &med, 0).data);
+        // Analog programming: lognormal conductance samples are not
+        // integers, so no block carries a mirror.
+        let noisy = DotProductEngine::new(DpeConfig::default(), 3);
+        let wn = noisy.prepare_weights(&b, &med, 0);
+        assert_eq!(wn.int_panel_blocks(), 0, "analog programming must keep the f64 kernel");
+    }
+
+    #[test]
+    fn prop_int_kernel_dispatch_matches_oracle() {
+        // Satellite sweep for the integer dispatch: random device-hostable
+        // slice specs × noise-free (int kernel) vs noisy (f64 fallback) ×
+        // read-noise on/off × m ∈ {1, MR−1, MR, 33} on ragged (k, n) —
+        // always bit-identical to the oracle, and noise-free engines must
+        // actually engage (every block mirrored).
+        use crate::tensor::GEMM_MR;
+        let ms = [1usize, GEMM_MR - 1, GEMM_MR, 33];
+        crate::util::prop::prop_check("int-kernel dispatch == oracle", 40, |g| {
+            // Signed spec the default device (g_levels = 16) can host:
+            // 1-bit sign slice plus 1–4 slices of 1..=4 bits.
+            let mut widths = vec![1usize];
+            for _ in 0..g.usize_in(1..=4) {
+                widths.push(g.usize_in(1..=4));
+            }
+            let method = SliceMethod::int(SliceSpec::new(&widths, true));
+            let noise_free = g.bool();
+            let m = *g.choose(&ms);
+            let k = g.usize_in(1..=100);
+            let n = g.usize_in(1..=100);
+            let mut cfg = DpeConfig { noise_free, ..DpeConfig::default() };
+            cfg.device.read_cv = if g.bool() { 0.03 } else { 0.0 };
+            let e = DotProductEngine::new(cfg, 61 + g.case as u64);
+            let a = Matrix::from_vec(m, k, g.vec_f64(m * k, -1.0..1.0));
+            let b = Matrix::from_vec(k, n, g.vec_f64(k * n, -1.0..1.0));
+            let w = e.prepare_weights(&b, &method, 1);
+            if noise_free && w.int_panel_blocks() != w.num_blocks() {
+                return Err(format!("widths {widths:?}: noise-free block lost its byte mirror"));
+            }
+            let fused = e.matmul_prepared(&a, &w, &method, 2);
+            let oracle = e.matmul_prepared_reference(&a, &w, &method, 2);
+            if fused.data != oracle.data {
+                return Err(format!("{m}x{k}x{n} widths={widths:?} noise_free={noise_free}"));
             }
             Ok(())
         });

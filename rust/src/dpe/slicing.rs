@@ -17,6 +17,14 @@
 //!   is precisely the quantization-vs-pre-alignment gap of Fig 12.
 
 use crate::tensor::{DigitPlanes, Matrix};
+use anyhow::{bail, Result};
+
+/// Largest allowed [`SliceSpec::total_bits`]. Two ceilings meet here:
+/// `slice_digits`' two's-complement modulus is `1i64 << total` (UB at 63+),
+/// and the integer-GEMM exactness argument (`tensor` §Perf) needs digit
+/// partial sums below `2^53` — a 52-bit integer range keeps every
+/// representable value itself f64-exact with room for the sign bit.
+pub const MAX_TOTAL_BITS: usize = 52;
 
 /// How continuous values map to integers before slicing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,13 +43,45 @@ pub struct SliceSpec {
 }
 
 impl SliceSpec {
-    pub fn new(widths: &[usize], signed: bool) -> Self {
-        assert!(!widths.is_empty(), "need at least one slice");
-        assert!(widths.iter().all(|&w| (1..=8).contains(&w)), "slice widths must be 1..=8");
-        if signed {
-            assert_eq!(widths[0], 1, "signed data needs a 1-bit sign slice first");
+    /// Validating constructor: every failure names the offending slice, so
+    /// TOML / CLI method strings get an actionable error instead of a
+    /// release-mode silent digit truncation (digits are stored as `u8`, so
+    /// a slice wider than 8 bits would corrupt data downstream).
+    pub fn try_new(widths: &[usize], signed: bool) -> Result<Self> {
+        if widths.is_empty() {
+            bail!("need at least one slice");
         }
-        SliceSpec { widths: widths.to_vec(), signed }
+        for (k, &w) in widths.iter().enumerate() {
+            if !(1..=8).contains(&w) {
+                bail!(
+                    "slice widths must be 1..=8 bits: slice {k} (MSB-first) of {widths:?} \
+                     is {w} bits — digits are stored as bytes"
+                );
+            }
+        }
+        if signed && widths[0] != 1 {
+            bail!(
+                "signed data needs a 1-bit sign slice first: slice 0 of {widths:?} is {} bits",
+                widths[0]
+            );
+        }
+        let total: usize = widths.iter().sum();
+        if total > MAX_TOTAL_BITS {
+            bail!(
+                "slice widths {widths:?} sum to {total} bits, above the {MAX_TOTAL_BITS}-bit \
+                 limit (two's-complement modulus and f64-exact digit arithmetic)"
+            );
+        }
+        Ok(SliceSpec { widths: widths.to_vec(), signed })
+    }
+
+    /// Panicking form of [`SliceSpec::try_new`] for the hard-coded named
+    /// methods and tests.
+    pub fn new(widths: &[usize], signed: bool) -> Self {
+        match Self::try_new(widths, signed) {
+            Ok(spec) => spec,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Total bits across slices.
@@ -271,13 +311,18 @@ pub fn quantize_slice_block(x: &Matrix, spec: &SliceSpec, mode: DataMode) -> Sli
     let modulus = 1i64 << total;
     let shifts = spec.shifts();
     let masks: Vec<u64> = spec.widths.iter().map(|&w| (1u64 << w) - 1).collect();
+    // Hard (release-mode) guard for the `as u8` narrowing below: a mask
+    // wider than a byte would silently corrupt digits. `try_new` already
+    // enforces widths ≤ 8, so this can only fire on a hand-built spec.
+    assert!(masks.iter().all(|&m| m <= 0xFF), "slice mask wider than a byte");
     let mut planes = DigitPlanes::zeroed(n_slices, x.rows, x.cols);
     for i in 0..x.rows {
         for (kk, &v) in x.row(i).iter().enumerate() {
             let q = quantize_value(v, scale, min_int, max_int);
             let u = (q as i64).rem_euclid(modulus) as u64;
             for s in 0..n_slices {
-                // Slice widths are 1..=8 bits, so every digit fits a u8.
+                // Masked to ≤ 8 bits (asserted above), so the narrowing is
+                // lossless.
                 planes.set(s, i, kk, ((u >> shifts[s]) & masks[s]) as u8);
             }
         }
@@ -454,6 +499,30 @@ mod tests {
     #[should_panic(expected = "sign slice")]
     fn signed_spec_requires_sign_slice() {
         SliceSpec::new(&[2, 2], true);
+    }
+
+    #[test]
+    fn try_new_errors_name_the_offending_slice() {
+        let e = SliceSpec::try_new(&[1, 9, 2], true).unwrap_err().to_string();
+        assert!(e.contains("slice 1") && e.contains("9 bits"), "{e}");
+        let e = SliceSpec::try_new(&[], true).unwrap_err().to_string();
+        assert!(e.contains("at least one slice"), "{e}");
+        let e = SliceSpec::try_new(&[2, 2], true).unwrap_err().to_string();
+        assert!(e.contains("sign slice") && e.contains("2 bits"), "{e}");
+        // 7×8 = 56 bits blows the 52-bit total cap even though every
+        // individual width is legal.
+        let e = SliceSpec::try_new(&[8; 7], false).unwrap_err().to_string();
+        assert!(e.contains("56 bits") && e.contains("52"), "{e}");
+        assert!(SliceSpec::try_new(&[1, 1, 2, 4], true).is_ok());
+        assert!(SliceSpec::try_new(&[8; 6], false).is_ok(), "48 bits is within the cap");
+    }
+
+    #[test]
+    #[should_panic(expected = "slice widths must be 1..=8")]
+    fn new_panics_on_wide_slice() {
+        // The release-build silent-truncation path this guards: a 12-bit
+        // slice's digits don't fit the u8 planes.
+        SliceSpec::new(&[1, 12], true);
     }
 
     /// A random slice spec: signed (1-bit sign slice first) or unsigned,

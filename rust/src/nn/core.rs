@@ -303,6 +303,10 @@ impl MemCore {
     /// still fill the worker pool: the DPE dispatches over (kb, nb) array
     /// pairs by total work, and a lone big pair 2-D-schedules its stacked
     /// GEMM over (row-band × panel-group) items (`dpe::engine` §Perf).
+    /// On noise-free hardware the stacked GEMM additionally runs in the
+    /// exact integer-domain kernel (byte panels, `i32`/`i64` accumulators,
+    /// bit-identical to the f64 path) — picked per block at program time,
+    /// no layer-level knob.
     pub fn matmul_eval(&self, x: &Matrix) -> Option<Matrix> {
         let hw = self.hw.as_ref()?;
         let prep = self.prepared.as_ref()?;

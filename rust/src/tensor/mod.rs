@@ -6,42 +6,68 @@
 //!
 //! Built from scratch — the offline registry has no ndarray/nalgebra.
 //!
-//! # §Perf
+//! # §Perf — the three digit-domain GEMM kernels
 //!
-//! Three GEMM paths coexist:
+//! The DPE datapath compressed in three steps, and all three kernels
+//! coexist (each newer one is hard-asserted bit-identical to the one
+//! before it):
 //!
-//! - [`Matrix::matmul`] — the general-purpose i-k-j kernel (unit-stride
-//!   inner loops over both B and C rows), parallel over row bands only
-//!   when the work amortizes thread spawn (nested sub-millisecond
-//!   parallelism was a 1.7× end-to-end regression).
-//! - [`PackedB`] + [`matmul_packed_into`] — the packed-panel micro-kernel.
-//!   B is packed **once per prepared-weight lifetime** into column panels
-//!   of [`GEMM_NR`] (k-major inside each panel, zero-padded edge panel),
-//!   and the kernel computes register tiles of `GEMM_MR × GEMM_NR`
-//!   accumulators with the packed panel streamed contiguously. Because a
-//!   prepared weight block is reused across every batch/epoch, the packing
-//!   cost is paid once while every `matmul_prepared` call gets the
-//!   cache-friendly layout for free. The caller supplies the output
-//!   buffer, so repeated calls reuse one scratch allocation instead of a
-//!   `Matrix::zeros` per partial.
-//! - [`DigitPlanes`] + [`matmul_packed_stacked_into`] — the DPE hot path.
-//!   All `S_a` input digit planes of one k-block live in a single
-//!   byte-packed buffer (slice-major u8 rows — digits are `< 2^8` by
-//!   construction, so the f64 planes were an 8× memory tax), and one call
-//!   multiplies **every** plane against the packed weight block: the loop
-//!   order is panel-outer / slice-inner, so each B panel is loaded once
-//!   per block instead of once per (slice, block) — the `S_a`× cache-reuse
-//!   win of the stacked layout. Digits convert u8 → f64 in-register,
-//!   which is exact (every integer `< 2^8` is representable in f64), so
-//!   stacking changes nothing about the arithmetic. Plane 0 — the 1-bit,
-//!   mostly-zero sign slice of signed specs — additionally carries a
-//!   per-row nonzero bitmask; its zero-skip is a set-bit iteration over
-//!   mask words instead of per-digit compares. For large or wide
-//!   operands, [`matmul_packed_stacked_2d`] runs the same kernel as 2-D
-//!   (row-band × panel-group) work items on the lock-free atomic-counter
-//!   scheduler: a band-only split starves the pool when `m` is small
-//!   (single-sample inference has exactly one band), while the 2-D grid
-//!   still has `S_a × panel-groups` items at `m = 1`.
+//! 1. **Per-slice f64** — [`PackedB`] + [`matmul_packed_into`], the
+//!    packed-panel micro-kernel. B is packed **once per prepared-weight
+//!    lifetime** into column panels of [`GEMM_NR`] (k-major inside each
+//!    panel, zero-padded edge panel), and the kernel computes register
+//!    tiles of `GEMM_MR × GEMM_NR` accumulators with the packed panel
+//!    streamed contiguously. One call per input digit plane: B is
+//!    streamed `S_a` times per block.
+//! 2. **Stacked f64** — [`DigitPlanes`] + [`matmul_packed_stacked_into`].
+//!    All `S_a` input digit planes of one k-block live in a single
+//!    byte-packed buffer (slice-major u8 rows — digits are `< 2^8` by
+//!    construction, so the f64 planes were an 8× memory tax), and one
+//!    call multiplies **every** plane against the packed weight block:
+//!    the loop order is panel-outer / slice-inner, so each B panel is
+//!    loaded once per block instead of once per (slice, block) — the
+//!    `S_a`× cache-reuse win of the stacked layout. Digits convert
+//!    u8 → f64 in-register, which is exact. Plane 0 — the 1-bit,
+//!    mostly-zero sign slice of signed specs — additionally carries a
+//!    per-row nonzero bitmask; its zero-skip is a set-bit iteration over
+//!    mask words instead of per-digit compares.
+//! 3. **Stacked int** — [`PackedU8`] + [`matmul_packed_stacked_int_into`],
+//!    the integer-domain endpoint. When a programmed weight block's
+//!    packed values are all exact integers in `[0, 255]` (always true for
+//!    noise-free programming; checked value-by-value at program time),
+//!    the weight panels are mirrored into u8 — the same [`GEMM_NR`]
+//!    panel layout, 1 byte per digit instead of 8 — and the partial sums
+//!    accumulate as `u8×u8 → i32` (or i64) integer dot products,
+//!    converting to f64 exactly **once** per output element. Weight-side
+//!    bytes moved drop another 8×, the register tiles hold 32-bit lanes
+//!    instead of 64-bit ones, and the fixed-width [`GEMM_NR`]-lane inner
+//!    loop over u8 panels is the shape LLVM autovectorizes into wide
+//!    integer multiply-adds.
+//!
+//! (The general-purpose [`Matrix::matmul`] — i-k-j, unit-stride inner
+//! loops, parallel over row bands only when the work amortizes thread
+//! spawn — remains for non-digit operands and cold paths.)
+//!
+//! **Why the int kernel is bit-identical, not just close.** Digits are
+//! non-negative integers: every product term is an integer ≤
+//! `max_a·max_w ≤ 255² `, and every prefix sum along `k` is an integer
+//! bounded by `k·max_a·max_w`. [`int_accum_for`] proves that bound from
+//! the slice tables at prepare time and picks i32 (`bound ≤ i32::MAX`)
+//! or i64 (`bound < 2^53`), refusing the int path otherwise. Whenever
+//! the bound is `< 2^53`, **every** prefix sum is exactly representable
+//! in f64, so the f64 kernels' ascending-`k` accumulation commits no
+//! rounding at any step — their "floating-point" result *is* the exact
+//! integer sum. The integer kernel computes the same exact sum in
+//! i32/i64 and converts once (`≤ 2^53` → exact again), so the three
+//! kernels agree bit for bit, zero-skips and all (a skipped integer
+//! term adds exactly 0).
+//!
+//! For large or wide operands, [`matmul_packed_stacked_2d`] /
+//! [`matmul_packed_stacked_int_2d`] run the same kernels as 2-D
+//! (row-band × panel-group) work items on the lock-free atomic-counter
+//! scheduler: a band-only split starves the pool when `m` is small
+//! (single-sample inference has exactly one band), while the 2-D grid
+//! still has `S_a × panel-groups` items at `m = 1`.
 //!
 //! All kernels accumulate each output element along ascending `k` with
 //! one multiply-add per step and no FMA contraction, so their results are
@@ -52,7 +78,9 @@
 //! adding `±0.0` to an accumulator that is never `-0.0` cannot change its
 //! bits. Accumulators start at `+0.0` and IEEE round-to-nearest never
 //! produces `-0.0` from a sum of a finite value and its negation, so the
-//! accumulator indeed never holds `-0.0`.)
+//! accumulator indeed never holds `-0.0`. The integer kernel sidesteps
+//! the question entirely: its accumulators are integers, and `0 as f64`
+//! is `+0.0`.)
 
 mod conv;
 
@@ -370,6 +398,78 @@ impl PackedB {
     }
 }
 
+/// Byte mirror of a [`PackedB`]: the identical [`GEMM_NR`] column-panel,
+/// k-major layout, with each value stored as a `u8` digit — 1 byte per
+/// weight digit instead of 8. Built from a packed f64 block whose values
+/// are all exact integers in `[0, 255]` ([`PackedU8::from_packed`]),
+/// which is the program-time invariant of noise-free weight programming;
+/// the integer stacked GEMM ([`matmul_packed_stacked_int_into`]) streams
+/// these panels instead of the f64 ones (§Perf).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedU8 {
+    /// Contraction length (rows of the original B).
+    pub k: usize,
+    /// Logical column count (padding excluded).
+    pub n: usize,
+    data: Vec<u8>,
+    /// Largest digit actually stored — lets the dispatcher re-check the
+    /// proved range bound against the *programmed* values (fault
+    /// injection can pin a cell above the slice-spec maximum).
+    max_digit: u8,
+}
+
+impl PackedU8 {
+    /// Mirror `p` into byte panels, or `None` if any packed value
+    /// (padding included) is not an exact integer in `[0, 255]` — the
+    /// caller then keeps the f64 kernel. Noisy analog values fail on the
+    /// first element, so the scan is O(1) for noisy blocks and one cheap
+    /// program-time pass for exact ones.
+    pub fn from_packed(p: &PackedB) -> Option<PackedU8> {
+        if !p.data.iter().all(|&v| (0.0..=255.0).contains(&v) && v.fract() == 0.0) {
+            return None;
+        }
+        let data: Vec<u8> = p.data.iter().map(|&v| v as u8).collect();
+        let max_digit = data.iter().copied().max().unwrap_or(0);
+        Some(PackedU8 { k: p.k, n: p.n, data, max_digit })
+    }
+
+    /// Largest digit stored in any panel (padding is 0).
+    pub fn max_digit(&self) -> u8 {
+        self.max_digit
+    }
+}
+
+/// Accumulator width for the integer stacked GEMM, selected by
+/// [`int_accum_for`] from the proved partial-sum bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntAccum {
+    /// Bound fits i32 — the common case (e.g. INT8 on 64-row arrays:
+    /// `64 · 15 · 15 = 14 400`).
+    I32,
+    /// Bound fits the f64-exact integer range `< 2^53` but not i32 —
+    /// extreme specs / very long k-blocks.
+    I64,
+}
+
+/// Prove the integer-kernel range bound `k · max_a · max_w` (k-block
+/// length × largest input digit × largest weight digit) and select the
+/// narrowest safe accumulator: i32 when the bound fits `i32::MAX`, i64
+/// when it stays below `2^53` (the f64-exact integer range — also the
+/// bound under which the f64 kernels are exact, see §Perf), and `None`
+/// beyond that (the caller must keep the f64 kernel). Every prefix sum
+/// of non-negative integer terms is bounded by the full sum, so the
+/// selected accumulator can never overflow mid-loop.
+pub fn int_accum_for(k: usize, max_a: u64, max_w: u64) -> Option<IntAccum> {
+    let bound = (k as u128) * (max_a as u128) * (max_w as u128);
+    if bound <= i32::MAX as u128 {
+        Some(IntAccum::I32)
+    } else if bound < (1u128 << 53) {
+        Some(IntAccum::I64)
+    } else {
+        None
+    }
+}
+
 /// `out = a · B` where `B` was packed with [`PackedB::pack`]. `out` must
 /// hold exactly `a.rows × packed.n` elements and is fully overwritten —
 /// callers reuse one scratch buffer across calls. Bit-identical to
@@ -550,7 +650,9 @@ impl DigitPlanes {
         for (s, plane) in slices.iter().enumerate() {
             for i in 0..rows {
                 for (kk, &v) in plane.row(i).iter().enumerate() {
-                    debug_assert!(
+                    // Hard assert (cold path): `v as u8` would silently
+                    // truncate an out-of-range digit in release builds.
+                    assert!(
                         v >= 0.0 && v < 256.0 && v.fract() == 0.0,
                         "digit {v} not a byte"
                     );
@@ -612,7 +714,7 @@ const STACK_PANEL_GROUP: usize = 8;
 /// (§Perf). Bit-identical to `a.plane(s).matmul_packed(&packed)` per
 /// plane.
 pub fn matmul_packed_stacked_into(a: &DigitPlanes, packed: &PackedB, out: &mut [f64]) {
-    stacked_dims_check(a, packed, out);
+    stacked_dims_check(a, packed.k, packed.n, out);
     let panels = packed.n.div_ceil(GEMM_NR);
     let base = out.as_mut_ptr();
     for p in 0..panels {
@@ -631,19 +733,10 @@ pub fn matmul_packed_stacked_into(a: &DigitPlanes, packed: &PackedB, out: &mut [
 /// ascending-`k` kernel, so the result is bit-identical to the serial
 /// variant regardless of thread count or claim order.
 pub fn matmul_packed_stacked_2d(a: &DigitPlanes, packed: &PackedB, out: &mut [f64]) {
-    stacked_dims_check(a, packed, out);
+    stacked_dims_check(a, packed.k, packed.n, out);
     let panels = packed.n.div_ceil(GEMM_NR).max(1);
-    let bands = a.rows.div_ceil(STACK_BAND).max(1);
-    let pgroups = panels.div_ceil(STACK_PANEL_GROUP);
-    let items = a.num_planes() * bands * pgroups;
     let base = SendPtr(out.as_mut_ptr());
-    par_for(items, |it| {
-        let s = it / (bands * pgroups);
-        let rem = it % (bands * pgroups);
-        let i0 = (rem / pgroups) * STACK_BAND;
-        let p0 = (rem % pgroups) * STACK_PANEL_GROUP;
-        let rh = STACK_BAND.min(a.rows.saturating_sub(i0));
-        let p1 = panels.min(p0 + STACK_PANEL_GROUP);
+    stacked_grid(a.num_planes(), a.rows, panels, |s, i0, rh, p0, p1| {
         // SAFETY: out sizing checked above; distinct items cover pairwise
         // disjoint (plane-row-band × panel-group) regions, and par_for
         // hands each item index to exactly one worker.
@@ -651,15 +744,97 @@ pub fn matmul_packed_stacked_2d(a: &DigitPlanes, packed: &PackedB, out: &mut [f6
     });
 }
 
-fn stacked_dims_check(a: &DigitPlanes, packed: &PackedB, out: &[f64]) {
+/// Integer-domain variant of [`matmul_packed_stacked_into`]: the same
+/// panel-outer / slice-inner pass, but streaming the u8 weight panels and
+/// accumulating each output element as an integer dot product in the
+/// accumulator width the caller proved safe with [`int_accum_for`],
+/// converted to f64 exactly once per element. Bit-identical to the f64
+/// stacked kernel whenever the bound holds (§Perf).
+pub fn matmul_packed_stacked_int_into(
+    a: &DigitPlanes,
+    packed: &PackedU8,
+    acc: IntAccum,
+    out: &mut [f64],
+) {
+    stacked_dims_check(a, packed.k, packed.n, out);
+    let panels = packed.n.div_ceil(GEMM_NR);
+    let base = out.as_mut_ptr();
+    for p in 0..panels {
+        for s in 0..a.num_planes() {
+            // SAFETY: out sizing checked above; (s, p) regions are
+            // pairwise disjoint and visited once, serially.
+            unsafe {
+                match acc {
+                    IntAccum::I32 => {
+                        stacked_int_region::<i32>(a, packed, s, 0, a.rows, p, p + 1, base)
+                    }
+                    IntAccum::I64 => {
+                        stacked_int_region::<i64>(a, packed, s, 0, a.rows, p, p + 1, base)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2-D scheduled variant of [`matmul_packed_stacked_int_into`]: the same
+/// (slice × row-band × panel-group) work-item grid as
+/// [`matmul_packed_stacked_2d`], bit-identical to the serial integer
+/// kernel regardless of thread count or claim order.
+pub fn matmul_packed_stacked_int_2d(
+    a: &DigitPlanes,
+    packed: &PackedU8,
+    acc: IntAccum,
+    out: &mut [f64],
+) {
+    stacked_dims_check(a, packed.k, packed.n, out);
+    let panels = packed.n.div_ceil(GEMM_NR).max(1);
+    let base = SendPtr(out.as_mut_ptr());
+    stacked_grid(a.num_planes(), a.rows, panels, |s, i0, rh, p0, p1| {
+        // SAFETY: as in `matmul_packed_stacked_2d` — disjoint regions,
+        // each item claimed by exactly one worker.
+        unsafe {
+            match acc {
+                IntAccum::I32 => stacked_int_region::<i32>(a, packed, s, i0, rh, p0, p1, base.0),
+                IntAccum::I64 => stacked_int_region::<i64>(a, packed, s, i0, rh, p0, p1, base.0),
+            }
+        }
+    });
+}
+
+/// Decompose a stacked GEMM into (slice × row-band × panel-group) work
+/// items and run `f(s, i0, rh, p0, p1)` for each on the lock-free
+/// atomic-counter scheduler — the shared schedule of the f64 and integer
+/// 2-D variants. Every output element belongs to exactly one item.
+fn stacked_grid(
+    n_planes: usize,
+    rows: usize,
+    panels: usize,
+    f: impl Fn(usize, usize, usize, usize, usize) + Sync,
+) {
+    let bands = rows.div_ceil(STACK_BAND).max(1);
+    let pgroups = panels.div_ceil(STACK_PANEL_GROUP);
+    let items = n_planes * bands * pgroups;
+    par_for(items, |it| {
+        let s = it / (bands * pgroups);
+        let rem = it % (bands * pgroups);
+        let i0 = (rem / pgroups) * STACK_BAND;
+        let p0 = (rem % pgroups) * STACK_PANEL_GROUP;
+        let rh = STACK_BAND.min(rows.saturating_sub(i0));
+        let p1 = panels.min(p0 + STACK_PANEL_GROUP);
+        f(s, i0, rh, p0, p1);
+    });
+}
+
+fn stacked_dims_check(a: &DigitPlanes, k: usize, n: usize, out: &[f64]) {
     assert_eq!(
-        a.cols, packed.k,
+        a.cols, k,
         "stacked matmul dim mismatch: planes are {}x{}, packed b is {}x{}",
-        a.rows, a.cols, packed.k, packed.n
+        a.rows, a.cols, k, n
     );
     assert_eq!(
         out.len(),
-        a.num_planes() * a.rows * packed.n,
+        a.num_planes() * a.rows * n,
         "stacked matmul output buffer size mismatch"
     );
 }
@@ -793,6 +968,170 @@ unsafe fn stacked_region(
             }
             let dst = out.add((row_base + i0 + i) * n + j0);
             std::ptr::copy_nonoverlapping(c.as_ptr(), dst, w);
+            i += 1;
+        }
+    }
+}
+
+/// Integer accumulator of the int stacked GEMM — i32 or i64, selected per
+/// block by [`int_accum_for`]'s proved bound (monomorphized, so each width
+/// gets its own straight-line kernel).
+trait DigitAcc:
+    Copy + std::ops::Add<Output = Self> + std::ops::Mul<Output = Self> + 'static
+{
+    const ZERO: Self;
+    fn from_u8(d: u8) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl DigitAcc for i32 {
+    const ZERO: Self = 0;
+    #[inline(always)]
+    fn from_u8(d: u8) -> i32 {
+        d as i32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl DigitAcc for i64 {
+    const ZERO: Self = 0;
+    #[inline(always)]
+    fn from_u8(d: u8) -> i64 {
+        d as i64
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// Integer-domain micro-kernel: the exact loop structure of
+/// [`stacked_region`] — same register tiles, same zero-skips, same
+/// sign-plane mask walk — but streaming u8 weight panels and accumulating
+/// in `A` (i32/i64). The inner loop is a fixed [`GEMM_NR`]-wide lane
+/// array over contiguous u8 bytes, which LLVM autovectorizes into wide
+/// integer multiply-adds (widen + `pmulld`/`paddd` on x86, `smlal`-class
+/// ops on aarch64). The caller proved via [`int_accum_for`] that no
+/// prefix sum can overflow `A`; the single `to_f64` per output element is
+/// exact for the same reason (§Perf).
+///
+/// # Safety
+/// As [`stacked_region`]: `out` must point to a buffer of
+/// `a.num_planes() · a.rows · packed.n` f64s, and no other thread may
+/// concurrently touch the (row, panel) region this call writes.
+#[allow(clippy::too_many_arguments)]
+unsafe fn stacked_int_region<A: DigitAcc>(
+    a: &DigitPlanes,
+    packed: &PackedU8,
+    s: usize,
+    i0: usize,
+    rh: usize,
+    p0: usize,
+    p1: usize,
+    out: *mut f64,
+) {
+    let (k, n) = (packed.k, packed.n);
+    let row_base = s * a.rows;
+    for p in p0..p1 {
+        let j0 = p * GEMM_NR;
+        let w = GEMM_NR.min(n - j0);
+        let bp = &packed.data[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+        let mut i = 0usize;
+        while i + GEMM_MR <= rh {
+            let a0 = a.plane_row(s, i0 + i);
+            let a1 = a.plane_row(s, i0 + i + 1);
+            let a2 = a.plane_row(s, i0 + i + 2);
+            let a3 = a.plane_row(s, i0 + i + 3);
+            let mut c0 = [A::ZERO; GEMM_NR];
+            let mut c1 = [A::ZERO; GEMM_NR];
+            let mut c2 = [A::ZERO; GEMM_NR];
+            let mut c3 = [A::ZERO; GEMM_NR];
+            if s == 0 {
+                // Sign plane: walk each tile row's own set bits (integer
+                // arithmetic is exact, so skipped zero terms change
+                // nothing at all).
+                for (r, (ar, c)) in
+                    [(a0, &mut c0), (a1, &mut c1), (a2, &mut c2), (a3, &mut c3)]
+                        .into_iter()
+                        .enumerate()
+                {
+                    let mrow = a.sign_row_mask(i0 + i + r);
+                    for (wi, &wd) in mrow.iter().enumerate() {
+                        let mut word = wd;
+                        while word != 0 {
+                            let kk = (wi << 6) + word.trailing_zeros() as usize;
+                            word &= word - 1;
+                            let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                            let x = A::from_u8(ar[kk]);
+                            for jj in 0..GEMM_NR {
+                                c[jj] = c[jj] + x * A::from_u8(brow[jj]);
+                            }
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    let (d0, d1, d2, d3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                    if (d0 | d1 | d2 | d3) == 0 {
+                        continue;
+                    }
+                    let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                    let (x0, x1, x2, x3) =
+                        (A::from_u8(d0), A::from_u8(d1), A::from_u8(d2), A::from_u8(d3));
+                    for jj in 0..GEMM_NR {
+                        let bv = A::from_u8(brow[jj]);
+                        c0[jj] = c0[jj] + x0 * bv;
+                        c1[jj] = c1[jj] + x1 * bv;
+                        c2[jj] = c2[jj] + x2 * bv;
+                        c3[jj] = c3[jj] + x3 * bv;
+                    }
+                }
+            }
+            for (r, c) in [(0usize, &c0), (1, &c1), (2, &c2), (3, &c3)] {
+                let dst = out.add((row_base + i0 + i + r) * n + j0);
+                for (jj, &v) in c.iter().enumerate().take(w) {
+                    *dst.add(jj) = v.to_f64();
+                }
+            }
+            i += GEMM_MR;
+        }
+        // Remainder rows one at a time (same integer accumulation).
+        while i < rh {
+            let ar = a.plane_row(s, i0 + i);
+            let mut c = [A::ZERO; GEMM_NR];
+            if s == 0 {
+                let mrow = a.sign_row_mask(i0 + i);
+                for (wi, &wd) in mrow.iter().enumerate() {
+                    let mut word = wd;
+                    while word != 0 {
+                        let kk = (wi << 6) + word.trailing_zeros() as usize;
+                        word &= word - 1;
+                        let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                        let x = A::from_u8(ar[kk]);
+                        for jj in 0..GEMM_NR {
+                            c[jj] = c[jj] + x * A::from_u8(brow[jj]);
+                        }
+                    }
+                }
+            } else {
+                for (kk, &d) in ar.iter().enumerate() {
+                    if d == 0 {
+                        continue;
+                    }
+                    let brow = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                    let x = A::from_u8(d);
+                    for jj in 0..GEMM_NR {
+                        c[jj] = c[jj] + x * A::from_u8(brow[jj]);
+                    }
+                }
+            }
+            let dst = out.add((row_base + i0 + i) * n + j0);
+            for (jj, &v) in c.iter().enumerate().take(w) {
+                *dst.add(jj) = v.to_f64();
+            }
             i += 1;
         }
     }
@@ -1236,5 +1575,141 @@ mod tests {
         let packed = PackedB::pack(&Matrix::zeros(4, 2));
         let mut out = vec![0.0; 2 * 3 * 2];
         matmul_packed_stacked_into(&dp, &packed, &mut out);
+    }
+
+    /// Integer digit matrix 0..=max_digit with many zeros (weight-plane
+    /// shaped).
+    fn random_digit_matrix(k: usize, n: usize, max_digit: usize, rng: &mut Pcg64) -> Matrix {
+        Matrix::from_fn(k, n, |_, _| {
+            if rng.uniform_range(0.0, 1.0) < 0.4 { 0.0 } else { rng.below(max_digit + 1) as f64 }
+        })
+    }
+
+    #[test]
+    fn int_stacked_gemm_bit_identical_to_f64_stacked() {
+        // The tentpole contract: with an integer B, the u8 mirror exists
+        // and both integer variants reproduce the f64 stacked kernel bit
+        // for bit — in BOTH accumulator widths (the bound only needs the
+        // narrower one; the wider is always also safe).
+        let mut rng = Pcg64::seeded(23);
+        for &(n_planes, m, k, n) in &[
+            (4usize, 1usize, 64usize, 256usize),
+            (4, 3, 70, 33),
+            (5, 33, 130, 64),
+            (1, 4, 64, 8),
+            (2, 9, 1, 1),
+        ] {
+            let dp = DigitPlanes::from_slices(&random_digit_planes(n_planes, m, k, &mut rng));
+            let b = random_digit_matrix(k, n, 15, &mut rng);
+            let packed = PackedB::pack(&b);
+            let pu8 = PackedU8::from_packed(&packed).expect("integer B must mirror");
+            assert!(int_accum_for(k, 255, pu8.max_digit() as u64).is_some());
+            let mut f64_out = vec![f64::NAN; n_planes * m * n];
+            matmul_packed_stacked_into(&dp, &packed, &mut f64_out);
+            for acc in [IntAccum::I32, IntAccum::I64] {
+                let mut int_out = vec![f64::NAN; n_planes * m * n];
+                matmul_packed_stacked_int_into(&dp, &pu8, acc, &mut int_out);
+                assert_eq!(int_out, f64_out, "{n_planes}p {m}x{k}x{n} serial {acc:?}");
+                let mut grid = vec![123.0; n_planes * m * n];
+                matmul_packed_stacked_int_2d(&dp, &pu8, acc, &mut grid);
+                assert_eq!(grid, f64_out, "{n_planes}p {m}x{k}x{n} 2-D {acc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_int_stacked_gemm_matches_f64_on_random_shapes() {
+        prop_check("int stacked GEMM == f64 stacked GEMM", 60, |g| {
+            let n_planes = g.usize_in(1..=5);
+            let m = *g.choose(&[1usize, GEMM_MR - 1, GEMM_MR, 9, 33]);
+            let k = g.usize_in(1..=140);
+            let n = g.usize_in(1..=100);
+            let max_w = g.usize_in(1..=255);
+            let slices: Vec<Matrix> = (0..n_planes)
+                .map(|s| {
+                    Matrix::from_fn(m, k, |_, _| {
+                        if g.bool() {
+                            0.0
+                        } else if s == 0 {
+                            1.0
+                        } else {
+                            g.usize_in(0..=255) as f64
+                        }
+                    })
+                })
+                .collect();
+            let dp = DigitPlanes::from_slices(&slices);
+            let b = Matrix::from_fn(k, n, |_, _| g.usize_in(0..=max_w) as f64);
+            let packed = PackedB::pack(&b);
+            let pu8 = PackedU8::from_packed(&packed)
+                .ok_or_else(|| format!("{k}x{n}: integer B rejected"))?;
+            let acc = int_accum_for(k, 255, pu8.max_digit() as u64)
+                .ok_or_else(|| format!("k={k}: bound unexpectedly above 2^53"))?;
+            let mut f64_out = vec![0.0; n_planes * m * n];
+            matmul_packed_stacked_into(&dp, &packed, &mut f64_out);
+            let mut int_out = vec![0.0; n_planes * m * n];
+            matmul_packed_stacked_int_into(&dp, &pu8, acc, &mut int_out);
+            if int_out != f64_out {
+                return Err(format!("{n_planes}p {m}x{k}x{n} {acc:?}: serial int diverged"));
+            }
+            let mut grid = vec![7.0; n_planes * m * n];
+            matmul_packed_stacked_int_2d(&dp, &pu8, acc, &mut grid);
+            if grid != f64_out {
+                return Err(format!("{n_planes}p {m}x{k}x{n} {acc:?}: 2-D int diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int_kernel_i64_path_exact_at_extreme_bound() {
+        // Worst case the spec tables can pose: every digit maxed at 255
+        // over a k too long for i32. 40 000 · 255 · 255 = 2 601 000 000
+        // overflows i32 but is far below 2^53, so the i64 path must
+        // reproduce the exact sum (and the f64 kernel, still exact by the
+        // §Perf argument, must agree bit for bit).
+        let (k, sum) = (40_000usize, 40_000f64 * 255.0 * 255.0);
+        assert_eq!(int_accum_for(k, 255, 255), Some(IntAccum::I64));
+        let slices =
+            vec![Matrix::from_fn(1, k, |_, _| 1.0), Matrix::from_fn(1, k, |_, _| 255.0)];
+        let dp = DigitPlanes::from_slices(&slices);
+        let packed = PackedB::pack(&Matrix::from_fn(k, 1, |_, _| 255.0));
+        let pu8 = PackedU8::from_packed(&packed).unwrap();
+        assert_eq!(pu8.max_digit(), 255);
+        let mut f64_out = vec![0.0; 2];
+        matmul_packed_stacked_into(&dp, &packed, &mut f64_out);
+        let mut int_out = vec![0.0; 2];
+        matmul_packed_stacked_int_into(&dp, &pu8, IntAccum::I64, &mut int_out);
+        assert_eq!(int_out, f64_out);
+        assert_eq!(int_out, vec![k as f64 * 255.0, sum]);
+    }
+
+    #[test]
+    fn int_accum_bound_selection() {
+        // i32::MAX itself still fits i32; one past needs i64; the f64
+        // exactness frontier 2^53 is exclusive.
+        assert_eq!(int_accum_for(i32::MAX as usize, 1, 1), Some(IntAccum::I32));
+        assert_eq!(int_accum_for(i32::MAX as usize + 1, 1, 1), Some(IntAccum::I64));
+        assert_eq!(int_accum_for((1usize << 53) - 1, 1, 1), Some(IntAccum::I64));
+        assert_eq!(int_accum_for(1usize << 53, 1, 1), None);
+        assert_eq!(int_accum_for(0, 255, 255), Some(IntAccum::I32));
+        // Typical engine case: 64-row k-blocks of INT8 digit pairs.
+        assert_eq!(int_accum_for(64, 15, 15), Some(IntAccum::I32));
+    }
+
+    #[test]
+    fn packed_u8_mirror_rejects_non_integer_values() {
+        // Noisy analog conductances must keep the f64 kernel; exact
+        // integer programming must engage the byte mirror.
+        let exact = PackedB::pack(&Matrix::from_fn(5, 9, |i, j| ((i * j) % 16) as f64));
+        let pu8 = PackedU8::from_packed(&exact).expect("exact integers must mirror");
+        assert_eq!(pu8.max_digit(), 15);
+        for bad in [
+            Matrix::from_fn(5, 9, |i, j| ((i * j) % 16) as f64 + 1e-9), // fractional
+            Matrix::from_fn(5, 9, |_, _| -1.0),                         // negative
+            Matrix::from_fn(5, 9, |_, _| 256.0),                        // too wide
+        ] {
+            assert!(PackedU8::from_packed(&PackedB::pack(&bad)).is_none());
+        }
     }
 }

@@ -5,22 +5,97 @@
 //! Both schedulers are lock-free: workers claim work items with a single
 //! shared atomic counter (`fetch_add`) instead of popping a mutex-guarded
 //! queue, so sub-millisecond items don't serialize on the lock.
+//!
+//! A panic inside a work item is caught on the worker, stops the claim
+//! loops, and is re-thrown with its original payload on the calling thread
+//! once the scope joins — so a failing assertion in a kernel points at the
+//! kernel, not at a scheduler internals `expect`.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, Once};
 
 /// Number of worker threads to use: `MEMINTELLI_THREADS` env override, else
-/// available parallelism, capped at 16.
+/// available parallelism, capped at 16. The override is parsed strictly
+/// instead of silently ignored: `0` (a degenerate pool) clamps to 1
+/// (serial) and unparseable values fall back to auto-detection — each with
+/// a one-time warning on stderr.
 pub fn worker_count() -> usize {
-    if let Ok(s) = std::env::var("MEMINTELLI_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
+    let auto = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+    match std::env::var("MEMINTELLI_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(0) => {
+                static WARN_ZERO: Once = Once::new();
+                WARN_ZERO.call_once(|| {
+                    eprintln!(
+                        "warning: MEMINTELLI_THREADS=0 is not a valid pool size; \
+                         clamping to 1 (serial)"
+                    );
+                });
+                1
+            }
+            Ok(n) => n,
+            Err(_) => {
+                static WARN_PARSE: Once = Once::new();
+                WARN_PARSE.call_once(|| {
+                    eprintln!(
+                        "warning: ignoring unparseable MEMINTELLI_THREADS={s:?} \
+                         (want an integer >= 1); using auto-detected parallelism"
+                    );
+                });
+                auto()
+            }
+        },
+        Err(_) => auto(),
+    }
+}
+
+/// First panic payload captured across the workers of one scheduler call,
+/// plus the abort flag that makes the remaining claim loops drain fast.
+struct PanicTrap {
+    payload: Mutex<Option<Box<dyn Any + Send>>>,
+    abort: AtomicBool,
+}
+
+impl PanicTrap {
+    fn new() -> Self {
+        PanicTrap { payload: Mutex::new(None), abort: AtomicBool::new(false) }
+    }
+
+    /// Run one work item, capturing a panic instead of unwinding through
+    /// the scoped-thread join (which would surface as an opaque scheduler
+    /// error on the caller). Returns `false` if the scheduler should stop.
+    fn run(&self, item: impl FnOnce()) -> bool {
+        if self.abort.load(Ordering::Relaxed) {
+            return false;
+        }
+        if let Err(p) = catch_unwind(AssertUnwindSafe(item)) {
+            // Keep the FIRST payload (a poisoned mutex just means another
+            // worker is storing its own payload — ours loses the race).
+            let mut slot = self.payload.lock().unwrap_or_else(|e| e.into_inner());
+            slot.get_or_insert(p);
+            self.abort.store(true, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Re-throw the captured payload (if any) on the calling thread.
+    fn rethrow(self) {
+        let payload = self.payload.into_inner().unwrap_or_else(|e| e.into_inner());
+        if let Some(p) = payload {
+            resume_unwind(p);
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
 /// Parallel map over `0..n`: runs `f(i)` on a pool of scoped threads and
 /// returns results in index order. `f` must be `Sync` (called from many
 /// threads); per-iteration state should be derived from `i` (e.g. RNG
 /// streams), which keeps results deterministic regardless of thread count.
+/// If any `f(i)` panics, the first panic is re-thrown here with its
+/// original payload.
 pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -30,27 +105,37 @@ where
     if workers <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
+    let trap = PanicTrap::new();
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots_ptr = SendPtr(slots.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let next = &next;
+            let trap = &trap;
             let f = &f;
             let slots_ptr = &slots_ptr;
             scope.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let v = f(i);
-                // SAFETY: each index i is claimed exactly once via the atomic
-                // counter, so no two threads write the same slot, and the
-                // scope guarantees the buffer outlives all workers.
-                unsafe { *slots_ptr.0.add(i) = Some(v) };
+                let alive = trap.run(|| {
+                    let v = f(i);
+                    // SAFETY: each index i is claimed exactly once via the
+                    // atomic counter, so no two threads write the same
+                    // slot, and the scope guarantees the buffer outlives
+                    // all workers.
+                    unsafe { *slots_ptr.0.add(i) = Some(v) };
+                });
+                if !alive {
+                    break;
+                }
             });
         }
     });
+    trap.rethrow();
+    // Reachable only when no worker panicked, so every slot was filled.
     slots.into_iter().map(|s| s.expect("par_map slot unfilled")).collect()
 }
 
@@ -66,7 +151,8 @@ unsafe impl<T> Sync for SendPtr<T> {}
 /// the 2-D (row-band × panel-group) grid of the stacked digit-plane GEMM
 /// in `tensor`, where items of one matmul target interleaved row/column
 /// regions of a shared buffer that no chunking scheme can hand out as
-/// contiguous `&mut` chunks.
+/// contiguous `&mut` chunks. Worker panics re-throw here with the original
+/// payload.
 pub fn par_for<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -78,27 +164,32 @@ where
         }
         return;
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
+    let trap = PanicTrap::new();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let next = &next;
+            let trap = &trap;
             let f = &f;
             scope.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                f(i);
+                if !trap.run(|| f(i)) {
+                    break;
+                }
             });
         }
     });
+    trap.rethrow();
 }
 
 /// Parallel for-each over mutable chunks of a slice. Work distribution
 /// uses the same lock-free atomic-counter scheme as [`par_map`]: each
 /// worker claims the next chunk index with one `fetch_add`, so there is no
 /// queue mutex to serialize on when chunks are sub-millisecond (the GEMM
-/// row-band case).
+/// row-band case). Worker panics re-throw here with the original payload.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
@@ -113,26 +204,35 @@ where
         }
         return;
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
+    let trap = PanicTrap::new();
     let chunks_ptr = SendPtr(chunks.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let next = &next;
+            let trap = &trap;
             let f = &f;
             let chunks_ptr = &chunks_ptr;
             scope.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                // SAFETY: each index i is claimed exactly once via the
-                // atomic counter, the chunk slices are pairwise disjoint,
-                // and the scope guarantees `chunks` outlives all workers.
-                let c: &mut [T] = unsafe { &mut *(*chunks_ptr.0.add(i)) };
-                f(i, c);
+                let alive = trap.run(|| {
+                    // SAFETY: each index i is claimed exactly once via the
+                    // atomic counter, the chunk slices are pairwise
+                    // disjoint, and the scope guarantees `chunks` outlives
+                    // all workers.
+                    let c: &mut [T] = unsafe { &mut *(*chunks_ptr.0.add(i)) };
+                    f(i, c);
+                });
+                if !alive {
+                    break;
+                }
             });
         }
     });
+    trap.rethrow();
 }
 
 #[cfg(test)]
@@ -189,5 +289,62 @@ mod tests {
     fn worker_count_env_override() {
         // Can't set env safely across tests; just check bounds.
         assert!(worker_count() >= 1);
+    }
+
+    /// The message a caught-and-rethrown worker panic carries, or `None`
+    /// if `body` completed.
+    fn caught_message(body: impl FnOnce() + std::panic::UnwindSafe) -> Option<String> {
+        match catch_unwind(body) {
+            Ok(()) => None,
+            Err(p) => Some(
+                p.downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string payload>".into()),
+            ),
+        }
+    }
+
+    #[test]
+    fn par_map_rethrows_original_panic_payload() {
+        // The bug this guards: a worker panic used to surface as the
+        // unrelated "par_map slot unfilled" expect. Many items so the
+        // parallel path engages regardless of the pool size.
+        let msg = caught_message(|| {
+            let _ = par_map(400, |i| {
+                if i == 137 {
+                    panic!("kernel assertion at item {i}");
+                }
+                i
+            });
+        });
+        let msg = msg.expect("par_map must propagate the worker panic");
+        assert!(msg.contains("kernel assertion at item 137"), "got: {msg}");
+        assert!(!msg.contains("slot unfilled"), "got: {msg}");
+    }
+
+    #[test]
+    fn par_for_rethrows_original_panic_payload() {
+        let msg = caught_message(|| {
+            par_for(400, |i| {
+                if i == 73 {
+                    panic!("region writer died at {i}");
+                }
+            });
+        });
+        assert!(msg.expect("must propagate").contains("region writer died at 73"));
+    }
+
+    #[test]
+    fn par_chunks_mut_rethrows_original_panic_payload() {
+        let msg = caught_message(|| {
+            let mut data = vec![0u8; 512];
+            par_chunks_mut(&mut data, 1, |i, _c| {
+                if i == 99 {
+                    panic!("band writer died at {i}");
+                }
+            });
+        });
+        assert!(msg.expect("must propagate").contains("band writer died at 99"));
     }
 }

@@ -1,0 +1,110 @@
+//! Integration tests for the exact integer-domain stacked GEMM: the int
+//! kernel must engage automatically on noise-free engines through the
+//! public API (prepare → matmul, compiled chip inference) and stay
+//! bit-identical to the f64 path and the reference oracle, while noisy
+//! engines must keep the analog f64 path without any opt-in.
+
+use memintelli::arch::ChipSpec;
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::nn::layers::{Flatten, LinearMem, Relu};
+use memintelli::nn::{HwSpec, Sequential};
+use memintelli::tensor::{Matrix, Tensor};
+use memintelli::util::rng::Pcg64;
+
+#[test]
+fn noise_free_engine_engages_int_kernel_and_matches_oracle() {
+    // Digits program verbatim on a noise-free engine, so every block must
+    // grow a byte mirror and the fused path must dispatch to the integer
+    // kernel — with results bit-identical to the shift-add oracle.
+    let med = SliceMethod::int(SliceSpec::int8());
+    let engine = DotProductEngine::ideal((64, 64));
+    let mut rng = Pcg64::seeded(71);
+    for &(m, k, n) in &[(1usize, 200usize, 130usize), (33, 100, 70), (300, 64, 64)] {
+        let a = Matrix::random_normal(m, k, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_normal(k, n, 0.0, 1.0, &mut rng);
+        let w = engine.prepare_weights(&b, &med, 0);
+        assert_eq!(
+            w.int_panel_blocks(),
+            w.num_blocks(),
+            "noise-free {m}x{k}x{n}: every block must carry a byte mirror"
+        );
+        let fused = engine.matmul_prepared(&a, &w, &med, 0);
+        let oracle = engine.matmul_prepared_reference(&a, &w, &med, 0);
+        assert_eq!(fused.data, oracle.data, "int kernel vs oracle at {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn noisy_engine_keeps_analog_kernel_and_matches_oracle() {
+    // Lognormal programming noise makes conductances non-integer, so no
+    // block may claim the byte mirror; the f64 path still matches the
+    // oracle bit for bit.
+    let med = SliceMethod::int(SliceSpec::int8());
+    let engine = DotProductEngine::new(DpeConfig::default(), 5);
+    let mut rng = Pcg64::seeded(72);
+    let a = Matrix::random_normal(17, 130, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(130, 96, 0.0, 1.0, &mut rng);
+    let w = engine.prepare_weights(&b, &med, 0);
+    assert_eq!(w.int_panel_blocks(), 0, "analog programming must not mirror to bytes");
+    let fused = engine.matmul_prepared(&a, &w, &med, 0);
+    let oracle = engine.matmul_prepared_reference(&a, &w, &med, 0);
+    assert_eq!(fused.data, oracle.data);
+}
+
+#[test]
+fn int_kernel_preserves_fp32_accuracy_through_public_matmul() {
+    // The one-shot matmul entry point on an ideal engine rides the integer
+    // kernel (fp32 slicing has ≤ 4-bit digits → i32 accumulators); the
+    // sliced result must still track the exact product at fp32-level RE.
+    let med = SliceMethod::fp(SliceSpec::fp32());
+    let engine = DotProductEngine::ideal((64, 64));
+    let mut rng = Pcg64::seeded(73);
+    let a = Matrix::random_normal(24, 96, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_normal(96, 80, 0.0, 1.0, &mut rng);
+    let re = engine.matmul(&a, &b, &med, &med).relative_error(&a.matmul(&b));
+    assert!(re < 1e-5, "fp32 slicing on the int kernel drifted: RE {re}");
+}
+
+/// A small FC model on noise-free hardware so the compiled chip runtime
+/// exercises the integer kernel in every LinearMem forward.
+fn noise_free_model(seed: u64) -> Sequential {
+    let hw = HwSpec::uniform(
+        DotProductEngine::ideal((64, 64)),
+        SliceMethod::int(SliceSpec::int8()),
+    );
+    let mut rng = Pcg64::new(seed, 0xA11C);
+    Sequential::new(vec![
+        Box::new(Flatten::new()),
+        Box::new(LinearMem::new(64, 48, Some(hw.clone()), &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(LinearMem::new(48, 10, Some(hw), &mut rng)),
+    ])
+}
+
+fn feature_batch(n: usize) -> Tensor {
+    Tensor::from_vec(
+        &[n, 64],
+        (0..n * 64).map(|i| ((i * 13 % 19) as f64) / 9.0 - 1.0).collect(),
+    )
+}
+
+#[test]
+fn mapped_inference_on_int_kernel_bit_identical_across_micro_batches() {
+    // The chip-mapped batched runtime inherits the integer kernel through
+    // the same value-driven dispatch; it must stay invisible — unmapped
+    // forward, whole-batch infer, and every micro-batch split agree bit
+    // for bit.
+    let mut unmapped = noise_free_model(9);
+    let mapped = {
+        let m = noise_free_model(9);
+        let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+        m.compile(&chip).expect("single-tile compile")
+    };
+    let x = feature_batch(7);
+    let y_seq = unmapped.forward(&x, false);
+    let full = mapped.infer(&x);
+    assert_eq!(y_seq.data, full.data, "mapped vs unmapped on noise-free hardware");
+    for mb in [1usize, 2, 3, 7, 64] {
+        assert_eq!(mapped.infer_batched(&x, mb).data, full.data, "micro_batch={mb}");
+    }
+}
