@@ -1,0 +1,146 @@
+//! serving_demo: the fault-tolerant serving runtime, end to end.
+//!
+//! ```bash
+//! cd rust && cargo run --release --example serving_demo
+//! ```
+//!
+//! Serves an open-loop request stream through a two-replica
+//! `ServingRuntime` pool of LinearMem(128→64) INT8 chips, injects a
+//! stuck-cell fault event into replica 0 mid-run, and prints the full
+//! failover/heal timeline the runtime records:
+//!
+//! - the fault kills replica 0's in-flight batch; its requests retry
+//!   (with backoff) on replica 1 — nothing is lost or double-answered;
+//! - the next background health scan probes both replicas with ABFT
+//!   checksum vectors, flags the damaged one, and pulls it from rotation;
+//! - a `MappedModel::self_heal` round reprograms it (program-and-verify,
+//!   probe, remap-to-spare) and it rejoins the pool;
+//! - requests keep completing throughout — the pool never goes dark.
+//!
+//! Every knob comes from the `[serving]` TOML section in production runs
+//! (`memintelli serve`, see `examples/README.md`); here the spec is built
+//! inline so the timeline stays small and readable.
+
+use memintelli::arch::{
+    ChipSpec, EventKind, FaultEvent, Outcome, ReplicaSpec, Request, ServingRuntime, ServingSpec,
+};
+use memintelli::device::faults::{FaultSpec, NonIdealitySpec};
+use memintelli::dpe::{DotProductEngine, DpeConfig, RepairSpec, SliceMethod, SliceSpec};
+use memintelli::nn::layers::LinearMem;
+use memintelli::nn::{HwSpec, Sequential};
+use memintelli::util::rng::Pcg64;
+
+const SEED: u64 = 41;
+
+fn main() -> anyhow::Result<()> {
+    // Replica factory: LinearMem(128→64) INT8 on a one-tile chip with a
+    // 4-slot spare tail. The condition tells us how to build it: a replica
+    // that has sustained a fault event gets stuck cells on its fabric.
+    let factory = |r: usize, cond: &ReplicaSpec| {
+        let faults = if cond.faulty { FaultSpec::cells(0.02) } else { FaultSpec::none() };
+        let dpe = DpeConfig {
+            nonideal: NonIdealitySpec {
+                faults,
+                t_read: cond.t_read_s,
+                ..NonIdealitySpec::none()
+            },
+            ..DpeConfig::default()
+        };
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(dpe, SEED + r as u64),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut rng = Pcg64::new(SEED, 0xF00D);
+        let model = Sequential::new(vec![Box::new(LinearMem::new(128, 64, Some(hw), &mut rng))]);
+        model.compile(&ChipSpec::new(1, 12, (64, 64)).with_spares(4))
+    };
+
+    let spec = ServingSpec {
+        replicas: 2,
+        max_batch: 4,
+        batch_deadline_us: 1_000,
+        request_deadline_us: 100_000,
+        max_retries: 2,
+        retry_backoff_us: 500,
+        health_period_us: 2_000, // background ABFT scan cadence
+        heal_us: 1_000,          // time a pulled replica spends healing
+        service_base_us: 200,
+        service_per_sample_us: 50,
+        ..ServingSpec::default()
+    };
+    let mut rt = ServingRuntime::new(spec, RepairSpec::enabled(), vec![128], Box::new(factory))?;
+
+    // Open-loop workload: 24 requests, one every 400 µs; stuck cells hit
+    // replica 0 at t = 2 ms, mid-stream.
+    let workload: Vec<Request> = (0..24)
+        .map(|i| Request {
+            arrive_us: i as u64 * 400,
+            sample: (0..128).map(|k| (((i * 7 + k) % 23) as f64) / 11.0 - 1.0).collect(),
+        })
+        .collect();
+    let faults = [FaultEvent { at_us: 2_000, replica: 0 }];
+
+    let report = rt.run(&workload, &faults)?;
+
+    println!("=== failover / heal timeline ===\n");
+    for e in &report.events {
+        let t = e.at_us;
+        match &e.kind {
+            EventKind::Dispatch { batch, replica, requests } => println!(
+                "{t:>7} µs  dispatch  batch {batch} -> replica {replica} ({requests} reqs)"
+            ),
+            EventKind::BatchDone { batch, replica } => {
+                println!("{t:>7} µs  done      batch {batch} on replica {replica}")
+            }
+            EventKind::BatchFailed { batch, replica, retried, exhausted } => println!(
+                "{t:>7} µs  FAILED    batch {batch} on replica {replica}: \
+                 {retried} retrying, {exhausted} exhausted"
+            ),
+            EventKind::FaultInjected { replica } => {
+                println!("{t:>7} µs  FAULT     stuck cells hit replica {replica}")
+            }
+            EventKind::Rejected { request, error } => {
+                println!("{t:>7} µs  rejected  request {request}: {error}")
+            }
+            EventKind::HealthScan { replica, worst_score, pulled } => println!(
+                "{t:>7} µs  scan      replica {replica}: worst probe RE {worst_score:.3} -> {}",
+                if *pulled { "PULLED from rotation" } else { "healthy" }
+            ),
+            EventKind::HealStart { replica } => {
+                println!("{t:>7} µs  heal      replica {replica} starts self_heal")
+            }
+            EventKind::HealDone { replica, moves, fenced } => println!(
+                "{t:>7} µs  healed    replica {replica} rejoins: \
+                 {moves} group(s) remapped, {fenced} fenced"
+            ),
+            EventKind::DriftRefresh { replica, t_read_s } => println!(
+                "{t:>7} µs  drift     replica {replica} reprogrammed at age {t_read_s:.3} s"
+            ),
+        }
+    }
+
+    println!("\n=== outcome ===\n");
+    let done = report.completed();
+    let retries = report.total_retries();
+    println!("requests     : {done}/{} completed, {retries} retry dispatches", workload.len());
+    println!(
+        "latency      : p50 {} µs, p99 {} µs, {:.0} images/sec",
+        report.percentile_latency_us(0.50).unwrap_or(0),
+        report.percentile_latency_us(0.99).unwrap_or(0),
+        report.images_per_sec()
+    );
+    for h in &report.heals {
+        println!(
+            "heal record  : replica {} [{}..{} µs], {} move(s), {} fenced, {} verify retries",
+            h.replica, h.started_us, h.finished_us, h.moves, h.fenced, h.verify_retries
+        );
+    }
+    let failed_over = report
+        .outcomes
+        .iter()
+        .filter(|o| matches!(o, Outcome::Done(c) if c.attempts > 1))
+        .count();
+    println!("failover     : {failed_over} request(s) completed on a retry after the fault");
+    assert_eq!(done, workload.len(), "the pool must not lose requests");
+    Ok(())
+}

@@ -77,10 +77,92 @@ impl MappedModel {
         &self.placement
     }
 
+    /// Condemned-block count per placed core, aligned with
+    /// [`Self::placement`]'s `layers` order — the per-layer degraded-mode
+    /// figure the chip reports surface.
+    pub fn condemned_per_layer(&self) -> Vec<usize> {
+        let mut counts = Vec::new();
+        for l in &self.model.layers {
+            for core in l.cores() {
+                if core.placement().is_some() {
+                    counts.push(core.condemned_blocks().len());
+                }
+            }
+        }
+        counts
+    }
+
     /// The graceful-degradation record of the last [`MappedModel::self_heal`]
     /// round, if any condemned groups could not be repaired.
     pub fn degraded(&self) -> Option<&DegradedReport> {
         self.degraded.as_ref()
+    }
+
+    /// Probe-only health pass: run the ABFT checksum probes
+    /// ([`crate::nn::MemCore::probe_block_scores`]) over every placed
+    /// block group **without mutating any programmed state** — the
+    /// background scan the serving runtime
+    /// ([`super::serve::ServingRuntime`]) uses to decide whether a replica
+    /// needs to leave rotation for a [`MappedModel::self_heal`] round.
+    /// Deterministic for a fixed engine seed and spec.
+    pub fn health_probe(&self, spec: &RepairSpec) -> anyhow::Result<HealthReport> {
+        let mut health = HealthReport::default();
+        let mut missing: Option<usize> = None;
+        let mut ci = 0usize;
+        for l in &self.model.layers {
+            for core in l.cores() {
+                if core.placement().is_none() {
+                    continue;
+                }
+                let lp = core.placement().unwrap();
+                let (slices, slots) = (lp.slices, lp.slots.clone());
+                match core.probe_block_scores(spec) {
+                    Some((scores, calls)) => {
+                        health.probe_matmuls += calls;
+                        for (b, &score) in scores.iter().enumerate() {
+                            health.slots.push(SlotHealth {
+                                slot: slots[b * slices],
+                                layer: ci,
+                                block: b,
+                                score,
+                                healthy: score <= spec.probe_re_bound,
+                            });
+                        }
+                    }
+                    None => missing = missing.or(Some(ci)),
+                }
+                ci += 1;
+            }
+        }
+        if let Some(ci) = missing {
+            anyhow::bail!("health probe: placed core {ci} has no programmed state");
+        }
+        Ok(health)
+    }
+
+    /// Fence off `(layer, block)` groups in place: each group's
+    /// recombination scale is zeroed
+    /// ([`crate::nn::MemCore::condemn_blocks`]), so it contributes
+    /// **exactly zero** to every forward — a bounded missing-contribution
+    /// error instead of whatever stale digits sit on its arrays. Layer
+    /// indices count placed cores in compile order (the same indexing as
+    /// [`HealthReport`] / [`RepairPlan`]). Purely mechanical: the
+    /// degraded report is managed by [`MappedModel::self_heal`].
+    pub fn condemn(&mut self, groups: &[(usize, usize)]) {
+        let mut ci = 0usize;
+        for l in &mut self.model.layers {
+            l.visit_cores(&mut |core| {
+                if core.placement().is_none() {
+                    return;
+                }
+                let mine: Vec<usize> =
+                    groups.iter().filter(|g| g.0 == ci).map(|g| g.1).collect();
+                if !mine.is_empty() {
+                    core.condemn_blocks(&mine);
+                }
+                ci += 1;
+            });
+        }
     }
 
     /// One closed-loop repair round over the whole chip (see
@@ -122,34 +204,7 @@ impl MappedModel {
         }
 
         // Stage 2: online health probes, scored per placed block group.
-        let mut health = HealthReport::default();
-        let mut missing: Option<usize> = None;
-        let mut ci = 0usize;
-        for l in &mut self.model.layers {
-            l.visit_cores(&mut |core| {
-                let Some(lp) = core.placement() else { return };
-                let (slices, slots) = (lp.slices, lp.slots.clone());
-                match core.probe_block_scores(spec) {
-                    Some((scores, calls)) => {
-                        health.probe_matmuls += calls;
-                        for (b, &score) in scores.iter().enumerate() {
-                            health.slots.push(SlotHealth {
-                                slot: slots[b * slices],
-                                layer: ci,
-                                block: b,
-                                score,
-                                healthy: score <= spec.probe_re_bound,
-                            });
-                        }
-                    }
-                    None => missing = missing.or(Some(ci)),
-                }
-                ci += 1;
-            });
-        }
-        if let Some(ci) = missing {
-            anyhow::bail!("self_heal: placed core {ci} has no programmed state to probe");
-        }
+        let health = self.health_probe(spec)?;
 
         // Stage 3: condemn (verify ∪ probe), plan, remap, degrade.
         condemned.extend(health.condemned());
@@ -175,8 +230,44 @@ impl MappedModel {
             lp.tile_first = lp.tile_first.min(m.to[0].tile);
             lp.tile_last = lp.tile_last.max(m.to[0].tile);
         }
-        self.degraded = DegradedReport::from_unplaced(&self.placement, &health, &plan);
-        outcome.health = health;
+        // Stage 4: fence off what repair could not fix. Groups the plan
+        // left unplaced are zeroed in place (exact-zero contribution beats
+        // unbounded stuck-at garbage), and moved groups are re-probed at
+        // their new slots — a spare that is itself faulty gets condemned
+        // and zeroed too, extending the degraded report. The re-probe is
+        // deterministic, so groups untouched by the plan keep their
+        // stage-2 verdicts.
+        let mut fenced: Vec<((usize, usize), f64)> =
+            plan.unplaced.iter().map(|&g| (g, health.score_of(g.0, g.1).unwrap_or(0.0))).collect();
+        if !plan.moves.is_empty() {
+            let recheck = self.health_probe(spec)?;
+            outcome.health.probe_matmuls = recheck.probe_matmuls;
+            for m in &plan.moves {
+                if let Some(score) = recheck.score_of(m.layer, m.block) {
+                    if score > spec.probe_re_bound {
+                        fenced.push(((m.layer, m.block), score));
+                    }
+                }
+            }
+            fenced.sort_by(|a, b| a.0.cmp(&b.0));
+            fenced.dedup_by_key(|e| e.0);
+        }
+        self.degraded = if fenced.is_empty() {
+            None
+        } else {
+            let groups: Vec<(usize, usize)> = fenced.iter().map(|e| e.0).collect();
+            self.condemn(&groups);
+            let mut deg = DegradedReport::default();
+            for &((layer, block), score) in &fenced {
+                let lp = &self.placement.layers[layer];
+                deg.condemned.push((layer, block));
+                deg.slots.push(lp.slots[block * lp.slices]);
+                deg.estimated_re_impact = deg.estimated_re_impact.max(score);
+            }
+            Some(deg)
+        };
+        outcome.health.slots = health.slots;
+        outcome.health.probe_matmuls += health.probe_matmuls;
         outcome.plan = plan;
         outcome.degraded = self.degraded.clone();
         Ok(outcome)
@@ -434,6 +525,84 @@ mod tests {
         assert_eq!(out.degraded.as_ref(), Some(deg));
         let y = mapped.infer(&lin_batch(2));
         assert_eq!(y.shape, vec![2, 64], "degraded chip must keep serving");
+    }
+
+    #[test]
+    fn condemned_group_contributes_exactly_zero() {
+        // Degraded-mode semantics: a condemned group must contribute
+        // exactly zero — not the stale digits on its arrays. Oracle: a twin
+        // whose second k-block weights are zeroed *pre-quantization*. That
+        // block quantizes to scale 0, the same skip path condemnation
+        // takes, and block 0 programs identically (same seed, same slots),
+        // so the two chips must agree bit for bit.
+        let chip = ChipSpec::single_tile(8, (64, 64));
+        let lin_with = |zero_tail: bool| {
+            let mut rng = Pcg64::new(9, 0xBEEF);
+            let mut l = LinearMem::new(128, 64, Some(hw(77)), &mut rng);
+            if zero_tail {
+                // w is row-major in_features × out_features; rows 64..128
+                // are the second k-block group.
+                for v in &mut l.w.value[64 * 64..] {
+                    *v = 0.0;
+                }
+            }
+            Sequential::new(vec![Box::new(l)]).compile(&chip).unwrap()
+        };
+        let mut fenced = lin_with(false);
+        fenced.condemn(&[(0, 1)]);
+        assert_eq!(fenced.condemned_per_layer(), vec![1]);
+        let zeroed = lin_with(true);
+        let x = lin_batch(3);
+        let ya = fenced.infer(&x);
+        let yb = zeroed.infer(&x);
+        assert_eq!(ya.data.len(), yb.data.len());
+        for (a, b) in ya.data.iter().zip(&yb.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "condemned group leaked stale digits");
+        }
+        // And the fence actually removed a live contribution.
+        let full = lin_with(false);
+        assert_ne!(full.infer(&x).data, ya.data, "block 1 must have contributed before");
+    }
+
+    #[test]
+    fn summary_reports_condemned_group_counts() {
+        let chip = ChipSpec::single_tile(8, (64, 64));
+        let mut mapped = linear_model(hw(23), 23).compile(&chip).unwrap();
+        assert!(
+            !mapped.summary(vec![1, 128]).contains("condemned="),
+            "healthy chip must not report condemned groups"
+        );
+        mapped.condemn(&[(0, 1)]);
+        let s = mapped.summary(vec![1, 128]);
+        assert!(s.contains("condemned=1"), "summary must surface the fenced group:\n{s}");
+    }
+
+    #[test]
+    fn degraded_serving_is_deterministic() {
+        // Two identically-built chips that exhaust their spares must fence
+        // the same groups and keep serving bit-identical outputs — the
+        // serving runtime relies on this to keep a degraded replica in
+        // rotation without breaking pool determinism.
+        let spec = crate::dpe::RepairSpec {
+            probe_re_bound: f64::INFINITY,
+            ..crate::dpe::RepairSpec::enabled()
+        };
+        let chip = ChipSpec::new(1, 12, (64, 64)).with_spares(4);
+        let mut a = linear_model(faulty_hw(43, 0.05), 43).compile(&chip).unwrap();
+        let mut b = linear_model(faulty_hw(43, 0.05), 43).compile(&chip).unwrap();
+        let out_a = a.self_heal(&spec).unwrap();
+        let out_b = b.self_heal(&spec).unwrap();
+        assert_eq!(out_a.plan, out_b.plan);
+        let deg_a = a.degraded().expect("spares must exhaust").clone();
+        assert_eq!(Some(&deg_a), b.degraded());
+        assert_eq!(a.condemned_per_layer(), b.condemned_per_layer());
+        assert_eq!(a.condemned_per_layer().iter().sum::<usize>(), deg_a.condemned.len());
+        let x = lin_batch(4);
+        let ya = a.infer(&x);
+        let yb = b.infer(&x);
+        for (p, q) in ya.data.iter().zip(&yb.data) {
+            assert_eq!(p.to_bits(), q.to_bits(), "degraded twins diverged");
+        }
     }
 
     #[test]

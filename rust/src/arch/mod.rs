@@ -38,9 +38,14 @@
 
 pub mod mapped;
 pub mod repair;
+pub mod serve;
 
 pub use mapped::MappedModel;
 pub use repair::{BlockMove, DegradedReport, HealthReport, RepairOutcome, RepairPlan, SlotHealth};
+pub use serve::{
+    BatchRecord, Completion, Event, EventKind, FaultEvent, HealRecord, Outcome, ReplicaFactory,
+    ReplicaSpec, Request, ServeError, ServeReport, ServingRuntime, ServingSpec, SimClock,
+};
 
 use std::fmt::Write as _;
 

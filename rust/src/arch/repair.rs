@@ -95,13 +95,28 @@ pub struct RepairPlan {
 impl RepairPlan {
     /// Plan spare allocations for `condemned` `(layer, block)` groups of
     /// `placement`. Deterministic and never double-booking: each tile's
-    /// spare tail is handed out in index order, whole groups only (the
-    /// allocator invariant — a group's planes share input drivers), with
-    /// the group's home tile preferred so a repair stays local when it
-    /// can. Groups that fit nowhere land in `unplaced`.
+    /// spare tail is handed out first-fit in index order, whole groups
+    /// only (the allocator invariant — a group's planes share input
+    /// drivers), with the group's home tile preferred so a repair stays
+    /// local when it can. Spare slots *already occupied* by the placement
+    /// (blocks moved there by an earlier repair round) stay booked, so
+    /// repeated heal rounds on a long-serving chip never double-allocate.
+    /// Groups that fit nowhere land in `unplaced`.
     pub fn plan(placement: &Placement, condemned: &[(usize, usize)]) -> RepairPlan {
         let chip = &placement.chip;
-        let mut spare_used = vec![0usize; chip.tiles];
+        let data_cap = chip.data_arrays_per_tile();
+        let mut free: Vec<Vec<bool>> = vec![vec![true; chip.spares_per_tile]; chip.tiles];
+        for lp in &placement.layers {
+            for s in &lp.slots {
+                if s.index >= data_cap {
+                    free[s.tile][s.index - data_cap] = false;
+                }
+            }
+        }
+        let fit = |tail: &[bool], slices: usize| -> Option<usize> {
+            (0..tail.len().saturating_sub(slices - 1))
+                .find(|&i| tail[i..i + slices].iter().all(|&f| f))
+        };
         let mut plan = RepairPlan::default();
         for &(layer, block) in condemned {
             let lp = &placement.layers[layer];
@@ -110,17 +125,18 @@ impl RepairPlan {
             let from = lp.slots[block * slices..(block + 1) * slices].to_vec();
             let home = from[0].tile;
             // Prefer the home tile, then scan the chip in tile order.
-            let tile = std::iter::once(home)
+            let found = std::iter::once(home)
                 .chain(0..chip.tiles)
-                .find(|&t| chip.spares_per_tile - spare_used[t] >= slices);
-            let Some(tile) = tile else {
+                .find_map(|t| fit(&free[t], slices).map(|off| (t, off)));
+            let Some((tile, off)) = found else {
                 plan.unplaced.push((layer, block));
                 continue;
             };
-            let base = chip.data_arrays_per_tile() + spare_used[tile];
             let to: Vec<ArraySlot> =
-                (0..slices).map(|s| ArraySlot { tile, index: base + s }).collect();
-            spare_used[tile] += slices;
+                (0..slices).map(|s| ArraySlot { tile, index: data_cap + off + s }).collect();
+            for s in 0..slices {
+                free[tile][off + s] = false;
+            }
             plan.moves.push(BlockMove {
                 layer,
                 block,
@@ -252,6 +268,36 @@ mod tests {
         // A fully-placed plan reports no degradation.
         let ok = RepairPlan::plan(&p, &[(0, 0)]);
         assert!(DegradedReport::from_unplaced(&p, &health, &ok).is_none());
+    }
+
+    #[test]
+    fn second_round_planning_respects_occupied_spares() {
+        // After applying a first round's moves to the placement, a second
+        // round must not hand out the same spare slots again.
+        let chip = ChipSpec::new(1, 20, (64, 64)).with_spares(12);
+        let mut p = TileAllocator::allocate(&chip, &[demand(0, 2, 4)]).unwrap();
+        let first = RepairPlan::plan(&p, &[(0, 0)]);
+        assert_eq!(first.moves.len(), 1);
+        assert_eq!(first.moves[0].to[0], ArraySlot { tile: 0, index: 8 });
+        {
+            let lp = &mut p.layers[0];
+            lp.slots[0..4].copy_from_slice(&first.moves[0].to);
+            lp.block_streams[0] = first.moves[0].new_stream;
+        }
+        let second = RepairPlan::plan(&p, &[(0, 1)]);
+        assert_eq!(second.moves.len(), 1);
+        assert_eq!(
+            second.moves[0].to[0],
+            ArraySlot { tile: 0, index: 12 },
+            "round 2 must skip the spare group round 1 occupies"
+        );
+        // And a third group has nowhere to go: only 4 free spare slots
+        // remain and they are already booked by round 2's plan state in a
+        // combined plan.
+        let both = RepairPlan::plan(&p, &[(0, 0), (0, 1)]);
+        assert_eq!(both.moves.len(), 2);
+        assert!(both.unplaced.is_empty());
+        assert_ne!(both.moves[0].to[0], both.moves[1].to[0]);
     }
 
     #[test]

@@ -1,0 +1,1286 @@
+//! Fault-tolerant serving runtime over replicated [`MappedModel`]s: the
+//! "millions of users" layer that puts the self-healing chip machinery
+//! ([`super::repair`]) under live traffic.
+//!
+//! A [`ServingRuntime`] owns a pool of N replicas compiled from the same
+//! `Sequential` template by a caller-supplied [`ReplicaFactory`]. Each
+//! replica binds its own engine seed, so hardware noise decorrelates
+//! across the pool while the weights stay identical. Requests flow
+//! through:
+//!
+//! - a **bounded FIFO queue** with admission control — a full queue
+//!   rejects new arrivals with a typed [`ServeError::QueueFull`], never a
+//!   silent drop;
+//! - **dynamic micro-batching** — a batch dispatches to the lowest-id
+//!   free replica as soon as `max_batch` requests wait, or when the
+//!   oldest waiting request has aged past `batch_deadline_us`;
+//! - **per-request deadlines** — a request that waits out
+//!   `request_deadline_us` end-to-end fails typed
+//!   ([`ServeError::DeadlineExceeded`]);
+//! - **bounded retry with backoff** — a fault event that strikes a
+//!   replica mid-service kills its in-flight batch; every killed request
+//!   re-enters the queue after `retry_backoff_us · 2^(attempt-1)` and is
+//!   steered to a *different* replica (best effort: the exclusion is
+//!   waived when only one replica remains in rotation), up to
+//!   `max_retries` retries ([`ServeError::RetriesExhausted`] after);
+//! - a **background health pass** every `health_period_us`: the ABFT
+//!   checksum probes ([`MappedModel::health_probe`]) scan each idle
+//!   replica; a suspect or failing replica leaves rotation for
+//!   `heal_us`, runs [`MappedModel::self_heal`], and returns — possibly
+//!   degraded (condemned groups zeroed, [`super::DegradedReport`]
+//!   attached) when spares are exhausted. Groups already fenced off do
+//!   not re-trigger the pull, so a degraded replica keeps serving
+//!   instead of thrashing in and out of rotation.
+//!
+//! **Time is simulated.** [`SimClock`] is integer microseconds advanced
+//! by a deterministic discrete-event loop — no `std::time::Instant`
+//! anywhere in the hot path, so every run (latencies, retries, heal
+//! timing, outputs) is bit-reproducible for a fixed workload, spec, and
+//! factory. Inference itself is real: every dispatched batch runs
+//! [`MappedModel::infer_batched`] through the full DPE pipeline; only
+//! the *duration* of that work is modeled (`service_base_us +
+//! service_per_sample_us · batch`).
+//!
+//! **Drift.** With `drift_refresh` on, each health pass rebuilds idle
+//! replicas at `t_read = seconds since their last programming`, so the
+//! existing power-law retention model
+//! ([`crate::device::faults::NonIdealitySpec::t_read`]) ages the
+//! conductances in simulated time; when drift pushes the probes over
+//! their bound the replica is pulled and healing reprograms it fresh
+//! (`t_read = 0` — a rewrite restarts the drift clock).
+
+use super::mapped::MappedModel;
+use crate::dpe::RepairSpec;
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Simulated wall-clock in integer microseconds. The serving runtime
+/// never reads host time; tests and benches are deterministic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimClock {
+    now_us: u64,
+}
+
+impl SimClock {
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+    fn advance_to(&mut self, t: u64) {
+        debug_assert!(t >= self.now_us, "simulated time must not run backwards");
+        self.now_us = t;
+    }
+}
+
+/// The `[serving]` knobs (TOML section, see
+/// [`crate::coordinator::SimConfig`]). All times are simulated
+/// microseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingSpec {
+    /// Pool size (replica `MappedModel`s, decorrelated noise streams).
+    pub replicas: usize,
+    /// Bounded request queue: arrivals beyond this are rejected typed.
+    pub queue_capacity: usize,
+    /// Dispatch as soon as this many requests wait for one batch.
+    pub max_batch: usize,
+    /// …or when the oldest waiting request has waited this long.
+    pub batch_deadline_us: u64,
+    /// End-to-end per-request deadline (arrival → completion).
+    pub request_deadline_us: u64,
+    /// Max retries after a mid-service fault (attempts = retries + 1).
+    pub max_retries: usize,
+    /// Base retry backoff; attempt k waits `backoff · 2^(k-1)`.
+    pub retry_backoff_us: u64,
+    /// Background health-scan period; 0 disables scans (and healing).
+    pub health_period_us: u64,
+    /// Time a replica spends out of rotation for one self-heal round.
+    pub heal_us: u64,
+    /// Service-time model: fixed cost per dispatched batch…
+    pub service_base_us: u64,
+    /// …plus marginal cost per sample in the batch.
+    pub service_per_sample_us: u64,
+    /// Age replicas by rebuilding them at `t_read = time since last
+    /// programming` on each scan (power-law drift); healing resets the
+    /// drift clock by reprogramming at `t_read = 0`.
+    pub drift_refresh: bool,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        ServingSpec {
+            replicas: 2,
+            queue_capacity: 32,
+            max_batch: 8,
+            batch_deadline_us: 2_000,
+            request_deadline_us: 50_000,
+            max_retries: 2,
+            retry_backoff_us: 500,
+            health_period_us: 0,
+            heal_us: 10_000,
+            service_base_us: 200,
+            service_per_sample_us: 50,
+            drift_refresh: false,
+        }
+    }
+}
+
+/// Typed request-failure reasons — backpressure and timeouts are part of
+/// the serving contract, never silent drops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at admission: the bounded queue was full.
+    QueueFull { queued: usize, capacity: usize },
+    /// Waited out its end-to-end deadline before a replica served it.
+    DeadlineExceeded { waited_us: u64, deadline_us: u64 },
+    /// Killed by faults on every attempt the retry budget allowed.
+    RetriesExhausted { attempts: usize },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::QueueFull { queued, capacity } => {
+                write!(f, "queue full ({queued}/{capacity})")
+            }
+            ServeError::DeadlineExceeded { waited_us, deadline_us } => {
+                write!(f, "deadline exceeded (waited {waited_us}µs > {deadline_us}µs)")
+            }
+            ServeError::RetriesExhausted { attempts } => {
+                write!(f, "retries exhausted after {attempts} attempts")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One request: an arrival time and a flat sample (shape given to
+/// [`ServingRuntime::new`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub arrive_us: u64,
+    pub sample: Vec<f64>,
+}
+
+/// A scripted mid-run hardware fault: at `at_us`, `replica`'s chip
+/// acquires the factory's faulty condition (stuck cells etc.), killing
+/// whatever batch it was serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at_us: u64,
+    pub replica: usize,
+}
+
+/// Successful completion of one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    /// The model's output row for this request.
+    pub output: Vec<f64>,
+    pub replica: usize,
+    /// Dispatch attempts (1 = served first try; ≤ `max_retries + 1`).
+    pub attempts: usize,
+    /// Arrival → delivery, simulated µs.
+    pub latency_us: u64,
+    /// Index into [`ServeReport::batches`].
+    pub batch: usize,
+}
+
+/// Exactly-once resolution of one request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    Done(Completion),
+    Failed { error: ServeError, at_us: u64 },
+}
+
+/// One dispatched micro-batch (also the replay unit for bit-identity
+/// checks: stack the member samples, run `infer_batched` on a twin
+/// replica, compare rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchRecord {
+    pub batch: usize,
+    pub replica: usize,
+    /// Member request ids in dispatch (FIFO) order.
+    pub requests: Vec<usize>,
+    pub dispatched_us: u64,
+    /// Delivery time, or the kill time for a failed batch.
+    pub completed_us: u64,
+    /// False iff a fault event killed the batch mid-service.
+    pub ok: bool,
+}
+
+/// One self-heal round a health pass triggered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealRecord {
+    pub replica: usize,
+    pub started_us: u64,
+    pub finished_us: u64,
+    /// Condemned groups remapped onto spares.
+    pub moves: usize,
+    /// Groups fenced off (zeroed) because no healthy spare remained.
+    pub fenced: usize,
+    /// Program-and-verify retries the round spent.
+    pub verify_retries: usize,
+}
+
+/// Timeline entry kinds (see [`Event`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    Dispatch { batch: usize, replica: usize, requests: usize },
+    BatchDone { batch: usize, replica: usize },
+    BatchFailed { batch: usize, replica: usize, retried: usize, exhausted: usize },
+    FaultInjected { replica: usize },
+    Rejected { request: usize, error: ServeError },
+    HealthScan { replica: usize, worst_score: f64, pulled: bool },
+    HealStart { replica: usize },
+    HealDone { replica: usize, moves: usize, fenced: usize },
+    DriftRefresh { replica: usize, t_read_s: f64 },
+}
+
+/// One timeline entry — the failover/heal story of a run, in time order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub at_us: u64,
+    pub kind: EventKind,
+}
+
+/// The condition a replica should be (re)built under — handed to the
+/// [`ReplicaFactory`] so the runtime stays agnostic of engine plumbing.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReplicaSpec {
+    /// Drift age in seconds since the replica's last programming
+    /// (feeds `NonIdealitySpec::t_read`; 0 = freshly programmed).
+    pub t_read_s: f64,
+    /// Whether the replica's chip has sustained a fault event.
+    pub faulty: bool,
+}
+
+/// Builds replica `i` of the pool under the given condition. Must be
+/// deterministic per `(i, condition)`: the factory is re-invoked to age
+/// (drift), damage (fault events), and reprogram (healing) replicas, and
+/// twin rebuilds are how benches verify bit-identity.
+pub type ReplicaFactory<'a> = Box<dyn Fn(usize, &ReplicaSpec) -> anyhow::Result<MappedModel> + 'a>;
+
+/// Full account of one [`ServingRuntime::run`]: exactly one [`Outcome`]
+/// per request (index-aligned with the workload), every dispatched
+/// batch, the heal rounds, and the event timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    pub outcomes: Vec<Outcome>,
+    pub batches: Vec<BatchRecord>,
+    pub heals: Vec<HealRecord>,
+    pub events: Vec<Event>,
+    /// Time of the last request resolution (simulated µs).
+    pub makespan_us: u64,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> usize {
+        self.outcomes.iter().filter(|o| matches!(o, Outcome::Done(_))).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.outcomes.len() - self.completed()
+    }
+
+    /// `(queue_full, deadline_exceeded, retries_exhausted)` counts.
+    pub fn failure_breakdown(&self) -> (usize, usize, usize) {
+        let mut counts = (0usize, 0usize, 0usize);
+        for o in &self.outcomes {
+            if let Outcome::Failed { error, .. } = o {
+                match error {
+                    ServeError::QueueFull { .. } => counts.0 += 1,
+                    ServeError::DeadlineExceeded { .. } => counts.1 += 1,
+                    ServeError::RetriesExhausted { .. } => counts.2 += 1,
+                }
+            }
+        }
+        counts
+    }
+
+    /// Completed-request latencies, ascending (simulated µs).
+    pub fn latencies_us(&self) -> Vec<u64> {
+        let mut l: Vec<u64> = self
+            .outcomes
+            .iter()
+            .filter_map(|o| match o {
+                Outcome::Done(c) => Some(c.latency_us),
+                Outcome::Failed { .. } => None,
+            })
+            .collect();
+        l.sort_unstable();
+        l
+    }
+
+    /// Latency percentile over completed requests (`q` in `(0, 1]`,
+    /// nearest-rank). `None` when nothing completed.
+    pub fn percentile_latency_us(&self, q: f64) -> Option<u64> {
+        let l = self.latencies_us();
+        if l.is_empty() {
+            return None;
+        }
+        let idx = ((q * l.len() as f64).ceil() as usize).clamp(1, l.len()) - 1;
+        Some(l[idx])
+    }
+
+    /// Completed requests per simulated second of makespan.
+    pub fn images_per_sec(&self) -> f64 {
+        if self.makespan_us == 0 {
+            return 0.0;
+        }
+        self.completed() as f64 / (self.makespan_us as f64 * 1e-6)
+    }
+
+    /// Total retry dispatches (attempts beyond each request's first).
+    pub fn total_retries(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter_map(|o| match o {
+                Outcome::Done(c) => Some(c.attempts - 1),
+                Outcome::Failed { .. } => None,
+            })
+            .sum()
+    }
+}
+
+/// A queued request (or a retry waiting out its backoff).
+#[derive(Debug, Clone)]
+struct Pending {
+    id: usize,
+    arrive_us: u64,
+    /// When it (re-)entered the queue — the batching deadline reference.
+    queued_since: u64,
+    /// Earliest re-dispatch time (retry backoff); arrivals: arrival time.
+    ready_at: u64,
+    /// Dispatches so far (0 = never dispatched).
+    dispatches: usize,
+    /// Replica the last fault struck — steer the retry elsewhere.
+    exclude: Option<usize>,
+}
+
+struct InFlight {
+    batch: usize,
+    reqs: Vec<Pending>,
+    /// Output row per member request, computed at dispatch (the compute
+    /// is real and deterministic; only delivery is delayed).
+    outputs: Vec<Vec<f64>>,
+    done_at: u64,
+}
+
+struct Replica {
+    model: MappedModel,
+    cond: ReplicaSpec,
+    /// Last (re)programming time — the drift-age reference.
+    programmed_at_us: u64,
+    /// Out of rotation for healing until this time.
+    healing_until: Option<u64>,
+    /// A fault event struck since the last heal: the next scan pulls the
+    /// replica even if the probes sneak under their bound.
+    suspect: bool,
+    inflight: Option<InFlight>,
+    heals: usize,
+    /// `(moves, fenced)` of the heal in progress, for the HealDone event.
+    last_heal: (usize, usize),
+}
+
+/// The replicated serving runtime. See the module docs.
+pub struct ServingRuntime<'a> {
+    spec: ServingSpec,
+    repair: RepairSpec,
+    in_shape: Vec<usize>,
+    factory: ReplicaFactory<'a>,
+    replicas: Vec<Replica>,
+}
+
+impl<'a> ServingRuntime<'a> {
+    /// Build the pool: replica `i` comes from
+    /// `factory(i, &ReplicaSpec::default())`. `in_shape` is the
+    /// per-sample feature shape (batches stack to `[b, in_shape…]`).
+    pub fn new(
+        spec: ServingSpec,
+        repair: RepairSpec,
+        in_shape: Vec<usize>,
+        factory: ReplicaFactory<'a>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(spec.replicas >= 1, "serving: pool needs at least one replica");
+        anyhow::ensure!(spec.queue_capacity >= 1, "serving: queue_capacity must be >= 1");
+        anyhow::ensure!(spec.max_batch >= 1, "serving: max_batch must be >= 1");
+        let sample_len: usize = in_shape.iter().product();
+        anyhow::ensure!(sample_len > 0, "serving: in_shape must be non-empty");
+        let mut replicas = Vec::with_capacity(spec.replicas);
+        for i in 0..spec.replicas {
+            let cond = ReplicaSpec::default();
+            let model = factory(i, &cond)?;
+            replicas.push(Replica {
+                model,
+                cond,
+                programmed_at_us: 0,
+                healing_until: None,
+                suspect: false,
+                inflight: None,
+                heals: 0,
+                last_heal: (0, 0),
+            });
+        }
+        Ok(ServingRuntime { spec, repair, in_shape, factory, replicas })
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn spec(&self) -> &ServingSpec {
+        &self.spec
+    }
+
+    /// The current model of replica `i` (post-run: inspect heal state via
+    /// [`MappedModel::degraded`]).
+    pub fn replica(&self, i: usize) -> &MappedModel {
+        &self.replicas[i].model
+    }
+
+    /// The condition replica `i` was last built under.
+    pub fn replica_condition(&self, i: usize) -> ReplicaSpec {
+        self.replicas[i].cond
+    }
+
+    /// Self-heal rounds replica `i` has been through.
+    pub fn heal_count(&self, i: usize) -> usize {
+        self.replicas[i].heals
+    }
+
+    /// Serve an open-loop workload (sorted by `arrive_us`) against
+    /// scripted fault events (sorted by `at_us`; events after the last
+    /// resolution have no effect). Deterministic: same inputs, same
+    /// report, bit for bit. Panics if any request would be lost or
+    /// double-answered — those are the runtime's own invariants.
+    pub fn run(
+        &mut self,
+        workload: &[Request],
+        faults: &[FaultEvent],
+    ) -> anyhow::Result<ServeReport> {
+        let sample_len: usize = self.in_shape.iter().product();
+        anyhow::ensure!(
+            workload.windows(2).all(|w| w[0].arrive_us <= w[1].arrive_us),
+            "serving: workload must be sorted by arrive_us"
+        );
+        for (i, r) in workload.iter().enumerate() {
+            anyhow::ensure!(
+                r.sample.len() == sample_len,
+                "serving: request {i} sample len {} != in_shape product {sample_len}",
+                r.sample.len()
+            );
+        }
+        anyhow::ensure!(
+            faults.windows(2).all(|w| w[0].at_us <= w[1].at_us),
+            "serving: fault events must be sorted by at_us"
+        );
+        for f in faults {
+            anyhow::ensure!(
+                f.replica < self.replicas.len(),
+                "serving: fault event targets replica {} of a {}-replica pool",
+                f.replica,
+                self.replicas.len()
+            );
+        }
+
+        let n = workload.len();
+        let mut outcomes: Vec<Option<Outcome>> = vec![None; n];
+        let mut resolved = 0usize;
+        let mut makespan = 0u64;
+        let mut events: Vec<Event> = Vec::new();
+        let mut batches: Vec<BatchRecord> = Vec::new();
+        let mut heals: Vec<HealRecord> = Vec::new();
+        let mut queue: VecDeque<Pending> = VecDeque::new();
+        let mut retries: Vec<Pending> = Vec::new();
+        let mut next_arrival = 0usize;
+        let mut next_fault = 0usize;
+        let mut next_scan =
+            (self.spec.health_period_us > 0).then_some(self.spec.health_period_us);
+        let mut clock = SimClock::default();
+
+        fn resolve(
+            slots: &mut [Option<Outcome>],
+            resolved: &mut usize,
+            makespan: &mut u64,
+            id: usize,
+            outcome: Outcome,
+            at: u64,
+        ) {
+            assert!(slots[id].is_none(), "request {id} double-answered");
+            slots[id] = Some(outcome);
+            *resolved += 1;
+            *makespan = (*makespan).max(at);
+        }
+
+        loop {
+            let now = clock.now_us();
+
+            // (1) Deliver batches whose service time elapsed.
+            let due: Vec<usize> = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.inflight.as_ref().is_some_and(|fl| fl.done_at <= now))
+                .map(|(i, _)| i)
+                .collect();
+            for ri in due {
+                let fl = self.replicas[ri].inflight.take().unwrap();
+                for (p, out) in fl.reqs.iter().zip(fl.outputs.into_iter()) {
+                    resolve(
+                        &mut outcomes,
+                        &mut resolved,
+                        &mut makespan,
+                        p.id,
+                        Outcome::Done(Completion {
+                            output: out,
+                            replica: ri,
+                            attempts: p.dispatches,
+                            latency_us: now - p.arrive_us,
+                            batch: fl.batch,
+                        }),
+                        now,
+                    );
+                }
+                batches[fl.batch].ok = true;
+                batches[fl.batch].completed_us = now;
+                events.push(Event {
+                    at_us: now,
+                    kind: EventKind::BatchDone { batch: fl.batch, replica: ri },
+                });
+            }
+
+            // (2) Replicas done healing rejoin the rotation.
+            let healed: Vec<usize> = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.healing_until.is_some_and(|t| t <= now))
+                .map(|(i, _)| i)
+                .collect();
+            for ri in healed {
+                self.replicas[ri].healing_until = None;
+                let (moves, fenced) = self.replicas[ri].last_heal;
+                events.push(Event {
+                    at_us: now,
+                    kind: EventKind::HealDone { replica: ri, moves, fenced },
+                });
+            }
+
+            // (3) Fault events: the chip acquires its damaged condition;
+            // any in-flight batch dies and its requests retry elsewhere.
+            while next_fault < faults.len() && faults[next_fault].at_us <= now {
+                let ri = faults[next_fault].replica;
+                next_fault += 1;
+                events.push(Event { at_us: now, kind: EventKind::FaultInjected { replica: ri } });
+                self.replicas[ri].cond.faulty = true;
+                self.replicas[ri].suspect = true;
+                let cond = self.replicas[ri].cond;
+                self.replicas[ri].model = (self.factory)(ri, &cond)?;
+                if let Some(fl) = self.replicas[ri].inflight.take() {
+                    batches[fl.batch].ok = false;
+                    batches[fl.batch].completed_us = now;
+                    let (mut retried, mut exhausted) = (0usize, 0usize);
+                    for mut p in fl.reqs {
+                        if p.dispatches > self.spec.max_retries {
+                            resolve(
+                                &mut outcomes,
+                                &mut resolved,
+                                &mut makespan,
+                                p.id,
+                                Outcome::Failed {
+                                    error: ServeError::RetriesExhausted { attempts: p.dispatches },
+                                    at_us: now,
+                                },
+                                now,
+                            );
+                            exhausted += 1;
+                        } else {
+                            let shift = (p.dispatches.min(20) as u32).saturating_sub(1);
+                            let backoff = self.spec.retry_backoff_us.saturating_mul(1u64 << shift);
+                            p.ready_at = now + backoff;
+                            p.exclude = Some(ri);
+                            retries.push(p);
+                            retried += 1;
+                        }
+                    }
+                    events.push(Event {
+                        at_us: now,
+                        kind: EventKind::BatchFailed {
+                            batch: fl.batch,
+                            replica: ri,
+                            retried,
+                            exhausted,
+                        },
+                    });
+                }
+            }
+
+            // (4) Arrivals: bounded-queue admission control.
+            while next_arrival < n && workload[next_arrival].arrive_us <= now {
+                let id = next_arrival;
+                next_arrival += 1;
+                if queue.len() >= self.spec.queue_capacity {
+                    let error = ServeError::QueueFull {
+                        queued: queue.len(),
+                        capacity: self.spec.queue_capacity,
+                    };
+                    events.push(Event {
+                        at_us: now,
+                        kind: EventKind::Rejected { request: id, error: error.clone() },
+                    });
+                    resolve(
+                        &mut outcomes,
+                        &mut resolved,
+                        &mut makespan,
+                        id,
+                        Outcome::Failed { error, at_us: now },
+                        now,
+                    );
+                } else {
+                    queue.push_back(Pending {
+                        id,
+                        arrive_us: workload[id].arrive_us,
+                        queued_since: now,
+                        ready_at: now,
+                        dispatches: 0,
+                        exclude: None,
+                    });
+                }
+            }
+
+            // (5) Retries whose backoff elapsed re-enter the queue at
+            // their arrival-order position (retries bypass admission:
+            // they were already admitted once).
+            retries.sort_by_key(|p| (p.ready_at, p.id));
+            while let Some(pos) = retries.iter().position(|p| p.ready_at <= now) {
+                let mut p = retries.remove(pos);
+                p.queued_since = now;
+                let at = queue.iter().position(|q| q.id > p.id).unwrap_or(queue.len());
+                queue.insert(at, p);
+            }
+
+            // (6) Per-request deadlines: whether queued or waiting out a
+            // backoff, a request that aged past its end-to-end budget
+            // fails typed — never a silent drop.
+            for list_is_queue in [true, false] {
+                let mut i = 0;
+                loop {
+                    let (len, arrive) = if list_is_queue {
+                        (queue.len(), queue.get(i).map(|p| p.arrive_us))
+                    } else {
+                        (retries.len(), retries.get(i).map(|p| p.arrive_us))
+                    };
+                    if i >= len {
+                        break;
+                    }
+                    let arrive = arrive.unwrap();
+                    if now.saturating_sub(arrive) < self.spec.request_deadline_us {
+                        i += 1;
+                        continue;
+                    }
+                    let p = if list_is_queue {
+                        queue.remove(i).unwrap()
+                    } else {
+                        retries.remove(i)
+                    };
+                    let error = ServeError::DeadlineExceeded {
+                        waited_us: now - p.arrive_us,
+                        deadline_us: self.spec.request_deadline_us,
+                    };
+                    events.push(Event {
+                        at_us: now,
+                        kind: EventKind::Rejected { request: p.id, error: error.clone() },
+                    });
+                    resolve(
+                        &mut outcomes,
+                        &mut resolved,
+                        &mut makespan,
+                        p.id,
+                        Outcome::Failed { error, at_us: now },
+                        now,
+                    );
+                }
+            }
+
+            // (7) Background health pass.
+            if let Some(ts) = next_scan {
+                if ts <= now {
+                    self.run_scan(now, &mut events, &mut heals)?;
+                    let period = self.spec.health_period_us;
+                    let mut next = ts;
+                    while next <= now {
+                        next += period;
+                    }
+                    next_scan = Some(next);
+                }
+            }
+
+            // (8) Dispatch: micro-batches form while a trigger holds and
+            // a free in-rotation replica can take eligible requests.
+            loop {
+                if queue.is_empty() {
+                    break;
+                }
+                let trigger = queue.len() >= self.spec.max_batch
+                    || queue
+                        .iter()
+                        .any(|p| now >= p.queued_since + self.spec.batch_deadline_us);
+                if !trigger {
+                    break;
+                }
+                let in_rotation =
+                    self.replicas.iter().filter(|r| r.healing_until.is_none()).count();
+                let chosen = (0..self.replicas.len()).find(|&ri| {
+                    let r = &self.replicas[ri];
+                    r.healing_until.is_none()
+                        && r.inflight.is_none()
+                        && queue.iter().any(|p| p.exclude != Some(ri) || in_rotation <= 1)
+                });
+                let Some(ri) = chosen else { break };
+                let mut members: Vec<Pending> = Vec::new();
+                let mut qi = 0;
+                while qi < queue.len() && members.len() < self.spec.max_batch {
+                    if queue[qi].exclude != Some(ri) || in_rotation <= 1 {
+                        members.push(queue.remove(qi).unwrap());
+                    } else {
+                        qi += 1;
+                    }
+                }
+                debug_assert!(!members.is_empty());
+                for p in &mut members {
+                    p.dispatches += 1;
+                }
+                let b = members.len();
+                let mut data = Vec::with_capacity(b * sample_len);
+                for p in &members {
+                    data.extend_from_slice(&workload[p.id].sample);
+                }
+                let mut shape = vec![b];
+                shape.extend_from_slice(&self.in_shape);
+                let y = self.replicas[ri].model.infer_batched(&Tensor::from_vec(&shape, data), b);
+                let cols = y.data.len() / b;
+                let outputs: Vec<Vec<f64>> =
+                    (0..b).map(|i| y.data[i * cols..(i + 1) * cols].to_vec()).collect();
+                let service = (self.spec.service_base_us
+                    + self.spec.service_per_sample_us * b as u64)
+                    .max(1);
+                let done_at = now + service;
+                let bid = batches.len();
+                batches.push(BatchRecord {
+                    batch: bid,
+                    replica: ri,
+                    requests: members.iter().map(|p| p.id).collect(),
+                    dispatched_us: now,
+                    completed_us: done_at,
+                    ok: false,
+                });
+                events.push(Event {
+                    at_us: now,
+                    kind: EventKind::Dispatch { batch: bid, replica: ri, requests: b },
+                });
+                self.replicas[ri].inflight =
+                    Some(InFlight { batch: bid, reqs: members, outputs, done_at });
+            }
+
+            if resolved == n {
+                break;
+            }
+
+            // (9) Advance to the next event strictly after `now`.
+            let mut nt = u64::MAX;
+            let mut bump = |t: u64| {
+                if t > now && t < nt {
+                    nt = t;
+                }
+            };
+            if next_arrival < n {
+                bump(workload[next_arrival].arrive_us);
+            }
+            if next_fault < faults.len() {
+                bump(faults[next_fault].at_us);
+            }
+            for r in &self.replicas {
+                if let Some(fl) = &r.inflight {
+                    bump(fl.done_at);
+                }
+                if let Some(t) = r.healing_until {
+                    bump(t);
+                }
+            }
+            for p in &retries {
+                bump(p.ready_at);
+                bump(p.arrive_us + self.spec.request_deadline_us);
+            }
+            for p in &queue {
+                bump(p.queued_since + self.spec.batch_deadline_us);
+                bump(p.arrive_us + self.spec.request_deadline_us);
+            }
+            if let Some(ts) = next_scan {
+                bump(ts);
+            }
+            anyhow::ensure!(
+                nt != u64::MAX,
+                "serving runtime stalled at t={now}µs with {resolved}/{n} requests resolved"
+            );
+            clock.advance_to(nt);
+        }
+
+        let outcomes: Vec<Outcome> = outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| o.unwrap_or_else(|| panic!("request {i} lost")))
+            .collect();
+        Ok(ServeReport { outcomes, batches, heals, events, makespan_us: makespan })
+    }
+
+    /// One background health pass over every idle in-rotation replica:
+    /// optional drift aging, ABFT probes, and — for suspect or failing
+    /// replicas — a self-heal round out of rotation. Groups the last heal
+    /// already fenced off (zeroed) do not re-trigger the pull: a degraded
+    /// replica keeps serving instead of thrashing.
+    fn run_scan(
+        &mut self,
+        now: u64,
+        events: &mut Vec<Event>,
+        heals: &mut Vec<HealRecord>,
+    ) -> anyhow::Result<()> {
+        let targets: Vec<usize> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.healing_until.is_none() && r.inflight.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        for ri in targets {
+            if self.spec.drift_refresh {
+                let age_s = (now - self.replicas[ri].programmed_at_us) as f64 * 1e-6;
+                if age_s > 0.0 && age_s != self.replicas[ri].cond.t_read_s {
+                    self.replicas[ri].cond.t_read_s = age_s;
+                    let cond = self.replicas[ri].cond;
+                    self.replicas[ri].model = (self.factory)(ri, &cond)?;
+                    events.push(Event {
+                        at_us: now,
+                        kind: EventKind::DriftRefresh { replica: ri, t_read_s: age_s },
+                    });
+                }
+            }
+            let health = self.replicas[ri].model.health_probe(&self.repair)?;
+            let worst = health.slots.iter().map(|s| s.score).fold(0.0f64, f64::max);
+            let fenced: Vec<(usize, usize)> = self.replicas[ri]
+                .model
+                .degraded()
+                .map(|d| d.condemned.clone())
+                .unwrap_or_default();
+            let pulled = self.replicas[ri].suspect
+                || health
+                    .slots
+                    .iter()
+                    .any(|s| !s.healthy && !fenced.contains(&(s.layer, s.block)));
+            events.push(Event {
+                at_us: now,
+                kind: EventKind::HealthScan { replica: ri, worst_score: worst, pulled },
+            });
+            if !pulled {
+                continue;
+            }
+            if self.spec.drift_refresh && self.replicas[ri].cond.t_read_s != 0.0 {
+                // Healing reprograms the chip *now* — drift clock restart.
+                self.replicas[ri].cond.t_read_s = 0.0;
+                let cond = self.replicas[ri].cond;
+                self.replicas[ri].model = (self.factory)(ri, &cond)?;
+            }
+            events.push(Event { at_us: now, kind: EventKind::HealStart { replica: ri } });
+            let out = self.replicas[ri].model.self_heal(&self.repair)?;
+            let fenced_now = out.degraded.as_ref().map_or(0, |d| d.condemned.len());
+            let rec = HealRecord {
+                replica: ri,
+                started_us: now,
+                finished_us: now + self.spec.heal_us,
+                moves: out.plan.moves.len(),
+                fenced: fenced_now,
+                verify_retries: out.total_retries(),
+            };
+            self.replicas[ri].last_heal = (rec.moves, rec.fenced);
+            self.replicas[ri].heals += 1;
+            self.replicas[ri].suspect = false;
+            self.replicas[ri].programmed_at_us = now;
+            self.replicas[ri].healing_until = Some(now + self.spec.heal_us);
+            heals.push(rec);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipSpec;
+    use crate::device::drift::DriftSpec;
+    use crate::device::faults::{FaultSpec, NonIdealitySpec};
+    use crate::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+    use crate::nn::layers::LinearMem;
+    use crate::nn::{HwSpec, Sequential};
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg64;
+
+    fn hw(cfg: DpeConfig, seed: u64) -> HwSpec {
+        HwSpec::uniform(DotProductEngine::new(cfg, seed), SliceMethod::int(SliceSpec::int8()))
+    }
+
+    /// The tiniest servable model: one 8→4 linear block group. Weight rng
+    /// is fixed, so every replica carries the same template; the engine
+    /// seed decorrelates hardware noise across the pool.
+    fn tiny_replica(cfg: DpeConfig, engine_seed: u64) -> anyhow::Result<MappedModel> {
+        let mut rng = Pcg64::new(9, 0x5EED);
+        let m = Sequential::new(vec![Box::new(LinearMem::new(
+            8,
+            4,
+            Some(hw(cfg, engine_seed)),
+            &mut rng,
+        ))]);
+        let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+        m.compile(&chip)
+    }
+
+    fn tiny_factory<'a>() -> ReplicaFactory<'a> {
+        Box::new(|i, _cond| tiny_replica(DpeConfig::default(), 100 + i as u64))
+    }
+
+    fn requests(n: usize, gap_us: u64) -> Vec<Request> {
+        (0..n)
+            .map(|j| Request {
+                arrive_us: j as u64 * gap_us,
+                sample: (0..8).map(|k| ((j * 3 + k) % 7) as f64 / 3.0 - 1.0).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_pool_output_is_bit_identical_to_direct_inference() {
+        let spec = ServingSpec { replicas: 2, max_batch: 3, ..ServingSpec::default() };
+        let mut rt =
+            ServingRuntime::new(spec, RepairSpec::none(), vec![8], tiny_factory()).unwrap();
+        let work = requests(12, 100);
+        let report = rt.run(&work, &[]).unwrap();
+
+        assert_eq!(report.completed(), 12);
+        assert_eq!(report.total_retries(), 0);
+        // Replay every dispatched batch on a twin replica built by the
+        // same factory: rows must match bit for bit (the runtime's
+        // outputs come from the identical infer_batched call).
+        for b in &report.batches {
+            assert!(b.ok);
+            let twin = tiny_replica(DpeConfig::default(), 100 + b.replica as u64).unwrap();
+            let mut data = Vec::new();
+            for &id in &b.requests {
+                data.extend_from_slice(&work[id].sample);
+            }
+            let y = twin.infer_batched(
+                &Tensor::from_vec(&[b.requests.len(), 8], data),
+                b.requests.len(),
+            );
+            let cols = y.data.len() / b.requests.len();
+            for (row, &id) in b.requests.iter().enumerate() {
+                let Outcome::Done(c) = &report.outcomes[id] else {
+                    panic!("request {id} not Done")
+                };
+                assert_eq!(c.batch, b.batch);
+                let want = &y.data[row * cols..(row + 1) * cols];
+                assert_eq!(c.output.len(), cols);
+                for (a, w) in c.output.iter().zip(want) {
+                    assert_eq!(a.to_bits(), w.to_bits(), "request {id} output drifted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn admission_control_and_deadlines_fail_typed() {
+        let spec = ServingSpec {
+            replicas: 1,
+            queue_capacity: 2,
+            max_batch: 1,
+            request_deadline_us: 5_000,
+            service_base_us: 10_000,
+            ..ServingSpec::default()
+        };
+        let mut rt =
+            ServingRuntime::new(spec, RepairSpec::none(), vec![8], tiny_factory()).unwrap();
+        let work = requests(6, 0); // burst: all six arrive at t=0
+        let report = rt.run(&work, &[]).unwrap();
+
+        // One served (the head of the queue), one timed out waiting
+        // behind the long-running batch, four rejected at admission.
+        assert_eq!(report.completed(), 1);
+        assert_eq!(report.failure_breakdown(), (4, 1, 0));
+        assert!(matches!(&report.outcomes[0], Outcome::Done(c) if c.replica == 0));
+        assert!(matches!(
+            &report.outcomes[1],
+            Outcome::Failed { error: ServeError::DeadlineExceeded { .. }, .. }
+        ));
+        for o in &report.outcomes[2..] {
+            assert!(matches!(o, Outcome::Failed { error: ServeError::QueueFull { .. }, .. }));
+        }
+    }
+
+    #[test]
+    fn fault_mid_batch_retries_on_the_other_replica() {
+        let spec = ServingSpec { replicas: 2, max_batch: 4, ..ServingSpec::default() };
+        let mut rt =
+            ServingRuntime::new(spec, RepairSpec::none(), vec![8], tiny_factory()).unwrap();
+        let work = requests(4, 0);
+        let faults = [FaultEvent { at_us: 100, replica: 0 }];
+        let report = rt.run(&work, &faults).unwrap();
+
+        assert_eq!(report.completed(), 4);
+        for o in &report.outcomes {
+            let Outcome::Done(c) = o else { panic!("expected Done") };
+            assert_eq!(c.replica, 1, "retry must land on the surviving replica");
+            assert_eq!(c.attempts, 2);
+        }
+        assert_eq!(report.total_retries(), 4);
+        assert!(!report.batches[0].ok);
+        assert!(report.batches[1].ok);
+        assert!(report.events.iter().any(|e| matches!(
+            e.kind,
+            EventKind::BatchFailed { retried: 4, exhausted: 0, .. }
+        )));
+    }
+
+    #[test]
+    fn retries_are_bounded_and_exhaustion_is_typed() {
+        let spec = ServingSpec {
+            replicas: 1,
+            max_batch: 1,
+            max_retries: 1,
+            ..ServingSpec::default()
+        };
+        let mut rt =
+            ServingRuntime::new(spec, RepairSpec::none(), vec![8], tiny_factory()).unwrap();
+        let work = requests(1, 0);
+        // First dispatch at t=0 (service 250µs) dies at t=100; the single
+        // retry re-dispatches at t=600 and dies at t=700.
+        let faults =
+            [FaultEvent { at_us: 100, replica: 0 }, FaultEvent { at_us: 700, replica: 0 }];
+        let report = rt.run(&work, &faults).unwrap();
+
+        assert_eq!(report.completed(), 0);
+        assert_eq!(report.failure_breakdown(), (0, 0, 1));
+        assert!(matches!(
+            &report.outcomes[0],
+            Outcome::Failed { error: ServeError::RetriesExhausted { attempts: 2 }, .. }
+        ));
+    }
+
+    /// A 128→64 linear replica on a spare-carrying chip; faulty replicas
+    /// get stuck cells at 2%, more than enough to trip the probes.
+    fn healable_replica(cond: &ReplicaSpec, engine_seed: u64) -> anyhow::Result<MappedModel> {
+        let cfg = if cond.faulty {
+            DpeConfig {
+                nonideal: NonIdealitySpec {
+                    faults: FaultSpec::cells(0.02),
+                    ..NonIdealitySpec::none()
+                },
+                ..DpeConfig::default()
+            }
+        } else {
+            DpeConfig::default()
+        };
+        let mut rng = Pcg64::new(9, 0xF00D);
+        let m = Sequential::new(vec![Box::new(LinearMem::new(
+            128,
+            64,
+            Some(hw(cfg, engine_seed)),
+            &mut rng,
+        ))]);
+        // 2 block groups × 4 slices = 8 data planes, one spare group.
+        let chip = ChipSpec::new(1, 12, (64, 64)).with_spares(4);
+        m.compile(&chip)
+    }
+
+    fn wide_requests(n: usize, gap_us: u64) -> Vec<Request> {
+        (0..n)
+            .map(|j| Request {
+                arrive_us: j as u64 * gap_us,
+                sample: (0..128).map(|k| ((j * 7 + k) % 23) as f64 / 11.0 - 1.0).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn health_scan_pulls_heals_and_returns_a_faulty_replica() {
+        let spec = ServingSpec {
+            replicas: 2,
+            max_batch: 2,
+            health_period_us: 2_000,
+            heal_us: 1_000,
+            ..ServingSpec::default()
+        };
+        let factory: ReplicaFactory<'_> =
+            Box::new(|i, cond| healable_replica(cond, 55 + i as u64));
+        let mut rt = ServingRuntime::new(spec, RepairSpec::enabled(), vec![128], factory).unwrap();
+        let work = wide_requests(10, 400);
+        let faults = [FaultEvent { at_us: 500, replica: 0 }];
+        let report = rt.run(&work, &faults).unwrap();
+
+        // Nothing lost: every request resolves (faulty-replica answers
+        // may be wrong, but they are delivered).
+        assert_eq!(report.outcomes.len(), 10);
+        assert_eq!(report.completed() + report.failed(), 10);
+        // The scan pulled replica 0 and healed it exactly while the pool
+        // kept serving on replica 1.
+        assert!(!report.heals.is_empty());
+        assert_eq!(report.heals[0].replica, 0);
+        assert!(rt.heal_count(0) >= 1);
+        assert_eq!(rt.heal_count(1), 0);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::HealthScan { pulled: true, .. })));
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::HealStart { replica: 0 })));
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::HealDone { replica: 0, .. })));
+        // The healed replica re-entered rotation and served again.
+        let heal_end = report.heals[0].finished_us;
+        assert!(report
+            .batches
+            .iter()
+            .any(|b| b.replica == 0 && b.ok && b.dispatched_us >= heal_end));
+    }
+
+    #[test]
+    fn drift_refresh_ages_pulls_and_resets_the_drift_clock() {
+        // Aggressive retention loss: ν = 0.5 against t0 = 1 ms collapses
+        // the conductances within a simulated half-second, so the first
+        // scan's probes blow through the bound and healing reprograms.
+        let drifty = |t_read_s: f64, seed: u64| -> anyhow::Result<MappedModel> {
+            let cfg = DpeConfig {
+                nonideal: NonIdealitySpec {
+                    drift: DriftSpec { nu: 0.5, nu_std: 0.0, t0: 1e-3 },
+                    t_read: t_read_s,
+                    ..NonIdealitySpec::none()
+                },
+                ..DpeConfig::default()
+            };
+            let mut rng = Pcg64::new(9, 0xF00D);
+            let m = Sequential::new(vec![Box::new(LinearMem::new(
+                128,
+                64,
+                Some(hw(cfg, seed)),
+                &mut rng,
+            ))]);
+            let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+            m.compile(&chip)
+        };
+        let spec = ServingSpec {
+            replicas: 1,
+            max_batch: 1,
+            request_deadline_us: 10_000_000,
+            health_period_us: 500_000,
+            heal_us: 10_000,
+            drift_refresh: true,
+            ..ServingSpec::default()
+        };
+        let factory: ReplicaFactory<'_> = Box::new(move |_i, cond| drifty(cond.t_read_s, 31));
+        let mut rt = ServingRuntime::new(spec, RepairSpec::enabled(), vec![128], factory).unwrap();
+        let work = wide_requests(6, 400_000);
+        let report = rt.run(&work, &[]).unwrap();
+
+        assert_eq!(report.completed(), 6);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::DriftRefresh { t_read_s, .. } if t_read_s > 0.0)));
+        assert!(rt.heal_count(0) >= 1, "drifted replica must be pulled and healed");
+        // Healing reprogrammed the chip: the drift clock restarted.
+        assert_eq!(rt.replica_condition(0).t_read_s, 0.0);
+    }
+
+    #[test]
+    fn prop_serving_conserves_requests_fifo_batches_bounded_retries() {
+        prop_check("serving_invariants", 40, |g| {
+            let spec = ServingSpec {
+                replicas: g.usize_in(1..=3),
+                queue_capacity: g.usize_in(1..=6),
+                max_batch: g.usize_in(1..=4),
+                batch_deadline_us: 500,
+                request_deadline_us: g.usize_in(2_000..=50_000) as u64,
+                max_retries: g.usize_in(0..=2),
+                retry_backoff_us: 300,
+                health_period_us: 0,
+                heal_us: 1_000,
+                service_base_us: 100,
+                service_per_sample_us: 20,
+                drift_refresh: false,
+            };
+            let n = g.usize_in(1..=12);
+            let mut work = Vec::with_capacity(n);
+            let mut t = 0u64;
+            for j in 0..n {
+                t += g.usize_in(0..=400) as u64;
+                work.push(Request {
+                    arrive_us: t,
+                    sample: (0..8).map(|k| ((j * 3 + k) % 7) as f64 / 3.0 - 1.0).collect(),
+                });
+            }
+            let mut faults = Vec::new();
+            for _ in 0..g.usize_in(0..=2) {
+                faults.push(FaultEvent {
+                    at_us: g.usize_in(0..=3_000) as u64,
+                    replica: g.usize_in(0..=spec.replicas - 1),
+                });
+            }
+            faults.sort_by_key(|f| f.at_us);
+
+            let run_once = |spec: &ServingSpec| -> Result<ServeReport, String> {
+                let mut rt = ServingRuntime::new(
+                    spec.clone(),
+                    RepairSpec::none(),
+                    vec![8],
+                    tiny_factory(),
+                )
+                .map_err(|e| e.to_string())?;
+                rt.run(&work, &faults).map_err(|e| e.to_string())
+            };
+            let report = run_once(&spec)?;
+
+            // Exactly one outcome per request (loss/double-answer panics
+            // inside run), retries bounded, batches FIFO-ordered.
+            if report.outcomes.len() != n {
+                return Err(format!("{} outcomes for {n} requests", report.outcomes.len()));
+            }
+            for (id, o) in report.outcomes.iter().enumerate() {
+                if let Outcome::Done(c) = o {
+                    if c.attempts > spec.max_retries + 1 {
+                        return Err(format!(
+                            "request {id} took {} attempts (max_retries {})",
+                            c.attempts, spec.max_retries
+                        ));
+                    }
+                    if !report.batches[c.batch].requests.contains(&id) {
+                        return Err(format!("request {id} missing from its batch record"));
+                    }
+                }
+            }
+            for b in &report.batches {
+                if b.requests.len() > spec.max_batch {
+                    return Err(format!("batch {} overflows max_batch", b.batch));
+                }
+                if b.requests.windows(2).any(|w| w[0] >= w[1]) {
+                    return Err(format!("batch {} not FIFO-ordered: {:?}", b.batch, b.requests));
+                }
+            }
+            // Same inputs, same report — the runtime is deterministic.
+            let twin = run_once(&spec)?;
+            if twin != report {
+                return Err("two identical runs diverged".into());
+            }
+            Ok(())
+        });
+    }
+}

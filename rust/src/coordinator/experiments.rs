@@ -5,7 +5,9 @@
 
 use super::SimConfig;
 use crate::apps::{cwt, kmeans, solver};
-use crate::arch::{ChipSpec, MappedModel, Placement};
+use crate::arch::{
+    ChipSpec, FaultEvent, MappedModel, Outcome, ReplicaSpec, Request, ServingRuntime,
+};
 use crate::circuit::CrossbarCircuit;
 use crate::data::{cifar_like, iris, mnist_like, nino};
 use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
@@ -13,7 +15,7 @@ use crate::device::{conductance_clouds, DeviceSpec};
 use crate::dpe::engine::AdcPolicy;
 use crate::dpe::montecarlo::{run_fault_point, sweep, sweep_faults, McConfig};
 use crate::dpe::{DataMode, DotProductEngine, RepairSpec, SliceMethod, SliceSpec};
-use crate::nn::models::{lenet5, resnet18_cifar, vgg16_cifar};
+use crate::nn::models::{lenet5, mlp, resnet18_cifar, vgg16_cifar};
 use crate::nn::train::{evaluate, evaluate_mapped, train, TrainConfig};
 use crate::nn::{HwSpec, Sequential};
 use crate::tensor::{Matrix, Tensor};
@@ -44,6 +46,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig12_montecarlo", "Monte-Carlo: RE vs bits, block size, variation; quant vs prealign"),
     ("fig_faults", "Fault injection: accuracy/yield vs stuck-at rate x cv x bits; lines, retention, ADC error"),
     ("fig_repair", "Self-healing chip: program-and-verify, probe localization, remap-to-spare yield recovery"),
+    ("fig_serving", "Fault-tolerant serving: replicated pool, deadlines/retries, drift-triggered online healing"),
     ("fig13_solver", "Linear equation solving: software vs hardware CG"),
     ("fig14_cwt", "Morlet CWT of the ENSO-like series with INT4 kernels"),
     ("fig15_kmeans", "K-means on IRIS with the dot-product distance trick"),
@@ -61,6 +64,7 @@ pub fn run(id: &str, cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>
         "fig12_montecarlo" => fig12_montecarlo(cfg, scale),
         "fig_faults" => fig_faults(cfg, scale),
         "fig_repair" => fig_repair(cfg, scale)?,
+        "fig_serving" => fig_serving(cfg, scale)?,
         "fig13_solver" => fig13_solver(cfg, scale),
         "fig14_cwt" => fig14_cwt(cfg, scale),
         "fig15_kmeans" => fig15_kmeans(cfg, scale),
@@ -604,6 +608,239 @@ pub fn fig_repair(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+// ----------------------------------------------------------- fig_serving
+
+/// One scenario of the fault-tolerant serving sweep ([`serving_sweep`]):
+/// latency/throughput/accuracy under open-loop load, plus the failover
+/// and healing accounting the bench serializes.
+#[derive(Debug, Clone, Default)]
+pub struct ServingPoint {
+    pub label: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub queue_full: usize,
+    pub deadline_exceeded: usize,
+    pub retries_exhausted: usize,
+    /// Retry dispatches beyond each request's first attempt.
+    pub retries: usize,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub images_per_sec: f64,
+    /// Top-1 accuracy over ALL requests (failures count as wrong).
+    pub accuracy: f64,
+    pub heals: usize,
+    /// Condemned groups remapped onto spares, summed over heal rounds.
+    pub moves: usize,
+    /// Groups fenced off (zeroed), summed over heal rounds.
+    pub fenced: usize,
+    /// Fault-free scenarios only: every dispatched batch replayed on a
+    /// twin replica built by the same factory matched bit for bit.
+    pub clean_bit_exact: Option<bool>,
+}
+
+/// Shared driver for the `fig_serving` experiment and
+/// `benches/fig_serving`: a trained MLP served by a replicated
+/// [`ServingRuntime`] pool under three scenarios — clean, mid-run stuck-at
+/// faults with healing disabled, and the same faults with the background
+/// health/heal pass on. Every replica programs the same trained template;
+/// per-replica engine seeds decorrelate the hardware noise. The chip
+/// reserves six spare groups for remap-to-spare healing, and the `[serving]`
+/// knobs come from the config (healing scenarios force a scan period when
+/// the config leaves scans off).
+pub fn serving_sweep(
+    cfg: &SimConfig,
+    scale: Scale,
+    fault_rate: f64,
+) -> anyhow::Result<Vec<ServingPoint>> {
+    let (input, hidden, classes) = (784usize, 16usize, 10usize);
+    let imgs = scale.pick(320, 768);
+    let data = mnist_like::load(imgs, cfg.seed);
+    let (train_set, test_set) = data.split(imgs * 4 / 5);
+    let mut digital = mlp(input, hidden, classes, None, cfg.seed);
+    let tcfg = TrainConfig {
+        steps: scale.pick(60, 150),
+        batch_size: 32,
+        lr: 0.1,
+        seed: cfg.seed,
+        ..TrainConfig::default()
+    };
+    train(&mut digital, &train_set, &tcfg);
+
+    let repair = if cfg.repair.verify { cfg.repair.clone() } else { RepairSpec::enabled() };
+    // 13 + 1 int8 block groups × 4 digit planes on 64×64 arrays, plus six
+    // spare groups for the healer to remap onto.
+    let spares = 24usize;
+    let make = |r: usize, cond: &ReplicaSpec| -> anyhow::Result<MappedModel> {
+        let mut dpe = cfg.dpe.clone();
+        dpe.array = (64, 64);
+        if cond.faulty {
+            dpe.nonideal.faults = FaultSpec::cells(fault_rate);
+        }
+        dpe.nonideal.t_read = cond.t_read_s;
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(dpe, cfg.seed.wrapping_add(1000 + r as u64)),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut m = mlp(input, hidden, classes, Some(hw), cfg.seed);
+        m.load_state_from(&digital);
+        m.update_weight();
+        let chip = ChipSpec::new(1, m.mapped_planes() + spares, (64, 64)).with_spares(spares);
+        m.compile(&chip)
+    };
+
+    // Open-loop workload from the held-out split; failed requests score
+    // zero in the accuracy column.
+    let n_req = scale.pick(48, 160);
+    let gap = 150u64;
+    let horizon = gap * n_req as u64;
+    let workload: Vec<Request> = (0..n_req)
+        .map(|i| Request {
+            arrive_us: i as u64 * gap,
+            sample: test_set.sample(i % test_set.len()).to_vec(),
+        })
+        .collect();
+    let labels: Vec<usize> = (0..n_req).map(|i| test_set.labels[i % test_set.len()]).collect();
+    let argmax = |row: &[f64]| -> usize {
+        row.iter()
+            .enumerate()
+            .fold(
+                (0usize, f64::NEG_INFINITY),
+                |best, (i, &v)| if v > best.1 { (i, v) } else { best },
+            )
+            .0
+    };
+
+    let scenarios: [(&str, bool, bool); 3] = [
+        ("clean", false, true),
+        ("faults, healing off", true, false),
+        ("faults, healing on", true, true),
+    ];
+    let mut points = Vec::new();
+    for (label, inject, healing) in scenarios {
+        let mut spec = cfg.serving.clone();
+        spec.health_period_us = if healing {
+            if spec.health_period_us > 0 {
+                spec.health_period_us
+            } else {
+                2_000
+            }
+        } else {
+            0
+        };
+        let faults: Vec<FaultEvent> = if inject {
+            vec![
+                FaultEvent { at_us: horizon * 3 / 10, replica: 0 },
+                FaultEvent { at_us: horizon * 6 / 10, replica: spec.replicas - 1 },
+            ]
+        } else {
+            Vec::new()
+        };
+        let mut rt = ServingRuntime::new(
+            spec.clone(),
+            repair.clone(),
+            vec![input],
+            Box::new(|r, c| make(r, c)),
+        )?;
+        let report = rt.run(&workload, &faults)?;
+
+        let mut correct = 0usize;
+        for (i, o) in report.outcomes.iter().enumerate() {
+            if let Outcome::Done(c) = o {
+                if argmax(&c.output) == labels[i] {
+                    correct += 1;
+                }
+            }
+        }
+        let (queue_full, deadline_exceeded, retries_exhausted) = report.failure_breakdown();
+        let clean_bit_exact = if inject {
+            None
+        } else {
+            // Replay every dispatched batch on a twin replica: the pool's
+            // outputs must be bit-identical to direct `infer_batched`.
+            let mut exact = true;
+            for b in &report.batches {
+                let twin = make(b.replica, &ReplicaSpec::default())?;
+                let mut data = Vec::with_capacity(b.requests.len() * input);
+                for &id in &b.requests {
+                    data.extend_from_slice(&workload[id].sample);
+                }
+                let y = twin.infer_batched(
+                    &Tensor::from_vec(&[b.requests.len(), input], data),
+                    b.requests.len(),
+                );
+                let cols = y.data.len() / b.requests.len();
+                for (row, &id) in b.requests.iter().enumerate() {
+                    let Outcome::Done(c) = &report.outcomes[id] else {
+                        exact = false;
+                        break;
+                    };
+                    let want = &y.data[row * cols..(row + 1) * cols];
+                    if c.output.iter().zip(want).any(|(a, w)| a.to_bits() != w.to_bits()) {
+                        exact = false;
+                    }
+                }
+            }
+            Some(exact)
+        };
+        points.push(ServingPoint {
+            label: label.to_string(),
+            requests: n_req,
+            completed: report.completed(),
+            failed: report.failed(),
+            queue_full,
+            deadline_exceeded,
+            retries_exhausted,
+            retries: report.total_retries(),
+            p50_us: report.percentile_latency_us(0.50).unwrap_or(0),
+            p99_us: report.percentile_latency_us(0.99).unwrap_or(0),
+            images_per_sec: report.images_per_sec(),
+            accuracy: correct as f64 / n_req as f64,
+            heals: report.heals.len(),
+            moves: report.heals.iter().map(|h| h.moves).sum(),
+            fenced: report.heals.iter().map(|h| h.fenced).sum(),
+            clean_bit_exact,
+        });
+    }
+    Ok(points)
+}
+
+/// The serving-runtime figure: p50/p99 latency, throughput, and accuracy
+/// of a replicated pool under open-loop load — clean, faulted with
+/// healing off, and faulted with the health/heal pass on.
+pub fn fig_serving(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> {
+    let fault_rate = 1e-4;
+    let pts = serving_sweep(cfg, scale, fault_rate)?;
+    let mut t = Table::new(
+        &format!("fig_serving — replicated serving pool (stuck-at {fault_rate} mid-run)"),
+        &[
+            "scenario", "completed", "failed", "retries", "p50 (µs)", "p99 (µs)", "img/s",
+            "accuracy", "heals", "moves", "fenced", "bit-exact",
+        ],
+    );
+    for p in &pts {
+        t.row(&[
+            p.label.clone(),
+            format!("{}/{}", p.completed, p.requests),
+            p.failed.to_string(),
+            p.retries.to_string(),
+            p.p50_us.to_string(),
+            p.p99_us.to_string(),
+            format!("{:.0}", p.images_per_sec),
+            format!("{:.3}", p.accuracy),
+            p.heals.to_string(),
+            p.moves.to_string(),
+            p.fenced.to_string(),
+            match p.clean_bit_exact {
+                Some(true) => "yes".into(),
+                Some(false) => "NO".into(),
+                None => "-".into(),
+            },
+        ]);
+    }
+    Ok(vec![t])
+}
+
 // --------------------------------------------------------------- Fig 13
 
 pub fn fig13_solver(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
@@ -851,7 +1088,8 @@ fn map_onto_chip(cfg: &SimConfig, model: Sequential) -> anyhow::Result<MappedMod
 
 /// Placement/utilization tables for one mapped model (the coordinator's
 /// chip report): per-tile occupancy and the per-layer placement map.
-fn placement_tables(tag: &str, p: &Placement) -> (Table, Table) {
+fn placement_tables(tag: &str, m: &MappedModel) -> (Table, Table) {
+    let p = m.placement();
     let mut tiles = Table::new(
         &format!("Fig 17 — per-tile utilization ({tag})"),
         &["tile", "arrays used", "capacity", "utilization"],
@@ -867,9 +1105,10 @@ fn placement_tables(tag: &str, p: &Placement) -> (Table, Table) {
     }
     let mut layers = Table::new(
         &format!("Fig 17 — per-layer placement ({tag})"),
-        &["layer", "kind", "blocks", "slices/block", "arrays", "tiles"],
+        &["layer", "kind", "blocks", "slices/block", "arrays", "tiles", "condemned"],
     );
-    for lp in &p.layers {
+    let condemned = m.condemned_per_layer();
+    for (li, lp) in p.layers.iter().enumerate() {
         layers.row(&[
             lp.layer.to_string(),
             lp.name.to_string(),
@@ -877,6 +1116,7 @@ fn placement_tables(tag: &str, p: &Placement) -> (Table, Table) {
             lp.slices.to_string(),
             lp.planes().to_string(),
             format!("{}..={}", lp.tile_first, lp.tile_last),
+            condemned.get(li).copied().unwrap_or(0).to_string(),
         ]);
     }
     (tiles, layers)
@@ -930,7 +1170,7 @@ pub fn fig17_inference(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Tabl
             let mapped = map_onto_chip(cfg, to_hardware(arch, width, cfg.seed, &digital, hw)?)?;
             if chip_tables.is_none() {
                 let tag = format!("{arch} int8, w={width}");
-                chip_tables = Some(placement_tables(&tag, mapped.placement()));
+                chip_tables = Some(placement_tables(&tag, &mapped));
             }
             row2.push(format!(
                 "{:.3}",
@@ -1041,10 +1281,11 @@ mod tests {
 
     #[test]
     fn registry_lists_all_paper_artifacts() {
-        assert_eq!(EXPERIMENTS.len(), 12);
+        assert_eq!(EXPERIMENTS.len(), 13);
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "table3_throughput"));
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_faults"));
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_repair"));
+        assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_serving"));
     }
 
     #[test]

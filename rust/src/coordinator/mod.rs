@@ -6,7 +6,7 @@ pub mod experiments;
 
 pub use experiments::{closest_experiment, run as run_experiment, Scale, EXPERIMENTS};
 
-use crate::arch::ChipSpec;
+use crate::arch::{ChipSpec, ServingSpec};
 use crate::device::drift::DriftSpec;
 use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec};
 use crate::device::DeviceSpec;
@@ -36,6 +36,12 @@ pub struct SimConfig {
     /// bare `[repair]` section enables verification with the
     /// [`RepairSpec::enabled`] defaults.
     pub repair: RepairSpec,
+    /// Fault-tolerant serving runtime knobs (`[serving]` section,
+    /// `crate::arch::serve`): pool size, queue bound, micro-batching,
+    /// deadlines/retries, and the background heal cadence. The defaults
+    /// apply whether or not the section is present; the `serve`
+    /// subcommand and `fig_serving` experiment consume them.
+    pub serving: ServingSpec,
 }
 
 impl Default for SimConfig {
@@ -48,6 +54,7 @@ impl Default for SimConfig {
             method: "int8".into(),
             chip: None,
             repair: RepairSpec::none(),
+            serving: ServingSpec::default(),
         }
     }
 }
@@ -179,6 +186,74 @@ impl SimConfig {
                 (1..=2).contains(&cfg.repair.probe_vectors),
                 "config key `repair.probe_vectors`: expected 1 or 2, got {}",
                 cfg.repair.probe_vectors
+            );
+        }
+        // [serving] — fault-tolerant serving runtime (crate::arch::serve).
+        // All times are simulated microseconds; the defaults match
+        // `ServingSpec::default()` whether or not the section appears.
+        reject_unknown_keys(
+            doc,
+            "serving",
+            &[
+                "replicas", "queue_capacity", "max_batch", "batch_deadline_us",
+                "request_deadline_us", "max_retries", "retry_backoff_us", "health_period_us",
+                "heal_us", "service_base_us", "service_per_sample_us", "drift_refresh",
+            ],
+        )?;
+        if doc.sections().any(|s| s == "serving") {
+            let def = ServingSpec::default();
+            cfg.serving = ServingSpec {
+                replicas: doc.usize_or("serving", "replicas", def.replicas),
+                queue_capacity: doc.usize_or("serving", "queue_capacity", def.queue_capacity),
+                max_batch: doc.usize_or("serving", "max_batch", def.max_batch),
+                batch_deadline_us: doc.usize_or(
+                    "serving",
+                    "batch_deadline_us",
+                    def.batch_deadline_us as usize,
+                ) as u64,
+                request_deadline_us: doc.usize_or(
+                    "serving",
+                    "request_deadline_us",
+                    def.request_deadline_us as usize,
+                ) as u64,
+                max_retries: doc.usize_or("serving", "max_retries", def.max_retries),
+                retry_backoff_us: doc.usize_or(
+                    "serving",
+                    "retry_backoff_us",
+                    def.retry_backoff_us as usize,
+                ) as u64,
+                health_period_us: doc.usize_or(
+                    "serving",
+                    "health_period_us",
+                    def.health_period_us as usize,
+                ) as u64,
+                heal_us: doc.usize_or("serving", "heal_us", def.heal_us as usize) as u64,
+                service_base_us: doc.usize_or(
+                    "serving",
+                    "service_base_us",
+                    def.service_base_us as usize,
+                ) as u64,
+                service_per_sample_us: doc.usize_or(
+                    "serving",
+                    "service_per_sample_us",
+                    def.service_per_sample_us as usize,
+                ) as u64,
+                drift_refresh: doc.bool_or("serving", "drift_refresh", def.drift_refresh),
+            };
+            anyhow::ensure!(
+                cfg.serving.replicas >= 1,
+                "config key `serving.replicas`: pool needs at least one replica, got {}",
+                cfg.serving.replicas
+            );
+            anyhow::ensure!(
+                cfg.serving.queue_capacity >= 1,
+                "config key `serving.queue_capacity`: must be >= 1, got {}",
+                cfg.serving.queue_capacity
+            );
+            anyhow::ensure!(
+                cfg.serving.max_batch >= 1,
+                "config key `serving.max_batch`: must be >= 1, got {}",
+                cfg.serving.max_batch
             );
         }
         cfg.seed = doc.usize_or("run", "seed", 2024) as u64;
@@ -323,11 +398,51 @@ mod tests {
     }
 
     #[test]
+    fn serving_section_parses_and_validates() {
+        // No section → defaults.
+        let cfg = SimConfig::from_doc(&Doc::parse("[engine]\n").unwrap()).unwrap();
+        assert_eq!(cfg.serving, ServingSpec::default());
+        let doc = Doc::parse(
+            "[serving]\nreplicas = 3\nqueue_capacity = 64\nmax_batch = 4\n\
+             batch_deadline_us = 1500\nrequest_deadline_us = 30000\nmax_retries = 1\n\
+             retry_backoff_us = 250\nhealth_period_us = 5000\nheal_us = 2000\n\
+             service_base_us = 120\nservice_per_sample_us = 30\ndrift_refresh = true\n",
+        )
+        .unwrap();
+        let s = SimConfig::from_doc(&doc).unwrap().serving;
+        assert_eq!(s.replicas, 3);
+        assert_eq!(s.queue_capacity, 64);
+        assert_eq!(s.max_batch, 4);
+        assert_eq!(s.batch_deadline_us, 1_500);
+        assert_eq!(s.request_deadline_us, 30_000);
+        assert_eq!(s.max_retries, 1);
+        assert_eq!(s.retry_backoff_us, 250);
+        assert_eq!(s.health_period_us, 5_000);
+        assert_eq!(s.heal_us, 2_000);
+        assert_eq!(s.service_base_us, 120);
+        assert_eq!(s.service_per_sample_us, 30);
+        assert!(s.drift_refresh);
+        // A bare section keeps the defaults too.
+        let cfg = SimConfig::from_doc(&Doc::parse("[serving]\n").unwrap()).unwrap();
+        assert_eq!(cfg.serving, ServingSpec::default());
+        // Degenerate values are errors naming the key.
+        for (toml, path) in [
+            ("[serving]\nreplicas = 0\n", "serving.replicas"),
+            ("[serving]\nqueue_capacity = 0\n", "serving.queue_capacity"),
+            ("[serving]\nmax_batch = 0\n", "serving.max_batch"),
+        ] {
+            let err = SimConfig::from_doc(&Doc::parse(toml).unwrap()).unwrap_err().to_string();
+            assert!(err.contains(path), "{toml}: {err}");
+        }
+    }
+
+    #[test]
     fn unknown_keys_in_validated_sections_are_errors_naming_the_path() {
         for (toml, path) in [
             ("[faults]\nsa2 = 0.1\n", "faults.sa2"),
             ("[chip]\nspare = 1\n", "chip.spare"),
             ("[repair]\ntollerance = 1.0\n", "repair.tollerance"),
+            ("[serving]\nreplica_count = 2\n", "serving.replica_count"),
         ] {
             let err = SimConfig::from_doc(&Doc::parse(toml).unwrap()).unwrap_err().to_string();
             assert!(err.contains(path), "{toml}: {err}");

@@ -314,6 +314,24 @@ impl PreparedWeights {
     pub fn int_panel_blocks(&self) -> usize {
         self.blocks.iter().filter(|b| b.packed_int.is_some()).count()
     }
+    /// Fence off one `(k-block, n-block)` group: zero its recombination
+    /// scale so every matmul path (stacked, integer, circuit, oracle)
+    /// skips the pair entirely and the group contributes **exactly
+    /// zero** — not the stale digits sitting on a faulty array. This is
+    /// the degraded-mode primitive behind
+    /// [`crate::arch::DegradedReport`]: when spares are exhausted, an
+    /// unrepairable group's bounded missing-contribution error replaces
+    /// the unbounded stuck-at readout error. Irreversible until the
+    /// block is reprogrammed.
+    pub fn condemn_block(&mut self, block: usize) {
+        assert!(
+            block < self.blocks.len(),
+            "condemn_block: block {} out of range ({} blocks)",
+            block,
+            self.blocks.len()
+        );
+        self.blocks[block].scale = 0.0;
+    }
 }
 
 /// The deterministic half of one weight block: the quantized digit planes

@@ -28,7 +28,10 @@ fn usage() -> ! {
          \x20 <id> [--quick|--full]        shortcut for `run <id>` (quick is the default)\n\
          \x20 info                         show environment + artifacts\n\
          \x20 matmul [--size N] [--method M] [--config FILE]\n\
-         \x20                              one-off DPE matmul accuracy check"
+         \x20                              one-off DPE matmul accuracy check\n\
+         \x20 serve [--quick|--full] [--config FILE]\n\
+         \x20                              fault-tolerant serving runtime demo\n\
+         \x20                              ([serving] section configures the pool)"
     );
     std::process::exit(2);
 }
@@ -144,6 +147,15 @@ fn main() -> anyhow::Result<()> {
                 "{size}x{size} {method_name}: relative error {re:.4e} ({} ms)",
                 t0.elapsed().as_millis()
             );
+        }
+        // Replicated serving runtime under open-loop load with fault
+        // injection and drift-triggered healing: `memintelli serve`
+        // ≡ `memintelli run fig_serving`, with the `[serving]` section
+        // (strictly validated at load) configuring the pool.
+        "serve" => {
+            let cfg = load_config(&args)?;
+            let scale = if args.flags.contains_key("full") { Scale::Full } else { Scale::Quick };
+            run_experiment("fig_serving", &cfg, scale)?;
         }
         // Shortcut: a bare experiment id runs it directly, so
         // `memintelli fig_faults --quick` ≡ `memintelli run fig_faults`

@@ -56,6 +56,10 @@ pub struct MemCore {
     /// expectations from it, and remap-to-spare reprograms moved blocks
     /// from it ([`crate::arch::repair`]).
     last_w: Option<Matrix>,
+    /// Block groups fenced off by [`MemCore::condemn_blocks`] (degraded
+    /// mode: contribute exactly zero). Cleared whenever the core is fully
+    /// reprogrammed — a rewrite re-materializes every group.
+    condemned: Vec<usize>,
 }
 
 impl MemCore {
@@ -70,6 +74,7 @@ impl MemCore {
             cache_inputs_enabled: false,
             input_cache: None,
             last_w: None,
+            condemned: Vec::new(),
         }
     }
 
@@ -148,6 +153,7 @@ impl MemCore {
             &streams,
         ));
         self.last_w = Some(w.clone());
+        self.condemned.clear();
     }
 
     /// Re-program the hardware copy through the program-and-verify loop
@@ -169,7 +175,35 @@ impl MemCore {
         let (prep, report) =
             template.program_verified_mapped(&hw.engine, self.generation, spec, &streams);
         self.prepared = Some(prep);
+        self.condemned.clear();
         Some(report)
+    }
+
+    /// Fence off block groups in degraded mode
+    /// ([`crate::dpe::PreparedWeights::condemn_block`]): each listed group's
+    /// recombination scale is zeroed so it contributes exactly zero to
+    /// every matmul — bounded missing-contribution error instead of
+    /// unbounded stuck-at readout garbage. Sticky until the core is
+    /// reprogrammed (or the block is remapped to a fresh slot). Returns
+    /// whether anything was condemned.
+    pub fn condemn_blocks(&mut self, blocks: &[usize]) -> bool {
+        let Some(prep) = self.prepared.as_mut() else { return false };
+        let mut any = false;
+        for &b in blocks {
+            prep.condemn_block(b);
+            if !self.condemned.contains(&b) {
+                self.condemned.push(b);
+            }
+            any = true;
+        }
+        self.condemned.sort_unstable();
+        any
+    }
+
+    /// Block groups currently fenced off (sorted). Surfaced by
+    /// [`crate::nn::Sequential::summary`] as a per-layer `condemned=` count.
+    pub fn condemned_blocks(&self) -> &[usize] {
+        &self.condemned
     }
 
     /// Health-probe every placed block group through the genuine fused
@@ -241,6 +275,9 @@ impl MemCore {
         };
         let pairs: Vec<(usize, u64)> = moves.iter().map(|m| (m.block, m.new_stream)).collect();
         hw.engine.reprogram_prepared_blocks(prep, w, &pairs, self.generation);
+        // A moved block is rewritten at its destination slot — it is no
+        // longer fenced off.
+        self.condemned.retain(|b| !pairs.iter().any(|(mb, _)| mb == b));
         for m in moves {
             streams[m.block] = m.new_stream;
             if let Some(lp) = self.placement.as_mut() {

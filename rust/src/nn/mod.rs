@@ -381,6 +381,15 @@ impl Sequential {
                 ) {
                     s.push_str(&format!(" tiles={first}..={last}"));
                 }
+                // Degraded mode: block groups fenced off by self_heal /
+                // condemn serve exactly zero — surface that here so a
+                // degraded chip is visible in every report, not only via
+                // MappedModel::degraded().
+                let condemned: usize =
+                    cores.iter().map(|c| c.condemned_blocks().len()).sum();
+                if condemned > 0 {
+                    s.push_str(&format!(" condemned={condemned}"));
+                }
             }
             s.push('\n');
             in_shape = out;

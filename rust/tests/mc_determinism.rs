@@ -8,10 +8,10 @@
 //! workers spawned inside `run_fault_point` / `infer_batched` are scoped,
 //! so they start after the write completes and join before the next one.
 
-use memintelli::arch::ChipSpec;
+use memintelli::arch::{ChipSpec, FaultEvent, ReplicaSpec, Request, ServingRuntime, ServingSpec};
 use memintelli::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
 use memintelli::dpe::montecarlo::{run_fault_point, FaultPoint, McConfig};
-use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::dpe::{DotProductEngine, DpeConfig, RepairSpec, SliceMethod, SliceSpec};
 use memintelli::nn::models::mlp;
 use memintelli::nn::HwSpec;
 use memintelli::tensor::Tensor;
@@ -36,6 +36,7 @@ fn montecarlo_stats_identical_across_thread_counts() {
     // must not depend on how par_map schedules cycles across workers.
     let mut points = Vec::new();
     let mut infer_outputs: Vec<Vec<f64>> = Vec::new();
+    let mut serve_reports = Vec::new();
     let x = Tensor::from_vec(&[6, 48], (0..288).map(|i| ((i % 13) as f64) / 6.5 - 1.0).collect());
     for workers in ["1", "2", "7"] {
         std::env::set_var("MEMINTELLI_THREADS", workers);
@@ -51,6 +52,30 @@ fn montecarlo_stats_identical_across_thread_counts() {
         let planes = model.mapped_planes();
         let mapped = model.compile(&ChipSpec::single_tile(planes, (64, 64))).unwrap();
         infer_outputs.push(mapped.infer_batched(&x, 2).data);
+        // The serving runtime's event loop dispatches micro-batches through
+        // the same par_map inference path; the whole ServeReport (outcomes,
+        // batch records, event log) must also be worker-count invariant,
+        // including the retry path exercised by a mid-run fault.
+        let factory = |ri: usize, _cond: &ReplicaSpec| {
+            let hw = HwSpec::uniform(
+                DotProductEngine::new(DpeConfig::default(), 300 + ri as u64),
+                SliceMethod::int(SliceSpec::int8()),
+            );
+            let m = mlp(48, 12, 4, Some(hw), 5);
+            let planes = m.mapped_planes();
+            m.compile(&ChipSpec::single_tile(planes, (64, 64)))
+        };
+        let spec = ServingSpec { replicas: 2, max_batch: 3, ..ServingSpec::default() };
+        let mut rt =
+            ServingRuntime::new(spec, RepairSpec::none(), vec![48], Box::new(factory)).unwrap();
+        let workload: Vec<Request> = (0..8)
+            .map(|i| Request {
+                arrive_us: i as u64 * 100,
+                sample: (0..48).map(|k| (((i * 5 + k) % 13) as f64) / 6.5 - 1.0).collect(),
+            })
+            .collect();
+        let faults = [FaultEvent { at_us: 250, replica: 0 }];
+        serve_reports.push(rt.run(&workload, &faults).unwrap());
     }
     match prev {
         Some(v) => std::env::set_var("MEMINTELLI_THREADS", v),
@@ -60,4 +85,6 @@ fn montecarlo_stats_identical_across_thread_counts() {
     assert_points_identical(&points[0], &points[2]);
     assert_eq!(infer_outputs[0], infer_outputs[1], "mapped inference differs at 2 workers");
     assert_eq!(infer_outputs[0], infer_outputs[2], "mapped inference differs at 7 workers");
+    assert_eq!(serve_reports[0], serve_reports[1], "serving report differs at 2 workers");
+    assert_eq!(serve_reports[0], serve_reports[2], "serving report differs at 7 workers");
 }
