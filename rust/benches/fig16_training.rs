@@ -1,11 +1,232 @@
-//! Bench: regenerates the paper's fig16_training artifact at full scale.
-//! Run: `cargo bench --bench fig16_training`  (all benches: `cargo bench`)
+//! Bench: fast hardware-aware training (perf PR tentpole) **and** the
+//! paper-style fig16_training artifact.
+//!
+//! Headline point: LeNet-5 under INT8 slicing on the default (noisy)
+//! engine, trained with the legacy loop (full array reprogram every step,
+//! naive backward) and the fast loop (template-delta reprogramming,
+//! packed-kernel backward, reused batch buffers) at the **same seeds**.
+//!
+//! Before any number is reported, four invariants are hard-asserted:
+//! 1. **accuracy parity** — same seeds, same data: the fast loop's test
+//!    accuracy must match the legacy loop's within a small tolerance
+//!    (noisy engines keep the programmed noise of unchanged cells, so the
+//!    curves are statistically — not bit — equal), and both must learn;
+//! 2. **bit-exact parity (noise-free)** — on an ideal engine the delta
+//!    path writes exactly the digits a full reprogram writes, so the two
+//!    loops' training curves must agree bit for bit;
+//! 3. **delta counters** — a delta step with unchanged weights must
+//!    classify every block clean and redraw zero cells, and a change
+//!    confined to one layer must redraw blocks in that layer only
+//!    (per-core program-call counters);
+//! 4. **speedup** — fast steps/sec must beat legacy (>1.0x in smoke,
+//!    >=2.0x at full scale on the headline point).
+//!
+//! Emits `BENCH_fig16.json`: steps/sec before/after, the per-step phase
+//! breakdown (batch/forward/backward/optim/reprogram), delta-programming
+//! counters, and the parity accuracies.
+//!
+//! Run: `cargo bench --bench fig16_training`
+//! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench fig16_training`
 
 use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+use memintelli::data::mnist_like;
+use memintelli::dpe::{DotProductEngine, DpeConfig, SliceMethod, SliceSpec};
+use memintelli::nn::models::lenet5;
+use memintelli::nn::train::{evaluate, train, train_fast, TrainConfig};
+use memintelli::nn::HwSpec;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+const SEED: u64 = 2016;
 
 fn main() {
-    let cfg = SimConfig::default();
-    let t0 = std::time::Instant::now();
-    run_experiment("fig16_training", &cfg, Scale::Full).expect("experiment failed");
+    let smoke = std::env::var("MEMINTELLI_BENCH_SMOKE").is_ok();
+    let t0 = Instant::now();
+
+    let (n_train, steps, eval_n) = if smoke { (192, 12, 64) } else { (1024, 80, 256) };
+    let data = mnist_like::load(n_train + 128, SEED);
+    let (train_set, test_set) = data.split(n_train);
+    let tcfg = TrainConfig {
+        steps,
+        batch_size: 16,
+        lr: 0.05,
+        log_every: 1,
+        seed: SEED,
+        ..Default::default()
+    };
+    let hw = || {
+        HwSpec::uniform(
+            DotProductEngine::new(DpeConfig::default(), SEED),
+            SliceMethod::int(SliceSpec::int8()),
+        )
+    };
+
+    // ------------------------------------------------ headline point
+    let mut legacy = lenet5(Some(hw()), SEED);
+    let t = Instant::now();
+    let legacy_logs = train(&mut legacy, &train_set, &tcfg);
+    let legacy_secs = t.elapsed().as_secs_f64();
+    let legacy_acc = evaluate(&mut legacy, &test_set, 32, eval_n);
+
+    let mut fast = lenet5(Some(hw()), SEED);
+    let t = Instant::now();
+    let rep = train_fast(&mut fast, &train_set, &tcfg);
+    let fast_secs = t.elapsed().as_secs_f64();
+    let fast_acc = evaluate(&mut fast, &test_set, 32, eval_n);
+
+    let legacy_sps = steps as f64 / legacy_secs;
+    let fast_sps = steps as f64 / fast_secs;
+    let speedup = legacy_secs / fast_secs;
+    println!(
+        "[fig16] LeNet-5 INT8: legacy {legacy_sps:.2} steps/s, fast {fast_sps:.2} steps/s \
+         ({speedup:.2}x), acc legacy {legacy_acc:.3} vs fast {fast_acc:.3}"
+    );
+    println!(
+        "[fig16] fast phase breakdown: batch {:.3}s forward {:.3}s backward {:.3}s \
+         optim {:.3}s reprogram {:.3}s",
+        rep.batch_s, rep.forward_s, rep.backward_s, rep.optim_s, rep.reprogram_s
+    );
+    println!(
+        "[fig16] delta: {} blocks seen, {} clean, {} scale-only, {} redrawn, \
+         {} cells redrawn, {} full reprograms",
+        rep.delta.blocks,
+        rep.delta.blocks_clean,
+        rep.delta.blocks_scale_only,
+        rep.delta.blocks_redrawn,
+        rep.delta.cells_redrawn,
+        rep.delta.full_reprograms
+    );
+
+    // Invariant 1: accuracy parity at the same seeds, and both loops learn.
+    let tol = if smoke { 0.20 } else { 0.10 };
+    assert!(
+        (legacy_acc - fast_acc).abs() <= tol,
+        "accuracy parity broke: legacy {legacy_acc:.3} vs fast {fast_acc:.3} (tol {tol})"
+    );
+    let (l_first, l_last) = (legacy_logs.first().unwrap().loss, legacy_logs.last().unwrap().loss);
+    let (f_first, f_last) = (rep.logs.first().unwrap().loss, rep.logs.last().unwrap().loss);
+    assert!(l_last.is_finite() && l_last < l_first, "legacy loop failed to learn");
+    assert!(f_last.is_finite() && f_last < f_first, "fast loop failed to learn");
+
+    // Invariant 3a: counters are consistent and the delta path engaged —
+    // full programs only on the template-seeding first step per core.
+    let cores = 5; // LeNet-5: 2 conv + 3 fc hardware cores
+    assert_eq!(rep.delta.full_reprograms, cores, "full reprograms beyond template seeding");
+    assert_eq!(
+        rep.delta.blocks_clean + rep.delta.dirty_blocks(),
+        rep.delta.blocks,
+        "every block must be classified exactly once per step"
+    );
+
+    // Invariant 3b: a delta step with unchanged weights redraws nothing...
+    let quiet = fast.update_weight_delta();
+    assert_eq!(quiet.full_reprograms, 0);
+    assert_eq!(quiet.blocks_clean, quiet.blocks, "unchanged weights must be all-clean");
+    assert_eq!(quiet.cells_redrawn, 0);
+    // ...and a change confined to the first layer dirties blocks there only.
+    let mut first_param = true;
+    fast.visit_params(&mut |p| {
+        if first_param {
+            p.value[0] += 0.5;
+            first_param = false;
+        }
+    });
+    let one = fast.update_weight_delta();
+    assert_eq!(one.full_reprograms, 0);
+    assert!(one.dirty_blocks() >= 1, "the changed layer must redraw");
+    assert!(
+        one.dirty_blocks() < quiet.blocks,
+        "a one-layer change must leave other layers' blocks clean \
+         ({}/{} dirty)",
+        one.dirty_blocks(),
+        one.blocks
+    );
+
+    // Invariant 2: noise-free arm — curves bit-identical between loops.
+    let ideal = || {
+        HwSpec::uniform(
+            DotProductEngine::ideal((64, 64)),
+            SliceMethod::int(SliceSpec::int8()),
+        )
+    };
+    let nf_cfg = TrainConfig {
+        steps: if smoke { 6 } else { 20 },
+        batch_size: 16,
+        lr: 0.05,
+        log_every: 1,
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut nf_legacy = lenet5(Some(ideal()), SEED);
+    let mut nf_fast = lenet5(Some(ideal()), SEED);
+    let nf_logs = train(&mut nf_legacy, &train_set, &nf_cfg);
+    let nf_rep = train_fast(&mut nf_fast, &train_set, &nf_cfg);
+    assert_eq!(nf_logs.len(), nf_rep.logs.len());
+    for (a, b) in nf_logs.iter().zip(&nf_rep.logs) {
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "noise-free curves diverged at step {} ({} vs {})",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    println!("[fig16] noise-free parity: {} steps bit-identical", nf_logs.len());
+
+    // Invariant 4: the fast loop must actually be faster.
+    let need = if smoke { 1.0 } else { 2.0 };
+    assert!(
+        speedup > need,
+        "fast loop speedup {speedup:.2}x below the {need:.1}x bar \
+         (legacy {legacy_secs:.3}s vs fast {fast_secs:.3}s)"
+    );
+
+    // ------------------------------------------------ machine-readable record
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"fig16_training\",\n");
+    json.push_str(
+        "  \"pipeline\": \"batch reuse -> DPE forward -> packed backward -> SGD -> template-delta reprogram\",\n",
+    );
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    json.push_str("  \"workload\": \"lenet5_int8_mnist_like\",\n");
+    let _ = writeln!(json, "  \"steps\": {steps},");
+    let _ = writeln!(json, "  \"batch_size\": {},", tcfg.batch_size);
+    let _ = writeln!(json, "  \"legacy_steps_per_sec\": {legacy_sps:.3},");
+    let _ = writeln!(json, "  \"fast_steps_per_sec\": {fast_sps:.3},");
+    let _ = writeln!(json, "  \"speedup\": {speedup:.3},");
+    let _ = writeln!(
+        json,
+        "  \"fast_phase_s\": {{\"batch\": {:.4}, \"forward\": {:.4}, \"backward\": {:.4}, \
+         \"optim\": {:.4}, \"reprogram\": {:.4}}},",
+        rep.batch_s, rep.forward_s, rep.backward_s, rep.optim_s, rep.reprogram_s
+    );
+    let _ = writeln!(
+        json,
+        "  \"delta\": {{\"blocks\": {}, \"clean\": {}, \"scale_only\": {}, \"redrawn\": {}, \
+         \"cells_redrawn\": {}, \"full_reprograms\": {}}},",
+        rep.delta.blocks,
+        rep.delta.blocks_clean,
+        rep.delta.blocks_scale_only,
+        rep.delta.blocks_redrawn,
+        rep.delta.cells_redrawn,
+        rep.delta.full_reprograms
+    );
+    let _ = writeln!(
+        json,
+        "  \"accuracy\": {{\"legacy\": {legacy_acc:.4}, \"fast\": {fast_acc:.4}, \"tolerance\": {tol}}},"
+    );
+    json.push_str("  \"noise_free_curves_bit_identical\": true,\n");
+    json.push_str("  \"single_layer_delta_isolated\": true,\n");
+    let _ = writeln!(json, "  \"total_s\": {:.3}", t0.elapsed().as_secs_f64());
+    json.push_str("}\n");
+    std::fs::write("BENCH_fig16.json", &json).expect("writing BENCH_fig16.json");
+    println!("\nwrote BENCH_fig16.json");
+
+    // Paper-style artifact: the fig16 tables (legacy + fast + CIFAR point).
+    let cfg = SimConfig { seed: SEED, ..SimConfig::default() };
+    let scale = if smoke { Scale::Quick } else { Scale::Full };
+    run_experiment("fig16_training", &cfg, scale).expect("experiment failed");
     println!("\n[fig16_training] total {:.1} s", t0.elapsed().as_secs_f64());
 }

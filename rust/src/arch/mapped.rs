@@ -279,9 +279,28 @@ impl MappedModel {
         self.model.summary(in_shape)
     }
 
+    /// Hardware-in-the-loop training on the compiled model (Fig 16 fast
+    /// path): runs [`crate::nn::train::train_fast`] over the inner
+    /// [`Sequential`]. The mapped per-slot streams stay in place — delta
+    /// reprogramming redraws dirty cells at each core's existing physical
+    /// slot streams — so training a mapped model is bit-reproducible under
+    /// any thread count and the placement remains valid afterwards.
+    pub fn train_fast(
+        &mut self,
+        data: &crate::data::Dataset,
+        cfg: &crate::nn::train::TrainConfig,
+    ) -> crate::nn::train::FastTrainReport {
+        crate::nn::train::train_fast(&mut self.model, data, cfg)
+    }
+
     /// Borrow the underlying (programmed) model.
     pub fn model(&self) -> &Sequential {
         &self.model
+    }
+
+    /// Mutably borrow the underlying model (custom training loops).
+    pub fn model_mut(&mut self) -> &mut Sequential {
+        &mut self.model
     }
 
     /// Unwrap back into the [`Sequential`] (arrays stay programmed with
@@ -355,6 +374,34 @@ mod tests {
         for mb in [1usize, 2, 3, 7, 64] {
             assert_eq!(mapped.infer_batched(&x, mb).data, full.data, "micro_batch={mb}");
         }
+    }
+
+    #[test]
+    fn mapped_training_keeps_slot_streams_and_stays_servable() {
+        // Train a compiled model in place: the fast loop must run on the
+        // mapped streams (delta path engaged, placement untouched) and the
+        // model must keep serving afterwards.
+        use crate::data::Dataset;
+        use crate::nn::train::TrainConfig;
+        let model = small_model(19);
+        let planes = model.mapped_planes();
+        let chip = ChipSpec::single_tile(planes, (64, 64));
+        let mut mapped = model.compile(&chip).unwrap();
+        let n = 24;
+        let data = Dataset {
+            sample_shape: vec![2, 6, 6],
+            features: (0..n * 72).map(|i| ((i * 7 % 23) as f64) / 11.5 - 1.0).collect(),
+            labels: (0..n).map(|i| i % 10).collect(),
+            num_classes: 10,
+        };
+        let cfg = TrainConfig { steps: 3, batch_size: 8, lr: 0.02, log_every: 1, ..Default::default() };
+        let rep = mapped.train_fast(&data, &cfg);
+        assert_eq!(rep.logs.len(), 3);
+        assert!(rep.delta.blocks > 0, "delta reprogramming ran on the mapped cores");
+        assert_eq!(mapped.placement().total_planes(), planes, "placement survives training");
+        let y = mapped.infer(&batch(2));
+        assert_eq!(y.shape, vec![2, 10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::dpe::engine::AdcPolicy;
 use crate::dpe::montecarlo::{run_fault_point, sweep, sweep_faults, McConfig};
 use crate::dpe::{DataMode, DotProductEngine, RepairSpec, SliceMethod, SliceSpec};
 use crate::nn::models::{lenet5, mlp, resnet18_cifar, vgg16_cifar};
-use crate::nn::train::{evaluate, evaluate_mapped, train, TrainConfig};
+use crate::nn::train::{evaluate, evaluate_mapped, train, train_fast, TrainConfig};
 use crate::nn::{HwSpec, Sequential};
 use crate::tensor::{Matrix, Tensor};
 use crate::util::report::{fmt_duration, fmt_sig, time_it, Table};
@@ -994,12 +994,25 @@ pub fn fig16_training(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
         ("INT8 (1,1,2,4)", Some(SliceMethod::int(SliceSpec::int8()))),
         ("FP16 (1,1,2,4,4)", Some(SliceMethod::fp(SliceSpec::fp16()))),
     ];
+    let mut fast = Table::new(
+        "Fig 16 fast loop — template-delta reprogramming + packed backward",
+        &[
+            "format",
+            "legacy steps/s",
+            "fast steps/s",
+            "speedup",
+            "reprogram share",
+            "dirty blocks",
+            "fast test acc",
+        ],
+    );
     for (name, method) in formats {
-        let hw = method.map(|m| {
-            HwSpec::uniform(DotProductEngine::new(cfg.dpe.clone(), cfg.seed), m)
-        });
-        let mut model = lenet5(hw, cfg.seed);
+        let hw = method
+            .map(|m| HwSpec::uniform(DotProductEngine::new(cfg.dpe.clone(), cfg.seed), m));
+        let mut model = lenet5(hw.clone(), cfg.seed);
+        let t0 = std::time::Instant::now();
         let logs = train(&mut model, &train_set, &tcfg);
+        let legacy_secs = t0.elapsed().as_secs_f64();
         let test_acc = evaluate(&mut model, &test_set, 32, scale.pick(128, 256));
         for l in &logs {
             curves.row(&[name.into(), l.step.to_string(), format!("{:.4}", l.loss), format!("{:.3}", l.train_acc)]);
@@ -1011,8 +1024,57 @@ pub fn fig16_training(cfg: &SimConfig, scale: Scale) -> Vec<Table> {
             format!("{:.3}", logs.last().unwrap().train_acc),
             format!("{:.3}", test_acc),
         ]);
+        // Same seeds through the fast loop: delta reprogramming, packed
+        // gradient GEMMs, reused batch buffers.
+        let mut model_fast = lenet5(hw, cfg.seed);
+        let t1 = std::time::Instant::now();
+        let rep = train_fast(&mut model_fast, &train_set, &tcfg);
+        let fast_secs = t1.elapsed().as_secs_f64();
+        let fast_acc = evaluate(&mut model_fast, &test_set, 32, scale.pick(128, 256));
+        fast.row(&[
+            name.into(),
+            format!("{:.2}", steps as f64 / legacy_secs),
+            format!("{:.2}", steps as f64 / fast_secs),
+            format!("{:.2}x", legacy_secs / fast_secs),
+            format!("{:.0}%", 100.0 * rep.reprogram_s / fast_secs.max(1e-12)),
+            format!("{}/{}", rep.delta.dirty_blocks(), rep.delta.blocks),
+            format!("{:.3}", fast_acc),
+        ]);
     }
-    vec![t, curves]
+    // CIFAR-scale point: ResNet-18 under INT8 through the fast loop only —
+    // per-step full-array reprogramming at this size is exactly the cost
+    // the delta path removes.
+    let cifar_steps = scale.pick(3, 20);
+    let n_cifar = scale.pick(64, 384);
+    let cdata = cifar_like::load(n_cifar + 32, cfg.seed + 1);
+    let (ctrain, ctest) = cdata.split(n_cifar);
+    let chw = HwSpec::uniform(
+        DotProductEngine::new(cfg.dpe.clone(), cfg.seed),
+        SliceMethod::int(SliceSpec::int8()),
+    );
+    let mut cmodel = resnet18_cifar(scale.pick(1, 2), Some(chw), cfg.seed);
+    let ccfg = TrainConfig {
+        steps: cifar_steps,
+        batch_size: 8,
+        lr: 0.02,
+        log_every: (cifar_steps / 4).max(1),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let t2 = std::time::Instant::now();
+    let crep = train_fast(&mut cmodel, &ctrain, &ccfg);
+    let cifar_secs = t2.elapsed().as_secs_f64();
+    let cacc = evaluate(&mut cmodel, &ctest, 8, scale.pick(16, 32));
+    fast.row(&[
+        "ResNet-18/CIFAR INT8 (fast only)".into(),
+        "-".into(),
+        format!("{:.2}", cifar_steps as f64 / cifar_secs),
+        "-".into(),
+        format!("{:.0}%", 100.0 * crep.reprogram_s / cifar_secs.max(1e-12)),
+        format!("{}/{}", crep.delta.dirty_blocks(), crep.delta.blocks),
+        format!("{cacc:.3}"),
+    ]);
+    vec![t, curves, fast]
 }
 
 // --------------------------------------------------------------- Fig 17

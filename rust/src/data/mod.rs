@@ -67,14 +67,26 @@ impl Dataset {
 
     /// Gather a batch of samples into a `(batch, d)` row-major buffer.
     pub fn batch(&self, idx: &[usize]) -> (Vec<f64>, Vec<usize>) {
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        self.batch_into(idx, &mut feats, &mut labels);
+        (feats, labels)
+    }
+
+    /// Gather a batch into caller-owned buffers (cleared first) — the
+    /// allocation-free variant of [`Dataset::batch`]: a training loop that
+    /// passes the same buffers every step assembles each batch with plain
+    /// row copies and no per-step allocation once capacity has grown.
+    pub fn batch_into(&self, idx: &[usize], feats: &mut Vec<f64>, labels: &mut Vec<usize>) {
         let d = self.sample_len();
-        let mut feats = Vec::with_capacity(idx.len() * d);
-        let mut labels = Vec::with_capacity(idx.len());
+        feats.clear();
+        feats.reserve(idx.len() * d);
+        labels.clear();
+        labels.reserve(idx.len());
         for &i in idx {
             feats.extend_from_slice(self.sample(i));
             labels.push(self.labels[i]);
         }
-        (feats, labels)
     }
 }
 
@@ -105,6 +117,21 @@ mod tests {
         assert_eq!(tr.len(), 2);
         assert_eq!(te.len(), 1);
         assert_eq!(te.sample(0), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn batch_into_matches_batch_and_reuses_buffers() {
+        let d = tiny();
+        let (f, l) = d.batch(&[1, 2, 0]);
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        d.batch_into(&[1, 2, 0], &mut feats, &mut labels);
+        assert_eq!(feats, f);
+        assert_eq!(labels, l);
+        // Refilling the same buffers replaces, never appends.
+        d.batch_into(&[0], &mut feats, &mut labels);
+        assert_eq!(feats, vec![0.0, 1.0]);
+        assert_eq!(labels, vec![0]);
     }
 
     #[test]

@@ -109,11 +109,32 @@
 //!
 //! **When to cache**: any loop that re-reads or re-programs the *same*
 //! matrix — Monte-Carlo re-programming, fault-yield sweeps, repeated
-//! evaluation of a fixed batch. **When not to cache**: weights that change
-//! every optimizer step gain nothing from a `WeightTemplate` (the template
-//! would be rebuilt per step — `prepare_weights` already is exactly
-//! template + program), and inputs that never repeat (fresh training
-//! batches) only pay the cache bookkeeping.
+//! evaluation of a fixed batch. Inputs that never repeat (fresh training
+//! batches) only pay the cache bookkeeping, so the input cache stays
+//! eval-only.
+//!
+//! **Training path** (hardware-in-the-loop, Fig 16): weights change every
+//! optimizer step, but an SGD step moves most digits by *zero or one
+//! quantization level* — so instead of a full `prepare_weights` per step,
+//! [`DotProductEngine::program_delta`] diffs the fresh quantization
+//! against the cached [`WeightTemplate`] per block and rewrites **only
+//! the cells whose digits changed**, drawing replacement programming
+//! noise from a fresh per-step generator keyed by the block's existing
+//! per-slot stream and the new programming `tag`. A block whose digits
+//! are unchanged is skipped outright (scale-only changes update the
+//! recombination scale without touching the panels); cells untouched by
+//! the step keep the analog noise of their previous programming — the
+//! physical behaviour of not pulsing a cell. What the delta update
+//! *skips*: re-blocking, re-quantization packing, noise redraws for
+//! clean cells, and the ADC-chain draw (the chain keys off the slot
+//! stream only, so it is generation-independent). A **full reprogram is
+//! still forced** when program-time fault/retention injection is active
+//! (fault masks are sampled plane-wise and cannot be replayed cell-wise),
+//! when no template is cached yet, or when the weight shape or slice
+//! method changed ([`crate::nn::MemCore`] handles the fallback). On
+//! noise-free engines the delta path is bit-identical to the full
+//! reprogram; `benches/fig16_training.rs` (`BENCH_fig16.json`) tracks
+//! the per-step reprogram / forward / backward / optim breakdown.
 //!
 //! Monte-Carlo hot loops additionally run the per-cycle program + matmul
 //! **serially inside each cycle** (the cycle-level `par_map` already
@@ -599,6 +620,59 @@ impl ProgramReport {
     }
 }
 
+/// Accounting of one [`DotProductEngine::program_delta`] pass (or, via
+/// [`crate::nn::MemCore::program_delta`], of a whole optimizer step):
+/// how many blocks were untouched, scale-adjusted, or cell-rewritten, and
+/// how many individual cells were actually re-pulsed. The training loop
+/// sums these per step, and the fig16 bench asserts from them that a step
+/// touching one layer redraws only that layer's dirty blocks (§Perf).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaReport {
+    /// Total `(k-block, n-block)` groups examined.
+    pub blocks: usize,
+    /// Blocks whose digits *and* scale were unchanged — zero work.
+    pub blocks_clean: usize,
+    /// Blocks whose digits were unchanged but whose recombination scale
+    /// moved (quantization range shifted without flipping any digit) —
+    /// scale updated, panels untouched, no RNG consumed.
+    pub blocks_scale_only: usize,
+    /// Blocks with at least one changed digit — dirty cells re-pulsed.
+    pub blocks_redrawn: usize,
+    /// Individual cells rewritten across all redrawn blocks.
+    pub cells_redrawn: usize,
+    /// Full `prepare_weights`-style reprograms forced instead of a delta
+    /// (no cached template, shape/method change, or program-time fault
+    /// injection active).
+    pub full_reprograms: usize,
+}
+
+impl DeltaReport {
+    /// The report of one forced full reprogram over `blocks` groups.
+    pub fn full(blocks: usize) -> DeltaReport {
+        DeltaReport {
+            blocks,
+            blocks_redrawn: blocks,
+            full_reprograms: 1,
+            ..DeltaReport::default()
+        }
+    }
+
+    /// Blocks that needed any update at all (scale-only + redrawn).
+    pub fn dirty_blocks(&self) -> usize {
+        self.blocks_scale_only + self.blocks_redrawn
+    }
+
+    /// Accumulate another report (per-layer → per-step totals).
+    pub fn merge(&mut self, other: &DeltaReport) {
+        self.blocks += other.blocks;
+        self.blocks_clean += other.blocks_clean;
+        self.blocks_scale_only += other.blocks_scale_only;
+        self.blocks_redrawn += other.blocks_redrawn;
+        self.cells_redrawn += other.cells_redrawn;
+        self.full_reprograms += other.full_reprograms;
+    }
+}
+
 /// One k-block of the input, quantized and sliced once and shared across
 /// all n-blocks of the weight.
 #[derive(Debug, Clone)]
@@ -1021,6 +1095,135 @@ impl DotProductEngine {
             let tb = template_block(b, &w.grid, &method, self.cfg.array, blk);
             w.blocks[blk] = self.program_block(&tb, stream, tag);
         }
+    }
+
+    /// Delta-reprogram an existing [`PreparedWeights`] in place after an
+    /// optimizer step (§Perf training path): re-derive each block's
+    /// quantized template from the updated matrix `b`, diff it against the
+    /// cached `template`, and rewrite **only the cells whose digits
+    /// changed** — drawing their replacement programming noise from a
+    /// fresh generator keyed by `tag` at the block's existing per-slot
+    /// stream (`block_streams[blk]`), so the draws stay attached to the
+    /// physical array and are deterministic under any thread count (each
+    /// block is diffed and drawn by exactly one worker, planes ascending,
+    /// row-major). Clean blocks cost one template diff; scale-only blocks
+    /// additionally update the recombination scale; cells untouched by the
+    /// step keep the analog noise of their previous programming — the
+    /// physics of not pulsing a cell. The cached `template` is updated to
+    /// the fresh digits so the next step diffs against this one.
+    ///
+    /// On noise-free engines the result is bit-identical to a full
+    /// `prepare_weights_mapped` at the same streams (digits are written
+    /// exactly and the ADC chain keys off the stream only). Program-time
+    /// fault/retention injection cannot be replayed cell-wise, so this
+    /// path refuses it — callers must fall back to a full reprogram
+    /// ([`crate::nn::MemCore::program_delta`] does).
+    pub fn program_delta(
+        &self,
+        template: &mut WeightTemplate,
+        b: &Matrix,
+        tag: u64,
+        block_streams: &[u64],
+        prev: &mut PreparedWeights,
+    ) -> DeltaReport {
+        assert_eq!(
+            (b.rows, b.cols),
+            (prev.k, prev.n),
+            "weight matrix is {}x{}, prepared weights are {}x{}",
+            b.rows,
+            b.cols,
+            prev.k,
+            prev.n
+        );
+        assert_eq!(
+            (template.k, template.n),
+            (prev.k, prev.n),
+            "template shape {:?} does not match prepared weights {:?}",
+            (template.k, template.n),
+            (prev.k, prev.n)
+        );
+        assert_eq!(
+            template.array, self.cfg.array,
+            "template was blocked for {:?} arrays, engine has {:?}",
+            template.array, self.cfg.array
+        );
+        assert_eq!(template.method, prev.method, "template/prepared slice methods differ");
+        assert_eq!(
+            block_streams.len(),
+            prev.blocks.len(),
+            "stream list covers {} blocks, weight grid has {}",
+            block_streams.len(),
+            prev.blocks.len()
+        );
+        assert!(
+            self.cfg.noise_free || !self.cfg.nonideal.injects_at_program(),
+            "program_delta cannot replay program-time fault injection — full reprogram required"
+        );
+        let (l_m, l_n) = self.cfg.array;
+        let dev = &self.cfg.device;
+        let step = dev.step();
+        let noise_free = self.cfg.noise_free;
+        // Classification per block: 0 = clean, 1 = scale-only, 2 = redraw
+        // (with the dirty-cell writes in packed-panel coordinates).
+        type BlockDelta = (u8, Option<TemplateBlock>, Vec<(usize, usize, f64)>);
+        let deltas: Vec<BlockDelta> = par_map(prev.blocks.len(), |blk| {
+            let fresh = template_block(b, &prev.grid, &prev.method, self.cfg.array, blk);
+            let old = &template.blocks[blk];
+            if fresh.planes == old.planes {
+                if fresh.scale == old.scale {
+                    return (0, None, Vec::new());
+                }
+                return (1, Some(fresh), Vec::new());
+            }
+            let mut rng =
+                Pcg64::new(self.seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)), block_streams[blk]);
+            let mut writes = Vec::new();
+            for (s, plane) in fresh.planes.iter().enumerate() {
+                let old_plane = &old.planes[s];
+                let c0 = s * l_n;
+                for r in 0..l_m {
+                    let new_row = plane.row(r);
+                    let old_row = old_plane.row(r);
+                    for c in 0..l_n {
+                        if new_row[c] != old_row[c] {
+                            let v = if noise_free {
+                                new_row[c]
+                            } else {
+                                let g = dev.sample_level(new_row[c] as u32, &mut rng);
+                                (g - dev.lgs) / step
+                            };
+                            writes.push((r, c0 + c, v));
+                        }
+                    }
+                }
+            }
+            (2, Some(fresh), writes)
+        });
+        let mut report = DeltaReport { blocks: prev.blocks.len(), ..DeltaReport::default() };
+        for (blk, (class, fresh, writes)) in deltas.into_iter().enumerate() {
+            match class {
+                0 => report.blocks_clean += 1,
+                1 => {
+                    let fresh = fresh.expect("scale-only delta carries the fresh template");
+                    prev.blocks[blk].scale = fresh.scale;
+                    template.blocks[blk] = fresh;
+                    report.blocks_scale_only += 1;
+                }
+                _ => {
+                    let fresh = fresh.expect("redraw delta carries the fresh template");
+                    report.blocks_redrawn += 1;
+                    report.cells_redrawn += writes.len();
+                    let pb = &mut prev.blocks[blk];
+                    pb.scale = fresh.scale;
+                    for (r, c, v) in writes {
+                        pb.packed.write(r, c, v);
+                    }
+                    pb.packed_int = PackedU8::from_packed(&pb.packed);
+                    template.blocks[blk] = fresh;
+                }
+            }
+        }
+        report
     }
 
     /// Program one digit plane through the device model: digit → target

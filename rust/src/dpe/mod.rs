@@ -21,7 +21,7 @@ pub mod quant;
 pub mod slicing;
 
 pub use engine::{
-    BlockProgramStats, DotProductEngine, DpeConfig, PreparedInputs, PreparedWeights,
-    ProgramReport, RepairSpec, SliceMethod, WeightTemplate,
+    BlockProgramStats, DeltaReport, DotProductEngine, DpeConfig, PreparedInputs,
+    PreparedWeights, ProgramReport, RepairSpec, SliceMethod, WeightTemplate,
 };
 pub use slicing::{quantize_slice_block, DataMode, SliceSpec, SliceTables, SlicedBlock};

@@ -22,7 +22,9 @@
 use super::HwSpec;
 use crate::arch::{BlockMove, LayerPlacement};
 use crate::dpe::blocks::MatmulBlocks;
-use crate::dpe::{PreparedInputs, PreparedWeights, ProgramReport, RepairSpec};
+use crate::dpe::{
+    DeltaReport, PreparedInputs, PreparedWeights, ProgramReport, RepairSpec, WeightTemplate,
+};
 use crate::tensor::Matrix;
 use crate::util::parallel::par_map;
 
@@ -60,6 +62,25 @@ pub struct MemCore {
     /// mode: contribute exactly zero). Cleared whenever the core is fully
     /// reprogrammed — a rewrite re-materializes every group.
     condemned: Vec<usize>,
+    /// Quantized digit baseline of the *currently programmed* weights —
+    /// what [`MemCore::program_delta`] diffs each optimizer step against
+    /// (`dpe::engine` §Perf training path). Invalidated whenever the
+    /// programmed bits are rewritten outside the delta path (a full
+    /// [`MemCore::reprogram`]); remaps and verified reprogramming keep it
+    /// valid because they re-derive the same digits from `last_w`.
+    template: Option<WeightTemplate>,
+    /// Cumulative programming accounting across this core's lifetime:
+    /// every full reprogram merges [`DeltaReport::full`], every delta pass
+    /// merges its own report. The fig16 bench asserts from these that a
+    /// step touching one layer redraws only that layer's dirty blocks.
+    program_stats: DeltaReport,
+    /// Memoized output of [`MemCore::matmul_from_cache`], keyed by the
+    /// programming generation it was computed at — an eval-with-caching
+    /// loop interleaved with training steps must re-run the matmul against
+    /// freshly programmed weights, never serve a stale output. Invalidated
+    /// whenever the prepared weights change (any reprogram/remap/condemn,
+    /// delta passes included) or the input cache is refilled.
+    output_memo: Option<(u64, Matrix)>,
 }
 
 impl MemCore {
@@ -75,6 +96,9 @@ impl MemCore {
             input_cache: None,
             last_w: None,
             condemned: Vec::new(),
+            template: None,
+            program_stats: DeltaReport::default(),
+            output_memo: None,
         }
     }
 
@@ -100,6 +124,7 @@ impl MemCore {
         self.cache_inputs_enabled = on;
         if !on {
             self.input_cache = None;
+            self.output_memo = None;
         }
     }
 
@@ -154,6 +179,75 @@ impl MemCore {
         ));
         self.last_w = Some(w.clone());
         self.condemned.clear();
+        // The delta baseline no longer matches the rewritten bits and the
+        // memoized cached-input output is stale.
+        self.template = None;
+        self.output_memo = None;
+        self.program_stats.merge(&DeltaReport::full(grid.pair_count()));
+    }
+
+    /// Delta-program the hardware copy from the updated full-precision
+    /// weights, advancing the programming generation — the training-loop
+    /// counterpart of [`MemCore::program`] (`dpe::engine` §Perf training
+    /// path): only blocks whose quantized digits changed since the last
+    /// programming are touched, and within them only the dirty cells are
+    /// re-pulsed, at the block's existing per-slot stream. Falls back to a
+    /// full reprogram (and reports it as such) when no digit baseline is
+    /// cached yet, the weight shape changed, or program-time
+    /// fault/retention injection is active (fault masks cannot be replayed
+    /// cell-wise). Condemned blocks stay fenced off across delta passes.
+    /// No-op (default report) for digital layers. On noise-free engines
+    /// the programmed bits are identical to [`MemCore::program`]'s.
+    pub fn program_delta(&mut self, w: &Matrix) -> DeltaReport {
+        if self.hw.is_none() {
+            return DeltaReport::default();
+        }
+        self.generation += 1;
+        self.output_memo = None;
+        let hw = self.hw.as_ref().expect("checked above");
+        let engine = &hw.engine;
+        let inject = !engine.cfg.noise_free && engine.cfg.nonideal.injects_at_program();
+        let delta_ok = !inject
+            && matches!(
+                (&self.template, &self.prepared),
+                (Some(t), Some(p)) if t.shape() == (w.rows, w.cols)
+                    && p.shape() == (w.rows, w.cols)
+                    && t.method() == &hw.weight_method
+            );
+        let grid = MatmulBlocks::new(w.rows, w.cols, engine.cfg.array);
+        let slices = hw.weight_method.spec.num_slices();
+        let streams = self.block_streams(grid.pair_count(), slices);
+        let report = if delta_ok {
+            let template = self.template.as_mut().expect("delta_ok implies template");
+            let prep = self.prepared.as_mut().expect("delta_ok implies prepared");
+            let report = engine.program_delta(template, w, self.generation, &streams, prep);
+            // A delta apply may resurrect a condemned block's recombination
+            // scale — re-fence them (sticky until a full rewrite).
+            for &b in &self.condemned {
+                prep.condemn_block(b);
+            }
+            report
+        } else {
+            self.template = Some(engine.weight_template(w, &hw.weight_method));
+            self.prepared = Some(engine.prepare_weights_mapped(
+                w,
+                &hw.weight_method,
+                self.generation,
+                &streams,
+            ));
+            self.condemned.clear();
+            DeltaReport::full(grid.pair_count())
+        };
+        self.last_w = Some(w.clone());
+        self.program_stats.merge(&report);
+        report
+    }
+
+    /// Cumulative programming accounting (full reprograms + delta passes)
+    /// across this core's lifetime — the program-call counters the fig16
+    /// bench and the delta regression tests assert against.
+    pub fn program_stats(&self) -> DeltaReport {
+        self.program_stats
     }
 
     /// Re-program the hardware copy through the program-and-verify loop
@@ -176,6 +270,7 @@ impl MemCore {
             template.program_verified_mapped(&hw.engine, self.generation, spec, &streams);
         self.prepared = Some(prep);
         self.condemned.clear();
+        self.output_memo = None;
         Some(report)
     }
 
@@ -197,6 +292,9 @@ impl MemCore {
             any = true;
         }
         self.condemned.sort_unstable();
+        if any {
+            self.output_memo = None;
+        }
         any
     }
 
@@ -275,6 +373,7 @@ impl MemCore {
         };
         let pairs: Vec<(usize, u64)> = moves.iter().map(|m| (m.block, m.new_stream)).collect();
         hw.engine.reprogram_prepared_blocks(prep, w, &pairs, self.generation);
+        self.output_memo = None;
         // A moved block is rewritten at its destination slot — it is no
         // longer fenced off.
         self.condemned.retain(|b| !pairs.iter().any(|(mb, _)| mb == b));
@@ -362,16 +461,32 @@ impl MemCore {
         let Some(hw) = &self.hw else { return };
         let ai = hw.engine.prepare_inputs(m, &hw.input_method);
         self.input_cache = Some((key, ai));
+        self.output_memo = None;
     }
 
     /// Hardware matmul against the cached prepared inputs — bit-identical
     /// to [`MemCore::matmul_eval`] on the matrix the cache was filled
     /// with. `None` when digital, unprepared, or the cache is empty.
-    pub fn matmul_from_cache(&self) -> Option<Matrix> {
+    ///
+    /// The result is memoized per programming generation: a repeated hit
+    /// on unchanged weights returns the stored output (reads are
+    /// deterministic at a fixed generation — read noise keys off the
+    /// generation tag), while any reprogramming in between — a training
+    /// step's [`MemCore::program_delta`] included — invalidates the memo
+    /// so the matmul re-runs against the new bits, never serving a stale
+    /// output.
+    pub fn matmul_from_cache(&mut self) -> Option<Matrix> {
         let hw = self.hw.as_ref()?;
         let prep = self.prepared.as_ref()?;
         let (_, ai) = self.input_cache.as_ref()?;
-        Some(hw.engine.matmul_prepared_inputs(ai, prep, self.generation))
+        if let Some((gen, y)) = &self.output_memo {
+            if *gen == self.generation {
+                return Some(y.clone());
+            }
+        }
+        let y = hw.engine.matmul_prepared_inputs(ai, prep, self.generation);
+        self.output_memo = Some((self.generation, y.clone()));
+        Some(y)
     }
 
     /// Micro-batched hardware matmul (the [`crate::arch::MappedModel`]

@@ -13,8 +13,9 @@
 //! executor ([`crate::arch::MappedModel`]); they are bit-identical to
 //! `forward(x, false)`.
 
-use super::{HwSpec, Layer, MemCore, Param};
-use crate::tensor::{col2im_accumulate, im2col, Conv2dDims, Matrix, Tensor};
+use super::{HwSpec, Layer, MemCore, Param, TrainError};
+use crate::dpe::DeltaReport;
+use crate::tensor::{col2im_accumulate, im2col, matmul_train, Conv2dDims, Matrix, Tensor};
 use crate::util::parallel::par_map;
 use crate::util::rng::Pcg64;
 
@@ -121,10 +122,19 @@ impl Layer for LinearMem {
     }
 
     fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        self.try_backward(grad_out).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    fn try_backward(&mut self, grad_out: &Tensor) -> Result<Tensor, TrainError> {
         let g = grad_out.to_matrix();
-        let x = self.cache_x.take().expect("forward(train=true) before backward");
-        // Full-precision gradients (straight-through).
-        let grad_w = x.transpose().matmul(&g);
+        let x = self
+            .cache_x
+            .take()
+            .ok_or(TrainError::BackwardBeforeForward { layer: "LinearMem" })?;
+        // Full-precision gradients (straight-through), both GEMMs routed
+        // through the packed register-tiled training kernel — bit-identical
+        // to `Matrix::matmul` on the same operands.
+        let grad_w = matmul_train(&x.transpose(), &g);
         for (gw, &v) in self.w.grad.iter_mut().zip(&grad_w.data) {
             *gw += v;
         }
@@ -135,8 +145,8 @@ impl Layer for LinearMem {
             }
             self.b.grad[j] += acc;
         }
-        let grad_x = g.matmul(&self.weight_matrix().transpose());
-        Tensor::from_matrix(&grad_x)
+        let grad_x = matmul_train(&g, &self.weight_matrix().transpose());
+        Ok(Tensor::from_matrix(&grad_x))
     }
 
     fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
@@ -151,6 +161,10 @@ impl Layer for LinearMem {
 
     fn update_weight(&mut self) {
         self.core.program(&self.weight_matrix());
+    }
+
+    fn update_weight_delta(&mut self) -> DeltaReport {
+        self.core.program_delta(&self.weight_matrix())
     }
 
     fn reprogram(&mut self) {
@@ -347,39 +361,82 @@ impl Layer for Conv2dMem {
     }
 
     fn backward(&mut self, grad_out: &Tensor) -> Tensor {
-        let (cols_t, d) = self.cache.take().expect("forward(train=true) before backward");
+        self.try_backward(grad_out).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    fn try_backward(&mut self, grad_out: &Tensor) -> Result<Tensor, TrainError> {
+        let (cols_t, d) = self
+            .cache
+            .take()
+            .ok_or(TrainError::BackwardBeforeForward { layer: "Conv2dMem" })?;
         let bsz = grad_out.shape[0];
         let (oh, ow) = (d.out_h(), d.out_w());
+        let ohow = oh * ow;
         let patch = self.patch_len();
         let wt = Matrix::from_vec(self.out_c, patch, self.w.value.clone());
-        // Per-sample: grad_y (out_c, OH·OW); grad_w += grad_y · colsᵀ
-        // (cached transposed already); grad_cols = wᵀ·grad_y;
-        // grad_x = col2im(grad_cols).
-        let results: Vec<(Matrix, Vec<f64>, Vec<f64>)> = par_map(bsz, |i| {
-            let gy = Matrix::from_vec(
-                self.out_c,
-                oh * ow,
-                grad_out.data[i * self.out_c * oh * ow..(i + 1) * self.out_c * oh * ow].to_vec(),
-            );
-            let gw = gy.matmul(&cols_t[i]);
-            let gb: Vec<f64> = (0..self.out_c).map(|oc| gy.row(oc).iter().sum()).collect();
-            let gcols = wt.transpose().matmul(&gy);
-            let mut gx = vec![0.0; d.in_c * d.in_h * d.in_w];
-            col2im_accumulate(&gcols, d, &mut gx);
-            (gw, gb, gx)
+        // Batch-stacked gradient GEMMs: instead of B small per-sample
+        // matmuls, assemble the gradients once and run two stacked GEMMs
+        // through the packed training kernel.
+        //
+        // grad_y as (out_c, B·OH·OW): row `oc` is the per-sample grad
+        // planes for that output channel concatenated in sample order —
+        // one contiguous copy per (oc, sample) pair.
+        let mut gyt = Matrix::zeros(self.out_c, bsz * ohow);
+        for oc in 0..self.out_c {
+            let dst_row = gyt.row_mut(oc);
+            for i in 0..bsz {
+                let src = (i * self.out_c + oc) * ohow;
+                dst_row[i * ohow..(i + 1) * ohow]
+                    .copy_from_slice(&grad_out.data[src..src + ohow]);
+            }
+        }
+        // Re-stack the cached transposed im2col columns into the same
+        // `(B·OH·OW, patch)` batch matrix the forward pass used — the
+        // input slicing/im2col work is done once per batch and reused
+        // here for the weight-gradient GEMM.
+        let sample_rows = ohow * patch;
+        let mut stacked = Matrix::zeros(bsz * ohow, patch);
+        for (i, colt) in cols_t.iter().enumerate() {
+            stacked.data[i * sample_rows..(i + 1) * sample_rows].copy_from_slice(&colt.data);
+        }
+        // grad_w (out_c, patch) = grad_yᵀ-stacked · cols-stacked.
+        let grad_w = matmul_train(&gyt, &stacked);
+        for (acc, &v) in self.w.grad.iter_mut().zip(&grad_w.data) {
+            *acc += v;
+        }
+        for oc in 0..self.out_c {
+            self.b.grad[oc] += gyt.row(oc).iter().sum::<f64>();
+        }
+        // Input grads: one stacked GEMM (B·OH·OW, out_c)·(out_c, patch)
+        // yields every sample's transposed grad-columns; col2im per sample
+        // stays parallel.
+        let mut gys = Matrix::zeros(bsz * ohow, self.out_c);
+        for i in 0..bsz {
+            for oc in 0..self.out_c {
+                let src = (i * self.out_c + oc) * ohow;
+                for q in 0..ohow {
+                    gys.data[(i * ohow + q) * self.out_c + oc] = grad_out.data[src + q];
+                }
+            }
+        }
+        let gcols_t = matmul_train(&gys, &wt);
+        let sample_len = d.in_c * d.in_h * d.in_w;
+        let gx_all: Vec<Vec<f64>> = par_map(bsz, |i| {
+            let gc = Matrix::from_vec(
+                ohow,
+                patch,
+                gcols_t.data[i * sample_rows..(i + 1) * sample_rows].to_vec(),
+            )
+            .transpose();
+            let mut gx = vec![0.0; sample_len];
+            col2im_accumulate(&gc, d, &mut gx);
+            gx
         });
         let mut grad_x = Tensor::zeros(&[bsz, d.in_c, d.in_h, d.in_w]);
-        let sample_len = d.in_c * d.in_h * d.in_w;
-        for (i, (gw, gb, gx)) in results.into_iter().enumerate() {
-            for (acc, v) in self.w.grad.iter_mut().zip(&gw.data) {
-                *acc += v;
-            }
-            for (acc, v) in self.b.grad.iter_mut().zip(&gb) {
-                *acc += v;
-            }
+        for (i, gx) in gx_all.into_iter().enumerate() {
             grad_x.data[i * sample_len..(i + 1) * sample_len].copy_from_slice(&gx);
         }
-        grad_x
+        Ok(grad_x)
     }
 
     fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
@@ -394,6 +451,10 @@ impl Layer for Conv2dMem {
 
     fn update_weight(&mut self) {
         self.core.program(&self.weight_t());
+    }
+
+    fn update_weight_delta(&mut self) -> DeltaReport {
+        self.core.program_delta(&self.weight_t())
     }
 
     fn reprogram(&mut self) {
@@ -1150,6 +1211,248 @@ mod tests {
         l.update_weight();
         let y2 = l.forward(&x, false);
         assert_ne!(y1.data, y2.data, "reprogramming must resample noise");
+    }
+
+    #[test]
+    fn prop_linear_conv_gradcheck_digital() {
+        // Finite-difference gradient checks over random shapes: the
+        // packed-kernel backward must produce the analytic gradients of
+        // the digital forward for both hardware layer kinds.
+        use crate::util::prop::prop_check;
+        prop_check("linear/conv backward == finite differences", 12, |g| {
+            let bsz = g.usize_in(1..=3);
+            let inf = g.usize_in(2..=10);
+            let outf = g.usize_in(1..=6);
+            let mut lin = LinearMem::new(inf, outf, None, g.rng());
+            let x = Tensor::from_vec(&[bsz, inf], g.vec_f64(bsz * inf, -1.0..1.0));
+            let y = lin.forward(&x, true);
+            let gx = lin.try_backward(&y).map_err(|e| e.to_string())?;
+            for _ in 0..3 {
+                let idx = g.usize_in(0..=bsz * inf - 1);
+                let want = num_grad(&mut lin, &x, &qloss, idx, 1e-5);
+                if (gx.data[idx] - want).abs() > 1e-5 {
+                    return Err(format!("linear d={idx}: {} vs {want}", gx.data[idx]));
+                }
+            }
+            let (c, hw_dim, oc) = (g.usize_in(1..=2), g.usize_in(4..=6), g.usize_in(1..=3));
+            let mut conv = Conv2dMem::new(c, hw_dim, hw_dim, oc, 3, 1, 1, None, g.rng());
+            let xc = Tensor::from_vec(
+                &[bsz, c, hw_dim, hw_dim],
+                g.vec_f64(bsz * c * hw_dim * hw_dim, -1.0..1.0),
+            );
+            let y = conv.forward(&xc, true);
+            let gx = conv.try_backward(&y).map_err(|e| e.to_string())?;
+            for _ in 0..3 {
+                let idx = g.usize_in(0..=xc.data.len() - 1);
+                let want = num_grad(&mut conv, &xc, &qloss, idx, 1e-5);
+                if (gx.data[idx] - want).abs() > 1e-5 {
+                    return Err(format!("conv d={idx}: {} vs {want}", gx.data[idx]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hw_gradcheck_tolerance_scales_with_quantization_step() {
+        // Straight-through estimator on a noise-free engine: backward
+        // returns the full-precision gradient while the forward is
+        // quantized, so finite differences of the hardware forward agree
+        // only up to the measured quantization jitter — the tolerance is
+        // derived from that step, not hard-coded.
+        let mut rng = Pcg64::seeded(61);
+        let hw = HwSpec::uniform(
+            DotProductEngine::ideal((64, 64)),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut l = LinearMem::new(12, 6, Some(hw), &mut rng);
+        let mut dig = LinearMem::new(12, 6, None, &mut rng);
+        dig.w.value = l.w.value.clone();
+        dig.b.value = l.b.value.clone();
+        let x = Tensor::from_vec(&[2, 12], (0..24).map(|i| ((i * 5 % 13) as f64) / 6.5 - 1.0).collect());
+        let y_hw = l.forward(&x, false);
+        let y_dig = dig.forward(&x, false);
+        let qerr = y_hw
+            .data
+            .iter()
+            .zip(&y_dig.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        let ymax = y_hw.data.iter().fold(0.0, |m: f64, v| m.max(v.abs()));
+        let y = l.forward(&x, true);
+        let gx = l.backward(&y);
+        let eps = 0.05;
+        // d(quadratic loss) jitter ≤ Σ|y|·|Δy| ≤ len·ymax·qerr, felt at
+        // 1/eps by the central difference.
+        let tol = (y.data.len() as f64 * ymax * qerr) / eps + 1e-4;
+        for idx in [0usize, 7, 23] {
+            let want = num_grad(&mut l, &x, &qloss, idx, eps);
+            assert!(
+                (gx.data[idx] - want).abs() <= tol,
+                "idx {idx}: {} vs {want} (tol {tol})",
+                gx.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn linear_backward_matches_naive_dense_reference() {
+        // The packed training kernel replaced naive `Matrix::matmul`
+        // calls; on identical operands the gradients must be bit-equal.
+        let mut rng = Pcg64::seeded(62);
+        let mut l = LinearMem::new(9, 5, None, &mut rng);
+        let x = Tensor::from_vec(&[4, 9], (0..36).map(|i| ((i * 7 % 11) as f64) / 5.5 - 1.0).collect());
+        let _ = l.forward(&x, true);
+        let g = Tensor::from_vec(&[4, 5], (0..20).map(|i| ((i * 3 % 7) as f64) / 3.5 - 1.0).collect());
+        let xm = x.to_matrix();
+        let gm = g.to_matrix();
+        let want_gw = xm.transpose().matmul(&gm);
+        let want_gx = gm.matmul(&l.weight_matrix().transpose());
+        let gx = l.backward(&g);
+        assert_eq!(gx.data, want_gx.data, "grad_x must match the dense reference bitwise");
+        assert_eq!(l.w.grad, want_gw.data, "grad_w must match the dense reference bitwise");
+    }
+
+    #[test]
+    fn backward_before_forward_is_typed_error() {
+        let mut rng = Pcg64::seeded(40);
+        let mut lin = LinearMem::new(6, 4, None, &mut rng);
+        let g = Tensor::from_vec(&[2, 4], vec![0.1; 8]);
+        assert_eq!(
+            lin.try_backward(&g).err(),
+            Some(TrainError::BackwardBeforeForward { layer: "LinearMem" })
+        );
+        // Double-backward: the cache is consumed by the first backward.
+        let x = Tensor::from_vec(&[2, 6], vec![0.3; 12]);
+        lin.forward(&x, true);
+        assert!(lin.try_backward(&g).is_ok());
+        assert_eq!(
+            lin.try_backward(&g).err(),
+            Some(TrainError::BackwardBeforeForward { layer: "LinearMem" })
+        );
+        let mut conv = Conv2dMem::new(1, 4, 4, 2, 3, 1, 1, None, &mut rng);
+        let gc = Tensor::from_vec(&[1, 2, 4, 4], vec![0.2; 32]);
+        assert_eq!(
+            conv.try_backward(&gc).err(),
+            Some(TrainError::BackwardBeforeForward { layer: "Conv2dMem" })
+        );
+        let xc = Tensor::from_vec(&[1, 1, 4, 4], vec![0.4; 16]);
+        conv.forward(&xc, true);
+        assert!(conv.try_backward(&gc).is_ok());
+        assert_eq!(
+            conv.try_backward(&gc).err(),
+            Some(TrainError::BackwardBeforeForward { layer: "Conv2dMem" })
+        );
+    }
+
+    #[test]
+    fn delta_reprogram_touches_only_dirty_blocks() {
+        // Two hardware layers; change one weight in the first only. The
+        // delta path must redraw cells only in the first layer's affected
+        // block, and report every block of the untouched layer clean.
+        let mk = |stream: u64| {
+            let mut rng = Pcg64::seeded(50 + stream);
+            let hw = HwSpec::uniform(
+                DotProductEngine::new(Default::default(), 17 + stream),
+                SliceMethod::int(SliceSpec::int8()),
+            );
+            LinearMem::new(80, 40, Some(hw), &mut rng)
+        };
+        let mut l0 = mk(0);
+        let mut l1 = mk(1);
+        // First delta call after construction falls back to a full
+        // program (no template cached yet) and seeds the template.
+        let r0 = l0.update_weight_delta();
+        let r1 = l1.update_weight_delta();
+        assert_eq!(r0.full_reprograms, 1);
+        assert_eq!(r1.full_reprograms, 1);
+        // No weight change → every block clean, zero cells redrawn.
+        let r = l0.update_weight_delta();
+        assert_eq!(r.full_reprograms, 0);
+        assert_eq!(r.blocks_clean, r.blocks);
+        assert_eq!(r.cells_redrawn, 0);
+        // Bump one weight enough to move its quantized digit.
+        l0.w.value[3] += 0.2;
+        let r0 = l0.update_weight_delta();
+        let r1 = l1.update_weight_delta();
+        assert_eq!(r0.full_reprograms, 0);
+        assert!(r0.dirty_blocks() >= 1, "changed layer must redraw");
+        assert!(
+            r0.dirty_blocks() < r0.blocks,
+            "a one-element change must not dirty every block"
+        );
+        assert_eq!(r1.blocks_clean, r1.blocks, "untouched layer stays clean");
+        assert_eq!(r1.cells_redrawn, 0);
+        // Cumulative per-core counters add up across calls.
+        let stats = l0.core.program_stats();
+        assert_eq!(stats.full_reprograms, 2); // construction + first delta
+    }
+
+    #[test]
+    fn delta_preserves_clean_cell_noise() {
+        // The perf claim in miniature: a delta step over unchanged weights
+        // redraws nothing, so the noisy output is bit-identical — while a
+        // full update_weight resamples every cell and shifts it.
+        let mut rng = Pcg64::seeded(51);
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(Default::default(), 23),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut l = LinearMem::new(24, 12, Some(hw), &mut rng);
+        l.update_weight_delta(); // seed the template (full fallback)
+        let x = Tensor::from_vec(&[2, 24], (0..48).map(|i| ((i % 9) as f64) / 4.5 - 1.0).collect());
+        let y0 = l.forward(&x, false);
+        l.update_weight_delta();
+        let y1 = l.forward(&x, false);
+        assert_eq!(y0.data, y1.data, "clean delta must keep programmed noise");
+        l.update_weight();
+        let y2 = l.forward(&x, false);
+        assert_ne!(y0.data, y2.data, "full reprogram must resample noise");
+    }
+
+    #[test]
+    fn delta_bit_identical_to_full_reprogram_noise_free() {
+        // On a noise-free engine the redrawn cells carry no randomness, so
+        // the delta path must land on exactly the bits a full reprogram
+        // writes — for linear and conv layers alike.
+        let mut rng = Pcg64::seeded(52);
+        let hw = HwSpec::uniform(
+            DotProductEngine::ideal((64, 64)),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut a = LinearMem::new(20, 10, Some(hw.clone()), &mut rng);
+        let mut rng2 = Pcg64::seeded(52);
+        let mut b = LinearMem::new(20, 10, Some(hw.clone()), &mut rng2);
+        a.update_weight_delta();
+        for step in 0..3 {
+            for (i, (wa, wb)) in a.w.value.iter_mut().zip(b.w.value.iter_mut()).enumerate() {
+                let d = 0.01 * ((i + step) % 5) as f64 - 0.02;
+                *wa += d;
+                *wb += d;
+            }
+            a.update_weight_delta();
+            b.update_weight();
+            let x =
+                Tensor::from_vec(&[3, 20], (0..60).map(|i| ((i % 7) as f64) / 3.5 - 1.0).collect());
+            assert_eq!(a.forward(&x, false).data, b.forward(&x, false).data, "step {step}");
+        }
+        let mut rng = Pcg64::seeded(53);
+        let mut ca = Conv2dMem::new(2, 6, 6, 3, 3, 1, 1, Some(hw.clone()), &mut rng);
+        let mut rng2 = Pcg64::seeded(53);
+        let mut cb = Conv2dMem::new(2, 6, 6, 3, 3, 1, 1, Some(hw), &mut rng2);
+        ca.update_weight_delta();
+        for (i, (wa, wb)) in ca.w.value.iter_mut().zip(cb.w.value.iter_mut()).enumerate() {
+            let d = 0.015 * ((i % 3) as f64 - 1.0);
+            *wa += d;
+            *wb += d;
+        }
+        ca.update_weight_delta();
+        cb.update_weight();
+        let xc = Tensor::from_vec(
+            &[2, 2, 6, 6],
+            (0..144).map(|i| ((i * 11 % 19) as f64) / 9.5 - 1.0).collect(),
+        );
+        assert_eq!(ca.forward(&xc, false).data, cb.forward(&xc, false).data);
     }
 
     #[test]

@@ -50,9 +50,38 @@ pub mod train;
 pub use self::core::MemCore;
 
 use crate::arch::{ChipSpec, CoreDemand, MappedModel, TileAllocator};
-use crate::dpe::{DotProductEngine, SliceMethod};
+use crate::dpe::{DeltaReport, DotProductEngine, SliceMethod};
 use crate::tensor::Tensor;
 use std::sync::Arc;
+
+/// Typed failure of a training-graph operation — the structured
+/// alternative to the old `expect("forward(train=true) before backward")`
+/// panics in the hardware layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrainError {
+    /// `backward` was called on a layer whose activation cache is empty:
+    /// either no `forward(x, train=true)` preceded it, or the cache was
+    /// already consumed by a previous `backward` (double-backward).
+    BackwardBeforeForward {
+        /// `Layer::name()` of the offending layer.
+        layer: &'static str,
+    },
+}
+
+impl std::fmt::Display for TrainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainError::BackwardBeforeForward { layer } => write!(
+                f,
+                "{layer}: backward without a cached activation — call forward(x, train=true) \
+                 before each backward (the cache is consumed per backward, so this is also \
+                 what a double-backward hits)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
 
 /// Per-layer hardware binding: the engine plus input/weight slice methods
 /// (the paper's `input_sli_med` / `weight_sli_med` constructor arguments).
@@ -106,6 +135,15 @@ impl Param {
 pub trait Layer: Send + Sync {
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor;
     fn backward(&mut self, grad_out: &Tensor) -> Tensor;
+    /// Fallible backward: layers that need a cached activation return
+    /// [`TrainError::BackwardBeforeForward`] instead of panicking when it
+    /// is missing (backward-before-forward, double-backward). Layers
+    /// overriding this put the real logic here and delegate `backward` to
+    /// it; the default wraps the panicking `backward` for digital layers
+    /// whose caches are cheap shape records.
+    fn try_backward(&mut self, grad_out: &Tensor) -> Result<Tensor, TrainError> {
+        Ok(self.backward(grad_out))
+    }
     /// Immutable eval-mode forward (inference executor path).
     fn forward_eval(&self, x: &Tensor) -> Tensor;
     /// Eval forward over a batch, splitting DPE work into micro-batches of
@@ -136,6 +174,16 @@ pub trait Layer: Send + Sync {
     /// Refresh the hardware (sliced/programmed) weight copy from the
     /// full-precision weights — the paper's `update_weight()`.
     fn update_weight(&mut self) {}
+    /// Delta variant of [`Layer::update_weight`] for the training hot loop
+    /// (`dpe::engine` §Perf training path): hardware layers route through
+    /// [`MemCore::program_delta`] so only blocks whose quantized digits
+    /// changed are touched, and report what was redrawn. The default (for
+    /// digital layers, whose `update_weight` is a no-op) performs a plain
+    /// `update_weight` and reports zero work.
+    fn update_weight_delta(&mut self) -> DeltaReport {
+        self.update_weight();
+        DeltaReport::default()
+    }
     /// Re-derive the hardware copies at the **current** programming
     /// generation — called after the layer's cores were moved to different
     /// physical slots (their RNG streams changed, the weights did not).
@@ -293,6 +341,17 @@ impl Sequential {
         g
     }
 
+    /// Fallible backward ([`Layer::try_backward`]): the first layer with a
+    /// missing activation cache aborts the pass with a typed error
+    /// identifying it, instead of panicking mid-stack.
+    pub fn try_backward(&mut self, grad: &Tensor) -> Result<Tensor, TrainError> {
+        let mut g = grad.clone();
+        for l in self.layers.iter_mut().rev() {
+            g = l.try_backward(&g)?;
+        }
+        Ok(g)
+    }
+
     pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
         for l in self.layers.iter_mut() {
             l.visit_params(f);
@@ -347,6 +406,18 @@ impl Sequential {
         for l in self.layers.iter_mut() {
             l.update_weight();
         }
+    }
+
+    /// Delta-reprogram every hardware layer after an optimizer step
+    /// ([`Layer::update_weight_delta`]), summing the per-layer redraw
+    /// accounting — the training hot loop's replacement for
+    /// [`Sequential::update_weight`].
+    pub fn update_weight_delta(&mut self) -> DeltaReport {
+        let mut total = DeltaReport::default();
+        for l in self.layers.iter_mut() {
+            total.merge(&l.update_weight_delta());
+        }
+        total
     }
 
     pub fn zero_grad(&mut self) {

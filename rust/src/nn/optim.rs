@@ -1,5 +1,9 @@
 //! Optimizers operating on the full-precision master weights (the
-//! hardware copies are refreshed via `update_weight()` after each step).
+//! hardware copies are refreshed via `update_weight()` — or by
+//! template delta via `update_weight_delta()` on the fast training
+//! path — after each step). Momentum/moment buffers are sized lazily
+//! on the first step and reused for the rest of training; the only
+//! per-step allocation in the hot loop is the gradient math itself.
 
 use super::Sequential;
 

@@ -7,8 +7,10 @@ use super::optim::Sgd;
 use super::Sequential;
 use crate::arch::MappedModel;
 use crate::data::Dataset;
+use crate::dpe::DeltaReport;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
+use std::time::Instant;
 
 /// Per-step training record (Fig 16 plots these curves).
 #[derive(Debug, Clone)]
@@ -82,6 +84,84 @@ pub fn train(model: &mut Sequential, data: &Dataset, cfg: &TrainConfig) -> Vec<S
         }
     }
     logs
+}
+
+/// What [`train_fast`] did and where the time went: the per-`log_every`
+/// step log, cumulative wall-clock seconds per training phase, and the
+/// merged delta-reprogramming counters across every step.
+#[derive(Debug, Clone, Default)]
+pub struct FastTrainReport {
+    pub logs: Vec<StepLog>,
+    /// Batch assembly (index gather into the reused buffers).
+    pub batch_s: f64,
+    /// Forward passes (DPE matmuls when hardware is bound).
+    pub forward_s: f64,
+    /// Backward passes (packed-kernel gradient GEMMs).
+    pub backward_s: f64,
+    /// Optimizer steps.
+    pub optim_s: f64,
+    /// Weight reprogramming (template-delta path).
+    pub reprogram_s: f64,
+    /// Merged [`DeltaReport`] over all steps and layers.
+    pub delta: DeltaReport,
+}
+
+/// The fast hardware-aware training loop (Fig 16): identical batching,
+/// shuffling, and update math to [`train`] — same seeds give the same
+/// curve on any noise-free or digital model — but with the per-step
+/// full-array reprogram replaced by template-delta reprogramming
+/// ([`crate::nn::Layer::update_weight_delta`]), gradient GEMMs on the
+/// packed register-tiled kernels, and batch buffers reused across steps.
+/// On noisy engines the two loops are *statistically* equivalent but not
+/// bit-identical: the delta path deliberately keeps the programmed noise
+/// of unchanged cells instead of resampling every cell every step.
+pub fn train_fast(model: &mut Sequential, data: &Dataset, cfg: &TrainConfig) -> FastTrainReport {
+    let mut rng = Pcg64::new(cfg.seed, 0x7e41);
+    let mut opt = Sgd::new(cfg.lr, cfg.momentum, cfg.weight_decay);
+    let mut report = FastTrainReport::default();
+    let mut order: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+    // Batch buffers live across steps; the feature buffer round-trips
+    // through the batch tensor and back, so steady state allocates nothing.
+    let mut feats: Vec<f64> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut shape = vec![cfg.batch_size];
+    shape.extend_from_slice(&data.sample_shape);
+    for step in 0..cfg.steps {
+        if cursor + cfg.batch_size > order.len() {
+            rng.shuffle(&mut order);
+            cursor = 0;
+        }
+        let idx = &order[cursor..cursor + cfg.batch_size];
+        cursor += cfg.batch_size;
+        let t = Instant::now();
+        data.batch_into(idx, &mut feats, &mut labels);
+        let x = Tensor::from_vec(&shape, std::mem::take(&mut feats));
+        report.batch_s += t.elapsed().as_secs_f64();
+        model.zero_grad();
+        let t = Instant::now();
+        let logits = model.forward(&x, true);
+        report.forward_s += t.elapsed().as_secs_f64();
+        let (loss, grad) = softmax_cross_entropy(&logits, &labels);
+        let acc = accuracy(&logits, &labels);
+        let t = Instant::now();
+        model.try_backward(&grad).expect("forward(train=true) ran this step");
+        report.backward_s += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        opt.step(model);
+        report.optim_s += t.elapsed().as_secs_f64();
+        // Refresh the arrays by delta: only blocks whose quantized digits
+        // moved this step are redrawn (see `dpe::engine` §Perf).
+        let t = Instant::now();
+        report.delta.merge(&model.update_weight_delta());
+        report.reprogram_s += t.elapsed().as_secs_f64();
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            report.logs.push(StepLog { step, loss, train_acc: acc });
+        }
+        feats = x.data;
+    }
+    report
 }
 
 /// Accuracy over (a prefix of) a dataset for any forward function — the
@@ -174,5 +254,56 @@ mod tests {
         let mut model = mlp(784, 8, 10, None, 2);
         let acc = evaluate(&mut model, &data, 4, 10);
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn train_fast_curve_bit_identical_digital() {
+        // Same seeds, same data: the fast loop must reproduce the legacy
+        // loop's training curve bit for bit on a digital model.
+        let data = mnist_like::load(128, 11);
+        let mut legacy = mlp(784, 16, 10, None, 5);
+        let mut fast = mlp(784, 16, 10, None, 5);
+        let cfg = TrainConfig { steps: 12, batch_size: 16, lr: 0.1, log_every: 1, ..Default::default() };
+        let logs = train(&mut legacy, &data, &cfg);
+        let rep = train_fast(&mut fast, &data, &cfg);
+        assert_eq!(logs.len(), rep.logs.len());
+        for (a, b) in logs.iter().zip(&rep.logs) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss @ step {}", a.step);
+            assert_eq!(a.train_acc.to_bits(), b.train_acc.to_bits(), "acc @ step {}", a.step);
+        }
+    }
+
+    #[test]
+    fn train_fast_curve_bit_identical_noise_free_hw() {
+        // On a noise-free engine the delta reprogram lands on exactly the
+        // digits a full reprogram writes, so even the hardware-in-the-loop
+        // curve is bit-identical between the two loops.
+        use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+        use crate::nn::HwSpec;
+        let data = mnist_like::load(96, 13);
+        let hw = || {
+            HwSpec::uniform(
+                DotProductEngine::ideal((64, 64)),
+                SliceMethod::int(SliceSpec::int8()),
+            )
+        };
+        let mut legacy = mlp(784, 16, 10, Some(hw()), 6);
+        let mut fast = mlp(784, 16, 10, Some(hw()), 6);
+        let cfg = TrainConfig { steps: 8, batch_size: 16, lr: 0.05, log_every: 1, ..Default::default() };
+        let logs = train(&mut legacy, &data, &cfg);
+        let rep = train_fast(&mut fast, &data, &cfg);
+        for (a, b) in logs.iter().zip(&rep.logs) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss @ step {}", a.step);
+        }
+        // The delta path actually engaged: the first step per core seeds
+        // the template with a full program, later steps classify blocks.
+        assert!(rep.delta.full_reprograms >= 1, "first delta call seeds the template");
+        assert!(rep.delta.full_reprograms < cfg.steps * 2, "later steps must run the delta path");
+        assert_eq!(
+            rep.delta.blocks_clean + rep.delta.dirty_blocks(),
+            rep.delta.blocks,
+            "every block is classified exactly once per step"
+        );
     }
 }

@@ -556,6 +556,82 @@ pub fn matmul_packed_rows_into(
     }
 }
 
+/// The training-path GEMM (backward passes of
+/// [`crate::nn::LinearMem`]/[`crate::nn::Conv2dMem`], §Perf): `a · b`
+/// through the packed register-tiled kernels instead of the naive dense
+/// loop, bit-identical to [`Matrix::matmul`] on the same operands.
+/// Dispatch mirrors `Matrix::matmul` — serial under the same work
+/// threshold, band-parallel above it — with one extra rung: when both
+/// operands are exact byte-valued integers and the `k · max_a · max_w`
+/// bound holds ([`int_accum_for`]), the multiply runs on the integer
+/// slice-stacked kernel under the 2-D scheduler (a single-plane
+/// [`DigitPlanes`] stack, whose output layout equals the plain `m × n`
+/// result). Gradients are generic f64 so the integer rung engages only
+/// for digit-valued operands; the scan for it fails on the first
+/// non-integer value.
+pub fn matmul_train(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        b.rows, a.cols,
+        "matmul_train dim mismatch {}x{} * {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    matmul_train_packed(a, &PackedB::pack(b))
+}
+
+/// [`matmul_train`] with `b` already packed — callers multiplying several
+/// operands against the same matrix (forward + weight-grad sharing one
+/// pack) pay the packing once.
+pub fn matmul_train_packed(a: &Matrix, packed: &PackedB) -> Matrix {
+    assert_eq!(
+        a.cols, packed.k,
+        "matmul_train dim mismatch: a is {}x{}, packed b is {}x{}",
+        a.rows, a.cols, packed.k, packed.n
+    );
+    let (m, k, n) = (a.rows, a.cols, packed.n);
+    let mut out = Matrix::zeros(m, n);
+    let serial = m * k * n < (1 << 21);
+    if let Some(pb) = PackedU8::from_packed(packed) {
+        if let Some((planes, max_a)) = byte_plane_of(a) {
+            if let Some(acc) = int_accum_for(k, max_a as u64, pb.max_digit() as u64) {
+                if serial {
+                    matmul_packed_stacked_int_into(&planes, &pb, acc, &mut out.data);
+                } else {
+                    matmul_packed_stacked_int_2d(&planes, &pb, acc, &mut out.data);
+                }
+                return out;
+            }
+        }
+    }
+    if serial {
+        matmul_packed_into(a, packed, &mut out.data);
+    } else {
+        par_chunks_mut(&mut out.data, STACK_BAND * n, |band_idx, chunk| {
+            matmul_packed_rows_into(a, band_idx * STACK_BAND, chunk.len() / n, packed, chunk);
+        });
+    }
+    out
+}
+
+/// `a` as a single byte-valued digit plane (plus its max digit), or
+/// `None` if any entry is not an exact integer in `[0, 255]` — the
+/// integer-rung precondition of [`matmul_train_packed`]. Fails on the
+/// first non-integer value, so the scan is O(1) for generic f64 data.
+fn byte_plane_of(a: &Matrix) -> Option<(DigitPlanes, u8)> {
+    if !a.data.iter().all(|&v| (0.0..=255.0).contains(&v) && v.fract() == 0.0) {
+        return None;
+    }
+    let mut planes = DigitPlanes::zeroed(1, a.rows, a.cols);
+    let mut max_a = 0u8;
+    for i in 0..a.rows {
+        for (kk, &v) in a.row(i).iter().enumerate() {
+            let d = v as u8;
+            max_a = max_a.max(d);
+            planes.set(0, i, kk, d);
+        }
+    }
+    Some((planes, max_a))
+}
+
 /// All digit planes of one quantized operand block in byte-packed,
 /// slice-major form: digit `(s, i, kk)` of plane `s` lives at
 /// `data[(s·rows + i)·cols + kk]` as a `u8` (slice digits are `< 2^8` by
@@ -1219,6 +1295,56 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_matmul_train_bit_identical_to_matmul() {
+        // The training-kernel contract: `matmul_train` must match the
+        // reference `Matrix::matmul` bit for bit on any operands — both
+        // the f64 packed rung and the exact integer rung (digit-valued
+        // operands), which this sweep hits explicitly.
+        prop_check("matmul_train == matmul bitwise", 60, |g| {
+            let m = g.usize_in(1..=32);
+            let k = g.usize_in(1..=48);
+            let n = g.usize_in(1..=40);
+            let int_case = g.bool();
+            let (a, b) = if int_case {
+                let a = Matrix::from_vec(
+                    m,
+                    k,
+                    (0..m * k).map(|_| g.usize_in(0..=255) as f64).collect(),
+                );
+                let b = Matrix::from_vec(
+                    k,
+                    n,
+                    (0..k * n).map(|_| g.usize_in(0..=15) as f64).collect(),
+                );
+                (a, b)
+            } else {
+                let a = Matrix::from_vec(m, k, g.vec_f64_multiscale(m * k));
+                let b = Matrix::from_vec(k, n, g.vec_f64_multiscale(k * n));
+                (a, b)
+            };
+            if matmul_train(&a, &b).data != a.matmul(&b).data {
+                return Err(format!("{m}x{k}x{n} int={int_case}: matmul_train diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_train_parallel_rung_bit_identical() {
+        // Above the serial threshold (m·k·n ≥ 2²¹) matmul_train takes the
+        // banded-parallel / 2-D-scheduled rungs; both must still be
+        // bit-identical to the reference — for f64 and integer operands.
+        let (m, k, n) = (160, 160, 160);
+        assert!(m * k * n >= 1 << 21, "dims must cross the parallel threshold");
+        let af = Matrix::from_vec(m, k, (0..m * k).map(|i| ((i * 31 % 97) as f64) / 7.0 - 6.0).collect());
+        let bf = Matrix::from_vec(k, n, (0..k * n).map(|i| ((i * 17 % 89) as f64) / 11.0 - 4.0).collect());
+        assert_eq!(matmul_train(&af, &bf).data, af.matmul(&bf).data, "f64 parallel rung");
+        let ai = Matrix::from_vec(m, k, (0..m * k).map(|i| ((i * 31) % 256) as f64).collect());
+        let bi = Matrix::from_vec(k, n, (0..k * n).map(|i| ((i * 13) % 16) as f64).collect());
+        assert_eq!(matmul_train(&ai, &bi).data, ai.matmul(&bi).data, "int parallel rung");
     }
 
     #[test]

@@ -9,10 +9,12 @@
 //! so they start after the write completes and join before the next one.
 
 use memintelli::arch::{ChipSpec, FaultEvent, ReplicaSpec, Request, ServingRuntime, ServingSpec};
+use memintelli::data::Dataset;
 use memintelli::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
 use memintelli::dpe::montecarlo::{run_fault_point, FaultPoint, McConfig};
 use memintelli::dpe::{DotProductEngine, DpeConfig, RepairSpec, SliceMethod, SliceSpec};
 use memintelli::nn::models::mlp;
+use memintelli::nn::train::{train_fast, TrainConfig};
 use memintelli::nn::HwSpec;
 use memintelli::tensor::Tensor;
 
@@ -37,6 +39,7 @@ fn montecarlo_stats_identical_across_thread_counts() {
     let mut points = Vec::new();
     let mut infer_outputs: Vec<Vec<f64>> = Vec::new();
     let mut serve_reports = Vec::new();
+    let mut train_runs: Vec<(Vec<u64>, Vec<f64>)> = Vec::new();
     let x = Tensor::from_vec(&[6, 48], (0..288).map(|i| ((i % 13) as f64) / 6.5 - 1.0).collect());
     for workers in ["1", "2", "7"] {
         std::env::set_var("MEMINTELLI_THREADS", workers);
@@ -76,6 +79,34 @@ fn montecarlo_stats_identical_across_thread_counts() {
             .collect();
         let faults = [FaultEvent { at_us: 250, replica: 0 }];
         serve_reports.push(rt.run(&workload, &faults).unwrap());
+        // Fast hardware-in-the-loop training must be worker-count
+        // invariant too: template-delta redraws key off per-slot RNG
+        // streams and the batch index, never off which worker runs a
+        // band, so the loss curve and the trained model's outputs are
+        // bit-identical at any thread count.
+        let data = Dataset {
+            sample_shape: vec![48],
+            features: (0..48 * 40).map(|i| (((i * 7) % 23) as f64) / 11.5 - 1.0).collect(),
+            labels: (0..40usize).map(|i| i % 4).collect(),
+            num_classes: 4,
+        };
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(DpeConfig::default(), 17),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut model = mlp(48, 12, 4, Some(hw), 5);
+        let tcfg = TrainConfig {
+            steps: 4,
+            batch_size: 8,
+            lr: 0.05,
+            log_every: 1,
+            seed: 99,
+            ..TrainConfig::default()
+        };
+        let rep = train_fast(&mut model, &data, &tcfg);
+        let curve: Vec<u64> = rep.logs.iter().map(|l| l.loss.to_bits()).collect();
+        let trained_y = model.forward(&x, false).data;
+        train_runs.push((curve, trained_y));
     }
     match prev {
         Some(v) => std::env::set_var("MEMINTELLI_THREADS", v),
@@ -87,4 +118,6 @@ fn montecarlo_stats_identical_across_thread_counts() {
     assert_eq!(infer_outputs[0], infer_outputs[2], "mapped inference differs at 7 workers");
     assert_eq!(serve_reports[0], serve_reports[1], "serving report differs at 2 workers");
     assert_eq!(serve_reports[0], serve_reports[2], "serving report differs at 7 workers");
+    assert_eq!(train_runs[0], train_runs[1], "train_fast differs at 2 workers");
+    assert_eq!(train_runs[0], train_runs[2], "train_fast differs at 7 workers");
 }
