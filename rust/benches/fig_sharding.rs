@@ -1,0 +1,236 @@
+//! Bench: multi-chip sharded execution **and** the paper-style
+//! fig_sharding artifact (robustness PR tentpole).
+//!
+//! Shards a trained MLP across chip fleets of growing size and drives
+//! the pipeline executor through clean, chip-loss, and lossy-link
+//! scenarios ([`sharding_sweep`]), then serves a mixed
+//! single-chip/sharded replica pool through the serving runtime.
+//!
+//! Before any number is reported, four invariants are hard-asserted:
+//! 1. **bit-identity** — on noise-free engines, every clean sharded run
+//!    (including the block-split fleet) matches single-chip
+//!    `infer_batched` bit for bit;
+//! 2. **conservation** — every scenario (chip loss, dropped and
+//!    corrupted transfers included) ends each micro-batch `Done` or
+//!    `Failed`, never silently dropped;
+//! 3. **failover wins** — losing a chip with failover on (stage
+//!    re-replicated onto the spare) yields strictly better accuracy
+//!    than the same loss served degraded with failover off;
+//! 4. **pipeline wins** — at fleet size >= 2 the pipeline's throughput
+//!    is at least the single-chip baseline under the same clock.
+//!
+//! Emits the machine-readable `BENCH_sharding.json` (per-scenario
+//! throughput/accuracy/fault accounting plus a mixed-pool serving
+//! report serialized by the shared [`ServeReport::to_json`] helper).
+//!
+//! Run: `cargo bench --bench fig_sharding`
+//! CI smoke: `MEMINTELLI_BENCH_SMOKE=1 cargo bench --bench fig_sharding`
+//! (quick-scale workload and artifact regeneration).
+
+use memintelli::arch::{
+    uniform_fleet, ChipSpec, ReplicaModel, ReplicaSpec, Request, ServingRuntime, ServingSpec,
+};
+use memintelli::coordinator::experiments::{sharding_sweep, ShardingPoint};
+use memintelli::coordinator::{run_experiment, Scale, SimConfig};
+use memintelli::dpe::{DotProductEngine, RepairSpec, SliceMethod, SliceSpec};
+use memintelli::nn::models::mlp;
+use memintelli::nn::HwSpec;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+const SEED: u64 = 2024;
+
+fn by_label<'a>(pts: &'a [ShardingPoint], label: &str) -> &'a ShardingPoint {
+    pts.iter()
+        .find(|p| p.label == label)
+        .unwrap_or_else(|| panic!("sharding_sweep returned no '{label}' scenario"))
+}
+
+/// A small mixed pool (replica 0 single-chip, replica 1 sharded across
+/// two chips) served clean; the report is serialized with the same
+/// `ServeReport::to_json` helper the serving bench uses.
+fn mixed_pool_report_json(seed: u64) -> String {
+    let ideal = move || {
+        HwSpec::uniform(DotProductEngine::ideal((64, 64)), SliceMethod::int(SliceSpec::int8()))
+    };
+    let factory = Box::new(move |i: usize, _c: &ReplicaSpec| -> anyhow::Result<ReplicaModel> {
+        let m = mlp(96, 32, 8, Some(ideal()), seed);
+        if i % 2 == 0 {
+            let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+            Ok(ReplicaModel::Single(m.compile(&chip)?))
+        } else {
+            Ok(ReplicaModel::Sharded(m.compile_sharded(&uniform_fleet(2, 8, (64, 64)))?))
+        }
+    });
+    let spec = ServingSpec {
+        replicas: 2,
+        max_batch: 4,
+        shards_per_replica: 2,
+        ..ServingSpec::default()
+    };
+    let mut rt = ServingRuntime::new_mixed(spec, RepairSpec::none(), vec![96], factory)
+        .expect("mixed pool construction failed");
+    let work: Vec<Request> = (0..24)
+        .map(|j| Request {
+            arrive_us: j as u64 * 120,
+            sample: (0..96).map(|k| (((j * 7 + k) % 23) as f64) / 11.5 - 1.0).collect(),
+        })
+        .collect();
+    let report = rt.run(&work, &[]).expect("mixed pool run failed");
+    assert_eq!(report.completed(), 24, "mixed pool must complete every request");
+    report.to_json()
+}
+
+fn main() {
+    let smoke = std::env::var("MEMINTELLI_BENCH_SMOKE").is_ok();
+    let t0 = Instant::now();
+
+    let cfg = SimConfig { seed: SEED, ..SimConfig::default() };
+    let scale = if smoke { Scale::Quick } else { Scale::Full };
+    let pts = sharding_sweep(&cfg, scale).expect("sharding_sweep failed");
+
+    // Invariant 2: conservation — every micro-batch in every scenario
+    // (chip loss and lossy links included) ended Done or Failed.
+    for p in &pts {
+        assert!(p.conserved, "scenario '{}' lost samples", p.label);
+    }
+
+    // Invariant 1: clean sharded inference is bit-identical to the
+    // single-chip model, at every fleet size.
+    for p in pts.iter().filter(|p| p.label.starts_with("clean")) {
+        assert_eq!(
+            p.bit_exact,
+            Some(true),
+            "scenario '{}' diverged from single-chip infer_batched",
+            p.label
+        );
+        assert_eq!(p.failed_batches, 0, "clean scenario '{}' failed batches", p.label);
+        assert_eq!(p.completed_samples, p.samples, "clean scenario '{}' dropped", p.label);
+    }
+
+    // Invariant 4: the pipeline beats the single chip under the same
+    // clock once it has >= 2 chips.
+    let one = by_label(&pts, "clean, 1 chip(s)");
+    let two = by_label(&pts, "clean, 2 chip(s)");
+    assert!(
+        two.images_per_sec >= one.images_per_sec,
+        "2-chip pipeline throughput {:.0} img/s below single-chip {:.0} img/s",
+        two.images_per_sec,
+        one.images_per_sec
+    );
+    assert!(
+        two.makespan_us <= one.makespan_us,
+        "2-chip pipeline makespan {} µs above single-chip {} µs",
+        two.makespan_us,
+        one.makespan_us
+    );
+
+    // Invariant 3: failover-on accuracy strictly beats failover-off
+    // under the same chip loss.
+    let on = by_label(&pts, "chip loss, failover on");
+    let off = by_label(&pts, "chip loss, failover off");
+    assert!(on.failovers > 0, "failover-on scenario never failed over");
+    assert!(off.degraded_batches > 0, "failover-off scenario never degraded");
+    assert!(
+        on.accuracy > off.accuracy,
+        "failover-on accuracy {:.3} not above failover-off {:.3}",
+        on.accuracy,
+        off.accuracy
+    );
+
+    let lossy = by_label(&pts, "lossy links");
+    for p in &pts {
+        println!(
+            "[fig_sharding] {:<25} chips {} stages {} {}/{} ok, {} failed, {} degraded, \
+             {} failovers, {} link retries, makespan {} µs, {:.0} img/s, accuracy {:.3}",
+            p.label,
+            p.fleet_chips,
+            p.stages,
+            p.completed_samples,
+            p.samples,
+            p.failed_batches,
+            p.degraded_batches,
+            p.failovers,
+            p.link_retries,
+            p.makespan_us,
+            p.images_per_sec,
+            p.accuracy
+        );
+    }
+    println!(
+        "[fig_sharding] failover wins: accuracy {:.3} (off) -> {:.3} (on); \
+         pipeline wins: {} µs (1 chip) -> {} µs (2 chips); \
+         lossy links: {} retries, {} corruptions detected, conserved",
+        off.accuracy,
+        on.accuracy,
+        one.makespan_us,
+        two.makespan_us,
+        lossy.link_retries,
+        lossy.corrupt_detected
+    );
+
+    // Mixed single-chip/sharded pool through the serving runtime, via
+    // the shared ServeReport::to_json emitter.
+    let pool_json = mixed_pool_report_json(SEED);
+    println!("[fig_sharding] mixed pool: {pool_json}");
+
+    // Machine-readable record.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"fig_sharding\",\n");
+    json.push_str(
+        "  \"pipeline\": \"shard plan -> per-chip stages -> linked pipeline -> \
+         failover/degrade\",\n",
+    );
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    json.push_str("  \"workload\": \"mlp_784x16x10_int8_noise_free\",\n");
+    json.push_str("  \"samples_conserved\": true,\n");
+    json.push_str("  \"sharded_bit_exact\": true,\n");
+    let _ = writeln!(
+        json,
+        "  \"pipeline_beats_single_chip\": {{\"makespan_1chip_us\": {}, \
+         \"makespan_2chip_us\": {}}},",
+        one.makespan_us, two.makespan_us
+    );
+    let _ = writeln!(
+        json,
+        "  \"failover_beats_degraded\": {{\"accuracy_off\": {:.4}, \"accuracy_on\": {:.4}}},",
+        off.accuracy, on.accuracy
+    );
+    json.push_str("  \"points\": [\n");
+    for (i, p) in pts.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"scenario\": \"{}\", \"fleet_chips\": {}, \"stages\": {}, \
+             \"samples\": {}, \"completed_samples\": {}, \"failed_batches\": {}, \
+             \"degraded_batches\": {}, \"failovers\": {}, \"link_retries\": {}, \
+             \"corrupt_detected\": {}, \"makespan_us\": {}, \"images_per_sec\": {:.2}, \
+             \"accuracy\": {:.4}, \"conserved\": {}}}",
+            p.label,
+            p.fleet_chips,
+            p.stages,
+            p.samples,
+            p.completed_samples,
+            p.failed_batches,
+            p.degraded_batches,
+            p.failovers,
+            p.link_retries,
+            p.corrupt_detected,
+            p.makespan_us,
+            p.images_per_sec,
+            p.accuracy,
+            p.conserved
+        );
+        json.push_str(if i + 1 < pts.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n");
+    let _ = writeln!(json, "  \"mixed_pool\": {pool_json},");
+    let _ = writeln!(json, "  \"total_s\": {:.3}", t0.elapsed().as_secs_f64());
+    json.push_str("}\n");
+    std::fs::write("BENCH_sharding.json", &json).expect("writing BENCH_sharding.json");
+    println!("\nwrote BENCH_sharding.json");
+
+    // Paper-style artifact: the fig_sharding scenario table.
+    run_experiment("fig_sharding", &cfg, scale).expect("experiment failed");
+    println!("\n[fig_sharding] total {:.1} s", t0.elapsed().as_secs_f64());
+}

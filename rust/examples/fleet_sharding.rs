@@ -1,0 +1,153 @@
+//! fleet_sharding: a model sharded across a chip fleet, end to end.
+//!
+//! ```bash
+//! cd rust && cargo run --release --example fleet_sharding
+//! ```
+//!
+//! Shards an MLP(96→32→8) INT8 model across a three-chip fleet (two
+//! pipeline stages plus one spare), prints the shard plan, then:
+//!
+//! - runs the pipeline clean and asserts the outputs are **bit-identical**
+//!   to a single-chip `MappedModel::infer_batched` twin — partitioning is
+//!   purely spatial on noise-free engines;
+//! - kills chip 0 (the stage-0 fault domain) mid-run with a
+//!   `ChipFaultSpec` and prints the recorded timeline: the in-flight
+//!   micro-batch re-runs, the stage fails over onto the spare chip
+//!   (template reprogram + placement substitution), and the stream
+//!   finishes without losing a sample;
+//! - asserts conservation (every micro-batch ends `Done` or `Failed`)
+//!   and that the failed-over outputs are *still* bit-identical — the
+//!   noise-free reprogram restores the exact weights.
+//!
+//! Every knob comes from the `[fleet]` TOML section in production runs
+//! (`memintelli run fig_sharding`, see `examples/README.md`); here the
+//! spec is built inline so the timeline stays small and readable.
+
+use memintelli::arch::{
+    uniform_fleet, BatchOutcome, ChipFaultSpec, ChipSpec, FleetEventKind, FleetSpec,
+};
+use memintelli::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+use memintelli::nn::models::mlp;
+use memintelli::nn::HwSpec;
+use memintelli::tensor::Tensor;
+
+const SEED: u64 = 41;
+
+fn ideal_hw() -> HwSpec {
+    HwSpec::uniform(DotProductEngine::ideal((64, 64)), SliceMethod::int(SliceSpec::int8()))
+}
+
+fn main() -> anyhow::Result<()> {
+    // The same template three times (compile consumes the model): a
+    // single-chip twin for the bit-identity reference, plus two sharded
+    // instances (clean run, chip-loss run). Same seed ⇒ same weights.
+    let twin = {
+        let m = mlp(96, 32, 8, Some(ideal_hw()), SEED);
+        let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+        m.compile(&chip)?
+    };
+
+    // Three chips of 8 arrays each: stage 0 takes layer 0..3 (8 planes),
+    // stage 1 takes layer 3..4 (4 planes), chip 2 stays spare.
+    let fleet = uniform_fleet(3, 8, (64, 64));
+    let mut sharded = mlp(96, 32, 8, Some(ideal_hw()), SEED).compile_sharded(&fleet)?;
+    println!("=== shard plan ===\n\n{}", sharded.plan().report());
+
+    // Deterministic 32-sample workload: 4 micro-batches of 8.
+    let n = 32;
+    let x = Tensor::from_vec(
+        &[n, 96],
+        (0..n * 96).map(|i| (((i * 7) % 23) as f64) / 11.5 - 1.0).collect(),
+    );
+    let spec = FleetSpec::default();
+
+    // Clean pipeline run: bit-identical to the single-chip twin.
+    let clean = sharded.run(&x, &spec, &[])?;
+    let y_ref = twin.infer_batched(&x, n);
+    let y_clean = clean.output_tensor().expect("clean run completed every batch");
+    assert_eq!(y_clean.shape, y_ref.shape);
+    let exact = |a: &Tensor, b: &Tensor| {
+        a.data.iter().zip(&b.data).all(|(p, q)| p.to_bits() == q.to_bits())
+    };
+    assert!(exact(&y_clean, &y_ref), "clean sharded run must match the single-chip twin");
+    println!(
+        "clean run    : {}/{} batches done in {} µs ({:.0} images/sec), bit-identical to twin\n",
+        clean.completed(),
+        clean.outcomes.len(),
+        clean.makespan_us,
+        clean.images_per_sec()
+    );
+
+    // Chip-loss run: kill chip 0 a third of the way through the clean
+    // makespan — stage 0 loses its fault domain mid-stream.
+    let fault_at = (clean.makespan_us / 3).max(1);
+    let mut survivor = mlp(96, 32, 8, Some(ideal_hw()), SEED).compile_sharded(&fleet)?;
+    let report = survivor.run(&x, &spec, &[ChipFaultSpec { at_us: fault_at, chip: 0 }])?;
+
+    println!("=== chip-loss timeline (chip 0 dies at {fault_at} µs) ===\n");
+    for e in &report.events {
+        let t = e.at_us;
+        match &e.kind {
+            FleetEventKind::ChipFault { chip } => {
+                println!("{t:>7} µs  FAULT     chip {chip} went dark")
+            }
+            FleetEventKind::Failover { stage, to_chips } => {
+                println!("{t:>7} µs  failover  stage {stage} -> chips {to_chips:?}")
+            }
+            FleetEventKind::Degraded { stage, condemned } => println!(
+                "{t:>7} µs  DEGRADED  stage {stage}: {condemned} group(s) condemned in place"
+            ),
+            FleetEventKind::Rerun { stage, batch } => {
+                println!("{t:>7} µs  rerun     batch {batch} re-runs on stage {stage}")
+            }
+            FleetEventKind::LinkTimeout { stage, batch, attempt } => println!(
+                "{t:>7} µs  timeout   batch {batch} hop into stage {stage} (attempt {attempt})"
+            ),
+            FleetEventKind::CorruptDetected { stage, batch, attempt } => println!(
+                "{t:>7} µs  corrupt   batch {batch} hop into stage {stage} (attempt {attempt}): \
+                 checksum caught it"
+            ),
+            FleetEventKind::BatchFailed { batch, stage } => {
+                println!("{t:>7} µs  FAILED    batch {batch} at stage {stage}")
+            }
+        }
+    }
+
+    println!("\n=== outcome ===\n");
+    for (b, o) in report.outcomes.iter().enumerate() {
+        match o {
+            BatchOutcome::Done { completed_us, degraded } => println!(
+                "batch {b}: done at {completed_us} µs{}",
+                if *degraded { " (DEGRADED)" } else { "" }
+            ),
+            BatchOutcome::Failed { error, at_us } => {
+                println!("batch {b}: FAILED at {at_us} µs ({error})")
+            }
+        }
+    }
+    let failovers = report
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, FleetEventKind::Failover { .. }))
+        .count();
+    println!(
+        "\nchips down   : {:?}  (spares left: {})",
+        survivor.chip_down(),
+        survivor.spares_left()
+    );
+    println!("failovers    : {failovers}; degraded report: {:?}", survivor.degraded().is_some());
+    println!(
+        "samples      : {}/{} completed in {} µs ({:.0} images/sec)",
+        report.completed_samples(),
+        report.samples,
+        report.makespan_us,
+        report.images_per_sec()
+    );
+
+    assert!(report.conserved(), "every micro-batch must end Done or Failed");
+    assert!(failovers >= 1, "losing chip 0 must trigger a stage failover");
+    let y_failover = report.output_tensor().expect("failover kept every batch alive");
+    assert!(exact(&y_failover, &y_ref), "failover reprogram must restore exact outputs");
+    println!("\nfailed-over outputs are bit-identical to the single-chip twin");
+    Ok(())
+}

@@ -1,0 +1,1610 @@
+//! Multi-chip sharded execution: chip-level fault domains, pipeline
+//! parallelism, failover, and re-replication.
+//!
+//! One [`super::ChipSpec`] caps how large a model the single-chip
+//! [`super::MappedModel`] path can serve. This module shards a
+//! [`crate::nn::Sequential`] across an **ordered fleet** of chips:
+//!
+//! - [`ShardPlan`] — the partition: contiguous layer runs become
+//!   *stages*, each owning one chip; a single layer too big for any one
+//!   chip is **block-split** across a run of homogeneous chips (the
+//!   stage's chip is their [`union_chip`], whose tile boundaries include
+//!   the chip boundaries — so no weight block group ever straddles a
+//!   chip, by the same invariant [`super::TileAllocator`] enforces for
+//!   tiles). Chips left over become the fleet's spare pool.
+//! - [`ShardedModel`] — the compiled result: one per-stage
+//!   [`super::MappedModel`] each programmed on its own chip, chained by
+//!   simulated inter-chip links. [`ShardedModel::infer_batched`] passes
+//!   the full batch stage to stage, so quantization stays batch-global
+//!   and the output is **bit-identical** to the single-chip
+//!   `MappedModel::infer_batched` on noise-free engines (each stage
+//!   reprograms at chip-local streams, so on *noisy* engines the
+//!   sharded model draws different programming noise — same trade as a
+//!   replica pool; the noise-free contract is exact and hard-asserted).
+//! - [`ShardedModel::run`] — the pipeline executor: micro-batches flow
+//!   through the stages under a deterministic simulated clock (compute
+//!   is real, only duration is modeled — the same philosophy as
+//!   [`super::serve`]); successive micro-batches overlap across stages,
+//!   so fleet throughput beats the equivalent single chip.
+//!
+//! **Fault domains.** [`ChipFaultSpec`] kills a whole chip mid-run;
+//! [`LinkSpec`] injects per-hop timeouts and transfer corruption.
+//! Corrupted transfers are *detected* (a column-checksum over the
+//! payload, the same ABFT idea the repair probes use) and retransmitted
+//! under bounded retry/backoff; exhausting the hop budget fails the
+//! micro-batch with a typed [`FleetError`] — conserved, never silently
+//! dropped. On chip loss, a stage **fails over**: its layers re-compile
+//! onto spare chips (reprogramming from the cached `WeightTemplate`s —
+//! the delta path reuses clean digits and redraws only the new slots'
+//! streams), paying `failover_us` of downtime; when no spare fits, the
+//! dead chip's block groups are condemned in place (exact-zero
+//! contribution, [`super::repair::DegradedReport`]) and the fleet keeps
+//! serving degraded — which is why failover-on accuracy strictly beats
+//! failover-off under the same faults.
+
+use super::repair::DegradedReport;
+use super::{ChipSpec, CoreDemand, MappedModel, Placement, TileAllocator};
+use crate::dpe::RepairSpec;
+use crate::nn::Sequential;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use std::fmt::Write as _;
+
+/// Inter-chip link model: transfer cost, hop deadline, bounded
+/// retry/backoff, and the injected failure rates (TOML `[fleet]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    /// Fixed per-transfer latency (µs).
+    pub base_us: u64,
+    /// Additional latency per sample in the micro-batch (µs).
+    pub per_sample_us: u64,
+    /// A hop that has not completed by this deadline counts as timed out.
+    pub hop_deadline_us: u64,
+    /// Retransmissions allowed per hop after the first attempt.
+    pub max_retries: usize,
+    /// Backoff before retry `k` is `retry_backoff_us << (k-1)` (µs).
+    pub retry_backoff_us: u64,
+    /// Probability a hop attempt times out (drops the transfer).
+    pub drop_rate: f64,
+    /// Probability a hop attempt corrupts the payload in flight (the
+    /// checksum detects it and the receiver requests a retransmit).
+    pub corrupt_rate: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        LinkSpec {
+            base_us: 50,
+            per_sample_us: 5,
+            hop_deadline_us: 10_000,
+            max_retries: 2,
+            retry_backoff_us: 200,
+            drop_rate: 0.0,
+            corrupt_rate: 0.0,
+        }
+    }
+}
+
+/// Fleet execution parameters (TOML `[fleet]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Samples per micro-batch flowing through the pipeline.
+    pub micro_batch: usize,
+    /// Fixed per-stage dispatch cost (µs).
+    pub service_base_us: u64,
+    /// Per-sample compute cost of the *whole* model (µs); each stage
+    /// charges its share, proportional to the digit planes it holds.
+    pub service_per_sample_us: u64,
+    pub link: LinkSpec,
+    /// Re-replicate lost stages onto spare chips; `false` degrades only.
+    pub failover: bool,
+    /// Downtime to reprogram a stage onto spares (µs).
+    pub failover_us: u64,
+    /// Seed for the link fault draws (per-attempt streams).
+    pub seed: u64,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            micro_batch: 8,
+            service_base_us: 200,
+            service_per_sample_us: 50,
+            link: LinkSpec::default(),
+            failover: true,
+            failover_us: 20_000,
+            seed: 0x0F1E_E7,
+        }
+    }
+}
+
+/// A whole-chip failure injected at an absolute simulation time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChipFaultSpec {
+    pub at_us: u64,
+    /// Fleet chip index (a stage member or a spare).
+    pub chip: usize,
+}
+
+/// Typed micro-batch failure — the only way a batch can fail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetError {
+    /// Every allowed attempt of an inter-stage hop timed out or was
+    /// corrupted: the micro-batch never reached stage `stage`.
+    LinkFailed { batch: usize, stage: usize, attempts: usize },
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::LinkFailed { batch, stage, attempts } => write!(
+                f,
+                "micro-batch {batch}: link into stage {stage} failed after {attempts} attempts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// Timeline entry of a fleet run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetEvent {
+    pub at_us: u64,
+    pub kind: FleetEventKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetEventKind {
+    /// A chip died (fault applied at its injection time).
+    ChipFault { chip: usize },
+    /// A stage re-replicated onto spare chips.
+    Failover { stage: usize, to_chips: Vec<usize> },
+    /// No spare fit: the dead chip's groups were condemned in place.
+    Degraded { stage: usize, condemned: usize },
+    /// A chip died mid-execution; the micro-batch re-runs on the
+    /// post-transition stage.
+    Rerun { stage: usize, batch: usize },
+    /// A hop attempt timed out.
+    LinkTimeout { stage: usize, batch: usize, attempt: usize },
+    /// A hop attempt delivered a corrupted payload; the checksum caught
+    /// it and a retransmit was requested.
+    CorruptDetected { stage: usize, batch: usize, attempt: usize },
+    /// A micro-batch exhausted its hop budget and failed.
+    BatchFailed { batch: usize, stage: usize },
+}
+
+/// Outcome of one micro-batch: every batch ends in exactly one of these.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchOutcome {
+    Done { completed_us: u64, degraded: bool },
+    Failed { error: FleetError, at_us: u64 },
+}
+
+/// One pipeline stage of the plan: a contiguous layer run on one chip
+/// (or, for a block-split layer, on a run of homogeneous chips fused
+/// into one union chip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    /// Fleet chip indices this stage occupies (ascending, contiguous).
+    pub chips: Vec<usize>,
+    /// The chip the stage compiles onto ([`union_chip`] of `chips`).
+    pub chip: ChipSpec,
+    /// Model layer range `[start, end)` (digital layers ride with the
+    /// preceding hardware layer's stage).
+    pub layers: (usize, usize),
+    /// The stage's core demands (global model layer indices).
+    pub demands: Vec<CoreDemand>,
+    /// The allocation of `demands` on `chip`.
+    pub placement: Placement,
+}
+
+/// The fleet partition: ordered stages plus the spare-chip pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    pub stages: Vec<StagePlan>,
+    /// Fleet chips not owned by any stage, in ascending order.
+    pub spares: Vec<usize>,
+    pub fleet: Vec<ChipSpec>,
+    pub n_layers: usize,
+}
+
+/// Fuse a run of fleet chips into one chip whose tiles are the members'
+/// tiles concatenated in order. Members must agree on tile geometry
+/// (`arrays_per_tile`, `array`, `spares_per_tile`): only then do the
+/// union's tile boundaries include every chip boundary, which is what
+/// keeps a block group from straddling chips.
+pub fn union_chip(fleet: &[ChipSpec], members: &[usize]) -> anyhow::Result<ChipSpec> {
+    if members.is_empty() {
+        anyhow::bail!("a stage needs at least one chip");
+    }
+    let first = &fleet[members[0]];
+    let mut tiles = 0usize;
+    for &m in members {
+        let c = &fleet[m];
+        if c.arrays_per_tile != first.arrays_per_tile
+            || c.array != first.array
+            || c.spares_per_tile != first.spares_per_tile
+        {
+            anyhow::bail!(
+                "cannot split a layer across heterogeneous chips: chip {m} \
+                 ({} arrays/tile of {:?}, {} spares) differs from chip {} \
+                 ({} arrays/tile of {:?}, {} spares)",
+                c.arrays_per_tile,
+                c.array,
+                c.spares_per_tile,
+                members[0],
+                first.arrays_per_tile,
+                first.array,
+                first.spares_per_tile
+            );
+        }
+        tiles += c.tiles;
+    }
+    let mut u = ChipSpec::new(tiles, first.arrays_per_tile, first.array);
+    u.spares_per_tile = first.spares_per_tile;
+    Ok(u)
+}
+
+/// A homogeneous fleet of `chips` single-tile chips of
+/// `arrays_per_chip` arrays each — the simplest fleet shape (and the
+/// one the TOML `[fleet]` section builds).
+pub fn uniform_fleet(
+    chips: usize,
+    arrays_per_chip: usize,
+    array: (usize, usize),
+) -> Vec<ChipSpec> {
+    (0..chips).map(|_| ChipSpec::single_tile(arrays_per_chip, array)).collect()
+}
+
+impl ShardPlan {
+    /// Partition `demands` (model order, global layer indices) onto the
+    /// ordered fleet. Greedy: extend the current stage while its chip
+    /// still fits the next layer; close it and move to the next chip
+    /// otherwise. A layer that does not fit alone on an empty chip is
+    /// block-split across a widening run of homogeneous chips.
+    /// Deterministic — no RNG anywhere in planning.
+    pub fn plan(
+        fleet: &[ChipSpec],
+        demands: &[CoreDemand],
+        n_layers: usize,
+    ) -> anyhow::Result<ShardPlan> {
+        if fleet.is_empty() {
+            anyhow::bail!("cannot shard onto an empty fleet");
+        }
+        // Group demands by model layer (a layer's cores stay together).
+        let mut layer_demands: Vec<(usize, Vec<CoreDemand>)> = Vec::new();
+        for d in demands {
+            match layer_demands.last_mut() {
+                Some((li, v)) if *li == d.layer => v.push(d.clone()),
+                _ => layer_demands.push((d.layer, vec![d.clone()])),
+            }
+        }
+        let mut stages: Vec<StagePlan> = Vec::new();
+        if layer_demands.is_empty() {
+            // Purely digital model: one stage on chip 0, nothing placed.
+            let placement = TileAllocator::allocate(&fleet[0], &[])?;
+            stages.push(StagePlan {
+                chips: vec![0],
+                chip: fleet[0].clone(),
+                layers: (0, n_layers),
+                demands: Vec::new(),
+                placement,
+            });
+            return Ok(ShardPlan {
+                stages,
+                spares: (1..fleet.len()).collect(),
+                fleet: fleet.to_vec(),
+                n_layers,
+            });
+        }
+        let mut c = 0usize; // next free fleet chip
+        let mut cur: Vec<CoreDemand> = Vec::new();
+        let mut cur_first_layer = 0usize;
+        let mut cur_placement: Option<Placement> = None;
+        let mut i = 0usize;
+        while i < layer_demands.len() {
+            let (li, lds) = &layer_demands[i];
+            if c >= fleet.len() {
+                anyhow::bail!(
+                    "fleet exhausted: {} chips hold layers up to {} but layer {} ({}) \
+                     still needs {} digit planes",
+                    fleet.len(),
+                    cur_first_layer,
+                    li,
+                    lds[0].name,
+                    lds.iter().map(CoreDemand::planes).sum::<usize>()
+                );
+            }
+            let mut trial = cur.clone();
+            trial.extend(lds.iter().cloned());
+            match TileAllocator::allocate(&fleet[c], &trial) {
+                Ok(p) => {
+                    if cur.is_empty() {
+                        cur_first_layer = *li;
+                    }
+                    cur = trial;
+                    cur_placement = Some(p);
+                    i += 1;
+                }
+                Err(alloc_err) => {
+                    if !cur.is_empty() {
+                        // Close the stage on chip c; retry this layer on
+                        // the next chip.
+                        stages.push(StagePlan {
+                            chips: vec![c],
+                            chip: fleet[c].clone(),
+                            layers: (cur_first_layer, 0), // end fixed below
+                            demands: std::mem::take(&mut cur),
+                            placement: cur_placement.take().expect("stage had a placement"),
+                        });
+                        c += 1;
+                    } else {
+                        // Block-split: widen a union of chips until the
+                        // lone layer fits.
+                        let mut width = 2usize;
+                        loop {
+                            if c + width > fleet.len() {
+                                anyhow::bail!(
+                                    "fleet exhausted splitting layer {} ({}) across chips \
+                                     {c}..{}: {alloc_err:#}",
+                                    li,
+                                    lds[0].name,
+                                    fleet.len()
+                                );
+                            }
+                            let members: Vec<usize> = (c..c + width).collect();
+                            let u = union_chip(fleet, &members)?;
+                            if let Ok(p) = TileAllocator::allocate(&u, lds) {
+                                stages.push(StagePlan {
+                                    chips: members,
+                                    chip: u,
+                                    layers: (*li, 0),
+                                    demands: lds.clone(),
+                                    placement: p,
+                                });
+                                c += width;
+                                i += 1;
+                                break;
+                            }
+                            width += 1;
+                        }
+                    }
+                }
+            }
+        }
+        if !cur.is_empty() {
+            stages.push(StagePlan {
+                chips: vec![c],
+                chip: fleet[c].clone(),
+                layers: (cur_first_layer, 0),
+                demands: cur,
+                placement: cur_placement.take().expect("stage had a placement"),
+            });
+            c += 1;
+        }
+        // Fix layer ranges: stage 0 absorbs any leading digital layers;
+        // each stage ends where the next begins; the last takes the tail.
+        let mut starts: Vec<usize> = stages.iter().map(|s| s.layers.0).collect();
+        starts[0] = 0;
+        let n_stages = stages.len();
+        for (si, stage) in stages.iter_mut().enumerate() {
+            let end = if si + 1 < n_stages { starts[si + 1] } else { n_layers };
+            stage.layers = (starts[si], end);
+        }
+        Ok(ShardPlan {
+            stages,
+            spares: (c..fleet.len()).collect(),
+            fleet: fleet.to_vec(),
+            n_layers,
+        })
+    }
+
+    /// Re-place stage `stage`'s demands onto `replacement` chips (the
+    /// failover planner's bookkeeping): validates the union and the
+    /// allocation, swaps the stage's chips, and removes the used chips
+    /// from the spare pool. The old member chips are *not* returned to
+    /// the pool here — the caller knows which of them are still alive.
+    pub fn substitute(&self, stage: usize, replacement: &[usize]) -> anyhow::Result<ShardPlan> {
+        let u = union_chip(&self.fleet, replacement)?;
+        let placement = TileAllocator::allocate(&u, &self.stages[stage].demands)?;
+        let mut plan = self.clone();
+        plan.stages[stage].chips = replacement.to_vec();
+        plan.stages[stage].chip = u;
+        plan.stages[stage].placement = placement;
+        plan.spares.retain(|s| !replacement.contains(s));
+        Ok(plan)
+    }
+
+    /// Tile range `[start, end)` of each member chip within stage
+    /// `stage`'s union chip — the chip-boundary map used to decide which
+    /// block groups die with a member.
+    pub fn member_tiles(&self, stage: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        for &c in &self.stages[stage].chips {
+            let t = self.fleet[c].tiles;
+            out.push((off, off + t));
+            off += t;
+        }
+        out
+    }
+
+    /// Human-readable plan summary (the CLI/example view).
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "fleet: {} chips, {} stage(s), {} spare(s)",
+            self.fleet.len(),
+            self.stages.len(),
+            self.spares.len()
+        );
+        for (si, st) in self.stages.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "  stage {si}: chips {:?}  layers {}..{}  {} groups / {} planes{}",
+                st.chips,
+                st.layers.0,
+                st.layers.1,
+                st.demands.iter().map(|d| d.blocks).sum::<usize>(),
+                st.placement.total_planes(),
+                if st.chips.len() > 1 { "  (block-split)" } else { "" }
+            );
+        }
+        if !self.spares.is_empty() {
+            let _ = writeln!(s, "  spares: {:?}", self.spares);
+        }
+        s
+    }
+}
+
+/// One compiled pipeline stage.
+struct Stage {
+    /// `None` only transiently inside a failed failover (the run aborts
+    /// with the error in that case).
+    model: Option<MappedModel>,
+    /// Set when chip loss condemned groups in place (no spare fit).
+    degraded: bool,
+}
+
+/// The result of one [`ShardedModel::run`]: per-micro-batch outcomes and
+/// outputs, the event timeline, and the throughput accounting. Every
+/// input sample is in exactly one batch; every batch is `Done` or
+/// `Failed` — conservation is checkable, and checked, after every run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub outcomes: Vec<BatchOutcome>,
+    /// Per-batch flattened output rows; `None` iff the batch failed.
+    pub outputs: Vec<Option<Vec<f64>>>,
+    /// Per-sample output shape (without the leading batch dim).
+    pub out_shape: Vec<usize>,
+    pub micro_batch: usize,
+    pub samples: usize,
+    pub events: Vec<FleetEvent>,
+    pub makespan_us: u64,
+}
+
+impl FleetReport {
+    pub fn completed(&self) -> usize {
+        self.outcomes.iter().filter(|o| matches!(o, BatchOutcome::Done { .. })).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.outcomes.len() - self.completed()
+    }
+
+    /// Samples in completed batches.
+    pub fn completed_samples(&self) -> usize {
+        self.outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| matches!(o, BatchOutcome::Done { .. }))
+            .map(|(b, _)| self.batch_size(b))
+            .sum()
+    }
+
+    fn batch_size(&self, b: usize) -> usize {
+        (self.samples - b * self.micro_batch).min(self.micro_batch)
+    }
+
+    /// Batches that completed on a degraded stage.
+    pub fn degraded_batches(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| matches!(o, BatchOutcome::Done { degraded: true, .. }))
+            .count()
+    }
+
+    pub fn failovers(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e.kind, FleetEventKind::Failover { .. })).count()
+    }
+
+    pub fn link_retries(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.kind,
+                    FleetEventKind::LinkTimeout { .. } | FleetEventKind::CorruptDetected { .. }
+                )
+            })
+            .count()
+    }
+
+    pub fn corrupt_detected(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, FleetEventKind::CorruptDetected { .. }))
+            .count()
+    }
+
+    /// Completed samples per second of simulated wall-clock.
+    pub fn images_per_sec(&self) -> f64 {
+        if self.makespan_us == 0 {
+            return 0.0;
+        }
+        self.completed_samples() as f64 * 1e6 / self.makespan_us as f64
+    }
+
+    /// Request conservation: every sample sits in exactly one batch,
+    /// every batch has exactly one outcome, and outputs are present
+    /// exactly for the completed ones.
+    pub fn conserved(&self) -> bool {
+        let n_batches = if self.micro_batch == 0 {
+            0
+        } else {
+            self.samples.div_ceil(self.micro_batch)
+        };
+        self.outcomes.len() == n_batches
+            && self.outputs.len() == n_batches
+            && self.outcomes.iter().zip(&self.outputs).enumerate().all(|(b, (o, out))| {
+                let sample_len: usize = self.out_shape.iter().product();
+                match (o, out) {
+                    (BatchOutcome::Done { .. }, Some(rows)) => {
+                        rows.len() == self.batch_size(b) * sample_len
+                    }
+                    (BatchOutcome::Failed { .. }, None) => true,
+                    _ => false,
+                }
+            })
+    }
+
+    /// Assemble the full output tensor — `None` unless every batch
+    /// completed.
+    pub fn output_tensor(&self) -> Option<Tensor> {
+        let mut data = Vec::new();
+        for out in &self.outputs {
+            data.extend_from_slice(out.as_deref()?);
+        }
+        let mut shape = vec![self.samples];
+        shape.extend_from_slice(&self.out_shape);
+        Some(Tensor::from_vec(&shape, data))
+    }
+}
+
+/// A model compiled across a chip fleet. See the module docs.
+pub struct ShardedModel {
+    stages: Vec<Stage>,
+    plan: ShardPlan,
+    /// Per-fleet-chip liveness (faults applied so far).
+    chip_down: Vec<bool>,
+    /// Chip-loss condemnations (global core indices), merged with the
+    /// per-stage self-heal reports into [`ShardedModel::degraded`].
+    fleet_degraded: Option<DegradedReport>,
+    merged_degraded: Option<DegradedReport>,
+}
+
+impl ShardedModel {
+    /// Shard `model` across `fleet`: plan the partition, split the layer
+    /// list by stage, and compile each stage onto its chip (programming
+    /// it at chip-local streams). Errors on array-shape mismatch, an
+    /// empty fleet, or a fleet too small for the model.
+    pub fn compile(model: Sequential, fleet: &[ChipSpec]) -> anyhow::Result<ShardedModel> {
+        let n_layers = model.layers.len();
+        // Collect demands (global layer indices) and check array shapes
+        // up front — the per-stage compiles repeat the check, but failing
+        // here names the offending layer before any chip is programmed.
+        let mut demands: Vec<CoreDemand> = Vec::new();
+        for (li, l) in model.layers.iter().enumerate() {
+            let name = l.name();
+            for core in l.cores() {
+                if let Some((blocks, slices)) = core.demand() {
+                    if let Some(hw) = core.hw() {
+                        if !fleet.is_empty() && hw.engine.cfg.array != fleet[0].array {
+                            anyhow::bail!(
+                                "cannot shard model onto fleet: layer {li} ({name}) engine \
+                                 array {:?} != fleet array {:?}",
+                                hw.engine.cfg.array,
+                                fleet[0].array
+                            );
+                        }
+                    }
+                    demands.push(CoreDemand { layer: li, name, blocks, slices });
+                }
+            }
+        }
+        for (ci, chip) in fleet.iter().enumerate() {
+            if chip.array != fleet[0].array {
+                anyhow::bail!(
+                    "fleet chips disagree on array shape: chip {ci} is {:?}, chip 0 is {:?}",
+                    chip.array,
+                    fleet[0].array
+                );
+            }
+        }
+        let plan = ShardPlan::plan(fleet, &demands, n_layers)?;
+        // Split the layer list by stage and compile each run onto its
+        // chip. The struct literal (not `Sequential::new`) keeps the
+        // cores' current streams until `compile` assigns the real ones —
+        // avoiding a pointless reprogram at virtual streams in between.
+        let mut layers = model.layers;
+        let mut stages = Vec::with_capacity(plan.stages.len());
+        for st in &plan.stages {
+            let count = st.layers.1 - st.layers.0;
+            let tail = layers.split_off(count.min(layers.len()));
+            let stage_layers = std::mem::replace(&mut layers, tail);
+            let stage_model = Sequential { layers: stage_layers };
+            let mapped = stage_model.compile(&st.chip)?;
+            stages.push(Stage { model: Some(mapped), degraded: false });
+        }
+        debug_assert!(layers.is_empty(), "every layer belongs to a stage");
+        let n_chips = plan.fleet.len();
+        Ok(ShardedModel {
+            stages,
+            plan,
+            chip_down: vec![false; n_chips],
+            fleet_degraded: None,
+            merged_degraded: None,
+        })
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The compiled model of one stage.
+    pub fn stage_model(&self, stage: usize) -> &MappedModel {
+        self.stages[stage].model.as_ref().expect("stage model present")
+    }
+
+    /// Per-chip liveness after the faults applied so far.
+    pub fn chip_down(&self) -> &[bool] {
+        &self.chip_down
+    }
+
+    /// Spare chips still alive.
+    pub fn spares_left(&self) -> usize {
+        self.plan.spares.iter().filter(|&&c| !self.chip_down[c]).count()
+    }
+
+    /// Full-batch inference through the stage chain (each stage sees the
+    /// whole batch, so quantization stays batch-global): bit-identical
+    /// to the single-chip `MappedModel::infer` on noise-free engines.
+    pub fn infer(&self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        for st in &self.stages {
+            h = st.model.as_ref().expect("stage model present").infer(&h);
+        }
+        h
+    }
+
+    /// Micro-batched inference through the stage chain — the exact
+    /// counterpart of [`MappedModel::infer_batched`] (see module docs
+    /// for the bit-identity contract).
+    pub fn infer_batched(&self, x: &Tensor, micro_batch: usize) -> Tensor {
+        let mut h = x.clone();
+        for st in &self.stages {
+            h = st.model.as_ref().expect("stage model present").infer_batched(&h, micro_batch);
+        }
+        h
+    }
+
+    /// Condemned-group count per placed core across all stages (global
+    /// core order).
+    pub fn condemned_per_layer(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for st in &self.stages {
+            out.extend(st.model.as_ref().expect("stage model present").condemned_per_layer());
+        }
+        out
+    }
+
+    /// The merged degraded report (chip-loss condemnations plus the
+    /// stages' own self-heal leftovers), if any.
+    pub fn degraded(&self) -> Option<&DegradedReport> {
+        self.merged_degraded.as_ref()
+    }
+
+    /// Probe every stage without mutating programmed state; core indices
+    /// in the merged report are global (stage offsets applied).
+    pub fn health_probe(&self, spec: &RepairSpec) -> anyhow::Result<super::HealthReport> {
+        let mut health = super::HealthReport::default();
+        let mut off = 0usize;
+        for st in &self.stages {
+            let m = st.model.as_ref().expect("stage model present");
+            let h = m.health_probe(spec)?;
+            health.probe_matmuls += h.probe_matmuls;
+            for mut sh in h.slots {
+                sh.layer += off;
+                health.slots.push(sh);
+            }
+            off += m.placement().layers.len();
+        }
+        Ok(health)
+    }
+
+    /// One self-heal round per stage (program-and-verify, probe, remap
+    /// to spares, degrade), merged into one outcome with global core
+    /// indices.
+    pub fn self_heal(&mut self, spec: &RepairSpec) -> anyhow::Result<super::RepairOutcome> {
+        let mut out = super::RepairOutcome::default();
+        let mut off = 0usize;
+        for st in self.stages.iter_mut() {
+            let m = st.model.as_mut().expect("stage model present");
+            let o = m.self_heal(spec)?;
+            out.program_reports.extend(o.program_reports);
+            out.health.probe_matmuls += o.health.probe_matmuls;
+            for mut sh in o.health.slots {
+                sh.layer += off;
+                out.health.slots.push(sh);
+            }
+            for mut mv in o.plan.moves {
+                mv.layer += off;
+                out.plan.moves.push(mv);
+            }
+            out.plan.unplaced.extend(o.plan.unplaced.into_iter().map(|(l, b)| (l + off, b)));
+            off += m.placement().layers.len();
+        }
+        self.refresh_degraded();
+        out.degraded = self.merged_degraded.clone();
+        Ok(out)
+    }
+
+    fn refresh_degraded(&mut self) {
+        let mut merged = DegradedReport::default();
+        let mut any = false;
+        if let Some(fd) = &self.fleet_degraded {
+            merged.merge(fd, 0);
+            any = true;
+        }
+        let mut off = 0usize;
+        for st in &self.stages {
+            let m = st.model.as_ref().expect("stage model present");
+            if let Some(d) = m.degraded() {
+                merged.merge(d, off);
+                any = true;
+            }
+            off += m.placement().layers.len();
+        }
+        self.merged_degraded = if any { Some(merged) } else { None };
+    }
+
+    /// Simulated per-stage service time for a `bs`-sample micro-batch:
+    /// the stage charges its plane share of the whole model's per-sample
+    /// cost; a block-split stage divides the work across its member
+    /// chips and pays a reduce term per extra member.
+    fn service_us(&self, stage: usize, bs: usize, spec: &FleetSpec) -> u64 {
+        let stage_planes = self.plan.stages[stage].placement.total_planes() as u64;
+        let total: u64 =
+            self.plan.stages.iter().map(|st| st.placement.total_planes() as u64).sum();
+        let total = total.max(1);
+        let mut svc =
+            spec.service_base_us + (bs as u64 * spec.service_per_sample_us * stage_planes) / total;
+        let width = self.plan.stages[stage].chips.len() as u64;
+        if width > 1 {
+            svc = svc / width + spec.link.base_us * (width - 1);
+        }
+        svc.max(1)
+    }
+
+    /// Alive spare chips at `at_us`: never faulted so far, and no
+    /// injected fault at or before `at_us`.
+    fn find_spares(
+        &self,
+        stage: usize,
+        at_us: u64,
+        faults: &[ChipFaultSpec],
+    ) -> Option<Vec<usize>> {
+        let alive: Vec<usize> = self
+            .plan
+            .spares
+            .iter()
+            .copied()
+            .filter(|&c| {
+                !self.chip_down[c] && !faults.iter().any(|f| f.chip == c && f.at_us <= at_us)
+            })
+            .collect();
+        let demands = &self.plan.stages[stage].demands;
+        for width in 1..=alive.len() {
+            for start in 0..=alive.len() - width {
+                let members: Vec<usize> = alive[start..start + width].to_vec();
+                let Ok(u) = union_chip(&self.plan.fleet, &members) else { continue };
+                if TileAllocator::allocate(&u, demands).is_ok() {
+                    return Some(members);
+                }
+            }
+        }
+        None
+    }
+
+    /// Condemn the block groups whose home tiles belong to the dead
+    /// member chip — exact-zero contribution, fleet keeps serving.
+    fn degrade_stage(
+        &mut self,
+        stage: usize,
+        dead_chip: usize,
+        at_us: u64,
+        events: &mut Vec<FleetEvent>,
+    ) {
+        let ranges = self.plan.member_tiles(stage);
+        let pos = self.plan.stages[stage]
+            .chips
+            .iter()
+            .position(|&c| c == dead_chip)
+            .expect("dead chip is a stage member");
+        let (t0, t1) = ranges[pos];
+        let core_off: usize = self
+            .plan
+            .stages
+            .iter()
+            .take(stage)
+            .map(|st| st.placement.layers.len())
+            .sum();
+        let mut groups: Vec<(usize, usize)> = Vec::new();
+        let mut deg = self.fleet_degraded.take().unwrap_or_default();
+        for (ci, lp) in self.plan.stages[stage].placement.layers.iter().enumerate() {
+            for b in 0..lp.blocks {
+                let home = lp.slots[b * lp.slices];
+                if home.tile >= t0 && home.tile < t1 {
+                    groups.push((ci, b));
+                    deg.condemned.push((ci + core_off, b));
+                    deg.slots.push(home);
+                }
+            }
+        }
+        // A whole-chip loss is a full-scale miss for the dead groups.
+        deg.estimated_re_impact = deg.estimated_re_impact.max(1.0);
+        self.fleet_degraded = Some(deg);
+        self.stages[stage]
+            .model
+            .as_mut()
+            .expect("stage model present")
+            .condemn(&groups);
+        self.stages[stage].degraded = true;
+        self.refresh_degraded();
+        events.push(FleetEvent {
+            at_us,
+            kind: FleetEventKind::Degraded { stage, condemned: groups.len() },
+        });
+    }
+
+    /// Apply, in injection order, every not-yet-applied fault on this
+    /// stage's chips with `at_us <= up_to`: mark the chip dead, then
+    /// fail the stage over onto spares (re-replication) or condemn the
+    /// dead chip's groups in place.
+    #[allow(clippy::too_many_arguments)]
+    fn absorb_stage_faults(
+        &mut self,
+        stage: usize,
+        up_to: u64,
+        faults: &[ChipFaultSpec],
+        applied: &mut [bool],
+        spec: &FleetSpec,
+        stage_free: &mut [u64],
+        events: &mut Vec<FleetEvent>,
+    ) -> anyhow::Result<()> {
+        loop {
+            let next = faults
+                .iter()
+                .enumerate()
+                .filter(|(k, f)| {
+                    !applied[*k]
+                        && f.at_us <= up_to
+                        && self.plan.stages[stage].chips.contains(&f.chip)
+                })
+                .min_by_key(|(_, f)| (f.at_us, f.chip));
+            let Some((k, f)) = next else { return Ok(()) };
+            let f = *f;
+            applied[k] = true;
+            if self.chip_down[f.chip] {
+                continue; // duplicate injection on an already-dead chip
+            }
+            self.chip_down[f.chip] = true;
+            events.push(FleetEvent {
+                at_us: f.at_us,
+                kind: FleetEventKind::ChipFault { chip: f.chip },
+            });
+            let mut failed_over = false;
+            if spec.failover {
+                if let Some(members) = self.find_spares(stage, f.at_us, faults) {
+                    let new_plan = self.plan.substitute(stage, &members)?;
+                    let old = self.stages[stage].model.take().expect("stage model present");
+                    let mapped = old.into_model().compile(&new_plan.stages[stage].chip)?;
+                    debug_assert_eq!(
+                        *mapped.placement(),
+                        new_plan.stages[stage].placement,
+                        "substitute and compile disagree on the stage placement"
+                    );
+                    let old_chips = self.plan.stages[stage].chips.clone();
+                    self.plan = new_plan;
+                    // Surviving old members go back to the spare pool.
+                    for ch in old_chips {
+                        if !self.chip_down[ch] {
+                            self.plan.spares.push(ch);
+                        }
+                    }
+                    self.plan.spares.sort_unstable();
+                    self.stages[stage].model = Some(mapped);
+                    self.stages[stage].degraded = false;
+                    stage_free[stage] = stage_free[stage].max(f.at_us) + spec.failover_us;
+                    events.push(FleetEvent {
+                        at_us: f.at_us,
+                        kind: FleetEventKind::Failover { stage, to_chips: members },
+                    });
+                    failed_over = true;
+                }
+            }
+            if !failed_over {
+                self.degrade_stage(stage, f.chip, f.at_us, events);
+            }
+        }
+    }
+
+    /// One inter-stage hop under the link model: per-attempt fault draws
+    /// keyed by `(batch, stage, attempt)` — worker-count invariant.
+    /// Returns the arrival time at the next stage, or the typed failure
+    /// after the retry budget is spent.
+    #[allow(clippy::too_many_arguments)]
+    fn link_hop(
+        &self,
+        t: u64,
+        batch: usize,
+        stage: usize,
+        bs: usize,
+        payload: &[f64],
+        spec: &FleetSpec,
+        events: &mut Vec<FleetEvent>,
+    ) -> Result<u64, (FleetError, u64)> {
+        let link = &spec.link;
+        let transfer = link.base_us + bs as u64 * link.per_sample_us;
+        let mut t = t;
+        let attempts = link.max_retries + 1;
+        for attempt in 1..=attempts {
+            let mut rng = Pcg64::new(
+                spec.seed ^ 0x119C_C0DE,
+                ((batch as u64) << 24) | ((stage as u64) << 8) | attempt as u64,
+            );
+            let backoff = link.retry_backoff_us << ((attempt - 1).min(20) as u32);
+            if rng.uniform() < link.drop_rate {
+                t += link.hop_deadline_us;
+                events.push(FleetEvent {
+                    at_us: t,
+                    kind: FleetEventKind::LinkTimeout { stage, batch, attempt },
+                });
+                if attempt == attempts {
+                    return Err((FleetError::LinkFailed { batch, stage, attempts }, t));
+                }
+                t += backoff;
+                continue;
+            }
+            if rng.uniform() < link.corrupt_rate {
+                // Corrupt one word of a copy in flight; the receiver's
+                // column checksum over the payload catches the mismatch
+                // and requests a retransmit — the corrupted data never
+                // reaches compute.
+                let mut corrupted = payload.to_vec();
+                if !corrupted.is_empty() {
+                    let i = rng.below(corrupted.len());
+                    corrupted[i] = f64::from_bits(corrupted[i].to_bits() ^ (1u64 << 62));
+                }
+                let clean: f64 = payload.iter().sum();
+                let got: f64 = corrupted.iter().sum();
+                let detected = got.to_bits() != clean.to_bits();
+                debug_assert!(
+                    payload.is_empty() || detected,
+                    "checksum failed to detect a corrupted transfer"
+                );
+                let _ = detected;
+                t += transfer;
+                events.push(FleetEvent {
+                    at_us: t,
+                    kind: FleetEventKind::CorruptDetected { stage, batch, attempt },
+                });
+                if attempt == attempts {
+                    return Err((FleetError::LinkFailed { batch, stage, attempts }, t));
+                }
+                t += backoff;
+                continue;
+            }
+            return Ok(t + transfer);
+        }
+        unreachable!("the retry loop always returns")
+    }
+
+    /// Pipeline-parallel execution of `x` through the fleet under the
+    /// simulated clock, with chip faults and link faults injected. See
+    /// the module docs; every micro-batch ends `Done` or `Failed` and
+    /// the report's conservation check covers them all.
+    pub fn run(
+        &mut self,
+        x: &Tensor,
+        spec: &FleetSpec,
+        faults: &[ChipFaultSpec],
+    ) -> anyhow::Result<FleetReport> {
+        let samples = x.shape.first().copied().unwrap_or(0);
+        if samples == 0 {
+            anyhow::bail!("fleet run needs at least one sample");
+        }
+        let mb = spec.micro_batch.max(1);
+        let sample_len = x.numel() / samples;
+        let n_batches = samples.div_ceil(mb);
+        let n_stages = self.stages.len();
+        let mut stage_free = vec![0u64; n_stages];
+        let mut applied = vec![false; faults.len()];
+        let mut events: Vec<FleetEvent> = Vec::new();
+        let mut outcomes: Vec<BatchOutcome> = Vec::with_capacity(n_batches);
+        let mut outputs: Vec<Option<Vec<f64>>> = Vec::with_capacity(n_batches);
+        let mut out_shape: Vec<usize> = Vec::new();
+        for b in 0..n_batches {
+            let r0 = b * mb;
+            let r1 = (r0 + mb).min(samples);
+            let bs = r1 - r0;
+            let mut shape = vec![bs];
+            shape.extend_from_slice(&x.shape[1..]);
+            let mut h =
+                Tensor::from_vec(&shape, x.data[r0 * sample_len..r1 * sample_len].to_vec());
+            let mut t = 0u64;
+            let mut degraded = false;
+            let mut failure: Option<(FleetError, u64, usize)> = None;
+            for s in 0..n_stages {
+                if s > 0 {
+                    match self.link_hop(t, b, s, bs, &h.data, spec, &mut events) {
+                        Ok(tt) => t = tt,
+                        Err((e, at)) => {
+                            failure = Some((e, at, s));
+                            break;
+                        }
+                    }
+                }
+                // Dispatch under the fault clock: absorb everything due,
+                // then check the planned execution window for a chip
+                // death that would interrupt it — the batch re-runs on
+                // the post-transition stage.
+                loop {
+                    self.absorb_stage_faults(
+                        s, t, faults, &mut applied, spec, &mut stage_free, &mut events,
+                    )?;
+                    let service = self.service_us(s, bs, spec);
+                    let start = t.max(stage_free[s]);
+                    let done = start + service;
+                    let interrupt = faults
+                        .iter()
+                        .enumerate()
+                        .filter(|(k, f)| {
+                            !applied[*k]
+                                && f.at_us > start
+                                && f.at_us < done
+                                && self.plan.stages[s].chips.contains(&f.chip)
+                        })
+                        .map(|(_, f)| f.at_us)
+                        .min();
+                    if let Some(kill_at) = interrupt {
+                        events.push(FleetEvent {
+                            at_us: kill_at,
+                            kind: FleetEventKind::Rerun { stage: s, batch: b },
+                        });
+                        t = kill_at;
+                        continue;
+                    }
+                    stage_free[s] = done;
+                    t = done;
+                    break;
+                }
+                // Timing settled: now the real compute.
+                let model = self.stages[s].model.as_ref().expect("stage model present");
+                h = model.infer_batched(&h, bs);
+                if self.stages[s].degraded {
+                    degraded = true;
+                }
+            }
+            match failure {
+                Some((e, at, s)) => {
+                    events.push(FleetEvent {
+                        at_us: at,
+                        kind: FleetEventKind::BatchFailed { batch: b, stage: s },
+                    });
+                    outcomes.push(BatchOutcome::Failed { error: e, at_us: at });
+                    outputs.push(None);
+                }
+                None => {
+                    if out_shape.is_empty() {
+                        out_shape = h.shape[1..].to_vec();
+                    }
+                    outcomes.push(BatchOutcome::Done { completed_us: t, degraded });
+                    outputs.push(Some(h.data));
+                }
+            }
+        }
+        let makespan_us = outcomes
+            .iter()
+            .map(|o| match o {
+                BatchOutcome::Done { completed_us, .. } => *completed_us,
+                BatchOutcome::Failed { at_us, .. } => *at_us,
+            })
+            .max()
+            .unwrap_or(0);
+        events.sort_by_key(|e| e.at_us);
+        let report = FleetReport {
+            outcomes,
+            outputs,
+            out_shape,
+            micro_batch: mb,
+            samples,
+            events,
+            makespan_us,
+        };
+        debug_assert!(report.conserved(), "fleet run lost or duplicated a micro-batch");
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpe::{DotProductEngine, SliceMethod, SliceSpec};
+    use crate::nn::layers::LinearMem;
+    use crate::nn::models::mlp;
+    use crate::nn::HwSpec;
+    use crate::util::prop::prop_check;
+
+    fn ideal_hw() -> HwSpec {
+        HwSpec::uniform(DotProductEngine::ideal((64, 64)), SliceMethod::int(SliceSpec::int8()))
+    }
+
+    /// mlp(96, 32, 8): layer 1 is 2 int8 groups (8 planes), layer 3 is 1
+    /// group (4 planes) — 12 planes total.
+    fn tiny_mlp() -> Sequential {
+        mlp(96, 32, 8, Some(ideal_hw()), 7)
+    }
+
+    fn single_chip() -> MappedModel {
+        tiny_mlp().compile(&ChipSpec::single_tile(12, (64, 64))).unwrap()
+    }
+
+    fn batch(n: usize) -> Tensor {
+        Tensor::from_vec(
+            &[n, 96],
+            (0..n * 96).map(|i| (((i * 7) % 23) as f64) / 11.5 - 1.0).collect(),
+        )
+    }
+
+    #[test]
+    fn sharded_inference_bit_identical_to_single_chip_on_noise_free_engines() {
+        let single = single_chip();
+        let fleet = uniform_fleet(3, 8, (64, 64));
+        let sharded = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        assert_eq!(sharded.stage_count(), 2, "12 planes on 8-array chips is two stages");
+        assert_eq!(sharded.plan().spares, vec![2]);
+        assert_eq!(sharded.plan().stages[0].layers, (0, 3), "digital layers ride along");
+        assert_eq!(sharded.plan().stages[1].layers, (3, 4));
+        let x = batch(11);
+        assert_eq!(sharded.infer(&x).data, single.infer(&x).data, "infer diverged");
+        for mb in [1usize, 2, 4, 11, 64] {
+            assert_eq!(
+                sharded.infer_batched(&x, mb).data,
+                single.infer_batched(&x, mb).data,
+                "infer_batched diverged at micro_batch={mb}"
+            );
+        }
+    }
+
+    #[test]
+    fn clean_pipeline_run_matches_direct_inference_and_conserves() {
+        let single = single_chip();
+        let fleet = uniform_fleet(3, 8, (64, 64));
+        let mut sharded = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        let spec = FleetSpec::default();
+        let x = batch(20);
+        let rep = sharded.run(&x, &spec, &[]).unwrap();
+        assert!(rep.conserved(), "clean run must conserve every micro-batch");
+        assert_eq!(rep.completed(), 3, "20 samples at micro_batch 8 is 3 batches");
+        assert_eq!(rep.failed(), 0);
+        let y = rep.output_tensor().expect("all batches completed");
+        assert_eq!(
+            y.data,
+            single.infer_batched(&x, spec.micro_batch).data,
+            "pipeline outputs diverged from the single chip"
+        );
+        assert!(rep.makespan_us > 0);
+        assert!(rep.images_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn oversized_layer_block_splits_across_chips_bit_identically() {
+        // LinearMem(256, 64): 4 int8 groups = 16 planes — too big for one
+        // 8-array chip, so the layer splits across a 2-chip union.
+        let lin = |seed: u64| {
+            let mut rng = Pcg64::new(seed, 0xF1EE);
+            Sequential::new(vec![Box::new(LinearMem::new(256, 64, Some(ideal_hw()), &mut rng))
+                as Box<dyn crate::nn::Layer>])
+        };
+        let single = lin(3).compile(&ChipSpec::single_tile(16, (64, 64))).unwrap();
+        let fleet = uniform_fleet(3, 8, (64, 64));
+        let sharded = ShardedModel::compile(lin(3), &fleet).unwrap();
+        assert_eq!(sharded.stage_count(), 1);
+        assert_eq!(sharded.plan().stages[0].chips, vec![0, 1], "layer split across two chips");
+        assert_eq!(sharded.plan().spares, vec![2]);
+        // No group straddles a chip: each 4-plane group sits in one tile,
+        // and each single-tile member chip is one union tile.
+        let lp = &sharded.plan().stages[0].placement.layers[0];
+        for chunk in lp.slots.chunks(lp.slices) {
+            assert!(chunk.iter().all(|s| s.tile == chunk[0].tile), "group straddles a chip");
+        }
+        let x = Tensor::from_vec(
+            &[5, 256],
+            (0..5 * 256).map(|i| (((i * 11) % 29) as f64) / 14.5 - 1.0).collect(),
+        );
+        assert_eq!(sharded.infer_batched(&x, 2).data, single.infer_batched(&x, 2).data);
+    }
+
+    #[test]
+    fn chip_loss_fails_over_to_spare_and_stays_bit_identical() {
+        let single = single_chip();
+        let fleet = uniform_fleet(4, 8, (64, 64));
+        let mut sharded = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        assert_eq!(sharded.plan().spares, vec![2, 3]);
+        let spec = FleetSpec::default();
+        let x = batch(32);
+        let faults = [ChipFaultSpec { at_us: 700, chip: 0 }];
+        let rep = sharded.run(&x, &spec, &faults).unwrap();
+        assert!(rep.conserved());
+        assert_eq!(rep.failed(), 0, "failover must not lose a batch");
+        assert_eq!(rep.failovers(), 1);
+        assert!(rep.events.iter().any(|e| matches!(e.kind, FleetEventKind::ChipFault { chip: 0 })));
+        assert!(rep
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, FleetEventKind::Rerun { stage: 0, .. })));
+        // The re-replicated stage reprograms from the cached templates on
+        // a noise-free engine — outputs stay exact.
+        let y = rep.output_tensor().expect("all batches completed");
+        assert_eq!(
+            y.data,
+            single.infer_batched(&x, spec.micro_batch).data,
+            "failover must reproduce the lost stage exactly on noise-free engines"
+        );
+        assert_eq!(sharded.plan().stages[0].chips, vec![2], "stage 0 moved to the spare");
+        assert_eq!(sharded.plan().spares, vec![3], "one spare consumed, dead chip not returned");
+        assert!(sharded.chip_down()[0]);
+        assert_eq!(sharded.spares_left(), 1);
+        assert!(sharded.degraded().is_none(), "failover leaves nothing condemned");
+        // Failover downtime is visible in the clock.
+        assert!(rep.makespan_us > spec.failover_us);
+    }
+
+    #[test]
+    fn chip_loss_without_spare_serves_degraded() {
+        let single = single_chip();
+        let fleet = uniform_fleet(2, 8, (64, 64));
+        let mut sharded = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        assert!(sharded.plan().spares.is_empty());
+        let spec = FleetSpec::default();
+        let x = batch(32);
+        let faults = [ChipFaultSpec { at_us: 700, chip: 0 }];
+        let rep = sharded.run(&x, &spec, &faults).unwrap();
+        assert!(rep.conserved());
+        assert_eq!(rep.failed(), 0, "degraded serving must not lose a batch");
+        assert_eq!(rep.failovers(), 0);
+        assert!(rep
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, FleetEventKind::Degraded { stage: 0, condemned: 2 })));
+        let deg = sharded.degraded().expect("chip loss without spares must degrade");
+        assert_eq!(deg.condemned, vec![(0, 0), (0, 1)], "both layer-0 groups died with chip 0");
+        assert_eq!(sharded.condemned_per_layer(), vec![2, 0]);
+        assert!(rep.degraded_batches() > 0, "post-fault batches are degraded");
+        // Batch 0 completed before the fault: still exact. Later batches
+        // lost layer 0's contribution and must differ.
+        let clean = single.infer_batched(&x, spec.micro_batch);
+        let sample_len = 8usize;
+        let mb = spec.micro_batch;
+        assert_eq!(
+            rep.outputs[0].as_deref().unwrap(),
+            &clean.data[..mb * sample_len],
+            "pre-fault batch must be exact"
+        );
+        assert_ne!(
+            rep.outputs[3].as_deref().unwrap(),
+            &clean.data[3 * mb * sample_len..4 * mb * sample_len],
+            "post-fault batches must show the condemned groups"
+        );
+    }
+
+    #[test]
+    fn failover_off_degrades_even_with_spares_available() {
+        let fleet = uniform_fleet(4, 8, (64, 64));
+        let mut sharded = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        let spec = FleetSpec { failover: false, ..FleetSpec::default() };
+        let x = batch(32);
+        let faults = [ChipFaultSpec { at_us: 700, chip: 0 }];
+        let rep = sharded.run(&x, &spec, &faults).unwrap();
+        assert!(rep.conserved());
+        assert_eq!(rep.failovers(), 0);
+        assert!(sharded.degraded().is_some());
+        assert_eq!(sharded.spares_left(), 2, "spares untouched with failover off");
+    }
+
+    #[test]
+    fn link_timeout_exhaustion_fails_the_batch_typed() {
+        let fleet = uniform_fleet(3, 8, (64, 64));
+        let mut sharded = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        let spec = FleetSpec {
+            link: LinkSpec { drop_rate: 1.0, max_retries: 1, ..LinkSpec::default() },
+            ..FleetSpec::default()
+        };
+        let x = batch(20);
+        let rep = sharded.run(&x, &spec, &[]).unwrap();
+        assert!(rep.conserved(), "typed link failures must still conserve");
+        assert_eq!(rep.completed(), 0, "every batch dies at the stage-1 hop");
+        assert_eq!(rep.failed(), 3);
+        for (b, o) in rep.outcomes.iter().enumerate() {
+            match o {
+                BatchOutcome::Failed { error, .. } => assert_eq!(
+                    *error,
+                    FleetError::LinkFailed { batch: b, stage: 1, attempts: 2 }
+                ),
+                BatchOutcome::Done { .. } => panic!("batch {b} should have failed"),
+            }
+        }
+        assert_eq!(rep.link_retries(), 6, "two timed-out attempts per batch");
+        assert!(rep.events.iter().any(|e| matches!(
+            e.kind,
+            FleetEventKind::BatchFailed { stage: 1, .. }
+        )));
+    }
+
+    #[test]
+    fn corrupted_transfers_are_detected_and_retransmitted() {
+        let single = single_chip();
+        let fleet = uniform_fleet(3, 8, (64, 64));
+        let mut sharded = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        // Heavy in-flight corruption, deep retry budget: essentially every
+        // batch gets through on a clean retransmit, and the checksum
+        // catches every corrupted copy before it reaches compute.
+        let spec = FleetSpec {
+            micro_batch: 2,
+            link: LinkSpec { corrupt_rate: 0.5, max_retries: 19, ..LinkSpec::default() },
+            ..FleetSpec::default()
+        };
+        let x = batch(24);
+        let rep = sharded.run(&x, &spec, &[]).unwrap();
+        assert!(rep.conserved());
+        assert!(rep.corrupt_detected() > 0, "half the attempts corrupt — some must be seen");
+        let clean = single.infer_batched(&x, spec.micro_batch);
+        let sample_len = 8usize;
+        for (b, out) in rep.outputs.iter().enumerate() {
+            if let Some(rows) = out {
+                let lo = b * spec.micro_batch * sample_len;
+                assert_eq!(
+                    rows.as_slice(),
+                    &clean.data[lo..lo + rows.len()],
+                    "a corrupted payload leaked into compute at batch {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_throughput_beats_the_single_chip() {
+        // The same model, the same service model: one chip serializes the
+        // whole per-batch cost; two stages overlap successive batches.
+        let spec = FleetSpec::default();
+        let x = batch(192);
+        let mut single = ShardedModel::compile(
+            tiny_mlp(),
+            &uniform_fleet(1, 12, (64, 64)),
+        )
+        .unwrap();
+        assert_eq!(single.stage_count(), 1);
+        let rep_single = single.run(&x, &spec, &[]).unwrap();
+        let mut sharded =
+            ShardedModel::compile(tiny_mlp(), &uniform_fleet(2, 8, (64, 64))).unwrap();
+        assert_eq!(sharded.stage_count(), 2);
+        let rep_fleet = sharded.run(&x, &spec, &[]).unwrap();
+        assert!(rep_single.conserved() && rep_fleet.conserved());
+        assert!(
+            rep_fleet.makespan_us < rep_single.makespan_us,
+            "pipeline {} µs must beat single chip {} µs",
+            rep_fleet.makespan_us,
+            rep_single.makespan_us
+        );
+        assert!(rep_fleet.images_per_sec() > rep_single.images_per_sec());
+        // And both agree bit-for-bit on the outputs.
+        let y_fleet = rep_fleet.output_tensor().unwrap().data;
+        let y_single = rep_single.output_tensor().unwrap().data;
+        assert_eq!(y_fleet, y_single);
+    }
+
+    #[test]
+    fn fleet_runs_are_deterministic() {
+        let fleet = uniform_fleet(4, 8, (64, 64));
+        let spec = FleetSpec {
+            link: LinkSpec { drop_rate: 0.2, corrupt_rate: 0.2, ..LinkSpec::default() },
+            ..FleetSpec::default()
+        };
+        let x = batch(40);
+        let faults = [ChipFaultSpec { at_us: 900, chip: 1 }];
+        let mut a = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        let mut b = ShardedModel::compile(tiny_mlp(), &fleet).unwrap();
+        let ra = a.run(&x, &spec, &faults).unwrap();
+        let rb = b.run(&x, &spec, &faults).unwrap();
+        assert_eq!(ra, rb, "identical fleets and faults must replay identically");
+    }
+
+    #[test]
+    fn heterogeneous_split_is_a_clear_error() {
+        let mut fleet = uniform_fleet(2, 8, (64, 64));
+        fleet[1] = ChipSpec::new(2, 4, (64, 64));
+        // A 16-plane layer fits neither chip alone, and the union is
+        // heterogeneous — planning must explain, not mangle.
+        let mut rng = Pcg64::new(5, 0xF1EE);
+        let model =
+            Sequential::new(vec![Box::new(LinearMem::new(256, 64, Some(ideal_hw()), &mut rng))
+                as Box<dyn crate::nn::Layer>]);
+        let err = ShardedModel::compile(model, &fleet).unwrap_err().to_string();
+        assert!(err.contains("heterogeneous"), "{err}");
+    }
+
+    /// Random layer demands for the planning property tests.
+    fn gen_demands(g: &mut crate::util::prop::Gen, apt: usize) -> (Vec<CoreDemand>, usize) {
+        let n_layers = g.usize_in(1..=4);
+        let mut demands = Vec::new();
+        for li in 0..n_layers {
+            let slices = g.usize_in(1..=apt.min(4));
+            let blocks = g.usize_in(1..=5);
+            demands.push(CoreDemand { layer: li, name: "TestCore", blocks, slices });
+        }
+        (demands, n_layers)
+    }
+
+    #[test]
+    fn prop_shard_plan_partitions_groups_onto_chips() {
+        prop_check("shard plan is a no-straddle partition in layer order", 200, |g| {
+            let apt = g.usize_in(4..=16);
+            let (demands, n_layers) = gen_demands(g, apt);
+            let total_groups: usize = demands.iter().map(|d| d.blocks).sum();
+            // Each single-tile chip holds at least one group (slices <=
+            // apt), and each closed stage wastes less than one chip, so
+            // groups + layers + 2 chips always suffice — with spares.
+            let fleet = uniform_fleet(total_groups + n_layers + 2, apt, (64, 64));
+            let plan = ShardPlan::plan(&fleet, &demands, n_layers)
+                .map_err(|e| format!("plan failed: {e}"))?;
+            // Stage layer ranges partition 0..n_layers in order.
+            if plan.stages[0].layers.0 != 0 {
+                return Err("stage 0 must start at layer 0".into());
+            }
+            for w in plan.stages.windows(2) {
+                if w[0].layers.1 != w[1].layers.0 {
+                    return Err("stage layer ranges must be contiguous".into());
+                }
+            }
+            if plan.stages.last().unwrap().layers.1 != n_layers {
+                return Err("last stage must end at n_layers".into());
+            }
+            // Stage chips are disjoint, ascending, and together with the
+            // spares cover the fleet exactly.
+            let mut seen: Vec<usize> = Vec::new();
+            for st in &plan.stages {
+                if st.chips.windows(2).any(|w| w[1] != w[0] + 1) {
+                    return Err("stage chips must be a contiguous run".into());
+                }
+                seen.extend(&st.chips);
+            }
+            seen.extend(&plan.spares);
+            let mut sorted = seen.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != seen.len() || sorted.len() != fleet.len() {
+                return Err("stages + spares must cover the fleet exactly once".into());
+            }
+            // Every demand group lands in exactly one stage, and no group
+            // straddles a member chip boundary.
+            let placed: Vec<CoreDemand> =
+                plan.stages.iter().flat_map(|s| s.demands.clone()).collect();
+            if placed != demands {
+                return Err("stage demands must concatenate to the model's demands".into());
+            }
+            for (si, st) in plan.stages.iter().enumerate() {
+                let ranges = plan.member_tiles(si);
+                for lp in &st.placement.layers {
+                    for chunk in lp.slots.chunks(lp.slices) {
+                        let tile = chunk[0].tile;
+                        if chunk.iter().any(|s| s.tile != tile) {
+                            return Err("group straddles a tile".into());
+                        }
+                        if !ranges.iter().any(|&(a, b)| tile >= a && tile < b) {
+                            return Err("group tile outside every member chip".into());
+                        }
+                    }
+                    if lp.layer < st.layers.0 || lp.layer >= st.layers.1 {
+                        return Err("placed core outside its stage's layer range".into());
+                    }
+                }
+            }
+            // Deterministic: replanning reproduces the plan exactly.
+            let plan2 = ShardPlan::plan(&fleet, &demands, n_layers).unwrap();
+            if plan2 != plan {
+                return Err("planning is not deterministic".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_spare_substitution_preserves_the_bijection() {
+        prop_check("substitute re-places a stage without losing a group", 200, |g| {
+            let apt = g.usize_in(4..=16);
+            let (demands, n_layers) = gen_demands(g, apt);
+            let total_groups: usize = demands.iter().map(|d| d.blocks).sum();
+            // Enough spares to host any single stage again.
+            let fleet =
+                uniform_fleet(2 * (total_groups + n_layers + 2), apt, (64, 64));
+            let plan = ShardPlan::plan(&fleet, &demands, n_layers)
+                .map_err(|e| format!("plan failed: {e}"))?;
+            let stage = g.usize_in(0..=plan.stages.len() - 1);
+            let mut replaced = None;
+            for width in 1..=plan.spares.len() {
+                if let Ok(p) = plan.substitute(stage, &plan.spares[..width]) {
+                    replaced = Some((p, width));
+                    break;
+                }
+            }
+            let Some((p2, width)) = replaced else {
+                return Err("ample spares must host the stage".into());
+            };
+            if p2.stages[stage].chips != plan.spares[..width] {
+                return Err("substituted stage must own exactly the used spares".into());
+            }
+            if p2.stages[stage].placement.total_planes()
+                != plan.stages[stage].placement.total_planes()
+            {
+                return Err("substitution changed the stage's plane count".into());
+            }
+            if p2.spares != plan.spares[width..] {
+                return Err("used spares must leave the pool".into());
+            }
+            for (si, st) in p2.stages.iter().enumerate() {
+                if si != stage && *st != plan.stages[si] {
+                    return Err("substitution must not touch other stages".into());
+                }
+                let ranges = p2.member_tiles(si);
+                for lp in &st.placement.layers {
+                    for chunk in lp.slots.chunks(lp.slices) {
+                        let tile = chunk[0].tile;
+                        if chunk.iter().any(|s| s.tile != tile)
+                            || !ranges.iter().any(|&(a, b)| tile >= a && tile < b)
+                        {
+                            return Err("substituted group straddles a chip".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_fleet_and_undersized_fleet_are_clear_errors() {
+        let err = ShardedModel::compile(tiny_mlp(), &[]).unwrap_err().to_string();
+        assert!(err.contains("empty fleet"), "{err}");
+        let err = ShardedModel::compile(tiny_mlp(), &uniform_fleet(1, 4, (64, 64)))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fleet exhausted"), "{err}");
+    }
+}

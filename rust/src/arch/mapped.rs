@@ -30,6 +30,14 @@
 //! integer-domain kernel (byte weight panels, `i32`/`i64` accumulators) —
 //! bit-identical to the f64 path, so mapping, micro-batching, and the
 //! kernel choice are all invisible in the output.
+//!
+//! Models too big for one chip shard across several: see
+//! [`super::fleet::ShardedModel`], which chains per-chip `MappedModel`
+//! stages behind simulated inter-chip links, keeps this module's
+//! batch-global quantization contract (full-batch stage chaining in
+//! `infer_batched`), and reuses [`MappedModel::condemn`] /
+//! [`MappedModel::self_heal`] per stage for its chip-level fault
+//! handling.
 
 use super::repair::{DegradedReport, HealthReport, RepairOutcome, RepairPlan, SlotHealth};
 use super::{BlockMove, Placement};

@@ -36,15 +36,21 @@
 //! (spill to another tile, different layer order) resamples the affected
 //! arrays' noise.
 
+pub mod fleet;
 pub mod mapped;
 pub mod repair;
 pub mod serve;
 
+pub use fleet::{
+    uniform_fleet, union_chip, BatchOutcome, ChipFaultSpec, FleetError, FleetEvent,
+    FleetEventKind, FleetReport, FleetSpec, LinkSpec, ShardPlan, ShardedModel, StagePlan,
+};
 pub use mapped::MappedModel;
 pub use repair::{BlockMove, DegradedReport, HealthReport, RepairOutcome, RepairPlan, SlotHealth};
 pub use serve::{
-    BatchRecord, Completion, Event, EventKind, FaultEvent, HealRecord, Outcome, ReplicaFactory,
-    ReplicaSpec, Request, ServeError, ServeReport, ServingRuntime, ServingSpec, SimClock,
+    BatchRecord, Completion, Event, EventKind, FaultEvent, HealRecord, MixedFactory, Outcome,
+    ReplicaFactory, ReplicaModel, ReplicaSpec, Request, ServeError, ServeReport, ServingRuntime,
+    ServingSpec, SimClock,
 };
 
 use std::fmt::Write as _;

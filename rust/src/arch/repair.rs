@@ -185,6 +185,18 @@ impl DegradedReport {
         }
         Some(rep)
     }
+
+    /// Fold `other` into this report, shifting its core indices by
+    /// `layer_offset` — how [`crate::arch::ShardedModel`] merges the
+    /// per-stage reports (each stage counts placed cores from zero) into
+    /// one fleet-wide view.
+    pub fn merge(&mut self, other: &DegradedReport, layer_offset: usize) {
+        for (i, &(layer, block)) in other.condemned.iter().enumerate() {
+            self.condemned.push((layer + layer_offset, block));
+            self.slots.push(other.slots[i]);
+        }
+        self.estimated_re_impact = self.estimated_re_impact.max(other.estimated_re_impact);
+    }
 }
 
 /// The result of one [`crate::arch::MappedModel::self_heal`] round.

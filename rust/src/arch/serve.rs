@@ -49,7 +49,9 @@
 //! their bound the replica is pulled and healing reprograms it fresh
 //! (`t_read = 0` — a rewrite restarts the drift clock).
 
+use super::fleet::ShardedModel;
 use super::mapped::MappedModel;
+use super::repair::{DegradedReport, HealthReport, RepairOutcome};
 use crate::dpe::RepairSpec;
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
@@ -103,6 +105,11 @@ pub struct ServingSpec {
     /// programming` on each scan (power-law drift); healing resets the
     /// drift clock by reprogramming at `t_read = 0`.
     pub drift_refresh: bool,
+    /// Chips per replica: 1 serves single-chip [`MappedModel`]s; ≥ 2
+    /// asks the factory for [`ShardedModel`] pipelines spanning a fleet
+    /// of that many chips (see [`super::fleet`]). Pools may still mix —
+    /// the value sizes the fleet handed to [`MixedFactory`] callers.
+    pub shards_per_replica: usize,
 }
 
 impl Default for ServingSpec {
@@ -120,6 +127,7 @@ impl Default for ServingSpec {
             service_base_us: 200,
             service_per_sample_us: 50,
             drift_refresh: false,
+            shards_per_replica: 1,
         }
     }
 }
@@ -260,6 +268,71 @@ pub struct ReplicaSpec {
 /// twin rebuilds are how benches verify bit-identity.
 pub type ReplicaFactory<'a> = Box<dyn Fn(usize, &ReplicaSpec) -> anyhow::Result<MappedModel> + 'a>;
 
+/// One pool member: a single-chip [`MappedModel`] or a multi-chip
+/// [`ShardedModel`] pipeline (see [`super::fleet`]). Mixed pools let one
+/// deployment serve an oversized sharded model next to ordinary
+/// single-chip replicas behind the same queue, retry, and heal policy.
+pub enum ReplicaModel {
+    Single(MappedModel),
+    Sharded(ShardedModel),
+}
+
+impl ReplicaModel {
+    /// Chips backing this replica (1 for `Single`).
+    pub fn chip_count(&self) -> usize {
+        match self {
+            ReplicaModel::Single(_) => 1,
+            ReplicaModel::Sharded(s) => s.plan().fleet.len(),
+        }
+    }
+
+    pub fn as_single(&self) -> Option<&MappedModel> {
+        match self {
+            ReplicaModel::Single(m) => Some(m),
+            ReplicaModel::Sharded(_) => None,
+        }
+    }
+
+    pub fn as_sharded(&self) -> Option<&ShardedModel> {
+        match self {
+            ReplicaModel::Single(_) => None,
+            ReplicaModel::Sharded(s) => Some(s),
+        }
+    }
+
+    pub fn infer_batched(&self, x: &Tensor, micro_batch: usize) -> Tensor {
+        match self {
+            ReplicaModel::Single(m) => m.infer_batched(x, micro_batch),
+            ReplicaModel::Sharded(s) => s.infer_batched(x, micro_batch),
+        }
+    }
+
+    pub fn health_probe(&self, spec: &RepairSpec) -> anyhow::Result<HealthReport> {
+        match self {
+            ReplicaModel::Single(m) => m.health_probe(spec),
+            ReplicaModel::Sharded(s) => s.health_probe(spec),
+        }
+    }
+
+    pub fn self_heal(&mut self, spec: &RepairSpec) -> anyhow::Result<RepairOutcome> {
+        match self {
+            ReplicaModel::Single(m) => m.self_heal(spec),
+            ReplicaModel::Sharded(s) => s.self_heal(spec),
+        }
+    }
+
+    pub fn degraded(&self) -> Option<&DegradedReport> {
+        match self {
+            ReplicaModel::Single(m) => m.degraded(),
+            ReplicaModel::Sharded(s) => s.degraded(),
+        }
+    }
+}
+
+/// Like [`ReplicaFactory`], but each replica may come up single-chip or
+/// sharded — the mixed-pool entry point ([`ServingRuntime::new_mixed`]).
+pub type MixedFactory<'a> = Box<dyn Fn(usize, &ReplicaSpec) -> anyhow::Result<ReplicaModel> + 'a>;
+
 /// Full account of one [`ServingRuntime::run`]: exactly one [`Outcome`]
 /// per request (index-aligned with the workload), every dispatched
 /// batch, the heal rounds, and the event timeline.
@@ -340,6 +413,43 @@ impl ServeReport {
             })
             .sum()
     }
+
+    /// The headline metrics as one compact JSON object — the shared
+    /// emitter behind `BENCH_serving.json` and `BENCH_sharding.json`
+    /// scenario entries. Percentiles over an empty completion set come
+    /// out `null`.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let (queue_full, deadline, exhausted) = self.failure_breakdown();
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"requests\":{},\"completed\":{},\"failed\":{},\"queue_full\":{queue_full},\
+             \"deadline_exceeded\":{deadline},\"retries_exhausted\":{exhausted},\
+             \"retries\":{},\"heals\":{},\"batches\":{},\"makespan_us\":{},\
+             \"images_per_sec\":{:.3}",
+            self.outcomes.len(),
+            self.completed(),
+            self.failed(),
+            self.total_retries(),
+            self.heals.len(),
+            self.batches.len(),
+            self.makespan_us,
+            self.images_per_sec()
+        );
+        for (name, q) in [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)] {
+            match self.percentile_latency_us(q) {
+                Some(v) => {
+                    let _ = write!(s, ",\"{name}_us\":{v}");
+                }
+                None => {
+                    let _ = write!(s, ",\"{name}_us\":null");
+                }
+            }
+        }
+        s.push('}');
+        s
+    }
 }
 
 /// A queued request (or a retry waiting out its backoff).
@@ -367,7 +477,7 @@ struct InFlight {
 }
 
 struct Replica {
-    model: MappedModel,
+    model: ReplicaModel,
     cond: ReplicaSpec,
     /// Last (re)programming time — the drift-age reference.
     programmed_at_us: u64,
@@ -387,12 +497,12 @@ pub struct ServingRuntime<'a> {
     spec: ServingSpec,
     repair: RepairSpec,
     in_shape: Vec<usize>,
-    factory: ReplicaFactory<'a>,
+    factory: MixedFactory<'a>,
     replicas: Vec<Replica>,
 }
 
 impl<'a> ServingRuntime<'a> {
-    /// Build the pool: replica `i` comes from
+    /// Build a single-chip pool: replica `i` comes from
     /// `factory(i, &ReplicaSpec::default())`. `in_shape` is the
     /// per-sample feature shape (batches stack to `[b, in_shape…]`).
     pub fn new(
@@ -401,9 +511,26 @@ impl<'a> ServingRuntime<'a> {
         in_shape: Vec<usize>,
         factory: ReplicaFactory<'a>,
     ) -> anyhow::Result<Self> {
+        Self::new_mixed(
+            spec,
+            repair,
+            in_shape,
+            Box::new(move |i, cond| factory(i, cond).map(ReplicaModel::Single)),
+        )
+    }
+
+    /// Build a pool whose members may be single-chip or sharded
+    /// ([`ReplicaModel`]); otherwise identical to [`ServingRuntime::new`].
+    pub fn new_mixed(
+        spec: ServingSpec,
+        repair: RepairSpec,
+        in_shape: Vec<usize>,
+        factory: MixedFactory<'a>,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(spec.replicas >= 1, "serving: pool needs at least one replica");
         anyhow::ensure!(spec.queue_capacity >= 1, "serving: queue_capacity must be >= 1");
         anyhow::ensure!(spec.max_batch >= 1, "serving: max_batch must be >= 1");
+        anyhow::ensure!(spec.shards_per_replica >= 1, "serving: shards_per_replica must be >= 1");
         let sample_len: usize = in_shape.iter().product();
         anyhow::ensure!(sample_len > 0, "serving: in_shape must be non-empty");
         let mut replicas = Vec::with_capacity(spec.replicas);
@@ -433,8 +560,8 @@ impl<'a> ServingRuntime<'a> {
     }
 
     /// The current model of replica `i` (post-run: inspect heal state via
-    /// [`MappedModel::degraded`]).
-    pub fn replica(&self, i: usize) -> &MappedModel {
+    /// [`ReplicaModel::degraded`]).
+    pub fn replica(&self, i: usize) -> &ReplicaModel {
         &self.replicas[i].model
     }
 
@@ -524,7 +651,9 @@ impl<'a> ServingRuntime<'a> {
                 .map(|(i, _)| i)
                 .collect();
             for ri in due {
-                let fl = self.replicas[ri].inflight.take().unwrap();
+                let Some(fl) = self.replicas[ri].inflight.take() else {
+                    anyhow::bail!("serving: replica {ri} lost its in-flight batch at t={now}µs");
+                };
                 for (p, out) in fl.reqs.iter().zip(fl.outputs.into_iter()) {
                     resolve(
                         &mut outcomes,
@@ -673,13 +802,18 @@ impl<'a> ServingRuntime<'a> {
                     if i >= len {
                         break;
                     }
-                    let arrive = arrive.unwrap();
+                    let Some(arrive) = arrive else { break };
                     if now.saturating_sub(arrive) < self.spec.request_deadline_us {
                         i += 1;
                         continue;
                     }
                     let p = if list_is_queue {
-                        queue.remove(i).unwrap()
+                        queue.remove(i).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "serving: queue slot {i} vanished while expiring deadlines \
+                                 at t={now}µs"
+                            )
+                        })?
                     } else {
                         retries.remove(i)
                     };
@@ -741,7 +875,13 @@ impl<'a> ServingRuntime<'a> {
                 let mut qi = 0;
                 while qi < queue.len() && members.len() < self.spec.max_batch {
                     if queue[qi].exclude != Some(ri) || in_rotation <= 1 {
-                        members.push(queue.remove(qi).unwrap());
+                        let p = queue.remove(qi).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "serving: queue slot {qi} vanished while batching for \
+                                 replica {ri} at t={now}µs"
+                            )
+                        })?;
+                        members.push(p);
                     } else {
                         qi += 1;
                     }
@@ -825,12 +965,19 @@ impl<'a> ServingRuntime<'a> {
             clock.advance_to(nt);
         }
 
-        let outcomes: Vec<Outcome> = outcomes
-            .into_iter()
-            .enumerate()
-            .map(|(i, o)| o.unwrap_or_else(|| panic!("request {i} lost")))
-            .collect();
-        Ok(ServeReport { outcomes, batches, heals, events, makespan_us: makespan })
+        let mut resolved_outcomes = Vec::with_capacity(n);
+        for (i, o) in outcomes.into_iter().enumerate() {
+            resolved_outcomes.push(o.ok_or_else(|| {
+                anyhow::anyhow!("serving: request {i} was never resolved (exactly-once invariant)")
+            })?);
+        }
+        Ok(ServeReport {
+            outcomes: resolved_outcomes,
+            batches,
+            heals,
+            events,
+            makespan_us: makespan,
+        })
     }
 
     /// One background health pass over every idle in-rotation replica:
@@ -1282,5 +1429,143 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn report_percentiles_and_breakdown_edge_cases() {
+        // Empty report (no requests at all).
+        let empty = ServeReport {
+            outcomes: vec![],
+            batches: vec![],
+            heals: vec![],
+            events: vec![],
+            makespan_us: 0,
+        };
+        assert_eq!(empty.percentile_latency_us(0.5), None);
+        assert_eq!(empty.percentile_latency_us(1.0), None);
+        assert_eq!(empty.failure_breakdown(), (0, 0, 0));
+        assert_eq!(empty.completed(), 0);
+        assert_eq!(empty.images_per_sec(), 0.0);
+        let json = empty.to_json();
+        assert!(json.contains("\"p50_us\":null"), "{json}");
+        assert!(json.contains("\"completed\":0"), "{json}");
+
+        // A single completed sample is every percentile.
+        let one = ServeReport {
+            outcomes: vec![Outcome::Done(Completion {
+                output: vec![1.0],
+                replica: 0,
+                attempts: 1,
+                latency_us: 123,
+                batch: 0,
+            })],
+            batches: vec![],
+            heals: vec![],
+            events: vec![],
+            makespan_us: 123,
+        };
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(one.percentile_latency_us(q), Some(123));
+        }
+        assert!(one.to_json().contains("\"p99_us\":123"));
+
+        // An all-failed run: the breakdown sees every kind once, the
+        // percentiles stay None, and the throughput is zero.
+        let failed = ServeReport {
+            outcomes: vec![
+                Outcome::Failed {
+                    error: ServeError::QueueFull { queued: 4, capacity: 4 },
+                    at_us: 10,
+                },
+                Outcome::Failed {
+                    error: ServeError::DeadlineExceeded { waited_us: 900, deadline_us: 800 },
+                    at_us: 20,
+                },
+                Outcome::Failed {
+                    error: ServeError::DeadlineExceeded { waited_us: 950, deadline_us: 800 },
+                    at_us: 30,
+                },
+                Outcome::Failed {
+                    error: ServeError::RetriesExhausted { attempts: 3 },
+                    at_us: 40,
+                },
+            ],
+            batches: vec![],
+            heals: vec![],
+            events: vec![],
+            makespan_us: 40,
+        };
+        assert_eq!(failed.failure_breakdown(), (1, 2, 1));
+        assert_eq!(failed.completed(), 0);
+        assert_eq!(failed.failed(), 4);
+        assert_eq!(failed.percentile_latency_us(0.99), None);
+        assert_eq!(failed.images_per_sec(), 0.0);
+        let json = failed.to_json();
+        assert!(json.contains("\"retries_exhausted\":1"), "{json}");
+        assert!(json.contains("\"p95_us\":null"), "{json}");
+    }
+
+    #[test]
+    fn mixed_pool_sharded_replica_is_bit_identical_to_single_chip() {
+        use crate::arch::fleet::uniform_fleet;
+        use crate::nn::models::mlp;
+
+        let ideal = || {
+            HwSpec::uniform(DotProductEngine::ideal((64, 64)), SliceMethod::int(SliceSpec::int8()))
+        };
+        // Replica 0 is single-chip, replica 1 shards the same template
+        // over a 2-chip fleet; noise-free engines make them comparable.
+        let factory: MixedFactory = Box::new(move |i, _cond| {
+            let m = mlp(96, 32, 8, Some(ideal()), 7);
+            if i == 0 {
+                let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+                Ok(ReplicaModel::Single(m.compile(&chip)?))
+            } else {
+                Ok(ReplicaModel::Sharded(m.compile_sharded(&uniform_fleet(2, 8, (64, 64)))?))
+            }
+        });
+        let spec = ServingSpec {
+            replicas: 2,
+            max_batch: 4,
+            shards_per_replica: 2,
+            ..ServingSpec::default()
+        };
+        let mut rt =
+            ServingRuntime::new_mixed(spec, RepairSpec::none(), vec![96], factory).unwrap();
+        assert_eq!(rt.replica(0).chip_count(), 1);
+        assert_eq!(rt.replica(1).chip_count(), 2);
+        assert_eq!(rt.replica(1).as_sharded().unwrap().stage_count(), 2);
+        assert!(rt.replica(0).as_single().is_some());
+
+        let work: Vec<Request> = (0..10)
+            .map(|j| Request {
+                arrive_us: j as u64 * 100,
+                sample: (0..96).map(|k| (((j * 7 + k) % 23) as f64) / 11.5 - 1.0).collect(),
+            })
+            .collect();
+        let report = rt.run(&work, &[]).unwrap();
+        assert_eq!(report.completed(), 10);
+
+        // Both members hold the same noise-free template, so replaying
+        // each dispatched batch on a fresh single-chip twin reproduces
+        // the delivered rows bit for bit, whichever replica served.
+        let t = mlp(96, 32, 8, Some(ideal()), 7);
+        let chip = ChipSpec::single_tile(t.mapped_planes(), (64, 64));
+        let twin = t.compile(&chip).unwrap();
+        for b in &report.batches {
+            let rows = b.requests.len();
+            let mut data = Vec::with_capacity(rows * 96);
+            for &id in &b.requests {
+                data.extend_from_slice(&work[id].sample);
+            }
+            let y = twin.infer_batched(&Tensor::from_vec(&[rows, 96], data), rows);
+            let cols = y.data.len() / rows;
+            for (row, &id) in b.requests.iter().enumerate() {
+                let Outcome::Done(c) = &report.outcomes[id] else {
+                    panic!("request {id} failed in a clean run");
+                };
+                assert_eq!(c.output, y.data[row * cols..(row + 1) * cols].to_vec());
+            }
+        }
     }
 }

@@ -6,7 +6,8 @@
 use super::SimConfig;
 use crate::apps::{cwt, kmeans, solver};
 use crate::arch::{
-    ChipSpec, FaultEvent, MappedModel, Outcome, ReplicaSpec, Request, ServingRuntime,
+    uniform_fleet, ChipFaultSpec, ChipSpec, FaultEvent, FleetReport, MappedModel, Outcome,
+    ReplicaModel, ReplicaSpec, Request, ServingRuntime,
 };
 use crate::circuit::CrossbarCircuit;
 use crate::data::{cifar_like, iris, mnist_like, nino};
@@ -47,6 +48,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig_faults", "Fault injection: accuracy/yield vs stuck-at rate x cv x bits; lines, retention, ADC error"),
     ("fig_repair", "Self-healing chip: program-and-verify, probe localization, remap-to-spare yield recovery"),
     ("fig_serving", "Fault-tolerant serving: replicated pool, deadlines/retries, drift-triggered online healing"),
+    ("fig_sharding", "Multi-chip sharding: pipeline stages across a fleet, chip-loss failover to spares, link retry"),
     ("fig13_solver", "Linear equation solving: software vs hardware CG"),
     ("fig14_cwt", "Morlet CWT of the ENSO-like series with INT4 kernels"),
     ("fig15_kmeans", "K-means on IRIS with the dot-product distance trick"),
@@ -65,6 +67,7 @@ pub fn run(id: &str, cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>
         "fig_faults" => fig_faults(cfg, scale),
         "fig_repair" => fig_repair(cfg, scale)?,
         "fig_serving" => fig_serving(cfg, scale)?,
+        "fig_sharding" => fig_sharding(cfg, scale)?,
         "fig13_solver" => fig13_solver(cfg, scale),
         "fig14_cwt" => fig14_cwt(cfg, scale),
         "fig15_kmeans" => fig15_kmeans(cfg, scale),
@@ -671,7 +674,11 @@ pub fn serving_sweep(
     // 13 + 1 int8 block groups × 4 digit planes on 64×64 arrays, plus six
     // spare groups for the healer to remap onto.
     let spares = 24usize;
-    let make = |r: usize, cond: &ReplicaSpec| -> anyhow::Result<MappedModel> {
+    // `[serving] shards_per_replica > 1` turns the pool mixed: odd
+    // replicas shard across that many chips (pipeline stages), even ones
+    // stay single-chip — both behind the same queue and heal policy.
+    let shards = cfg.serving.shards_per_replica;
+    let make = |r: usize, cond: &ReplicaSpec| -> anyhow::Result<ReplicaModel> {
         let mut dpe = cfg.dpe.clone();
         dpe.array = (64, 64);
         if cond.faulty {
@@ -685,8 +692,19 @@ pub fn serving_sweep(
         let mut m = mlp(input, hidden, classes, Some(hw), cfg.seed);
         m.load_state_from(&digital);
         m.update_weight();
-        let chip = ChipSpec::new(1, m.mapped_planes() + spares, (64, 64)).with_spares(spares);
-        m.compile(&chip)
+        if shards > 1 && r % 2 == 1 {
+            // Each fleet chip is sized to the biggest layer (the 784-in
+            // linear: ceil(784/64) row blocks × 4 int8 planes), so the
+            // planner assigns one stage per chip.
+            let apt = input.div_ceil(64) * 4;
+            let fleet: Vec<ChipSpec> = (0..shards)
+                .map(|_| ChipSpec::new(1, apt + spares, (64, 64)).with_spares(spares))
+                .collect();
+            Ok(ReplicaModel::Sharded(m.compile_sharded(&fleet)?))
+        } else {
+            let chip = ChipSpec::new(1, m.mapped_planes() + spares, (64, 64)).with_spares(spares);
+            Ok(ReplicaModel::Single(m.compile(&chip)?))
+        }
     };
 
     // Open-loop workload from the held-out split; failed requests score
@@ -736,7 +754,7 @@ pub fn serving_sweep(
         } else {
             Vec::new()
         };
-        let mut rt = ServingRuntime::new(
+        let mut rt = ServingRuntime::new_mixed(
             spec.clone(),
             repair.clone(),
             vec![input],
@@ -832,6 +850,251 @@ pub fn fig_serving(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> 
             p.moves.to_string(),
             p.fenced.to_string(),
             match p.clean_bit_exact {
+                Some(true) => "yes".into(),
+                Some(false) => "NO".into(),
+                None => "-".into(),
+            },
+        ]);
+    }
+    Ok(vec![t])
+}
+
+// ---------------------------------------------------------- fig_sharding
+
+/// One scenario of the multi-chip sharding sweep ([`sharding_sweep`]):
+/// pipeline throughput, chip-loss failover, and link-fault accounting.
+#[derive(Debug, Clone, Default)]
+pub struct ShardingPoint {
+    pub label: String,
+    pub fleet_chips: usize,
+    pub stages: usize,
+    pub samples: usize,
+    /// Samples in completed micro-batches.
+    pub completed_samples: usize,
+    pub failed_batches: usize,
+    pub degraded_batches: usize,
+    pub failovers: usize,
+    pub link_retries: usize,
+    pub corrupt_detected: usize,
+    pub makespan_us: u64,
+    pub images_per_sec: f64,
+    /// Top-1 accuracy over ALL samples (failed batches count as wrong).
+    pub accuracy: f64,
+    pub conserved: bool,
+    /// Clean scenarios only: the assembled pipeline output matched
+    /// single-chip `infer_batched` bit for bit (noise-free engines).
+    pub bit_exact: Option<bool>,
+}
+
+/// Shared driver for the `fig_sharding` experiment and
+/// `benches/fig_sharding`: a trained MLP sharded across chip fleets of
+/// growing size (noise-free engines, so sharded inference is
+/// bit-identical to single-chip), then a chip-loss scenario with
+/// failover on vs off, and a lossy-link scenario exercising the
+/// retry/checksum path. Fleet knobs come from the `[fleet]` config
+/// section; the sweep overrides fault rates per scenario.
+pub fn sharding_sweep(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<ShardingPoint>> {
+    let (input, hidden, classes) = (784usize, 16usize, 10usize);
+    let imgs = scale.pick(320, 768);
+    let data = mnist_like::load(imgs, cfg.seed);
+    let (train_set, test_set) = data.split(imgs * 4 / 5);
+    let mut digital = mlp(input, hidden, classes, None, cfg.seed);
+    let tcfg = TrainConfig {
+        steps: scale.pick(60, 150),
+        batch_size: 32,
+        lr: 0.1,
+        seed: cfg.seed,
+        ..TrainConfig::default()
+    };
+    train(&mut digital, &train_set, &tcfg);
+
+    // Noise-free engines: the sharded-vs-single bit-identity contract is
+    // exact, and failover reprogramming restores the exact weights.
+    let make = || -> Sequential {
+        let mut dpe = cfg.dpe.clone();
+        dpe.array = (64, 64);
+        dpe.noise_free = true;
+        let hw = HwSpec::uniform(
+            DotProductEngine::new(dpe, cfg.seed.wrapping_add(7000)),
+            SliceMethod::int(SliceSpec::int8()),
+        );
+        let mut m = mlp(input, hidden, classes, Some(hw), cfg.seed);
+        m.load_state_from(&digital);
+        m.update_weight();
+        m
+    };
+
+    let n = scale.pick(96, 256);
+    let mut xdata = Vec::with_capacity(n * input);
+    for i in 0..n {
+        xdata.extend_from_slice(test_set.sample(i % test_set.len()));
+    }
+    let x = Tensor::from_vec(&[n, input], xdata);
+    let labels: Vec<usize> = (0..n).map(|i| test_set.labels[i % test_set.len()]).collect();
+    let argmax = |row: &[f64]| -> usize {
+        row.iter()
+            .enumerate()
+            .fold(
+                (0usize, f64::NEG_INFINITY),
+                |best, (i, &v)| if v > best.1 { (i, v) } else { best },
+            )
+            .0
+    };
+
+    // The single-chip reference: its placement sizes the fleets (chips
+    // hold whole block groups of the biggest layer) and its output is
+    // the bit-identity oracle.
+    let single = {
+        let m = make();
+        let chip = ChipSpec::single_tile(m.mapped_planes(), (64, 64));
+        m.compile(&chip)?
+    };
+    let layers_bs: Vec<(usize, usize)> =
+        single.placement().layers.iter().map(|lp| (lp.blocks, lp.slices)).collect();
+    let p_total: usize = layers_bs.iter().map(|(b, s)| b * s).sum();
+    let (b_max, s_max) = layers_bs.iter().copied().max_by_key(|(b, s)| b * s).unwrap_or((1, 1));
+    let p_max = b_max * s_max;
+    let y_ref = single.infer_batched(&x, n);
+
+    let accuracy_of = |rep: &FleetReport| -> f64 {
+        let mut correct = 0usize;
+        for (b, out) in rep.outputs.iter().enumerate() {
+            let Some(rows) = out else { continue };
+            for (j, row) in rows.chunks(classes).enumerate() {
+                if argmax(row) == labels[b * rep.micro_batch + j] {
+                    correct += 1;
+                }
+            }
+        }
+        correct as f64 / n as f64
+    };
+    let bit_exact_of = |rep: &FleetReport| -> bool {
+        rep.output_tensor().is_some_and(|y| {
+            y.data.len() == y_ref.data.len()
+                && y.data.iter().zip(&y_ref.data).all(|(a, b)| a.to_bits() == b.to_bits())
+        })
+    };
+
+    let mut clean_spec = cfg.fleet.spec.clone();
+    clean_spec.link.drop_rate = 0.0;
+    clean_spec.link.corrupt_rate = 0.0;
+
+    let mut points = Vec::new();
+    let mut point = |label: String,
+                     chips: usize,
+                     stages: usize,
+                     rep: &FleetReport,
+                     bit_exact: Option<bool>| {
+        points.push(ShardingPoint {
+            label,
+            fleet_chips: chips,
+            stages,
+            samples: n,
+            completed_samples: rep.completed_samples(),
+            failed_batches: rep.failed(),
+            degraded_batches: rep.degraded_batches(),
+            failovers: rep.failovers(),
+            link_retries: rep.link_retries(),
+            corrupt_detected: rep.corrupt_detected(),
+            makespan_us: rep.makespan_us,
+            images_per_sec: rep.images_per_sec(),
+            accuracy: accuracy_of(rep),
+            conserved: rep.conserved(),
+            bit_exact,
+        });
+    };
+
+    // Throughput vs fleet size: 1 chip (pipeline of one stage — the
+    // baseline under the same clock), 2 chips (layer split), and at full
+    // scale 3 chips (the big layer block-splits across two chips).
+    let sizes: &[usize] = match scale {
+        Scale::Quick => &[1, 2],
+        Scale::Full => &[1, 2, 3],
+    };
+    let mut makespan_2chip = 0u64;
+    for &k in sizes {
+        let fleet = match k {
+            1 => uniform_fleet(1, p_total, (64, 64)),
+            2 => uniform_fleet(2, p_max, (64, 64)),
+            // Half the big layer's groups per chip: it block-splits
+            // across chips 0–1 and the rest pipelines onto chip 2.
+            _ => uniform_fleet(3, b_max.div_ceil(2) * s_max, (64, 64)),
+        };
+        let mut sharded = make().compile_sharded(&fleet)?;
+        let rep = sharded.run(&x, &clean_spec, &[])?;
+        anyhow::ensure!(rep.conserved(), "fig_sharding: clean fleet={k} run lost samples");
+        if k == 2 {
+            makespan_2chip = rep.makespan_us;
+        }
+        let exact = bit_exact_of(&rep);
+        point(format!("clean, {k} chip(s)"), k, sharded.stage_count(), &rep, Some(exact));
+    }
+
+    // Chip loss mid-run on a 2-stage fleet with one spare: failover
+    // re-replicates stage 0 onto the spare; with failover off the same
+    // loss condemns the stage in place and accuracy collapses.
+    let fault_at = (makespan_2chip / 3).max(1);
+    for failover in [true, false] {
+        let fleet = uniform_fleet(3, p_max, (64, 64));
+        let mut sharded = make().compile_sharded(&fleet)?;
+        let mut spec = clean_spec.clone();
+        spec.failover = failover;
+        let faults = [ChipFaultSpec { at_us: fault_at, chip: 0 }];
+        let rep = sharded.run(&x, &spec, &faults)?;
+        anyhow::ensure!(rep.conserved(), "fig_sharding: chip-loss run lost samples");
+        point(
+            format!("chip loss, failover {}", if failover { "on" } else { "off" }),
+            3,
+            sharded.stage_count(),
+            &rep,
+            None,
+        );
+    }
+
+    // Lossy links on the 2-chip fleet: drops and corruptions retry under
+    // the hop deadline; every micro-batch still ends Done or Failed.
+    {
+        let fleet = uniform_fleet(2, p_max, (64, 64));
+        let mut sharded = make().compile_sharded(&fleet)?;
+        let mut spec = clean_spec.clone();
+        spec.link.drop_rate = 0.05;
+        spec.link.corrupt_rate = 0.15;
+        spec.link.max_retries = 10;
+        let rep = sharded.run(&x, &spec, &[])?;
+        anyhow::ensure!(rep.conserved(), "fig_sharding: lossy-link run lost samples");
+        point("lossy links".into(), 2, sharded.stage_count(), &rep, None);
+    }
+
+    Ok(points)
+}
+
+/// The multi-chip sharding figure: pipeline throughput vs fleet size
+/// (bit-exact against single-chip inference), chip-loss failover vs
+/// degraded serving, and link-fault retry/conservation accounting.
+pub fn fig_sharding(cfg: &SimConfig, scale: Scale) -> anyhow::Result<Vec<Table>> {
+    let pts = sharding_sweep(cfg, scale)?;
+    let mut t = Table::new(
+        "fig_sharding — model sharded across a chip fleet (pipeline + fault domains)",
+        &[
+            "scenario", "chips", "stages", "completed", "failed", "degraded", "failovers",
+            "link retries", "makespan (µs)", "img/s", "accuracy", "conserved", "bit-exact",
+        ],
+    );
+    for p in &pts {
+        t.row(&[
+            p.label.clone(),
+            p.fleet_chips.to_string(),
+            p.stages.to_string(),
+            format!("{}/{}", p.completed_samples, p.samples),
+            p.failed_batches.to_string(),
+            p.degraded_batches.to_string(),
+            p.failovers.to_string(),
+            p.link_retries.to_string(),
+            p.makespan_us.to_string(),
+            format!("{:.0}", p.images_per_sec),
+            format!("{:.3}", p.accuracy),
+            if p.conserved { "yes" } else { "NO" }.into(),
+            match p.bit_exact {
                 Some(true) => "yes".into(),
                 Some(false) => "NO".into(),
                 None => "-".into(),
@@ -1343,11 +1606,12 @@ mod tests {
 
     #[test]
     fn registry_lists_all_paper_artifacts() {
-        assert_eq!(EXPERIMENTS.len(), 13);
+        assert_eq!(EXPERIMENTS.len(), 14);
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "table3_throughput"));
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_faults"));
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_repair"));
         assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_serving"));
+        assert!(EXPERIMENTS.iter().any(|(id, _)| *id == "fig_sharding"));
     }
 
     #[test]

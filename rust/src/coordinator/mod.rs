@@ -6,7 +6,7 @@ pub mod experiments;
 
 pub use experiments::{closest_experiment, run as run_experiment, Scale, EXPERIMENTS};
 
-use crate::arch::{ChipSpec, ServingSpec};
+use crate::arch::{ChipSpec, FleetSpec, LinkSpec, ServingSpec};
 use crate::device::drift::DriftSpec;
 use crate::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec};
 use crate::device::DeviceSpec;
@@ -42,6 +42,31 @@ pub struct SimConfig {
     /// apply whether or not the section is present; the `serve`
     /// subcommand and `fig_serving` experiment consume them.
     pub serving: ServingSpec,
+    /// Multi-chip sharded execution knobs (`[fleet]` section,
+    /// `crate::arch::fleet`): fleet size, spare chips, and the
+    /// pipeline/link/failover model. Like `[serving]`, the defaults
+    /// apply whether or not the section appears; the `fig_sharding`
+    /// experiment and `serve --shards` consume them.
+    pub fleet: FleetConfig,
+}
+
+/// Resolved `[fleet]` section: how many chips a sharded model is planned
+/// across, how many idle spares back them, and the [`FleetSpec`]
+/// execution model (see [`crate::arch::fleet`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Pipeline chips a sharded model is planned across (stage owners).
+    pub chips: usize,
+    /// Extra chips kept idle as failover spares.
+    pub spare_chips: usize,
+    /// Pipeline service-time, inter-chip link, and failover model.
+    pub spec: FleetSpec,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { chips: 2, spare_chips: 1, spec: FleetSpec::default() }
+    }
 }
 
 impl Default for SimConfig {
@@ -55,6 +80,7 @@ impl Default for SimConfig {
             chip: None,
             repair: RepairSpec::none(),
             serving: ServingSpec::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -198,6 +224,7 @@ impl SimConfig {
                 "replicas", "queue_capacity", "max_batch", "batch_deadline_us",
                 "request_deadline_us", "max_retries", "retry_backoff_us", "health_period_us",
                 "heal_us", "service_base_us", "service_per_sample_us", "drift_refresh",
+                "shards_per_replica",
             ],
         )?;
         if doc.sections().any(|s| s == "serving") {
@@ -239,6 +266,11 @@ impl SimConfig {
                     def.service_per_sample_us as usize,
                 ) as u64,
                 drift_refresh: doc.bool_or("serving", "drift_refresh", def.drift_refresh),
+                shards_per_replica: doc.usize_or(
+                    "serving",
+                    "shards_per_replica",
+                    def.shards_per_replica,
+                ),
             };
             anyhow::ensure!(
                 cfg.serving.replicas >= 1,
@@ -255,6 +287,90 @@ impl SimConfig {
                 "config key `serving.max_batch`: must be >= 1, got {}",
                 cfg.serving.max_batch
             );
+            anyhow::ensure!(
+                cfg.serving.shards_per_replica >= 1,
+                "config key `serving.shards_per_replica`: must be >= 1, got {}",
+                cfg.serving.shards_per_replica
+            );
+        }
+        // [fleet] — multi-chip sharded execution (crate::arch::fleet):
+        // fleet sizing plus the pipeline service, inter-chip link, and
+        // failover model. Defaults match `FleetConfig::default()`.
+        reject_unknown_keys(
+            doc,
+            "fleet",
+            &[
+                "chips", "spare_chips", "micro_batch", "service_base_us",
+                "service_per_sample_us", "failover", "failover_us", "link_base_us",
+                "link_per_sample_us", "hop_deadline_us", "link_retries", "link_backoff_us",
+                "drop_rate", "corrupt_rate", "seed",
+            ],
+        )?;
+        if doc.sections().any(|s| s == "fleet") {
+            let def = FleetConfig::default();
+            let ds = &def.spec;
+            cfg.fleet = FleetConfig {
+                chips: doc.usize_or("fleet", "chips", def.chips),
+                spare_chips: doc.usize_or("fleet", "spare_chips", def.spare_chips),
+                spec: FleetSpec {
+                    micro_batch: doc.usize_or("fleet", "micro_batch", ds.micro_batch),
+                    service_base_us: doc.usize_or(
+                        "fleet",
+                        "service_base_us",
+                        ds.service_base_us as usize,
+                    ) as u64,
+                    service_per_sample_us: doc.usize_or(
+                        "fleet",
+                        "service_per_sample_us",
+                        ds.service_per_sample_us as usize,
+                    ) as u64,
+                    link: LinkSpec {
+                        base_us: doc.usize_or("fleet", "link_base_us", ds.link.base_us as usize)
+                            as u64,
+                        per_sample_us: doc.usize_or(
+                            "fleet",
+                            "link_per_sample_us",
+                            ds.link.per_sample_us as usize,
+                        ) as u64,
+                        hop_deadline_us: doc.usize_or(
+                            "fleet",
+                            "hop_deadline_us",
+                            ds.link.hop_deadline_us as usize,
+                        ) as u64,
+                        max_retries: doc.usize_or("fleet", "link_retries", ds.link.max_retries),
+                        retry_backoff_us: doc.usize_or(
+                            "fleet",
+                            "link_backoff_us",
+                            ds.link.retry_backoff_us as usize,
+                        ) as u64,
+                        drop_rate: doc.f64_or("fleet", "drop_rate", ds.link.drop_rate),
+                        corrupt_rate: doc.f64_or("fleet", "corrupt_rate", ds.link.corrupt_rate),
+                    },
+                    failover: doc.bool_or("fleet", "failover", ds.failover),
+                    failover_us: doc.usize_or("fleet", "failover_us", ds.failover_us as usize)
+                        as u64,
+                    seed: doc.usize_or("fleet", "seed", ds.seed as usize) as u64,
+                },
+            };
+            anyhow::ensure!(
+                cfg.fleet.chips >= 1,
+                "config key `fleet.chips`: a sharded pipeline needs at least one chip, got {}",
+                cfg.fleet.chips
+            );
+            anyhow::ensure!(
+                cfg.fleet.spec.micro_batch >= 1,
+                "config key `fleet.micro_batch`: must be >= 1, got {}",
+                cfg.fleet.spec.micro_batch
+            );
+            for (key, v) in [
+                ("drop_rate", cfg.fleet.spec.link.drop_rate),
+                ("corrupt_rate", cfg.fleet.spec.link.corrupt_rate),
+            ] {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&v),
+                    "config key `fleet.{key}`: expected a probability in [0, 1], got {v}"
+                );
+            }
         }
         cfg.seed = doc.usize_or("run", "seed", 2024) as u64;
         cfg.backend = doc.str_or("run", "backend", "native").to_string();
@@ -437,12 +553,68 @@ mod tests {
     }
 
     #[test]
+    fn fleet_section_parses_with_defaults_and_validates() {
+        // No section (or a bare one) → the FleetConfig defaults.
+        let cfg = SimConfig::from_doc(&Doc::parse("[engine]\n").unwrap()).unwrap();
+        assert_eq!(cfg.fleet, FleetConfig::default());
+        let cfg = SimConfig::from_doc(&Doc::parse("[fleet]\n").unwrap()).unwrap();
+        assert_eq!(cfg.fleet, FleetConfig::default());
+
+        let doc = Doc::parse(
+            "[fleet]\nchips = 4\nspare_chips = 2\nmicro_batch = 16\nfailover = false\n\
+             failover_us = 5000\nlink_base_us = 10\nlink_per_sample_us = 2\n\
+             hop_deadline_us = 800\nlink_retries = 5\nlink_backoff_us = 40\n\
+             drop_rate = 0.25\ncorrupt_rate = 0.125\nseed = 99\n",
+        )
+        .unwrap();
+        let f = SimConfig::from_doc(&doc).unwrap().fleet;
+        assert_eq!(f.chips, 4);
+        assert_eq!(f.spare_chips, 2);
+        assert_eq!(f.spec.micro_batch, 16);
+        assert!(!f.spec.failover);
+        assert_eq!(f.spec.failover_us, 5000);
+        assert_eq!(f.spec.link.base_us, 10);
+        assert_eq!(f.spec.link.per_sample_us, 2);
+        assert_eq!(f.spec.link.hop_deadline_us, 800);
+        assert_eq!(f.spec.link.max_retries, 5);
+        assert_eq!(f.spec.link.retry_backoff_us, 40);
+        assert_eq!(f.spec.link.drop_rate, 0.25);
+        assert_eq!(f.spec.link.corrupt_rate, 0.125);
+        assert_eq!(f.spec.seed, 99);
+
+        // Degenerate values are errors naming `fleet.<key>`.
+        for (toml, path) in [
+            ("[fleet]\nchips = 0\n", "fleet.chips"),
+            ("[fleet]\nmicro_batch = 0\n", "fleet.micro_batch"),
+            ("[fleet]\ndrop_rate = 1.5\n", "fleet.drop_rate"),
+            ("[fleet]\ncorrupt_rate = -0.5\n", "fleet.corrupt_rate"),
+        ] {
+            let err = SimConfig::from_doc(&Doc::parse(toml).unwrap()).unwrap_err().to_string();
+            assert!(err.contains(path), "{toml}: {err}");
+        }
+    }
+
+    #[test]
+    fn serving_shards_per_replica_parses_and_validates() {
+        let s = SimConfig::from_doc(&Doc::parse("[serving]\nshards_per_replica = 3\n").unwrap())
+            .unwrap()
+            .serving;
+        assert_eq!(s.shards_per_replica, 3);
+        let err =
+            SimConfig::from_doc(&Doc::parse("[serving]\nshards_per_replica = 0\n").unwrap())
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("serving.shards_per_replica"), "{err}");
+    }
+
+    #[test]
     fn unknown_keys_in_validated_sections_are_errors_naming_the_path() {
         for (toml, path) in [
             ("[faults]\nsa2 = 0.1\n", "faults.sa2"),
             ("[chip]\nspare = 1\n", "chip.spare"),
             ("[repair]\ntollerance = 1.0\n", "repair.tollerance"),
             ("[serving]\nreplica_count = 2\n", "serving.replica_count"),
+            ("[fleet]\nchip_count = 2\n", "fleet.chip_count"),
         ] {
             let err = SimConfig::from_doc(&Doc::parse(toml).unwrap()).unwrap_err().to_string();
             assert!(err.contains(path), "{toml}: {err}");

@@ -29,9 +29,12 @@ fn usage() -> ! {
          \x20 info                         show environment + artifacts\n\
          \x20 matmul [--size N] [--method M] [--config FILE]\n\
          \x20                              one-off DPE matmul accuracy check\n\
-         \x20 serve [--quick|--full] [--config FILE]\n\
+         \x20 serve [--quick|--full] [--config FILE] [--shards N]\n\
          \x20                              fault-tolerant serving runtime demo\n\
-         \x20                              ([serving] section configures the pool)"
+         \x20                              ([serving] section configures the pool;\n\
+         \x20                              --shards N serves sharded replicas across\n\
+         \x20                              N-chip fleets, overriding\n\
+         \x20                              serving.shards_per_replica)"
     );
     std::process::exit(2);
 }
@@ -153,7 +156,14 @@ fn main() -> anyhow::Result<()> {
         // ≡ `memintelli run fig_serving`, with the `[serving]` section
         // (strictly validated at load) configuring the pool.
         "serve" => {
-            let cfg = load_config(&args)?;
+            let mut cfg = load_config(&args)?;
+            if let Some(s) = args.flags.get("shards") {
+                let shards: usize = s.parse().map_err(|_| {
+                    anyhow::anyhow!("--shards expects a positive integer, got '{s}'")
+                })?;
+                anyhow::ensure!(shards >= 1, "--shards must be >= 1, got {shards}");
+                cfg.serving.shards_per_replica = shards;
+            }
             let scale = if args.flags.contains_key("full") { Scale::Full } else { Scale::Quick };
             run_experiment("fig_serving", &cfg, scale)?;
         }

@@ -325,6 +325,19 @@ impl Sequential {
         Ok(MappedModel::new(self, placement))
     }
 
+    /// Compile the model across an ordered fleet of chips (multi-chip
+    /// sharding, [`crate::arch::fleet`]): contiguous layer runs become
+    /// pipeline stages, one per chip, with a single oversized layer
+    /// block-split across several homogeneous chips; leftover chips form
+    /// the failover spare pool. See [`crate::arch::ShardedModel`] for
+    /// the bit-identity and fault-tolerance contracts.
+    pub fn compile_sharded(
+        self,
+        fleet: &[ChipSpec],
+    ) -> anyhow::Result<crate::arch::ShardedModel> {
+        crate::arch::ShardedModel::compile(self, fleet)
+    }
+
     pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
         let mut h = x.clone();
         for l in self.layers.iter_mut() {

@@ -8,7 +8,9 @@
 //! workers spawned inside `run_fault_point` / `infer_batched` are scoped,
 //! so they start after the write completes and join before the next one.
 
-use memintelli::arch::{ChipSpec, FaultEvent, ReplicaSpec, Request, ServingRuntime, ServingSpec};
+use memintelli::arch::{
+    uniform_fleet, ChipSpec, FaultEvent, ReplicaSpec, Request, ServingRuntime, ServingSpec,
+};
 use memintelli::data::Dataset;
 use memintelli::device::faults::{AdcErrorSpec, AdcRounding, FaultSpec, NonIdealitySpec};
 use memintelli::dpe::montecarlo::{run_fault_point, FaultPoint, McConfig};
@@ -40,6 +42,7 @@ fn montecarlo_stats_identical_across_thread_counts() {
     let mut infer_outputs: Vec<Vec<f64>> = Vec::new();
     let mut serve_reports = Vec::new();
     let mut train_runs: Vec<(Vec<u64>, Vec<f64>)> = Vec::new();
+    let mut sharded_outputs: Vec<Vec<Vec<u64>>> = Vec::new();
     let x = Tensor::from_vec(&[6, 48], (0..288).map(|i| ((i % 13) as f64) / 6.5 - 1.0).collect());
     for workers in ["1", "2", "7"] {
         std::env::set_var("MEMINTELLI_THREADS", workers);
@@ -107,6 +110,30 @@ fn montecarlo_stats_identical_across_thread_counts() {
         let curve: Vec<u64> = rep.logs.iter().map(|l| l.loss.to_bits()).collect();
         let trained_y = model.forward(&x, false).data;
         train_runs.push((curve, trained_y));
+        // Sharded pipeline inference must be thread-count invariant too,
+        // and — on noise-free engines — fleet-size invariant: stages chain
+        // the full micro-batch, so splitting layers across chips is purely
+        // spatial and every fleet size reproduces the single-chip bits.
+        let ideal = || {
+            HwSpec::uniform(DotProductEngine::ideal((64, 64)), SliceMethod::int(SliceSpec::int8()))
+        };
+        let m0 = mlp(48, 12, 4, Some(ideal()), 5);
+        let planes = m0.mapped_planes();
+        let single = m0.compile(&ChipSpec::single_tile(planes, (64, 64))).unwrap();
+        let y_single: Vec<u64> =
+            single.infer_batched(&x, 2).data.iter().map(|v| v.to_bits()).collect();
+        let mut sharded_bits: Vec<Vec<u64>> = Vec::new();
+        for chips in [1usize, 2] {
+            let sharded = mlp(48, 12, 4, Some(ideal()), 5)
+                .compile_sharded(&uniform_fleet(chips, planes / chips, (64, 64)))
+                .unwrap();
+            assert_eq!(sharded.stage_count(), chips, "fleet of {chips} chips, stage count");
+            let y: Vec<u64> =
+                sharded.infer_batched(&x, 2).data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(y, y_single, "sharded ({chips} chips) != single-chip bits");
+            sharded_bits.push(y);
+        }
+        sharded_outputs.push(sharded_bits);
     }
     match prev {
         Some(v) => std::env::set_var("MEMINTELLI_THREADS", v),
@@ -120,4 +147,6 @@ fn montecarlo_stats_identical_across_thread_counts() {
     assert_eq!(serve_reports[0], serve_reports[2], "serving report differs at 7 workers");
     assert_eq!(train_runs[0], train_runs[1], "train_fast differs at 2 workers");
     assert_eq!(train_runs[0], train_runs[2], "train_fast differs at 7 workers");
+    assert_eq!(sharded_outputs[0], sharded_outputs[1], "sharded inference differs at 2 workers");
+    assert_eq!(sharded_outputs[0], sharded_outputs[2], "sharded inference differs at 7 workers");
 }
